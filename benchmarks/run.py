@@ -1,0 +1,58 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``benchmark,metric,value`` CSV to stdout; JSON details land in
+``artifacts/bench/``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+SUITES = [
+    ("sparsity_profile", "paper Fig. 3/4/6"),
+    ("budget_alloc", "paper Fig. 7"),
+    ("load_balance", "paper Fig. 8"),
+    ("accuracy_ruler", "paper Table 1"),
+    ("latency_attention", "paper Fig. 9"),
+    ("skyline", "paper Fig. 10"),
+    ("lb_ablation", "paper Fig. 11"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced example counts (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(OUT, exist_ok=True)
+    print("benchmark,metric,value")
+    failures = 0
+    for name, paper_ref in SUITES:
+        if args.only and name != args.only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run(OUT, quick=args.quick)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name},STATUS,error")
+            continue
+        for metric, value in rows:
+            print(f"{name},{metric},{value:.6g}")
+        print(f"{name},elapsed_s,{time.time() - t0:.1f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

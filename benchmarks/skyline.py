@@ -1,0 +1,114 @@
+"""Paper Fig. 10: latency-accuracy skyline (Pareto frontier).
+
+Sweeps the sparsity knob of each method (budget k for top-k-family methods
+and S-HPLB; threshold p for the top-p method) on a hard retrieval task, and
+reports (accuracy, modeled latency) points.  Latency = the roofline model of
+the method's padded tile grid at the benchmark geometry (hardware-
+independent tile counts; the same model as Fig. 9's derived latency)."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.budget import maxmin_allocation, uniform_allocation
+from repro.core.partition import best_partition, naive_partition
+from repro.core.sparsity import HeadSparsityProfile
+from repro.core.worklist import blocks_for_budget
+from repro.data.ruler import make_batch
+
+BLOCK = 16
+
+
+def _tiles_per_head(nb, nq):
+    n = np.minimum(nb, nq)
+    return nq * n - (n - 1) * n // 2
+
+
+def _method_cost(method: str, profile, k: int, seq: int, H: int,
+                 D: int = 4) -> float:
+    """Padded-grid tile makespan (per paper: what every device executes)."""
+    nq = -(-seq // BLOCK)
+    if method == "full":
+        tiles = np.full(H, nq * (nq + 1) // 2, np.int64)
+        asg = naive_partition(tiles, D, mode="contiguous")
+    elif method == "s_hplb":
+        b = maxmin_allocation(profile, layer=0, total=H * k, seq_len=seq,
+                              block=BLOCK, floor=BLOCK).budgets
+        tiles = _tiles_per_head(blocks_for_budget(b, BLOCK), nq)
+        asg = best_partition(tiles, D)
+    else:  # uniform-budget methods
+        b = uniform_allocation(profile, layer=0, k=k, seq_len=seq,
+                               block=BLOCK, floor=BLOCK).budgets
+        tiles = _tiles_per_head(blocks_for_budget(b, BLOCK), nq)
+        asg = naive_partition(tiles, D, mode="contiguous")
+    return float(asg.makespan)
+
+
+def run(out_dir: str, quick: bool = False) -> list[tuple[str, float]]:
+    from benchmarks.common import (METHODS, TINY, greedy_answer, token_accuracy,
+                                   tiny_lm_params, tiny_lm_profile)
+    params, _ = tiny_lm_params()
+    profile = tiny_lm_profile(params)
+
+    task = "niah_multikey"   # the hard separating task (paper uses MK2)
+    ctx = 192 if quick else 288  # within the training ctx range
+    n_examples = 3 if quick else 10
+    budgets = [48, 96, 160] if quick else [48, 80, 112, 160, 224]
+    sweep_methods = (["streaming", "s_hplb"] if quick
+                     else ["streaming", "minference_strided", "quest",
+                           "s_hplb"])
+
+    full_cost = _method_cost("full", profile, 0, ctx, TINY.num_heads)
+
+    def accuracy(method: str, k: int) -> float:
+        hits = 0
+        for i in range(n_examples):
+            b = make_batch(task, batch=1, ctx_len=ctx, seed=3000 + i)
+            toks = jnp.asarray(b["tokens"])
+            a_len = int(b["answer_lens"][0])
+            lg, cache = METHODS[method](
+                params, toks, TINY, k=k, profile=profile,
+                cache_len=toks.shape[1] + a_len + 2)
+            pred = greedy_answer(params, TINY, cache, lg, toks.shape[1],
+                                 a_len)
+            hits += token_accuracy(pred, b["answers"][0][:a_len])
+        return hits / n_examples
+
+    points = {"full": [{"k": ctx, "acc": accuracy("full", ctx),
+                        "rel_latency": 1.0}]}
+    for m in sweep_methods:
+        pts = []
+        for k in budgets:
+            cost_method = "s_hplb" if m == "s_hplb" else "uniform"
+            c = _method_cost(cost_method, profile, k, ctx, TINY.num_heads)
+            pts.append({"k": k, "acc": accuracy(m, k),
+                        "rel_latency": c / full_cost})
+            print(f"[skyline] {m} k={k}: acc={pts[-1]['acc']:.2f} "
+                  f"lat={pts[-1]['rel_latency']:.3f}", flush=True)
+        points[m] = pts
+
+    # Pareto dominance check: does s_hplb sit on the frontier?
+    def dominated(p, others):
+        return any(o["acc"] >= p["acc"] and o["rel_latency"] <= p[
+            "rel_latency"] and (o["acc"] > p["acc"]
+                                or o["rel_latency"] < p["rel_latency"])
+                   for o in others)
+
+    all_pts = [p for m in sweep_methods for p in points[m]]
+    hplb_on_frontier = sum(
+        not dominated(p, all_pts) for p in points.get("s_hplb", []))
+
+    rows = [
+        ("skyline_points", float(len(all_pts))),
+        ("s_hplb_points_on_frontier", float(hplb_on_frontier)),
+        ("s_hplb_best_acc", max((p["acc"] for p in points["s_hplb"]),
+                                default=0.0)),
+        ("full_acc", points["full"][0]["acc"]),
+    ]
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "skyline.json"), "w") as f:
+        json.dump(points, f, indent=1)
+    return rows

@@ -1,0 +1,92 @@
+"""Quickstart: the S-HPLB pipeline end to end on one host, in five steps.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. profile per-head sparsity offline (synthetic calibration curves here;
+   ``benchmarks/common.tiny_lm_profile`` shows the real-attention-map path);
+2. allocate per-head budgets with the paper's max-min shifting;
+3. balance heads across devices (LPT / KK+refine);
+4. build the flattened SPMD work-lists;
+5. execute sparse attention with the work-list kernel and compare against
+   full attention.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.attention import flash_attention_ref, strided_policy
+from repro.core import (
+    best_partition,
+    imbalance_ratio,
+    make_plan,
+    maxmin_allocation,
+    naive_partition,
+    plan_summary,
+    synthetic_head_curves,
+    uniform_allocation,
+    worklist_from_budgets,
+)
+from repro.attention.worklist_jnp import worklist_attention
+
+H, HKV, SEQ, DH, DEVICES, K = 16, 8, 2048, 64, 4, 256
+
+print("=== 1. offline sparsity profile ===")
+prof = synthetic_head_curves(1, H)
+print(f"heads: {H}; budget heterogeneity at p=0.9: "
+      f"{prof.heterogeneity(0):.2f}x")
+
+print("\n=== 2. max-min budget allocation (paper §3.2) ===")
+uni = uniform_allocation(prof, layer=0, k=K, seq_len=SEQ)
+mm = maxmin_allocation(prof, layer=0, total=H * K, seq_len=SEQ)
+print(f"uniform top-k:   min recovery {uni.min_recovery:.3f}")
+print(f"max-min shifted: min recovery {mm.min_recovery:.3f} "
+      f"({mm.iterations} transfers, same total budget)")
+
+print("\n=== 3. head-parallel load balance (paper §3.3) ===")
+naive = naive_partition(mm.budgets, DEVICES, mode="contiguous")
+lb = best_partition(mm.budgets, DEVICES)
+print(f"naive HP:  imbalance {naive.imbalance:.2f}  loads {naive.loads}")
+print(f"S-HPLB:    imbalance {lb.imbalance:.2f}  loads {lb.loads}")
+
+print("\n=== 4. whole-model plan + work-lists ===")
+plan = make_plan(prof, num_devices=DEVICES, num_kv_heads=HKV,
+                 seq_len=SEQ, total_budget_per_head=K)
+print({k: round(v, 3) if isinstance(v, float) else v
+       for k, v in plan_summary(plan).items()})
+wl = worklist_from_budgets(
+    plan.layers[0].budgets, num_devices=DEVICES, seq_len=SEQ, block=128,
+    policy_fn=strided_policy, group_size=H // HKV)
+print(f"work-list: padded length {wl.padded_length} per device "
+      f"(waste {wl.padding_waste:.1%}, imbalance {wl.imbalance:.3f})")
+
+print("\n=== 5. execute sparse attention vs full ===")
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+q = jax.random.normal(ks[0], (H, SEQ, DH), jnp.float32)
+k = jax.random.normal(ks[1], (HKV, SEQ, DH), jnp.float32)
+v = jax.random.normal(ks[2], (HKV, SEQ, DH), jnp.float32)
+# single-host: run each device's list against its head slice
+heads_per_dev = H // DEVICES
+outs = []
+for d in range(DEVICES):
+    # device d's q slice: slot order == plan permutation order
+    sl = slice(d * heads_per_dev, (d + 1) * heads_per_dev)
+    qd = q[plan.layers[0].perm[sl]]
+    kd = k  # kv groups colocated: slice via plan.kv_perm in production
+    o = worklist_attention(qd, k[plan.layers[0].kv_perm[
+        d * (HKV // DEVICES):(d + 1) * (HKV // DEVICES)]],
+        v[plan.layers[0].kv_perm[
+            d * (HKV // DEVICES):(d + 1) * (HKV // DEVICES)]],
+        jnp.asarray(wl.items[d]))
+    outs.append(o)
+sparse_out = jnp.concatenate(outs, axis=0)  # slot order
+full_out = flash_attention_ref(q, k, v, causal=True)[plan.layers[0].perm]
+rel = float(jnp.linalg.norm(sparse_out - full_out)
+            / jnp.linalg.norm(full_out))
+tiles_full = H * (SEQ // 128) * (SEQ // 128 + 1) // 2
+print(f"sparse tiles {wl.total_real_items} vs full {tiles_full} "
+      f"({wl.total_real_items / tiles_full:.1%} of compute); "
+      f"output rel-err vs full attention: {rel:.3f}")
+print("(note: RANDOM weights have diffuse attention, so a 12.5% budget"
+      " keeps ~22% of the mass — on trained models the profiled budgets"
+      " recover >90% (see benchmarks/accuracy_ruler.py))")
+print("\nquickstart OK")

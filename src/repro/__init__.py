@@ -1,0 +1,26 @@
+"""repro — S-HPLB: Sparsity-Aware Head-Parallel Load Balance on TPU (JAX + Pallas).
+
+A production-grade multi-pod JAX framework reproducing and extending
+
+    "S-HPLB: Efficient LLM Attention Serving via Sparsity-Aware Head
+     Parallelism Load Balance" (CS.DC 2026).
+
+Layers
+------
+- ``repro.core``      : the paper's contribution (sparsity profiling, max-min
+                        budget allocation, head-parallel load balancing,
+                        work-list construction).
+- ``repro.attention`` : dense / block-sparse attention references, selection
+                        policies, RoPE, masks.
+- ``repro.kernels``   : Pallas TPU kernels (dense flash, work-list sparse
+                        prefill, sparse decode) + jnp oracles.
+- ``repro.models``    : the 10 assigned architectures.
+- ``repro.sharding``  : PartitionSpec rules, elastic resharding.
+- ``repro.serving``   : KV cache, prefill/decode engine, batching.
+- ``repro.training``  : optimizer, train step, checkpointing, compression.
+- ``repro.data``      : synthetic corpora, calibration sets, RULER-like tasks.
+- ``repro.configs``   : assigned architecture configs + shape suite.
+- ``repro.launch``    : mesh factory, dry-run driver, train/serve launchers.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,23 @@
+"""Attention substrate: dense/sparse references, policies, RoPE, masks."""
+from repro.attention.dense import (
+    attention_maps,
+    decode_attention_ref,
+    dense_attention,
+    flash_attention_ref,
+    repeat_kv,
+)
+from repro.attention.block_sparse import (
+    block_sparse_attention_ref,
+    masked_attention,
+    selections_to_block_mask,
+)
+from repro.attention.policies import (
+    antidiagonal_block_scores,
+    policy_by_name,
+    quest_block_scores,
+    streaming_policy,
+    strided_policy,
+    topk_select,
+)
+from repro.attention.rope import apply_rope, rope_tables
+from repro.attention import masks

@@ -1,0 +1,76 @@
+"""Block-sparse attention reference (jnp) — oracle for the work-list kernel.
+
+Computes attention where each (head, q_block) attends only to a selected set
+of kv blocks, expressed either as a dense boolean block mask
+``[H, nq, nkv]`` or as per-head selections.  Token-level causality is always
+intersected on top of the block mask.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.attention.dense import dense_attention, repeat_kv
+from repro.attention.masks import NEG_INF
+
+
+def block_sparse_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    block_mask: np.ndarray | jnp.ndarray,
+    *,
+    block: int = 128,
+    q_offset: int = 0,
+    scale: float | None = None,
+):
+    """Reference block-sparse attention.
+
+    q: [H, Sq, Dh]; k, v: [Hkv, Skv, Dh]; block_mask: [H, nq, nkv] bool.
+    Rows whose every block is masked produce zeros (matches kernel).
+    """
+    hq, sq, dh = q.shape
+    hkv, skv, _ = k.shape
+    block_mask = jnp.asarray(block_mask)
+    h_bm, nq, nkv = block_mask.shape
+    assert h_bm == hq
+    # expand block mask to token level
+    tok = jnp.repeat(jnp.repeat(block_mask, block, axis=1), block, axis=2)
+    tok = tok[:, :sq, :skv]
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    tok = tok & (kpos <= qpos)[None]
+    return masked_attention(q, k, v, tok, scale=scale)
+
+
+def masked_attention(q, k, v, mask, *, scale: float | None = None):
+    """Attention with an explicit token mask; fully-masked rows -> 0 output
+    (the sparse kernel never touches such rows)."""
+    hq, sq, dh = q.shape
+    hkv = k.shape[0]
+    k = repeat_kv(k, hq // hkv)
+    v = repeat_kv(v, hq // hkv)
+    scale = (dh ** -0.5) if scale is None else scale
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(mask, logits, -jnp.inf)
+    row_any = mask.any(axis=-1)
+    m = jnp.max(jnp.where(mask, logits, -jnp.inf), axis=-1)
+    m = jnp.where(row_any, m, 0.0)
+    p = jnp.where(mask, jnp.exp(logits - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.where(row_any[..., None], out, 0.0)
+    return out.astype(q.dtype)
+
+
+def selections_to_block_mask(selections: list[list[np.ndarray]],
+                             nq: int, nkv: int) -> np.ndarray:
+    """``selections[h][qb] -> ids`` to ``[H, nq, nkv]`` bool."""
+    H = len(selections)
+    m = np.zeros((H, nq, nkv), dtype=bool)
+    for h in range(H):
+        for qb in range(nq):
+            sel = np.asarray(selections[h][qb], dtype=np.int64)
+            if len(sel):
+                m[h, qb, sel] = True
+    return m

@@ -1,0 +1,162 @@
+"""Dense attention references: naive softmax, chunked flash-style, GQA.
+
+These are the numerical oracles for the Pallas kernels and the building
+blocks of the model definitions.  Shapes follow the framework convention:
+
+    q: [..., Hq, Sq, Dh]     k, v: [..., Hkv, Skv, Dh]
+
+with Hq a multiple of Hkv (GQA); leading batch dims broadcast.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.attention.masks import NEG_INF
+
+
+def repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """GQA: repeat kv heads along the head axis ([..., Hkv, S, D] ->
+    [..., Hkv*n_rep, S, D])."""
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=-3)
+
+
+def dense_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+    bias: jnp.ndarray | None = None,
+    *,
+    scale: float | None = None,
+    return_weights: bool = False,
+):
+    """Reference softmax attention with GQA and optional mask/bias.
+
+    mask: broadcastable to [..., Hq, Sq, Skv], True = attend.
+    """
+    *_, hq, sq, dh = q.shape
+    hkv = k.shape[-3]
+    assert hq % hkv == 0, (hq, hkv)
+    k = repeat_kv(k, hq // hkv)
+    v = repeat_kv(v, hq // hkv)
+    scale = (dh ** -0.5) if scale is None else scale
+    logits = jnp.einsum(
+        "...hqd,...hkd->...hqk", q.astype(jnp.float32),
+        k.astype(jnp.float32)) * scale
+    if bias is not None:
+        logits = logits + bias
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("...hqk,...hkd->...hqd", w, v.astype(jnp.float32))
+    out = out.astype(q.dtype)
+    if return_weights:
+        return out, w
+    return out
+
+
+def flash_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    scale: float | None = None,
+):
+    """Chunked online-softmax attention (flash algorithm) in pure jnp.
+
+    Numerically mirrors the Pallas kernel's accumulation order — used as its
+    oracle.  Handles GQA and ragged tails by padding.
+    """
+    *batch, hq, sq, dh = q.shape
+    hkv, skv = k.shape[-3], k.shape[-2]
+    n_rep = hq // hkv
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    scale = (dh ** -0.5) if scale is None else scale
+
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    qp = jnp.pad(q, [(0, 0)] * (q.ndim - 2) + [(0, pad_q), (0, 0)])
+    kp = jnp.pad(k, [(0, 0)] * (k.ndim - 2) + [(0, pad_kv), (0, 0)])
+    vp = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, pad_kv), (0, 0)])
+    nq = qp.shape[-2] // block_q
+    nkv = kp.shape[-2] // block_kv
+
+    qb = qp.reshape(*batch, hq, nq, block_q, dh)
+    kb = kp.reshape(*batch, hq, nkv, block_kv, dh)
+    vb = vp.reshape(*batch, hq, nkv, block_kv, dh)
+
+    qpos = (jnp.arange(nq * block_q) + q_offset).reshape(nq, block_q)
+    kpos = jnp.arange(nkv * block_kv).reshape(nkv, block_kv)
+    kvalid = (jnp.arange(nkv * block_kv) < skv).reshape(nkv, block_kv)
+
+    def one_q_block(qtile, qi):
+        # qtile: [..., H, block_q, dh]
+        acc = jnp.zeros(qtile.shape[:-1] + (dh,), jnp.float32)
+        m = jnp.full(qtile.shape[:-1], -jnp.inf, jnp.float32)
+        l = jnp.zeros(qtile.shape[:-1], jnp.float32)
+
+        def body(carry, ki):
+            acc, m, l = carry
+            ktile = jnp.take(kb, ki, axis=-3)  # [..., H, block_kv, dh]
+            vtile = jnp.take(vb, ki, axis=-3)
+            s = jnp.einsum("...qd,...kd->...qk", qtile.astype(jnp.float32),
+                           ktile.astype(jnp.float32)) * scale
+            valid = kvalid[ki][None, :]
+            if causal:
+                cm = kpos[ki][None, :] <= qpos[qi][:, None]
+                valid = valid & cm
+            s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "...qk,...kd->...qd", p, vtile.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        (acc, m, l), _ = jax.lax.scan(body, (acc, m, l), jnp.arange(nkv))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    outs = []
+    for qi in range(nq):
+        outs.append(one_q_block(jnp.take(qb, qi, axis=-3), qi))
+    out = jnp.stack(outs, axis=-3)  # [..., H, nq, block_q, dh]
+    out = out.reshape(*batch, hq, nq * block_q, dh)[..., :sq, :]
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray | int,
+    *,
+    scale: float | None = None,
+):
+    """Single-token decode attention against a (possibly padded) KV cache.
+
+    q: [..., Hq, 1, Dh];  k_cache/v_cache: [..., Hkv, Smax, Dh];
+    ``cache_len``: number of valid cache positions (scalar or per-batch).
+    """
+    smax = k_cache.shape[-2]
+    pos = jnp.arange(smax)
+    valid = pos < jnp.asarray(cache_len)
+    mask = valid[None, None, :]  # [1, 1, Smax] broadcast over heads/query
+    return dense_attention(q, k_cache, v_cache, mask=mask, scale=scale)
+
+
+def attention_maps(q, k, *, causal: bool = True, scale: float | None = None):
+    """Post-softmax attention probabilities [..., Hq, Sq, Skv] (profiling)."""
+    *_, hq, sq, dh = q.shape
+    hkv = k.shape[-3]
+    k = repeat_kv(k, hq // hkv)
+    scale = (dh ** -0.5) if scale is None else scale
+    logits = jnp.einsum("...hqd,...hkd->...hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        skv = k.shape[-2]
+        cm = jnp.arange(skv)[None, :] <= jnp.arange(sq)[:, None]
+        logits = jnp.where(cm, logits, NEG_INF)
+    return jax.nn.softmax(logits, axis=-1)

@@ -1,0 +1,227 @@
+"""Scan-based flash attention — the GSPMD-friendly dense path for models.
+
+``lax.scan`` over kv-block tiles with online softmax, so the HLO is O(1) in
+sequence length and no S x S tensor ever materializes.  GQA is handled by
+folding the query-head group into the q-tile rows (one kv tile serves
+``group * block_q`` MXU rows).  Head/batch dims remain pure vmap dims ->
+shard cleanly over ('data', 'model') under plain GSPMD jit — this is the
+attention used inside ``train_step`` and the dense serving baseline.  The
+S-HPLB sparse path (per-device work-lists) lives in ``worklist_jnp`` /
+``kernels`` and runs inside a shard_map island instead.
+
+Three exact-FLOPs modes:
+
+- ``causal`` global: scans the static (q_blk, kv_blk <= q_blk) pair list —
+  exactly the causal lower triangle of tiles, no masked-future waste.
+- ``window``: iterates only the kv blocks intersecting the sliding window —
+  exact O(S·w) (gemma3 / recurrentgemma local layers).
+- non-causal (whisper encoder / cross-attn): full nq x nkv tile grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _causal_pairs(nq: int, nkv: int, block_q: int, block_kv: int,
+                  q_offset: int) -> np.ndarray:
+    """Static [(qb, kb, first, last)] for the causal lower triangle.
+
+    With ``q_offset`` (chunked prefill), q block qb reaches kv position
+    ``qb*block_q + block_q - 1 + q_offset``.
+    """
+    rows = []
+    for qb in range(nq):
+        hi = min(nkv - 1, (qb * block_q + block_q - 1 + q_offset) // block_kv)
+        for kb in range(hi + 1):
+            rows.append((qb, kb, int(kb == 0), int(kb == hi)))
+    return np.asarray(rows, dtype=np.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "scale",
+                     "q_offset"),
+)
+def flash_scan_attention(
+    q: jnp.ndarray,   # [B, Hq, Sq, D]
+    k: jnp.ndarray,   # [B, Hkv, Skv, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    scale: float | None = None,
+):
+    B, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale_v = (dh ** -0.5) if scale is None else scale
+
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    sqp, skvp = qp.shape[2], kp.shape[2]
+    nq, nkv = sqp // block_q, skvp // block_kv
+
+    qg = qp.reshape(B, hkv, group, sqp, dh)
+
+    if causal and window is None:
+        out = _pairlist_attention(
+            qg, kp, vp, sq=sq, skv=skv, q_offset=q_offset,
+            block_q=block_q, block_kv=block_kv, scale=scale_v)
+    elif window is not None:
+        out = _windowed_attention(
+            qg, kp, vp, sq=sq, skv=skv, q_offset=q_offset, window=window,
+            causal=causal, block_q=block_q, block_kv=block_kv, scale=scale_v)
+    else:
+        out = _full_attention(
+            qg, kp, vp, sq=sq, skv=skv, q_offset=q_offset,
+            block_q=block_q, block_kv=block_kv, scale=scale_v)
+    return out.reshape(B, hq, sqp, dh)[:, :, :sq, :].astype(q.dtype)
+
+
+def _tile_step_factory(block_q, block_kv, dh, group, sq, skv, q_offset,
+                       scale, causal, window):
+    """One (q_blk, kv_blk) flash tile; shared by all modes."""
+
+    def tile(qg1, k1, v1, carry, qb, kb, first):
+        acc, m, l = carry
+        acc = jnp.where(first, jnp.zeros_like(acc), acc)
+        m = jnp.where(first, jnp.full_like(m, -jnp.inf), m)
+        l = jnp.where(first, jnp.zeros_like(l), l)
+        qt = jax.lax.dynamic_slice(
+            qg1, (0, qb * block_q, 0), (group, block_q, dh))
+        qt = qt.reshape(group * block_q, dh).astype(jnp.float32)
+        kt = jax.lax.dynamic_slice(
+            k1, (kb * block_kv, 0), (block_kv, dh)).astype(jnp.float32)
+        vt = jax.lax.dynamic_slice(
+            v1, (kb * block_kv, 0), (block_kv, dh)).astype(jnp.float32)
+        s = (qt @ kt.T) * scale
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        qpos = qb * block_q + (rows % block_q) + q_offset
+        kpos = kb * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kpos < skv) & ((rows % block_q) + qb * block_q < sq)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + p @ vt
+        return acc, m_new, l
+
+    return tile
+
+
+def _finalize(acc, l, group, block_q, dh):
+    out = acc / jnp.maximum(l, 1e-30)
+    out = jnp.where(l > 0.0, out, 0.0)
+    return out.reshape(group, block_q, dh)
+
+
+def _pairlist_attention(qg, kp, vp, *, sq, skv, q_offset, block_q, block_kv,
+                        scale):
+    """Exact causal: scan the static lower-triangle tile list."""
+    B, hkv, group, sqp, dh = qg.shape
+    nq = sqp // block_q
+    nkv = kp.shape[2] // block_kv
+    pairs = jnp.asarray(
+        _causal_pairs(nq, nkv, block_q, block_kv, q_offset))  # [P, 4]
+    tile = _tile_step_factory(block_q, block_kv, dh, group, sq, skv,
+                              q_offset, scale, True, None)
+
+    def per_head(qg1, k1, v1):
+        out0 = jnp.zeros((group, sqp, dh), jnp.float32)
+        acc0 = jnp.zeros((group * block_q, dh), jnp.float32)
+        m0 = jnp.full((group * block_q, 1), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((group * block_q, 1), jnp.float32)
+
+        def step(carry, row):
+            out, acc, m, l = carry
+            qb, kb, first, last = row[0], row[1], row[2] == 1, row[3] == 1
+            acc, m, l = tile(qg1, k1, v1, (acc, m, l), qb, kb, first)
+            norm = _finalize(acc, l, group, block_q, dh)
+            cur = jax.lax.dynamic_slice(
+                out, (0, qb * block_q, 0), (group, block_q, dh))
+            w = jnp.where(last, norm, cur)
+            out = jax.lax.dynamic_update_slice(out, w, (0, qb * block_q, 0))
+            return (out, acc, m, l), None
+
+        (out, _, _, _), _ = jax.lax.scan(step, (out0, acc0, m0, l0), pairs)
+        return out
+
+    return jax.vmap(jax.vmap(per_head))(qg, kp, vp)
+
+
+def _windowed_attention(qg, kp, vp, *, sq, skv, q_offset, window, causal,
+                        block_q, block_kv, scale):
+    """Sliding window: per q block, scan only the covering kv blocks."""
+    B, hkv, group, sqp, dh = qg.shape
+    nq = sqp // block_q
+    nkv = kp.shape[2] // block_kv
+    # kv blocks covering [q_lo - window + 1, q_hi]: the window of the FIRST
+    # query in the block through the LAST (window < block_q needs this too)
+    wb = min(nkv, (block_q - 1 + window) // block_kv + 1)
+    tile = _tile_step_factory(block_q, block_kv, dh, group, sq, skv,
+                              q_offset, scale, causal, window)
+
+    def per_head(qg1, k1, v1):
+        def q_block(qb):
+            q_lo = qb * block_q + q_offset
+            start = jnp.maximum((q_lo - window + 1) // block_kv, 0)
+            start = jnp.clip(start, 0, max(nkv - wb, 0))
+
+            def kv_step(carry, j):
+                return tile(qg1, k1, v1, carry, qb, start + j, j == 0), None
+
+            acc0 = jnp.zeros((group * block_q, dh), jnp.float32)
+            m0 = jnp.full((group * block_q, 1), -jnp.inf, jnp.float32)
+            l0 = jnp.zeros((group * block_q, 1), jnp.float32)
+            (acc, m, l), _ = jax.lax.scan(
+                kv_step, (acc0, m0, l0), jnp.arange(wb))
+            return _finalize(acc, l, group, block_q, dh)
+
+        outs = jax.lax.map(q_block, jnp.arange(nq))  # [nq, G, bq, D]
+        return outs.transpose(1, 0, 2, 3).reshape(group, sqp, dh)
+
+    return jax.vmap(jax.vmap(per_head))(qg, kp, vp)
+
+
+def _full_attention(qg, kp, vp, *, sq, skv, q_offset, block_q, block_kv,
+                    scale):
+    """Non-causal full grid (encoder / cross attention)."""
+    B, hkv, group, sqp, dh = qg.shape
+    nq = sqp // block_q
+    nkv = kp.shape[2] // block_kv
+    tile = _tile_step_factory(block_q, block_kv, dh, group, sq, skv,
+                              q_offset, scale, False, None)
+
+    def per_head(qg1, k1, v1):
+        def q_block(qb):
+            def kv_step(carry, kb):
+                return tile(qg1, k1, v1, carry, qb, kb, kb == 0), None
+
+            acc0 = jnp.zeros((group * block_q, dh), jnp.float32)
+            m0 = jnp.full((group * block_q, 1), -jnp.inf, jnp.float32)
+            l0 = jnp.zeros((group * block_q, 1), jnp.float32)
+            (acc, m, l), _ = jax.lax.scan(
+                kv_step, (acc0, m0, l0), jnp.arange(nkv))
+            return _finalize(acc, l, group, block_q, dh)
+
+        outs = jax.lax.map(q_block, jnp.arange(nq))
+        return outs.transpose(1, 0, 2, 3).reshape(group, sqp, dh)
+
+    return jax.vmap(jax.vmap(per_head))(qg, kp, vp)

@@ -1,0 +1,72 @@
+"""Attention masks: causal, sliding-window, and block-level variants."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+                 # on fully-masked rows (they renormalize to uniform ~0 rows)
+
+
+def causal_mask(sq: int, skv: int | None = None, q_offset: int = 0):
+    """``[sq, skv]`` boolean (True = attend). ``q_offset``: absolute position
+    of query row 0 (for chunked prefill / decode)."""
+    skv = sq if skv is None else skv
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    return kpos <= qpos
+
+
+def sliding_window_mask(sq: int, skv: int | None = None, *, window: int,
+                        q_offset: int = 0):
+    """Causal AND within ``window`` most recent positions (Gemma local)."""
+    skv = sq if skv is None else skv
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    return (kpos <= qpos) & (kpos > qpos - window)
+
+
+def streaming_mask(sq: int, skv: int | None = None, *, sink: int,
+                   recent: int, q_offset: int = 0):
+    """StreamingLLM: attend to the first ``sink`` tokens + ``recent`` most
+    recent tokens (causal)."""
+    skv = sq if skv is None else skv
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    causal = kpos <= qpos
+    keep = (kpos < sink) | (kpos > qpos - recent)
+    return causal & keep
+
+
+def mask_to_bias(mask, dtype=jnp.float32):
+    return jnp.where(mask, 0.0, NEG_INF).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-level (numpy, host-side planning)
+# ---------------------------------------------------------------------------
+
+def causal_block_mask(nq: int, nkv: int) -> np.ndarray:
+    """``[nq, nkv]`` True where kv block b may contain attendable keys for
+    query block q (block-diagonal causality: b <= q)."""
+    return np.arange(nkv)[None, :] <= np.arange(nq)[:, None]
+
+
+def block_mask_from_selection(selections, nq: int, nkv: int) -> np.ndarray:
+    """``selections[qb] -> kv block ids`` to a dense [nq, nkv] bool mask."""
+    m = np.zeros((nq, nkv), dtype=bool)
+    for qb in range(nq):
+        sel = np.asarray(selections[qb], dtype=np.int64)
+        m[qb, sel] = True
+    return m
+
+
+def expand_block_mask(block_mask: np.ndarray, block: int, sq: int, skv: int,
+                      q_offset: int = 0) -> np.ndarray:
+    """Block mask [nq, nkv] -> token mask [sq, skv], intersected with
+    causality."""
+    nq, nkv = block_mask.shape
+    tok = np.repeat(np.repeat(block_mask, block, 0), block, 1)[:sq, :skv]
+    qpos = np.arange(sq)[:, None] + q_offset
+    kpos = np.arange(skv)[None, :]
+    return tok & (kpos <= qpos)

@@ -1,0 +1,227 @@
+"""KV-block selection policies (TPU block-granular adaptations, DESIGN.md §2.5).
+
+A policy answers: *given head h's block budget nb at query block qb, which kv
+blocks participate?*  Two families:
+
+**Static** (shape-only, no runtime tensors — usable in the dry-run and as the
+default serving path, budgets from the offline S-HPLB plan):
+
+- :func:`streaming_policy`      — sink blocks + most-recent blocks
+  (StreamingLLM [27] at block granularity).
+- :func:`strided_policy`        — sink + recent + strided middle coverage
+  (a block-granular stand-in for MInference's vertical-slash pattern:
+  verticals ~ strided columns, slash ~ the diagonal band).
+
+**Dynamic** (scores from runtime Q/K, cheap O(S·D) estimators; selection =
+per-(head, q_blk) top-``nb`` blocks over the scores — the MInference/Quest/
+XAttention approximation step, block-granular):
+
+- :func:`quest_block_scores`        — Quest [21]: per-block key min/max
+  summaries; upper-bound score max(q·kmin, q·kmax) summed over dims.
+- :func:`antidiagonal_block_scores` — XAttention [29]: sum of strided
+  antidiagonal elements of each (q_blk, kv_blk) tile as the importance
+  estimate.
+- :func:`topk_select`               — turn scores into per-q-block selections
+  under a block budget, always keeping sink + diagonal (local) blocks.
+
+All selections are causal (kv_blk <= q_blk) and deterministic.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Static policies (host-side, numpy)
+# ---------------------------------------------------------------------------
+
+import functools
+
+
+@functools.lru_cache(maxsize=4096)
+def _streaming_cached(head, nb, nq, nkv, sink_blocks):
+    return _streaming_impl(head, nb, nq, nkv, sink_blocks)
+
+
+def streaming_policy(head: int, nb: int, nq: int, nkv: int,
+                     sink_blocks: int = 1) -> list[np.ndarray]:
+    return _streaming_cached(int(head), int(nb), int(nq), int(nkv),
+                             int(sink_blocks))
+
+
+def _streaming_impl(head: int, nb: int, nq: int, nkv: int,
+                    sink_blocks: int = 1) -> list[np.ndarray]:
+    """sink + recent blocks under a per-head block budget ``nb``."""
+    out = []
+    for qb in range(nq):
+        avail = qb + 1  # causal: blocks 0..qb
+        n = min(nb, avail)
+        n_sink = min(sink_blocks, n)
+        n_recent = n - n_sink
+        sel = list(range(n_sink))
+        sel += list(range(qb - n_recent + 1, qb + 1))
+        out.append(np.unique(np.asarray(sel, dtype=np.int64)))
+    return out
+
+
+@functools.lru_cache(maxsize=4096)
+def _strided_cached(head, nb, nq, nkv, sink_blocks, local_blocks):
+    return _strided_impl(head, nb, nq, nkv, sink_blocks, local_blocks)
+
+
+def strided_policy(head: int, nb: int, nq: int, nkv: int,
+                   sink_blocks: int = 1, local_blocks: int = 2
+                   ) -> list[np.ndarray]:
+    return _strided_cached(int(head), int(nb), int(nq), int(nkv),
+                           int(sink_blocks), int(local_blocks))
+
+
+def _strided_impl(head: int, nb: int, nq: int, nkv: int,
+                  sink_blocks: int = 1, local_blocks: int = 2
+                  ) -> list[np.ndarray]:
+    """sink + local diagonal band + strided middle blocks (vertical-ish).
+
+    The stride phase is head-dependent so different heads cover different
+    columns — the block-granular analogue of per-head vertical lines.
+    """
+    out = []
+    for qb in range(nq):
+        avail = qb + 1
+        n = min(nb, avail)
+        sel = set(range(min(sink_blocks, n)))
+        for i in range(local_blocks):
+            if len(sel) >= n:
+                break
+            b = qb - i
+            if b >= 0:
+                sel.add(b)
+        middle = [b for b in range(sink_blocks, qb - local_blocks + 1)]
+        if middle and len(sel) < n:
+            want = n - len(sel)
+            stride = max(1, len(middle) // want)
+            phase = head % stride
+            for b in middle[phase::stride]:
+                if len(sel) >= n:
+                    break
+                sel.add(b)
+            # fill any remainder densely from the most recent middle blocks
+            for b in reversed(middle):
+                if len(sel) >= n:
+                    break
+                sel.add(b)
+        out.append(np.array(sorted(sel), dtype=np.int64))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dynamic score estimators (jnp, in-graph, cheap)
+# ---------------------------------------------------------------------------
+
+def quest_block_scores(q: jnp.ndarray, k: jnp.ndarray, block: int):
+    """Quest-style block upper-bound scores.
+
+    q: [H, Sq, Dh]; k: [Hkv, Skv, Dh] -> scores [H, nq, nkv] (f32).
+    Per kv block: elementwise min/max over keys; score of (q, blk) =
+    sum_d max(q_d * min_d, q_d * max_d), maxed over queries in the q block.
+    """
+    hq, sq, dh = q.shape
+    hkv, skv, _ = k.shape
+    n_rep = hq // hkv
+    pad_q = (-sq) % block
+    pad_k = (-skv) % block
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)),
+                 constant_values=0.0)
+    nq = qp.shape[1] // block
+    nkv = kp.shape[1] // block
+    kb = kp.reshape(hkv, nkv, block, dh)
+    kmin = kb.min(axis=2)  # [Hkv, nkv, dh]
+    kmax = kb.max(axis=2)
+    kmin = jnp.repeat(kmin, n_rep, axis=0)  # [H, nkv, dh]
+    kmax = jnp.repeat(kmax, n_rep, axis=0)
+    qb = qp.reshape(hq, nq, block, dh).astype(jnp.float32)
+    # exact Quest bound sum_d max(q_d*kmin_d, q_d*kmax_d), decomposed as
+    # relu(q)·kmax + (-relu(-q))·kmin — two einsums, no [.., nkv, dh] blowup
+    ub = jnp.einsum(
+        "hqbd,hkd->hqbk",
+        jnp.maximum(qb, 0.0), kmax.astype(jnp.float32)) + jnp.einsum(
+        "hqbd,hkd->hqbk",
+        jnp.minimum(qb, 0.0), kmin.astype(jnp.float32))
+    return ub.max(axis=2)  # [H, nq, nkv] max over queries in block
+
+
+def antidiagonal_block_scores(q: jnp.ndarray, k: jnp.ndarray, block: int,
+                              stride: int = 16):
+    """XAttention-style antidiagonal importance estimate per tile.
+
+    Sums ``block/stride`` antidiagonal strips of each (q_blk, kv_blk) logits
+    tile using strided row/col subsampling — O(S^2/stride) instead of O(S^2),
+    evaluated at block granularity: score[h, qb, kb] = sum of exp-logits on
+    the sampled antidiagonals.
+    """
+    hq, sq, dh = q.shape
+    hkv, skv, _ = k.shape
+    n_rep = hq // hkv
+    pad_q = (-sq) % block
+    pad_k = (-skv) % block
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+    nq = qp.shape[1] // block
+    nkv = kp.shape[1] // block
+    # strided subsample inside each block: rows r = 0, stride, 2*stride, ...
+    qs = qp.reshape(hq, nq, block, dh)[:, :, ::stride, :]      # [H,nq,bs,dh]
+    ks = kp.reshape(hkv, nkv, block, dh)[:, :, ::stride, :]    # [Hkv,nkv,bs,dh]
+    ks = jnp.repeat(ks, n_rep, axis=0)
+    scale = dh ** -0.5
+    s = jnp.einsum("hqad,hkbd->hqkab", qs.astype(jnp.float32),
+                   ks.astype(jnp.float32)) * scale  # [H,nq,nkv,bs,bs]
+    # antidiagonal sum of the subsampled tile ~ antidiagonal strips of the
+    # full tile (XAttention's S(i,j) estimator).  d-th antidiagonal =
+    # {(i, j) : (i + j) % bs == d}; combine via a tiny one-hot (bs <= 8).
+    bs = s.shape[-1]
+    ar = jnp.arange(bs)
+    idx = (ar[:, None] + ar[None, :]) % bs  # [i, j] -> antidiag id
+    oh = (idx[..., None] == ar[None, None, :]).astype(jnp.float32)
+    sums = jnp.einsum("hqkab,abd->hqkd", s, oh)
+    return sums.max(axis=-1)  # [H, nq, nkv]
+
+
+def topk_select(scores: np.ndarray, budgets_blocks: np.ndarray,
+                *, keep_sink: bool = True, keep_local: bool = True
+                ) -> list[list[np.ndarray]]:
+    """Scores [H, nq, nkv] + per-head block budgets -> selections.
+
+    Per (head, q_blk): rank causal blocks by score desc, keep the top
+    ``nb[h]`` (always including block 0 and the diagonal block when asked).
+    """
+    scores = np.asarray(scores)
+    H, nq, nkv = scores.shape
+    budgets_blocks = np.asarray(budgets_blocks, dtype=np.int64)
+    out: list[list[np.ndarray]] = []
+    for h in range(H):
+        rows = []
+        for qb in range(nq):
+            avail = qb + 1
+            nb = int(min(budgets_blocks[h], avail))
+            forced = []
+            if keep_sink:
+                forced.append(0)
+            if keep_local:
+                forced.append(qb)
+            forced = sorted(set(b for b in forced if b <= qb))
+            s = scores[h, qb, :avail].copy()
+            s[forced] = np.inf  # force-keep
+            order = np.argsort(-s, kind="stable")[:nb]
+            rows.append(np.sort(order).astype(np.int64))
+        out.append(rows)
+    return out
+
+
+def policy_by_name(name: str):
+    """Static policy factory for the engine / dry-run."""
+    if name == "streaming":
+        return streaming_policy
+    if name == "strided":
+        return strided_policy
+    raise ValueError(f"unknown static policy {name!r}")

@@ -1,0 +1,31 @@
+"""Rotary position embeddings (RoPE) — shared by all attention archs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_tables(head_dim: int, max_len: int, theta: float = 10000.0,
+                dtype=jnp.float32):
+    """``(cos[max_len, head_dim/2], sin[...])`` tables."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)  # [max_len, head_dim/2]
+    return jnp.cos(freqs).astype(dtype), jnp.sin(freqs).astype(dtype)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """Apply RoPE to ``x`` of shape ``[..., S, Dh]`` at ``positions [S]``.
+
+    Split-halves convention (x = [x1, x2]; rotate pairs (x1[i], x2[i])) —
+    matches Llama-family checkpoints.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    freqs = positions.astype(jnp.float32)[:, None] * inv[None, :]  # [S, half]
+    cos = jnp.cos(freqs)
+    sin = jnp.sin(freqs)
+    x1, x2 = x[..., :half], x[..., half:]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)

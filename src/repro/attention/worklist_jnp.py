@@ -1,0 +1,136 @@
+"""Pure-jnp work-list attention — the portable twin of the Pallas kernels.
+
+The models and the dry-run path cannot lower Mosaic TPU kernels on the CPU
+container, so the same flattened work-list execution model (DESIGN.md §2.2)
+is provided as a ``lax.scan`` over items with dynamic slices.  Properties:
+
+- HLO size is O(1) in sequence length (a while loop over the item list) —
+  a 500k-context program lowers as compactly as a 4k one;
+- FLOPs are EXACT: only selected (head, q_blk, kv_blk) tiles are computed —
+  ``cost_analysis`` of the lowered step reflects the true sparse compute,
+  which is what the roofline analysis reads;
+- it is differentiable (scan + dynamic_update_slice), so the same path
+  serves training with causal work-lists;
+- semantics match ``kernels.sparse_prefill`` bit-for-bit in f32.
+
+``causal_items`` builds the dense-causal work-list (used for baseline/
+training attention); sparse lists come from ``repro.core.worklist``.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.worklist import (
+    F_FIRST,
+    F_HEAD,
+    F_KVBLK,
+    F_KVHEAD,
+    F_LAST,
+    F_QBLK,
+    F_VALID,
+    ITEM_FIELDS,
+)
+
+NEG_INF = -1e30
+
+
+def causal_items(num_heads: int, nq: int, kv_of_head: np.ndarray | None = None,
+                 ) -> np.ndarray:
+    """Full-causal work-list: every (h, qb, kb <= qb) tile.  [L, 7] int32."""
+    if kv_of_head is None:
+        kv_of_head = np.arange(num_heads)
+    rows = []
+    for h in range(num_heads):
+        for qb in range(nq):
+            for kb in range(qb + 1):
+                rows.append((h, qb, kb, int(kb == 0), int(kb == qb), 1,
+                             int(kv_of_head[h])))
+    return np.asarray(rows, dtype=np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv", "scale"))
+def worklist_attention(
+    q: jnp.ndarray,       # [H, Sq, D]
+    k: jnp.ndarray,       # [Hkv, Skv, D]
+    v: jnp.ndarray,
+    items: jnp.ndarray,   # [L, ITEM_FIELDS] int32
+    *,
+    block_q: int = 128,
+    block_kv: int = 128,
+    scale: float | None = None,
+):
+    """Execute a work-list with a single lax.scan (one device's list).
+
+    Mirrors ``kernels.sparse_prefill.sparse_prefill_attention``; (head, q_blk)
+    tiles with no items yield zero rows.
+    """
+    hq, sq, dh = q.shape
+    hkv, skv, _ = k.shape
+    scale_v = (dh ** -0.5) if scale is None else scale
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0))).astype(jnp.float32)
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0))).astype(jnp.float32)
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0))).astype(jnp.float32)
+    sqp = qp.shape[1]
+
+    out0 = jnp.zeros((hq, sqp, dh), jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    m0 = jnp.full((block_q, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+
+    def step(carry, it):
+        out, acc, m, l = carry
+        head, qblk, kvblk = it[F_HEAD], it[F_QBLK], it[F_KVBLK]
+        kvh = it[F_KVHEAD]
+        first = it[F_FIRST] == 1
+        last = it[F_LAST] == 1
+        valid = it[F_VALID] == 1
+
+        acc = jnp.where(first, jnp.zeros_like(acc), acc)
+        m = jnp.where(first, jnp.full_like(m, -jnp.inf), m)
+        l = jnp.where(first, jnp.zeros_like(l), l)
+
+        qt = jax.lax.dynamic_slice(
+            qp, (head, qblk * block_q, 0), (1, block_q, dh))[0]
+        kt = jax.lax.dynamic_slice(
+            kp, (kvh, kvblk * block_kv, 0), (1, block_kv, dh))[0]
+        vt = jax.lax.dynamic_slice(
+            vp, (kvh, kvblk * block_kv, 0), (1, block_kv, dh))[0]
+        s = (qt @ kt.T) * scale_v
+        qpos = qblk * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = kvblk * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kpos <= qpos) & (kpos < skv) & (qpos < sq) & valid
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + p @ vt
+        # no-op the accumulator update on invalid (padding) items
+        acc = jnp.where(valid, acc_new, acc)
+        l = jnp.where(valid, l_new, l)
+        m = jnp.where(valid, m_new, m)
+
+        write = valid & last
+        norm = acc / jnp.maximum(l, 1e-30)
+        norm = jnp.where(l > 0.0, norm, 0.0)
+        cur = jax.lax.dynamic_slice(
+            out, (head, qblk * block_q, 0), (1, block_q, dh))[0]
+        tile = jnp.where(write, norm, cur)
+        out = jax.lax.dynamic_update_slice(
+            out, tile[None], (head, qblk * block_q, 0))
+        return (out, acc, m, l), None
+
+    (out, _, _, _), _ = jax.lax.scan(step, (out0, acc0, m0, l0), items)
+    return out[:, :sq, :].astype(q.dtype)
+
+
+def batched_worklist_attention(q, k, v, items, **kw):
+    """vmap over a leading batch dim; items shared across the batch."""
+    fn = functools.partial(worklist_attention, **kw)
+    return jax.vmap(lambda qq, kk, vv: fn(qq, kk, vv, items))(q, k, v)

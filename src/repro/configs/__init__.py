@@ -1,0 +1,5 @@
+"""Assigned architecture configs (exact) + reduced smoke variants + shapes."""
+from repro.configs.base import ArchSpec
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.configs.registry import ARCHS, cells, get
+from repro.configs.inputs import input_specs

@@ -1,0 +1,30 @@
+"""Arch-spec plumbing shared by the per-architecture config modules."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    """One assigned architecture: exact full config + reduced smoke config.
+
+    module: which model family implements it ("transformer", "mamba2",
+            "rglru", "whisper", "llava").
+    hplb:   whether S-HPLB head budgets apply ("full", "partial", "none") —
+            see DESIGN.md §Arch-applicability.
+    supports_decode: False for encoder-only (none here; whisper decodes).
+    long_mode: how long_500k runs — "sparse" (S-HPLB budgeted decode),
+               "native" (sub-quadratic arch), or "skip" (with reason).
+    """
+
+    arch_id: str
+    family: str
+    module: str
+    full: Any
+    smoke: Any
+    hplb: str = "full"
+    supports_decode: bool = True
+    long_mode: str = "sparse"
+    skip_reason: str = ""
+    source: str = ""

@@ -1,0 +1,30 @@
+"""gemma3-1b [dense]: 26L d_model=1152 4H (GQA kv=1) d_ff=6912
+vocab=262144 — 5:1 local:global, 128k ctx [hf:google/gemma-3-1b-pt].
+
+Single KV group => head-parallelism runs in kv_replication mode
+(DESIGN.md §Arch-applicability); local layers' structural budget is the
+sliding window (512)."""
+from repro.configs.base import ArchSpec
+from repro.models.transformer import TransformerConfig
+
+FULL = TransformerConfig(
+    name="gemma3-1b",
+    num_layers=26, d_model=1152, num_heads=4, num_kv_heads=1,
+    d_ff=6912, vocab_size=262144, head_dim=256,
+    attn_pattern="LLLLLG", local_window=512, rope_theta=1_000_000.0,
+    tie_embeddings=True, layer_loop="unroll",
+)
+
+SMOKE = TransformerConfig(
+    name="gemma3-1b-smoke",
+    num_layers=6, d_model=96, num_heads=4, num_kv_heads=1,
+    d_ff=192, vocab_size=512, head_dim=32,
+    attn_pattern="LLLLLG", local_window=128, tie_embeddings=True,
+    layer_loop="unroll",
+)
+
+SPEC = ArchSpec(
+    arch_id="gemma3-1b", family="dense", module="transformer",
+    full=FULL, smoke=SMOKE, hplb="full", long_mode="sparse",
+    source="hf:google/gemma-3-1b-pt",
+)

@@ -1,0 +1,31 @@
+"""granite-moe-1b-a400m [moe]: 24L d_model=1024 16H (GQA kv=8) d_ff=512
+vocab=49155, MoE 32 experts top-8 [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+MoE FFN shards experts over the model axis (EP); attention side takes
+S-HPLB budgets normally — the AFD-style composition of the paper."""
+from repro.configs.base import ArchSpec
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+FULL = TransformerConfig(
+    name="granite-moe-1b-a400m",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=8,
+    d_ff=512, vocab_size=49155, head_dim=64,
+    attn_pattern="G", tie_embeddings=True,
+    moe=MoEConfig(num_experts=32, experts_per_token=8),
+)
+
+SMOKE = TransformerConfig(
+    name="granite-moe-smoke",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=96, vocab_size=512, head_dim=16,
+    attn_pattern="G", tie_embeddings=True,
+    moe=MoEConfig(num_experts=4, experts_per_token=2),
+    layer_loop="unroll",
+)
+
+SPEC = ArchSpec(
+    arch_id="granite-moe-1b-a400m", family="moe", module="transformer",
+    full=FULL, smoke=SMOKE, hplb="full", long_mode="sparse",
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

@@ -1,0 +1,82 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero device allocation: exactly what
+``jax.jit(...).lower(**input_specs(...))`` needs for the multi-pod dry-run.
+Returns DATA inputs only (tokens / frames / patches / decode state sizes);
+parameter and cache trees are derived with ``jax.eval_shape`` in
+``repro.launch.steps``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.configs.shapes import ShapeSpec
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_inputs(spec: ArchSpec, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if spec.module == "whisper":
+        cfg = spec.full
+        # decoder trains on S tokens; encoder frames are the stub frontend
+        return {
+            "frames": _sds((B, cfg.max_frames, cfg.d_model), F32),
+            "tokens": _sds((B, S), I32),
+            "labels": _sds((B, S), I32),
+        }
+    if spec.module == "llava":
+        cfg = spec.full
+        p = cfg.num_patches
+        return {
+            "patches": _sds((B, p, cfg.backbone.d_model), F32),
+            "tokens": _sds((B, S - p), I32),   # fused seq length == S
+            "labels": _sds((B, S - p), I32),
+        }
+    return {
+        "tokens": _sds((B, S), I32),
+        "labels": _sds((B, S), I32),
+    }
+
+
+def prefill_inputs(spec: ArchSpec, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if spec.module == "whisper":
+        cfg = spec.full
+        return {
+            "frames": _sds((B, cfg.max_frames, cfg.d_model), F32),
+            "tokens": _sds((B, S), I32),
+        }
+    if spec.module == "llava":
+        cfg = spec.full
+        p = cfg.num_patches
+        return {
+            "patches": _sds((B, p, cfg.backbone.d_model), F32),
+            "tokens": _sds((B, S - p), I32),
+        }
+    return {"tokens": _sds((B, S), I32)}
+
+
+def decode_inputs(spec: ArchSpec, shape: ShapeSpec) -> dict:
+    """Decode-step data inputs (cache/state trees come from eval_shape)."""
+    B = shape.global_batch
+    out = {"token": _sds((B,), I32)}
+    if spec.module == "whisper":
+        cfg = spec.full
+        out["memory"] = _sds((B, cfg.max_frames, cfg.d_model), F32)
+    return out
+
+
+def input_specs(spec: ArchSpec, shape: ShapeSpec) -> dict:
+    if shape.kind == "train":
+        return train_inputs(spec, shape)
+    if shape.kind == "prefill":
+        return prefill_inputs(spec, shape)
+    return decode_inputs(spec, shape)

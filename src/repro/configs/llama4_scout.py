@@ -1,0 +1,29 @@
+"""llama4-scout-17b-a16e [moe]: 48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16 experts top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E]."""
+from repro.configs.base import ArchSpec
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+FULL = TransformerConfig(
+    name="llama4-scout-17b-a16e",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=8192, vocab_size=202048, head_dim=128,
+    attn_pattern="G", tie_embeddings=False,
+    moe=MoEConfig(num_experts=16, experts_per_token=1),
+)
+
+SMOKE = TransformerConfig(
+    name="llama4-scout-smoke",
+    num_layers=2, d_model=80, num_heads=5, num_kv_heads=1,
+    d_ff=128, vocab_size=512, head_dim=16,
+    attn_pattern="G", tie_embeddings=False,
+    moe=MoEConfig(num_experts=4, experts_per_token=1),
+    layer_loop="unroll",
+)
+
+SPEC = ArchSpec(
+    arch_id="llama4-scout-17b-a16e", family="moe", module="transformer",
+    full=FULL, smoke=SMOKE, hplb="full", long_mode="sparse",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

@@ -1,0 +1,33 @@
+"""llava-next-mistral-7b [vlm]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000 — anyres tiling [hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+Backbone only; the vision tower is a STUB — input_specs() provides
+precomputed patch embeddings (576 per image tile)."""
+from repro.configs.base import ArchSpec
+from repro.models.llava import LlavaConfig
+from repro.models.transformer import TransformerConfig
+
+_BACKBONE = TransformerConfig(
+    name="llava-next-mistral-7b",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=32000, head_dim=128,
+    attn_pattern="G", tie_embeddings=False,
+)
+
+FULL = LlavaConfig(backbone=_BACKBONE, num_patches=576)
+
+SMOKE = LlavaConfig(
+    backbone=TransformerConfig(
+        name="llava-smoke",
+        num_layers=2, d_model=128, num_heads=8, num_kv_heads=2,
+        d_ff=256, vocab_size=512, head_dim=16,
+        attn_pattern="G", tie_embeddings=False,
+    ),
+    num_patches=16,
+)
+
+SPEC = ArchSpec(
+    arch_id="llava-next-mistral-7b", family="vlm", module="llava",
+    full=FULL, smoke=SMOKE, hplb="full", long_mode="sparse",
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

@@ -1,0 +1,26 @@
+"""mamba2-1.3b [ssm]: 48L d_model=2048 (attn-free) vocab=50280,
+ssm_state=128 — SSD state-space duality [arXiv:2405.21060].
+
+Attention-free: S-HPLB budgets are INAPPLICABLE (hplb="none"); SSD state
+heads are homogeneous, sharded evenly over the model axis.  long_500k runs
+natively (O(1)-per-token recurrent decode)."""
+from repro.configs.base import ArchSpec
+from repro.models.mamba2 import Mamba2Config
+
+FULL = Mamba2Config(
+    name="mamba2-1.3b",
+    num_layers=48, d_model=2048, d_state=128, head_dim=64,
+    expand=2, chunk=128, vocab_size=50280,
+)
+
+SMOKE = Mamba2Config(
+    name="mamba2-smoke",
+    num_layers=2, d_model=64, d_state=16, head_dim=16,
+    expand=2, chunk=32, vocab_size=512,
+)
+
+SPEC = ArchSpec(
+    arch_id="mamba2-1.3b", family="ssm", module="mamba2",
+    full=FULL, smoke=SMOKE, hplb="none", long_mode="native",
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,24 @@
+"""minitron-8b [dense]: 32L d_model=4096 32H (GQA kv=8) d_ff=16384
+vocab=256000 — pruned nemotron [arXiv:2407.14679; hf]."""
+from repro.configs.base import ArchSpec
+from repro.models.transformer import TransformerConfig
+
+FULL = TransformerConfig(
+    name="minitron-8b",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=16384, vocab_size=256000, head_dim=128,
+    attn_pattern="G", tie_embeddings=True,
+)
+
+SMOKE = TransformerConfig(
+    name="minitron-8b-smoke",
+    num_layers=2, d_model=128, num_heads=8, num_kv_heads=2,
+    d_ff=256, vocab_size=512, head_dim=16,
+    attn_pattern="G", tie_embeddings=True,
+)
+
+SPEC = ArchSpec(
+    arch_id="minitron-8b", family="dense", module="transformer",
+    full=FULL, smoke=SMOKE, hplb="full", long_mode="sparse",
+    source="arXiv:2407.14679; hf",
+)

@@ -1,0 +1,29 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000 — RG-LRU + local attn, 1 attention : 2 recurrent
+[arXiv:2402.19427; hf].
+
+S-HPLB applies to the local-attention layers only (hplb="partial");
+RG-LRU layers are attention-free. long_500k runs natively (sub-quadratic:
+O(1) recurrent state + O(window) attention cache)."""
+from repro.configs.base import ArchSpec
+from repro.models.rglru import GriffinConfig
+
+FULL = GriffinConfig(
+    name="recurrentgemma-2b",
+    num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1,
+    d_ff=7680, vocab_size=256000, head_dim=256,
+    lru_width=2560, conv_width=4, local_window=2048, pattern="RRA",
+)
+
+SMOKE = GriffinConfig(
+    name="recurrentgemma-smoke",
+    num_layers=3, d_model=64, num_heads=4, num_kv_heads=1,
+    d_ff=128, vocab_size=512, head_dim=16,
+    lru_width=64, conv_width=4, local_window=64, pattern="RRA",
+)
+
+SPEC = ArchSpec(
+    arch_id="recurrentgemma-2b", family="hybrid", module="rglru",
+    full=FULL, smoke=SMOKE, hplb="partial", long_mode="native",
+    source="arXiv:2402.19427; hf",
+)

@@ -1,0 +1,48 @@
+"""Architecture registry: ``--arch <id>`` lookup + the 40-cell suite."""
+from __future__ import annotations
+
+from repro.configs.base import ArchSpec
+from repro.configs.shapes import SHAPES, ShapeSpec
+
+from repro.configs.minitron_8b import SPEC as _minitron
+from repro.configs.smollm_135m import SPEC as _smollm
+from repro.configs.gemma3_1b import SPEC as _gemma3
+from repro.configs.yi_6b import SPEC as _yi
+from repro.configs.granite_moe_1b import SPEC as _granite
+from repro.configs.llama4_scout import SPEC as _llama4
+from repro.configs.llava_next_mistral_7b import SPEC as _llava
+from repro.configs.recurrentgemma_2b import SPEC as _rgemma
+from repro.configs.mamba2_1p3b import SPEC as _mamba2
+from repro.configs.whisper_base import SPEC as _whisper
+
+ARCHS: dict[str, ArchSpec] = {
+    s.arch_id: s
+    for s in [
+        _minitron, _smollm, _gemma3, _yi, _granite,
+        _llama4, _llava, _rgemma, _mamba2, _whisper,
+    ]
+}
+
+
+def get(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def cells() -> list[tuple[ArchSpec, ShapeSpec, str]]:
+    """All 40 (arch x shape) cells with status: "run" or "skip:<reason>".
+
+    whisper-base x long_500k is the single skipped-by-design cell
+    (DESIGN.md §Arch-applicability); it is still listed so EXPERIMENTS.md
+    reports all 40 rows.
+    """
+    out = []
+    for spec in ARCHS.values():
+        for shape in SHAPES.values():
+            status = "run"
+            if shape.name == "long_500k" and spec.long_mode == "skip":
+                status = f"skip:{spec.skip_reason}"
+            out.append((spec, shape, status))
+    return out

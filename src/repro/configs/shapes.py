@@ -1,0 +1,31 @@
+"""The assigned input-shape suite (identical for all 10 LM-family archs).
+
+    train_4k      seq_len=4096    global_batch=256   (training)
+    prefill_32k   seq_len=32768   global_batch=32    (inference prefill)
+    decode_32k    seq_len=32768   global_batch=128   (decode: 1 new token,
+                                                      KV cache of seq_len)
+    long_500k     seq_len=524288  global_batch=1     (long-context decode)
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (decode), not ``train_step``.
+Applicability filtering (which arch runs which shape) lives in
+``repro.configs.registry.cells``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}

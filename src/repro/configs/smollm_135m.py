@@ -1,0 +1,24 @@
+"""smollm-135m [dense]: 30L d_model=576 9H (GQA kv=3) d_ff=1536
+vocab=49152 — llama-arch small [hf:HuggingFaceTB/SmolLM-135M; hf]."""
+from repro.configs.base import ArchSpec
+from repro.models.transformer import TransformerConfig
+
+FULL = TransformerConfig(
+    name="smollm-135m",
+    num_layers=30, d_model=576, num_heads=9, num_kv_heads=3,
+    d_ff=1536, vocab_size=49152, head_dim=64,
+    attn_pattern="G", tie_embeddings=True,
+)
+
+SMOKE = TransformerConfig(
+    name="smollm-135m-smoke",
+    num_layers=2, d_model=96, num_heads=3, num_kv_heads=1,
+    d_ff=192, vocab_size=512, head_dim=32,
+    attn_pattern="G", tie_embeddings=True,
+)
+
+SPEC = ArchSpec(
+    arch_id="smollm-135m", family="dense", module="transformer",
+    full=FULL, smoke=SMOKE, hplb="full", long_mode="sparse",
+    source="hf:HuggingFaceTB/SmolLM-135M",
+)

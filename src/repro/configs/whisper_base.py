@@ -1,0 +1,31 @@
+"""whisper-base [audio]: 6L d_model=512 8H (MHA) d_ff=2048 vocab=51865 —
+enc-dec, conv frontend STUB [arXiv:2212.04356].
+
+input_specs() provides precomputed frame embeddings [B, 1500, 512].
+decode_32k is lowered mechanically (self-attn KV cache of 32k) even though
+whisper's practical target length is 448 — the lowering is what is proven.
+long_500k is SKIPPED by design: a 30 s audio window yields <=1500 frames;
+a 500k-token decoder context is not a meaningful shape for this family
+(recorded in EXPERIMENTS.md §Dry-run)."""
+from repro.configs.base import ArchSpec
+from repro.models.whisper import WhisperConfig
+
+FULL = WhisperConfig(
+    name="whisper-base",
+    num_layers=6, d_model=512, num_heads=8, d_ff=2048, vocab_size=51865,
+    max_frames=1500, max_target=448,
+)
+
+SMOKE = WhisperConfig(
+    name="whisper-smoke",
+    num_layers=2, d_model=64, num_heads=4, d_ff=128, vocab_size=512,
+    max_frames=64, max_target=32,
+)
+
+SPEC = ArchSpec(
+    arch_id="whisper-base", family="audio", module="whisper",
+    full=FULL, smoke=SMOKE, hplb="full", long_mode="skip",
+    skip_reason=("enc-dec audio: 30s input => 1.5k frames; 500k decoder "
+                 "context is not a meaningful shape for this family"),
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,24 @@
+"""yi-6b [dense]: 32L d_model=4096 32H (GQA kv=4) d_ff=11008
+vocab=64000 — llama-arch GQA [arXiv:2403.04652; hf]."""
+from repro.configs.base import ArchSpec
+from repro.models.transformer import TransformerConfig
+
+FULL = TransformerConfig(
+    name="yi-6b",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=4,
+    d_ff=11008, vocab_size=64000, head_dim=128,
+    attn_pattern="G", tie_embeddings=False,
+)
+
+SMOKE = TransformerConfig(
+    name="yi-6b-smoke",
+    num_layers=2, d_model=128, num_heads=8, num_kv_heads=1,
+    d_ff=256, vocab_size=512, head_dim=16,
+    attn_pattern="G", tie_embeddings=False,
+)
+
+SPEC = ArchSpec(
+    arch_id="yi-6b", family="dense", module="transformer",
+    full=FULL, smoke=SMOKE, hplb="full", long_mode="sparse",
+    source="arXiv:2403.04652; hf",
+)

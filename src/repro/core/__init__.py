@@ -1,0 +1,55 @@
+"""The paper's primary contribution: S-HPLB.
+
+- sparsity profiling (``sparsity``), the stability observation;
+- adaptive max-min budget allocation (``budget``);
+- head->device multiway partitioning (``partition``);
+- the deployment planner tying them together (``planner``);
+- flattened SPMD work-lists for TPU (``worklist``);
+- evaluation metrics + roofline model (``metrics``).
+"""
+from repro.core.sparsity import (
+    DEFAULT_BUDGET_GRID,
+    HeadSparsityProfile,
+    profile_attention_weights,
+    profile_model,
+    recovery_curve,
+    synthetic_head_curves,
+)
+from repro.core.budget import (
+    AllocationResult,
+    maxmin_allocation,
+    topp_allocation,
+    uniform_allocation,
+    waterfill_allocation,
+)
+from repro.core.partition import (
+    Assignment,
+    best_partition,
+    dp_partition,
+    kk_partition,
+    lpt_partition,
+    naive_partition,
+    refine_partition,
+)
+from repro.core.planner import (
+    HPLBPlan,
+    LayerPlan,
+    make_plan,
+    permute_attention_params,
+    plan_summary,
+)
+from repro.core.worklist import (
+    WorkList,
+    blocks_for_budget,
+    build_worklist,
+    worklist_flops,
+    worklist_from_budgets,
+    worklist_hbm_bytes,
+)
+from repro.core.metrics import (
+    RooflineTerms,
+    attention_fidelity,
+    imbalance_ratio,
+    mfu,
+    roofline,
+)

@@ -1,0 +1,100 @@
+"""Metrics used across benchmarks and tests (paper's evaluation quantities).
+
+- imbalance ratio I (paper Eq. 2) over any load vector,
+- attention-output fidelity (cosine / relative error vs full attention),
+- recovery statistics,
+- latency model helpers: convert work-list / HLO counts into roofline times
+  for the target TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip) — the roofline targets.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW_PER_LINK = 50e9        # bytes/s per link (~)
+
+
+def imbalance_ratio(loads) -> float:
+    """Paper Eq. (2): I = max_d L_d / mean_d L_d."""
+    loads = np.asarray(loads, dtype=np.float64)
+    mean = loads.mean()
+    return float(loads.max() / mean) if mean > 0 else 1.0
+
+
+def attention_fidelity(out_sparse: np.ndarray, out_full: np.ndarray) -> dict:
+    """Output-level quality of a sparse attention vs the full oracle."""
+    a = np.asarray(out_sparse, np.float64).ravel()
+    b = np.asarray(out_full, np.float64).ravel()
+    denom = max(float(np.linalg.norm(b)), 1e-12)
+    rel = float(np.linalg.norm(a - b)) / denom
+    cos = float(np.dot(a, b) / max(np.linalg.norm(a) * np.linalg.norm(b), 1e-12))
+    return {"rel_err": rel, "cosine": cos, "max_abs": float(np.abs(a - b).max())}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Three-term roofline estimate, in seconds (per §ROOFLINE)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline lower bound on step time = max of the three terms
+        (assuming perfect overlap between the pipes)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+        }
+
+
+def roofline(
+    flops: float, hbm_bytes: float, collective_bytes: float,
+    num_chips: int, *, ici_links: int = 4,
+) -> RooflineTerms:
+    """Roofline terms for a step executed on ``num_chips`` TPU v5e chips.
+
+    ``flops`` / ``hbm_bytes`` are TOTALS over the job (cost_analysis of the
+    whole step); ``collective_bytes`` is the summed operand bytes of
+    collective ops in the lowered HLO.  ``ici_links``: per-chip ICI links
+    usable concurrently (v5e 2D torus: 4).
+    """
+    return RooflineTerms(
+        compute_s=flops / (num_chips * PEAK_FLOPS_BF16),
+        memory_s=hbm_bytes / (num_chips * HBM_BW),
+        collective_s=collective_bytes / (num_chips * ici_links * ICI_BW_PER_LINK),
+    )
+
+
+def model_flops_train(n_params: int, n_tokens: int) -> float:
+    """The 6*N*D rule for a train step (fwd+bwd)."""
+    return 6.0 * n_params * n_tokens
+
+
+def model_flops_infer(n_params: int, n_tokens: int) -> float:
+    """2*N*D for a forward pass."""
+    return 2.0 * n_params * n_tokens
+
+
+def mfu(model_flops: float, step_time_s: float, num_chips: int) -> float:
+    return model_flops / (step_time_s * num_chips * PEAK_FLOPS_BF16)

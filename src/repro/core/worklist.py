@@ -1,0 +1,336 @@
+"""Flattened sparse-attention work-lists (TPU adaptation, DESIGN.md §2.2).
+
+Under XLA SPMD every device executes the same program, so heterogeneous
+per-head sparse attention must be expressed as a *flattened work-list*:
+
+    one work item = one (head_slot, q_block, kv_block) flash-attention tile.
+
+Each device (model-axis shard) owns the items of its assigned head slots;
+lists are padded to the maximum per-device length ``L_pad = max_d L_d`` so
+they stack into one ``[D, L_pad, ITEM_FIELDS]`` int32 array that shards
+cleanly over the ``model`` axis inside ``shard_map``.  S-HPLB's objective
+``min max_d L_d`` therefore *directly* minimizes the compiled Pallas grid.
+
+Item encoding (int32), consumed by the sparse-prefill kernel via scalar
+prefetch:
+
+    [:, 0] head_local   — q-head index within the device's shard
+    [:, 1] q_blk        — query block index
+    [:, 2] kv_blk       — kv block index to stream for this step
+    [:, 3] is_first     — 1 => reset the online-softmax accumulator
+    [:, 4] is_last      — 1 => normalize + write back the output tile
+    [:, 5] valid        — 0 => padding item (no compute, no writeback)
+    [:, 6] kv_head      — kv-head index within the device's shard (GQA)
+
+Padding rows REPLICATE the last real item's indices (with valid=0): the
+Pallas output tile is flushed on block-index *change*, so padding must not
+redirect the out index map to a tile that was already finalized.
+
+Items of one (head, q_blk) are CONTIGUOUS and in ascending kv_blk order —
+TPU Pallas grids execute sequentially per core, which legalizes the
+cross-item accumulator in VMEM scratch.
+
+Block selection: which kv blocks a (head, q_blk) attends to is produced by a
+selection policy (``repro.attention.policies``) given the head's token budget
+from the HPLB plan.  This module handles budget -> block-count conversion,
+list construction, padding, and cost accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+ITEM_FIELDS = 7
+F_HEAD, F_QBLK, F_KVBLK, F_FIRST, F_LAST, F_VALID, F_KVHEAD = range(ITEM_FIELDS)
+
+
+def blocks_for_budget(budgets: np.ndarray, block: int) -> np.ndarray:
+    """Token budgets -> per-head kv-block counts (ceil)."""
+    b = np.asarray(budgets, dtype=np.int64)
+    return np.maximum(-(-b // block), 1)
+
+
+@dataclasses.dataclass
+class WorkList:
+    """Per-device padded work-lists for one attention layer.
+
+    items:      ``[D, L_pad, ITEM_FIELDS]`` int32.
+    lengths:    ``[D]`` true (unpadded) item counts.
+    num_q_blocks, num_kv_blocks, block: geometry.
+    """
+
+    items: np.ndarray
+    lengths: np.ndarray
+    num_q_blocks: int
+    num_kv_blocks: int
+    block: int
+
+    @property
+    def num_devices(self) -> int:
+        return self.items.shape[0]
+
+    @property
+    def padded_length(self) -> int:
+        return self.items.shape[1]
+
+    @property
+    def total_real_items(self) -> int:
+        return int(self.lengths.sum())
+
+    @property
+    def padded_total(self) -> int:
+        return self.padded_length * self.num_devices
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of grid steps that are padding — the SPMD bubble that
+        S-HPLB minimizes (= the paper's resource wastage, exactly)."""
+        tot = self.padded_total
+        return 1.0 - self.total_real_items / tot if tot else 0.0
+
+    @property
+    def imbalance(self) -> float:
+        mean = float(self.lengths.mean())
+        return float(self.lengths.max() / mean) if mean > 0 else 1.0
+
+
+def _items_for_head(
+    head_local: int,
+    kv_head_local: int,
+    q_blocks: int,
+    kv_block_ids: list[np.ndarray],
+) -> np.ndarray:
+    """Items for one head given its selected kv blocks per q block."""
+    rows = []
+    for qb in range(q_blocks):
+        sel = np.asarray(kv_block_ids[qb], dtype=np.int64)
+        n = len(sel)
+        if n == 0:
+            continue
+        it = np.zeros((n, ITEM_FIELDS), dtype=np.int32)
+        it[:, F_HEAD] = head_local
+        it[:, F_QBLK] = qb
+        it[:, F_KVBLK] = np.sort(sel)
+        it[0, F_FIRST] = 1
+        it[-1, F_LAST] = 1
+        it[:, F_VALID] = 1
+        it[:, F_KVHEAD] = kv_head_local
+        rows.append(it)
+    if not rows:
+        return np.zeros((0, ITEM_FIELDS), dtype=np.int32)
+    return np.concatenate(rows, axis=0)
+
+
+def build_worklist(
+    selections: list[list[np.ndarray]],
+    device_of_head: np.ndarray,
+    num_devices: int,
+    num_q_blocks: int,
+    num_kv_blocks: int,
+    block: int,
+    pad_multiple: int = 8,
+    kv_head_of_head: np.ndarray | None = None,
+    kv_local: bool = True,
+) -> WorkList:
+    """Build per-device padded work-lists.
+
+    Parameters
+    ----------
+    selections:
+        ``selections[h][qb]`` = array of kv block ids head ``h`` attends to
+        at query block ``qb`` (already budget-limited by the policy).
+    device_of_head:
+        ``[H]`` device index per head (slot order from the HPLB plan:
+        ``slot // heads_per_device``).
+    pad_multiple:
+        pad L_pad up so the kernel grid length is a friendly multiple.
+    kv_head_of_head:
+        ``[H]`` kv-head per q-head slot (GQA).  Default: identity (MHA).
+    kv_local:
+        True (kv_group mode): kv heads are SHARDED with their q heads; item
+        kv indices are remapped to device-local first-seen order.
+        False (kv_replication mode): kv heads are replicated on every
+        device; item kv indices stay GLOBAL.
+    """
+    H = len(selections)
+    if kv_head_of_head is None:
+        kv_head_of_head = np.arange(H, dtype=np.int64)
+    per_dev: list[list[np.ndarray]] = [[] for _ in range(num_devices)]
+    heads_seen_per_dev = np.zeros(num_devices, dtype=np.int64)
+    kv_local_map: list[dict[int, int]] = [dict() for _ in range(num_devices)]
+    for h in range(H):
+        d = int(device_of_head[h])
+        head_local = int(heads_seen_per_dev[d])
+        heads_seen_per_dev[d] += 1
+        kv_g = int(kv_head_of_head[h])
+        if kv_local:
+            if kv_g not in kv_local_map[d]:
+                kv_local_map[d][kv_g] = len(kv_local_map[d])
+            kv_idx = kv_local_map[d][kv_g]
+        else:
+            kv_idx = kv_g
+        it = _items_for_head(head_local, kv_idx, num_q_blocks, selections[h])
+        if len(it):
+            per_dev[d].append(it)
+    dev_items = [
+        np.concatenate(g, axis=0) if g else np.zeros((0, ITEM_FIELDS), np.int32)
+        for g in per_dev
+    ]
+    lengths = np.array([len(x) for x in dev_items], dtype=np.int64)
+    L_pad = int(lengths.max()) if len(lengths) else 0
+    L_pad = max(pad_multiple, -(-L_pad // pad_multiple) * pad_multiple)
+    items = np.zeros((num_devices, L_pad, ITEM_FIELDS), dtype=np.int32)
+    for d, x in enumerate(dev_items):
+        items[d, : len(x)] = x
+        if len(x):
+            # padding replicates the last real item's indices (valid=0):
+            # keeps the Pallas out-tile index constant so the finalized tile
+            # is not flushed-then-clobbered by a stray index change.
+            pad_row = x[-1].copy()
+            pad_row[F_FIRST] = 0
+            pad_row[F_LAST] = 0
+            pad_row[F_VALID] = 0
+            items[d, len(x):] = pad_row
+    return WorkList(
+        items=items, lengths=lengths,
+        num_q_blocks=num_q_blocks, num_kv_blocks=num_kv_blocks, block=block,
+    )
+
+
+def worklist_from_budgets(
+    budgets_slot_order: np.ndarray,
+    *,
+    num_devices: int,
+    seq_len: int,
+    block: int,
+    policy_fn,
+    pad_multiple: int = 8,
+    group_size: int = 1,
+    kv_head_of_head: np.ndarray | None = None,
+    kv_local: bool = True,
+) -> WorkList:
+    """Convenience: budgets (slot order) + a selection policy -> WorkList.
+
+    ``policy_fn(head_slot, num_blocks_budget, num_q_blocks, num_kv_blocks)
+    -> list over q_blocks of kv-block-id arrays``.  The causal structure
+    (kv_blk <= q_blk) is the policy's responsibility.  ``group_size``: GQA
+    query heads per kv head (kv_group mode: slot order groups them
+    contiguously).  ``kv_head_of_head`` overrides the mapping (slot order)
+    — required in kv_replication mode where the permutation is per-q-head;
+    pair it with ``kv_local=False``.
+    """
+    H = len(budgets_slot_order)
+    assert H % num_devices == 0
+    heads_per_dev = H // num_devices
+    nq = -(-seq_len // block)
+    nkv = nq
+    nb = blocks_for_budget(budgets_slot_order, block)
+    selections = [
+        policy_fn(h, int(nb[h]), nq, nkv) for h in range(H)
+    ]
+    device_of_head = np.arange(H) // heads_per_dev
+    if kv_head_of_head is None:
+        kv_head_of_head = np.arange(H) // group_size
+    return build_worklist(
+        selections, device_of_head, num_devices, nq, nkv, block,
+        pad_multiple=pad_multiple, kv_head_of_head=kv_head_of_head,
+        kv_local=kv_local,
+    )
+
+
+def build_row_worklist(
+    selections: list[list[np.ndarray]],
+    *,
+    num_devices: int,
+    num_q_blocks: int,
+    num_kv_blocks: int,
+    block: int,
+    kv_head_of_head: np.ndarray | None = None,
+    pad_multiple: int = 8,
+) -> WorkList:
+    """Row-mode work-lists: partition (head, q_block) ROWS across devices.
+
+    Beyond-paper generalization of HPLB for archs whose head count does not
+    divide the model axis (gemma3-1b: 4 heads over 16 shards; llama4: 40
+    over 16): the atoms of the multiway partition are (head, q_blk) rows
+    with weight = that row's tile count, balanced by the same
+    best-partition machinery.  q/k/v are REPLICATED inside the island and
+    each shard contributes only its rows; outputs combine by psum (disjoint
+    tiles).  Item head/kv indices are GLOBAL.
+    """
+    from repro.core.partition import best_partition
+
+    H = len(selections)
+    if kv_head_of_head is None:
+        kv_head_of_head = np.arange(H, dtype=np.int64)
+    rows = []        # (h, qb, tiles)
+    for h in range(H):
+        for qb in range(num_q_blocks):
+            n = len(selections[h][qb])
+            if n:
+                rows.append((h, qb, n))
+    weights = np.array([r[2] for r in rows], dtype=np.int64)
+    asg = best_partition(weights, num_devices)
+    per_dev: list[list[np.ndarray]] = [[] for _ in range(num_devices)]
+    for (h, qb, _), d in zip(rows, asg.device_of):
+        sel = np.sort(np.asarray(selections[h][qb], dtype=np.int64))
+        it = np.zeros((len(sel), ITEM_FIELDS), dtype=np.int32)
+        it[:, F_HEAD] = h
+        it[:, F_QBLK] = qb
+        it[:, F_KVBLK] = sel
+        it[0, F_FIRST] = 1
+        it[-1, F_LAST] = 1
+        it[:, F_VALID] = 1
+        it[:, F_KVHEAD] = kv_head_of_head[h]
+        per_dev[int(d)].append(it)
+    dev_items = [
+        np.concatenate(g, axis=0) if g else np.zeros((0, ITEM_FIELDS),
+                                                     np.int32)
+        for g in per_dev
+    ]
+    lengths = np.array([len(x) for x in dev_items], dtype=np.int64)
+    L_pad = int(lengths.max()) if len(lengths) else 0
+    L_pad = max(pad_multiple, -(-L_pad // pad_multiple) * pad_multiple)
+    items = np.zeros((num_devices, L_pad, ITEM_FIELDS), dtype=np.int32)
+    for d, x in enumerate(dev_items):
+        items[d, : len(x)] = x
+        if len(x):
+            pad_row = x[-1].copy()
+            pad_row[F_FIRST] = 0
+            pad_row[F_LAST] = 0
+            pad_row[F_VALID] = 0
+            items[d, len(x):] = pad_row
+    return WorkList(items=items, lengths=lengths,
+                    num_q_blocks=num_q_blocks, num_kv_blocks=num_kv_blocks,
+                    block=block)
+
+
+# ---------------------------------------------------------------------------
+# Cost accounting (used by roofline + benchmarks)
+# ---------------------------------------------------------------------------
+
+def worklist_flops(wl: WorkList, block: int, head_dim: int,
+                   padded: bool = True) -> int:
+    """MXU FLOPs of executing the work-list grid.
+
+    Each item is two ``[block, head_dim] x [head_dim, block]``-ish matmuls
+    (QK^T and AV): ``2 * 2 * block * block * head_dim`` FLOPs.  ``padded``
+    counts the padded grid (what every device pays under SPMD); unpadded is
+    the useful work.
+    """
+    per_item = 4 * block * block * head_dim
+    n = wl.padded_total if padded else wl.total_real_items
+    return int(per_item) * int(n)
+
+
+def worklist_hbm_bytes(wl: WorkList, block: int, head_dim: int,
+                       dtype_bytes: int = 2, padded: bool = True) -> int:
+    """HBM->VMEM traffic: one K tile + one V tile per item (Q tile is
+    reused across the contiguous run; count it on first items only)."""
+    kv_tile = 2 * block * head_dim * dtype_bytes
+    n = wl.padded_total if padded else wl.total_real_items
+    q_tiles = int(wl.items[..., F_FIRST].sum()) if not padded else int(
+        wl.items[..., F_FIRST].sum())
+    q_tile = block * head_dim * dtype_bytes
+    return kv_tile * int(n) + q_tile * q_tiles

@@ -1,0 +1,5 @@
+"""Data: byte tokenizer, synthetic LM streams, calibration sets, and the
+RULER-like long-context task suite."""
+from repro.data import ruler, synthetic, tokenizer
+from repro.data.synthetic import calibration_batches, lm_batch, lm_stream
+from repro.data.ruler import TASKS, make_batch, make_example, train_mixture_batch

@@ -1,0 +1,86 @@
+"""Synthetic corpora: LM training streams + calibration sets.
+
+- :func:`lm_stream` — deterministic shardable batch iterator of a learnable
+  synthetic language (order-2 Markov chain over bytes + copy motifs), used
+  by the end-to-end training example and the accuracy benchmarks.  The
+  structure is rich enough that a 2-4 layer model shows clearly decreasing
+  loss within a few hundred steps, yet generation is O(batch) with no I/O.
+- :func:`calibration_batches` — inputs of varying lengths/domains for the
+  offline sparsity profiling stage (paper §3.2: profiles must transfer
+  across tasks and context lengths, so the calibration set mixes both).
+
+Determinism + fault tolerance: batches are a pure function of (seed, step),
+so a restarted worker replays exactly the batch it crashed on (see
+tests/test_training.py failure-injection test).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import tokenizer as tok
+
+
+def _markov_table(vocab: int, seed: int, branch: int = 4) -> np.ndarray:
+    """[V, V] transition table with `branch` successors per state."""
+    rng = np.random.default_rng(seed)
+    table = np.zeros((vocab, branch), dtype=np.int64)
+    for vstate in range(vocab):
+        table[vstate] = rng.integers(0, vocab, size=branch)
+    return table
+
+
+def lm_batch(step: int, *, batch: int, seq_len: int, vocab: int = 260,
+             seed: int = 0) -> dict:
+    """Batch ``step`` of the synthetic LM stream: {"tokens", "labels"}."""
+    base_vocab = min(vocab, 256)
+    table = _markov_table(base_vocab, seed)
+    rng = np.random.default_rng((seed * 1_000_003 + step) % (2**63))
+    toks = np.zeros((batch, seq_len + 1), dtype=np.int32)
+    state = rng.integers(0, base_vocab, size=batch)
+    choice = rng.integers(0, table.shape[1], size=(batch, seq_len + 1))
+    for t in range(seq_len + 1):
+        toks[:, t] = state
+        state = table[state, choice[:, t]]
+    # splice copy motifs: a short segment repeats later in the sequence
+    n_motif = max(1, seq_len // 256)
+    for b in range(batch):
+        for _ in range(n_motif):
+            mlen = int(rng.integers(8, 24))
+            src = int(rng.integers(0, seq_len - 2 * mlen))
+            dst = int(rng.integers(src + mlen, seq_len - mlen))
+            toks[b, dst:dst + mlen] = toks[b, src:src + mlen]
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def lm_stream(*, batch: int, seq_len: int, vocab: int = 260, seed: int = 0,
+              start_step: int = 0):
+    """Infinite deterministic batch iterator (resume via ``start_step``)."""
+    step = start_step
+    while True:
+        yield step, lm_batch(step, batch=batch, seq_len=seq_len, vocab=vocab,
+                             seed=seed)
+        step += 1
+
+
+def calibration_batches(num_batches: int = 4, *, seq_lens=(256, 512, 1024),
+                        vocab: int = 260, seed: int = 17) -> list[np.ndarray]:
+    """Mixed-length, mixed-domain calibration inputs for profiling."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(num_batches):
+        sl = int(seq_lens[i % len(seq_lens)])
+        kind = i % 3
+        if kind == 0:    # markov text
+            b = lm_batch(i, batch=1, seq_len=sl, vocab=vocab, seed=seed)
+            out.append(b["tokens"])
+        elif kind == 1:  # needle-ish: uniform noise + repeated key segments
+            t = rng.integers(0, 256, size=(1, sl)).astype(np.int32)
+            key = rng.integers(0, 256, size=16).astype(np.int32)
+            for pos in range(0, sl - 16, sl // 4):
+                t[0, pos:pos + 16] = key
+            out.append(t)
+        else:            # structured ascii
+            text = ("The quick brown fox jumps over the lazy dog. " * 64)
+            enc = tok.encode(text)[:sl]
+            out.append(np.tile(enc, (1, -(-sl // len(enc))))[:, :sl])
+    return out

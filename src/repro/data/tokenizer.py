@@ -1,0 +1,36 @@
+"""Byte-level tokenizer with a small reserved-special-token region.
+
+Vocabulary: 256 byte values + specials.  Deterministic, dependency-free —
+sufficient for the synthetic corpora and the RULER-like task suite (which
+are generated directly in token space or from ASCII text).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+PAD, BOS, EOS, SEP = 256, 257, 258, 259
+NUM_SPECIALS = 8
+VOCAB_SIZE = 256 + NUM_SPECIALS
+
+
+def encode(text: str | bytes, add_bos: bool = False,
+           add_eos: bool = False) -> np.ndarray:
+    b = text.encode("utf-8") if isinstance(text, str) else text
+    toks = list(b)
+    if add_bos:
+        toks = [BOS] + toks
+    if add_eos:
+        toks = toks + [EOS]
+    return np.asarray(toks, dtype=np.int32)
+
+
+def decode(tokens) -> str:
+    bs = bytes(int(t) for t in tokens if 0 <= int(t) < 256)
+    return bs.decode("utf-8", errors="replace")
+
+
+def pad_to(tokens: np.ndarray, length: int) -> np.ndarray:
+    out = np.full((length,), PAD, dtype=np.int32)
+    n = min(len(tokens), length)
+    out[:n] = tokens[:n]
+    return out

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the attention hot-spots S-HPLB optimizes.
+
+- ``flash_attn``     : dense flash attention (baseline).
+- ``sparse_prefill`` : work-list block-sparse flash (the S-HPLB mechanism).
+- ``sparse_decode``  : work-list budgeted decode against a KV cache.
+
+Use via ``repro.kernels.ops``; oracles in ``repro.kernels.ref``.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import flash_attention, sparse_prefill, sparse_decode

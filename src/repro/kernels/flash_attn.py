@@ -1,0 +1,136 @@
+"""Dense flash attention Pallas TPU kernel (baseline for S-HPLB comparisons).
+
+Grid: ``(H, nQ, nKV)`` — the kv axis is innermost so the online-softmax
+accumulator for one (head, q-block) lives across consecutive grid steps in
+VMEM scratch (TPU Pallas grids execute sequentially per core).
+
+Tiling (DESIGN.md §2.2): ``block_q = block_kv = 128`` rows/cols with
+``d_head`` padded to a multiple of 128 — MXU-aligned matmuls; Q/K/V tiles of
+128x128 bf16 = 32 KiB, f32 accumulator 128x128 = 64 KiB: working set well
+under the ~16 MiB VMEM budget, leaving headroom for double-buffered
+prefetch of the next K/V tiles (done automatically by Pallas pipelining).
+
+Causality: kv blocks strictly above the diagonal are skipped via ``pl.when``
+(no MXU work); the diagonal block applies the token-level triangle mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, causal: bool, block_q: int, block_kv: int,
+                  seq_q: int, seq_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+    # skip fully-masked (strictly future) kv blocks
+    run = (k_start <= q_start + block_q - 1) if causal else True
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)   # [block_q, d]
+        k = k_ref[0].astype(jnp.float32)   # [block_kv, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq, bkv]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_kv
+        if causal:
+            mask = mask & (kpos <= qpos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_kv", "scale", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    scale: float | None = None,
+    interpret: bool = False,
+):
+    """Dense flash attention.  q: [H, Sq, D]; k, v: [Hkv, Skv, D].
+
+    GQA handled by index-mapping kv tiles (no materialized repeat).
+    Ragged Sq/Skv handled by padding to block multiples inside.
+    """
+    hq, sq, dh = q.shape
+    hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    n_rep = hq // hkv
+    scale_v = float(dh ** -0.5) if scale is None else float(scale)
+
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    dh_pad = (-dh) % 128
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, dh_pad)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, dh_pad)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, dh_pad)))
+    dp = dh + dh_pad
+    nq = qp.shape[1] // block_q
+    nkv = kp.shape[1] // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale_v, causal=causal,
+        block_q=block_q, block_kv=block_kv, seq_q=sq, seq_kv=skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dp), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_kv, dp),
+                         lambda h, qi, ki, n_rep=n_rep: (h // n_rep, ki, 0)),
+            pl.BlockSpec((1, block_kv, dp),
+                         lambda h, qi, ki, n_rep=n_rep: (h // n_rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dp), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, nq * block_q, dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dp), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running sum l
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq, :dh]

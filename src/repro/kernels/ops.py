@@ -1,0 +1,58 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Selects the execution backend: real Pallas lowering on TPU, ``interpret=True``
+elsewhere (this container is CPU-only; interpret mode executes the kernel
+body in Python and is the validation target).  Models and the serving engine
+call through this module, never the kernels directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import flash_attention as _flash
+from repro.kernels.sparse_prefill import sparse_prefill_attention as _sparse_prefill
+from repro.kernels.sparse_decode import (
+    DecodeWorkList,
+    build_decode_worklist,
+    sparse_decode_attention as _sparse_decode,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_kv=128,
+                    scale=None, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+                  scale=scale, interpret=interpret)
+
+
+def sparse_prefill(q, k, v, items, *, block_q=128, block_kv=128, scale=None,
+                   interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _sparse_prefill(q, k, v, jnp.asarray(items), block_q=block_q,
+                           block_kv=block_kv, scale=scale,
+                           interpret=interpret)
+
+
+def sparse_decode(q, k_cache, v_cache, items, *, cache_len, block_kv=128,
+                  scale=None, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _sparse_decode(q, k_cache, v_cache, jnp.asarray(items),
+                          cache_len=cache_len, block_kv=block_kv, scale=scale,
+                          interpret=interpret)
+
+
+__all__ = [
+    "flash_attention",
+    "sparse_prefill",
+    "sparse_decode",
+    "DecodeWorkList",
+    "build_decode_worklist",
+]

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each mirrors the corresponding kernel's contract exactly (shapes, masking,
+zero-rows for uncovered tiles) and is used by the per-kernel allclose tests
+and by the CPU execution path of the models.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.attention.block_sparse import block_sparse_attention_ref, masked_attention
+from repro.attention.dense import flash_attention_ref
+from repro.core.worklist import (
+    F_HEAD,
+    F_KVBLK,
+    F_KVHEAD,
+    F_QBLK,
+    F_VALID,
+)
+from repro.kernels.sparse_decode import (
+    D_BATCH,
+    D_KVBLK,
+    D_KVHEAD,
+    D_VALID,
+)
+
+
+def flash_attention_oracle(q, k, v, *, causal=True, block_q=128, block_kv=128,
+                           scale=None):
+    """Oracle for ``kernels.flash_attn.flash_attention``."""
+    return flash_attention_ref(q, k, v, causal=causal, block_q=block_q,
+                               block_kv=block_kv, scale=scale)
+
+
+def sparse_prefill_oracle(q, k, v, items, *, block_q=128, block_kv=128,
+                          scale=None):
+    """Oracle for ``kernels.sparse_prefill.sparse_prefill_attention``.
+
+    Reconstructs the (head, q_blk) -> kv blocks mapping from the item table
+    and evaluates block-sparse attention in full precision.  GQA is resolved
+    through the item table's kv_head field.
+    """
+    items = np.asarray(items)
+    hq, sq, dh = q.shape
+    nq = -(-sq // block_q)
+    nkv = -(-k.shape[1] // block_kv)
+    block_mask = np.zeros((hq, nq, nkv), dtype=bool)
+    kv_of_head = np.zeros(hq, dtype=np.int64)
+    for row in items:
+        if row[F_VALID] != 1:
+            continue
+        block_mask[row[F_HEAD], row[F_QBLK], row[F_KVBLK]] = True
+        kv_of_head[row[F_HEAD]] = row[F_KVHEAD]
+    # remap kv heads: the ref repeats kv evenly; reorder k/v so that q-head h
+    # sees k[kv_of_head[h]].  Build an explicit per-head K/V view.
+    k_per_head = jnp.take(k, kv_of_head, axis=0)
+    v_per_head = jnp.take(v, kv_of_head, axis=0)
+    return block_sparse_attention_ref(
+        q, k_per_head, v_per_head, block_mask, block=block_q, scale=scale)
+
+
+def sparse_decode_oracle(q, k_cache, v_cache, items, *, cache_len,
+                         block_kv=128, scale=None):
+    """Oracle for ``kernels.sparse_decode.sparse_decode_attention``.
+
+    q: [B, Hkv, G, D]; caches [B, Hkv, Smax, D].  Token-level mask built
+    from the selected kv blocks intersected with ``pos < cache_len``.
+    """
+    items = np.asarray(items)
+    B, hkv, G, dh = q.shape
+    smax = k_cache.shape[2]
+    nkv = -(-smax // block_kv)
+    sel = np.zeros((B, hkv, nkv), dtype=bool)
+    for row in items:
+        if row[D_VALID] != 1:
+            continue
+        sel[row[D_BATCH], row[D_KVHEAD], row[D_KVBLK]] = True
+    tok = np.repeat(sel, block_kv, axis=2)[:, :, :smax]
+    tok = tok & (np.arange(smax) < cache_len)[None, None, :]
+    outs = []
+    for b in range(B):
+        # masked_attention wants [H, Sq, D]: fold G into queries per kv head
+        o_heads = []
+        for kvh in range(hkv):
+            qb = q[b, kvh]                      # [G, D]
+            kb = k_cache[b, kvh]                # [Smax, D]
+            vb = v_cache[b, kvh]
+            m = jnp.asarray(tok[b, kvh])[None, None, :].repeat(G, 1)
+            o = masked_attention(qb[None], kb[None], vb[None],
+                                 m, scale=scale)  # [1, G, D]
+            o_heads.append(o[0])
+        outs.append(jnp.stack(o_heads))         # [Hkv, G, D]
+    return jnp.stack(outs).astype(q.dtype)      # [B, Hkv, G, D]

@@ -1,0 +1,228 @@
+"""Work-list sparse decode attention Pallas TPU kernel.
+
+Decode-phase analogue of the prefill work-list kernel (DESIGN.md §2.2): one
+new token per sequence attends to a *budgeted* subset of its KV cache.
+
+    one work item = one (batch, kv_head, kv_block) matvec tile.
+
+Layout groups GQA query heads by their kv head so one K/V tile serves all
+``group`` query rows of the item:
+
+    q:        [B, Hkv_local, G, D]     (G = q-heads per kv head, row-padded)
+    k_cache:  [B, Hkv_local, Smax, D]
+    v_cache:  [B, Hkv_local, Smax, D]
+    out:      [B, Hkv_local, G, D]
+
+Decode is memory-bound: the kernel's job is to stream exactly
+``budget_blocks x block x D`` bytes of K/V per (batch, kv head) instead of
+the full cache — the compute rows (G <= 16) are irrelevant to the roofline.
+Item metadata rides in SMEM via scalar prefetch, identically to prefill.
+Budgets are per-KV-head at decode (a GQA group shares its cache; we take the
+max over the group's q-head budgets — see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEC_FIELDS = 6
+D_BATCH, D_KVHEAD, D_KVBLK, D_FIRST, D_LAST, D_VALID = range(DEC_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# Decode work-list construction (host-side)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DecodeWorkList:
+    items: np.ndarray        # [D, L_pad, DEC_FIELDS] int32 (or [L_pad, .] single)
+    lengths: np.ndarray
+    block: int
+
+    @property
+    def padded_length(self) -> int:
+        return self.items.shape[-2]
+
+    @property
+    def imbalance(self) -> float:
+        mean = float(self.lengths.mean())
+        return float(self.lengths.max() / mean) if mean > 0 else 1.0
+
+
+def build_decode_worklist(
+    selections: list[list[np.ndarray]],
+    *,
+    num_devices: int,
+    kv_heads_per_device: int,
+    block: int,
+    pad_multiple: int = 8,
+) -> DecodeWorkList:
+    """``selections[b][kv_head_global] -> kv block ids`` for each sequence.
+
+    kv heads are in SLOT order: device ``d`` owns global kv slots
+    ``[d*kv_heads_per_device, (d+1)*kv_heads_per_device)``.
+    """
+    B = len(selections)
+    per_dev: list[list[np.ndarray]] = [[] for _ in range(num_devices)]
+    for b in range(B):
+        for kv_g, sel in enumerate(selections[b]):
+            d = kv_g // kv_heads_per_device
+            kv_local = kv_g % kv_heads_per_device
+            sel = np.sort(np.asarray(sel, dtype=np.int64))
+            n = len(sel)
+            if n == 0:
+                continue
+            it = np.zeros((n, DEC_FIELDS), dtype=np.int32)
+            it[:, D_BATCH] = b
+            it[:, D_KVHEAD] = kv_local
+            it[:, D_KVBLK] = sel
+            it[0, D_FIRST] = 1
+            it[-1, D_LAST] = 1
+            it[:, D_VALID] = 1
+            per_dev[d].append(it)
+    dev_items = [
+        np.concatenate(g, axis=0) if g else np.zeros((0, DEC_FIELDS), np.int32)
+        for g in per_dev
+    ]
+    lengths = np.array([len(x) for x in dev_items], dtype=np.int64)
+    L_pad = int(lengths.max()) if len(lengths) else 0
+    L_pad = max(pad_multiple, -(-L_pad // pad_multiple) * pad_multiple)
+    items = np.zeros((num_devices, L_pad, DEC_FIELDS), dtype=np.int32)
+    for d, x in enumerate(dev_items):
+        items[d, : len(x)] = x
+        if len(x):
+            pad_row = x[-1].copy()
+            pad_row[D_FIRST] = 0
+            pad_row[D_LAST] = 0
+            pad_row[D_VALID] = 0
+            items[d, len(x):] = pad_row
+    return DecodeWorkList(items=items, lengths=lengths, block=block)
+
+
+# ---------------------------------------------------------------------------
+# Kernel
+# ---------------------------------------------------------------------------
+
+def _sparse_decode_kernel(
+    items_ref,
+    q_ref, k_ref, v_ref,
+    o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    block_kv: int,
+    cache_len: int,
+):
+    i = pl.program_id(0)
+    valid = items_ref[i, D_VALID] == 1
+    first = items_ref[i, D_FIRST] == 1
+    last = items_ref[i, D_LAST] == 1
+    kvblk = items_ref[i, D_KVBLK]
+
+    @pl.when(jnp.logical_and(valid, first))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(valid)
+    def _compute():
+        qt = q_ref[0, 0].astype(jnp.float32)   # [G, d]
+        kt = k_ref[0, 0].astype(jnp.float32)   # [block_kv, d]
+        vt = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qt, kt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [G, block_kv]
+        kpos = kvblk * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = kpos < cache_len
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jnp.logical_and(valid, last))
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.maximum(l, 1e-30)
+        out = acc_ref[...] / safe
+        out = jnp.where(l > 0.0, out, 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_kv", "scale", "cache_len", "interpret"),
+)
+def sparse_decode_attention(
+    q: jnp.ndarray,        # [B, Hkv_local, G, D]
+    k_cache: jnp.ndarray,  # [B, Hkv_local, Smax, D]
+    v_cache: jnp.ndarray,
+    items: jnp.ndarray,    # [L_pad, DEC_FIELDS]
+    *,
+    cache_len: int,
+    block_kv: int = 128,
+    scale: float | None = None,
+    interpret: bool = False,
+):
+    """Execute one device's decode work-list against its KV cache shard."""
+    B, hkv, G, dh = q.shape
+    smax = k_cache.shape[2]
+    scale_v = float(dh ** -0.5) if scale is None else float(scale)
+
+    pad_g = (-G) % 8        # sublane alignment
+    dh_pad = (-dh) % 128    # lane alignment
+    pad_s = (-smax) % block_kv
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_g), (0, dh_pad)))
+    kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad_s), (0, dh_pad)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad_s), (0, dh_pad)))
+    Gp, dp = G + pad_g, dh + dh_pad
+    L = items.shape[0]
+
+    kernel = functools.partial(
+        _sparse_decode_kernel, scale=scale_v, block_kv=block_kv,
+        cache_len=cache_len)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, 1, Gp, dp),
+                         lambda i, it: (it[i, D_BATCH], it[i, D_KVHEAD], 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, dp),
+                         lambda i, it: (it[i, D_BATCH], it[i, D_KVHEAD],
+                                        it[i, D_KVBLK], 0)),
+            pl.BlockSpec((1, 1, block_kv, dp),
+                         lambda i, it: (it[i, D_BATCH], it[i, D_KVHEAD],
+                                        it[i, D_KVBLK], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, Gp, dp),
+            lambda i, it: (it[i, D_BATCH], it[i, D_KVHEAD], 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, dp), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, hkv, Gp, dp), q.dtype),
+        interpret=interpret,
+    )(items, qp, kp, vp)
+    return out[:, :, :G, :dh]

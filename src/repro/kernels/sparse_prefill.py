@@ -1,0 +1,171 @@
+"""Work-list block-sparse flash attention Pallas TPU kernel (S-HPLB core).
+
+This is the TPU-native mechanism for the paper's heterogeneous per-head
+budgets (DESIGN.md §2.2).  Instead of a dense ``(heads, nQ, NBmax)`` grid —
+which would pad every head to the *max* block count and thus balance the max
+instead of the sum — the kernel executes a **flattened work-list**:
+
+    grid = (L_pad,);   one grid step = one (head, q_blk, kv_blk) flash tile.
+
+Work-item metadata rides in SMEM via ``PrefetchScalarGridSpec``; the
+``BlockSpec.index_map``s read the prefetched item table to stream exactly the
+needed Q/K/V tiles HBM->VMEM.  Items of one (head, q_blk) are contiguous and
+ascending in kv_blk (TPU grids run sequentially per core), which legalizes
+the cross-step online-softmax accumulator in VMEM scratch:
+
+    is_first -> reset (acc, m, l);   is_last -> normalize + write out tile.
+
+Padding items replicate the last real item's indices with ``valid = 0`` —
+they cost a grid step but no MXU work and, critically, keep the out-tile
+index constant so the finalized output is not flushed-then-clobbered.
+
+S-HPLB's load balancing minimizes ``L_pad = max_d L_d`` — the exact length
+of this grid — so the paper's objective directly shrinks the compiled
+program executed by every device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.worklist import (
+    F_FIRST,
+    F_HEAD,
+    F_KVBLK,
+    F_KVHEAD,
+    F_LAST,
+    F_QBLK,
+    F_VALID,
+)
+
+NEG_INF = -1e30
+
+
+def _sparse_prefill_kernel(
+    items_ref,            # [L, ITEM_FIELDS] int32 (SMEM, scalar-prefetched)
+    q_ref, k_ref, v_ref,  # VMEM tiles selected by index maps
+    o_ref,                # VMEM out tile
+    acc_ref, m_ref, l_ref,  # VMEM scratch
+    *,
+    scale: float,
+    block_q: int,
+    block_kv: int,
+    seq_q: int,
+    seq_kv: int,
+):
+    i = pl.program_id(0)
+    valid = items_ref[i, F_VALID] == 1
+    first = items_ref[i, F_FIRST] == 1
+    last = items_ref[i, F_LAST] == 1
+    qblk = items_ref[i, F_QBLK]
+    kvblk = items_ref[i, F_KVBLK]
+
+    @pl.when(jnp.logical_and(valid, first))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(valid)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)   # [block_q, d]
+        k = k_ref[0].astype(jnp.float32)   # [block_kv, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        q_start = qblk * block_q
+        k_start = kvblk * block_kv
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kpos <= qpos) & (kpos < seq_kv) & (qpos < seq_q)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jnp.logical_and(valid, last))
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.maximum(l, 1e-30)
+        out = acc_ref[...] / safe
+        out = jnp.where(l > 0.0, out, 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_kv", "scale", "interpret",
+                     "num_q_blocks"),
+)
+def sparse_prefill_attention(
+    q: jnp.ndarray,      # [H_local, Sq, D]
+    k: jnp.ndarray,      # [Hkv_local, Skv, D]
+    v: jnp.ndarray,
+    items: jnp.ndarray,  # [L_pad, ITEM_FIELDS] int32 (this device's list)
+    *,
+    block_q: int = 128,
+    block_kv: int = 128,
+    scale: float | None = None,
+    num_q_blocks: int | None = None,
+    interpret: bool = False,
+):
+    """Execute one device's sparse-attention work-list.
+
+    Output rows belonging to (head, q_blk) pairs with no work items are 0
+    (matches :func:`repro.attention.block_sparse_attention_ref`).
+    """
+    hq, sq, dh = q.shape
+    hkv, skv, _ = k.shape
+    scale_v = float(dh ** -0.5) if scale is None else float(scale)
+
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    dh_pad = (-dh) % 128
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, dh_pad)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, dh_pad)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, dh_pad)))
+    dp = dh + dh_pad
+    nq = qp.shape[1] // block_q
+    L = items.shape[0]
+
+    kernel = functools.partial(
+        _sparse_prefill_kernel, scale=scale_v,
+        block_q=block_q, block_kv=block_kv, seq_q=sq, seq_kv=skv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dp),
+                         lambda i, it: (it[i, F_HEAD], it[i, F_QBLK], 0)),
+            pl.BlockSpec((1, block_kv, dp),
+                         lambda i, it: (it[i, F_KVHEAD], it[i, F_KVBLK], 0)),
+            pl.BlockSpec((1, block_kv, dp),
+                         lambda i, it: (it[i, F_KVHEAD], it[i, F_KVBLK], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dp),
+                               lambda i, it: (it[i, F_HEAD], it[i, F_QBLK], 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dp), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),    # m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # l
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((hq, nq * block_q, dp), q.dtype),
+        interpret=interpret,
+    )(items, qp, kp, vp)
+    return out[:, :sq, :dh]

@@ -1,0 +1,6 @@
+"""Launchers: mesh factory, dry-run driver, train/serve entry points.
+
+NOTE: do NOT import repro.launch.dryrun from library code — it sets
+XLA_FLAGS at import time (dry-run only).
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh

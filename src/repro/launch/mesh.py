@@ -1,0 +1,30 @@
+"""Mesh factory for the production topologies.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (smoke tests and benches must keep seeing the
+single real CPU device; only the dry-run sets the 512-device XLA flag).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod (data=16, model=16) = 256 chips; multi-pod adds pod=2."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int | None = None, data: int | None = None):
+    """Mesh over whatever devices exist (tests / examples / CPU smoke)."""
+    n = len(jax.devices())
+    if model is None and data is None:
+        model = 1
+        data = n
+    elif model is None:
+        model = n // data
+    elif data is None:
+        data = n // model
+    assert data * model == n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))

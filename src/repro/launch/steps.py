@@ -1,0 +1,507 @@
+"""Step-function builders for the dry-run, training and serving launchers.
+
+For every (arch x shape) cell this module produces:
+    step_fn      — the pure function to jit (train_step / prefill / decode),
+    abstract     — the full kwargs tree of ShapeDtypeStructs,
+    in_shardings / out_shardings — NamedSharding trees for the mesh.
+
+Serve-shape policy (the paper's system IS the baseline):
+- ``prefill_32k``  lowers S-HPLB sparse prefill: shard_map work-list islands
+  over the model axis, per-device lists from the HPLB plan (max-min budgets
+  + balanced partition).  Work-list shapes are computed host-side from the
+  plan (numpy, fast) — they are static per (arch, shape, mesh).
+- ``decode_32k`` / ``long_500k`` lower the budgeted flash-decode against a
+  sequence-sharded KV cache (shard_map partial-softmax combine), with
+  per-shard block-id lists balanced by the same plan.
+- non-attention archs (mamba2) and hybrid/enc-dec archs lower their native
+  decode paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec
+from repro.configs.inputs import input_specs
+from repro.configs.shapes import ShapeSpec
+from repro.core.planner import make_plan
+from repro.core.sparsity import synthetic_head_curves
+from repro.core.worklist import worklist_from_budgets
+from repro.attention.policies import policy_by_name
+from repro.serving.sharded_attention import (
+    flash_decode_attention,
+    hplb_prefill_attention,
+)
+from repro.sharding import specs as sh
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import TrainConfig, make_train_step
+
+# Serving plan defaults (paper setting: k=4096 at 32k+ contexts).
+SERVE_BUDGET_PER_HEAD = 4096
+BLOCK = 128
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    name: str
+    fn: Callable
+    abstract: dict            # kwargs of ShapeDtypeStruct
+    in_shardings: dict
+    out_shardings: Any
+    meta: dict
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _loss_fn_for(spec: ArchSpec):
+    if spec.module == "transformer":
+        from repro.models.transformer import loss_fn
+        return functools.partial(loss_fn, cfg=spec.full)
+    if spec.module == "mamba2":
+        from repro.models.mamba2 import loss_fn
+        return functools.partial(loss_fn, cfg=spec.full)
+    if spec.module == "rglru":
+        from repro.models.rglru import loss_fn
+        return functools.partial(loss_fn, cfg=spec.full)
+    if spec.module == "whisper":
+        from repro.models.whisper import loss_fn
+        return functools.partial(loss_fn, cfg=spec.full)
+    if spec.module == "llava":
+        from repro.models.llava import loss_fn
+        return functools.partial(loss_fn, cfg=spec.full)
+    raise ValueError(spec.module)
+
+
+def _init_fn_for(spec: ArchSpec):
+    mod = spec.module
+    if mod == "transformer":
+        from repro.models.transformer import init_params
+        return functools.partial(init_params, cfg=spec.full)
+    if mod == "mamba2":
+        from repro.models.mamba2 import init_params
+        return functools.partial(init_params, cfg=spec.full)
+    if mod == "rglru":
+        from repro.models.rglru import init_params
+        return functools.partial(init_params, cfg=spec.full)
+    if mod == "whisper":
+        from repro.models.whisper import init_params
+        return functools.partial(init_params, cfg=spec.full)
+    if mod == "llava":
+        from repro.models.llava import init_params
+        return functools.partial(init_params, cfg=spec.full)
+    raise ValueError(mod)
+
+
+def _abstract_params(spec: ArchSpec):
+    init = _init_fn_for(spec)
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(0)))
+
+
+def _hp_degree(cfg, model_shards: int) -> int:
+    """Head-parallel degree for the plan: the mesh's model size when head
+    atoms divide it, else 1 (row-mode partitions (head, q_blk) rows across
+    the mesh instead; budgets are device-count-independent)."""
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    if H % model_shards == 0 and (Hkv % model_shards == 0
+                                  or H % model_shards == 0):
+        return model_shards
+    return 1
+
+
+def _serve_plan(spec: ArchSpec, seq_len: int, model_shards: int,
+                allocator: str = "maxmin", partitioner: str = "best"):
+    """HPLB plan for serving cells (synthetic profile: planning is
+    profile-shape-agnostic; real deployments feed measured profiles)."""
+    cfg = spec.full if spec.module != "llava" else spec.full.backbone
+    prof = synthetic_head_curves(cfg.num_layers, cfg.num_heads)
+    hp = _hp_degree(cfg, model_shards)
+    return make_plan(
+        prof, num_devices=hp, num_kv_heads=cfg.num_kv_heads,
+        seq_len=seq_len,
+        total_budget_per_head=min(SERVE_BUDGET_PER_HEAD, seq_len),
+        block=BLOCK, allocator=allocator, partitioner=partitioner,
+    ), cfg
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(spec: ArchSpec, shape: ShapeSpec, mesh,
+                     *, remat: str = "full",
+                     microbatches: int = 1,
+                     compress_grads: bool = False,
+                     moe_cf: float | None = None,
+                     moe_int8_dispatch: bool = False) -> BuiltStep:
+    if (moe_cf is not None or moe_int8_dispatch) \
+            and getattr(spec.full, "moe", None) is not None:
+        new_moe = dataclasses.replace(
+            spec.full.moe,
+            capacity_factor=moe_cf or spec.full.moe.capacity_factor,
+            quantize_dispatch=moe_int8_dispatch)
+        spec = dataclasses.replace(
+            spec, full=dataclasses.replace(spec.full, moe=new_moe))
+    loss_fn = _loss_fn_for(spec)
+    tcfg = TrainConfig(optimizer=AdamWConfig(), remat=remat,
+                       microbatches=microbatches,
+                       compress_grads=compress_grads)
+    step = make_train_step(loss_fn, tcfg)
+
+    from repro.training.optimizer import init_opt_state
+    params_a = _abstract_params(spec)
+    opt_a = jax.eval_shape(init_opt_state, params_a)
+    state_a = {"params": params_a, "opt": opt_a}
+    if compress_grads:
+        state_a["err"] = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_a)
+    batch_a = input_specs(spec, shape)
+
+    pspec = sh.param_specs(params_a, mesh)
+    ospec = sh.opt_specs(opt_a, pspec)
+    bspec = sh.batch_specs(batch_a, mesh)
+
+    state_spec = {"params": pspec, "opt": ospec}
+    if compress_grads:
+        state_spec["err"] = pspec
+    in_sh = {"state": _named(mesh, state_spec),
+             "batch": _named(mesh, bspec)}
+    out_sh = (in_sh["state"],
+              jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                           {"loss": 0, "grad_norm": 0, "lr": 0}))
+    return BuiltStep(
+        name=f"{spec.arch_id}:{shape.name}:train",
+        fn=step,
+        abstract={"state": state_a, "batch": batch_a},
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        meta={"kind": "train"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill (S-HPLB sparse for attention archs; native otherwise)
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(spec: ArchSpec, shape: ShapeSpec, mesh,
+                       *, sparse: bool = True,
+                       allocator: str = "maxmin",
+                       partitioner: str = "best",
+                       force_rows: bool = False) -> BuiltStep:
+    B, S = shape.global_batch, shape.seq_len
+    params_a = _abstract_params(spec)
+    pspec = sh.param_specs(params_a, mesh)
+    batch_a = input_specs(spec, shape)
+    bspec = sh.batch_specs(batch_a, mesh)
+    model_shards = mesh.shape.get("model", 1)
+
+    if spec.module in ("transformer", "llava") and sparse \
+            and spec.hplb != "none":
+        from repro.models import transformer as tfm
+        from repro.core.worklist import blocks_for_budget, build_row_worklist
+        from repro.serving.sharded_attention import (
+            hplb_prefill_attention_rows)
+        plan, cfg = _serve_plan(spec, S, model_shards,
+                                allocator=allocator, partitioner=partitioner)
+        pol = policy_by_name("strided")
+        row_mode = force_rows or plan.num_devices != model_shards
+        kv_sharded = (not row_mode) and plan.mode == "kv_group"
+        # per-layer per-device work-lists, stacked [n_model, L, Lpad, 7]
+        wls = []
+        nq = -(-S // BLOCK)
+        for l in range(cfg.num_layers):
+            lp = plan.layers[l]
+            if row_mode:
+                # (head, q_blk) row partition — head count doesn't divide
+                # the mesh (gemma3: 4 heads / 16 shards; llama4: 40 / 16).
+                # Weights stay UNPERMUTED (q/k/v replicated in the island),
+                # so budgets/ids are in ORIGINAL head order.
+                budgets_orig = plan.budgets_by_original_head(l)
+                nb = blocks_for_budget(budgets_orig, BLOCK)
+                sels = [pol(h, int(nb[h]), nq, nq)
+                        for h in range(cfg.num_heads)]
+                wls.append(build_row_worklist(
+                    sels, num_devices=model_shards, num_q_blocks=nq,
+                    num_kv_blocks=nq, block=BLOCK,
+                    kv_head_of_head=np.arange(cfg.num_heads)
+                    // cfg.group_size))
+            elif kv_sharded:
+                wls.append(worklist_from_budgets(
+                    lp.budgets, num_devices=model_shards,
+                    seq_len=S, block=BLOCK, policy_fn=pol,
+                    group_size=cfg.group_size))
+            else:
+                # kv_replication: kv index = ORIGINAL kv head (global,
+                # replicated on every shard)
+                wls.append(worklist_from_budgets(
+                    lp.budgets, num_devices=model_shards,
+                    seq_len=S, block=BLOCK, policy_fn=pol,
+                    group_size=cfg.group_size,
+                    kv_head_of_head=lp.perm // cfg.group_size,
+                    kv_local=False))
+        lpad = max(w.padded_length for w in wls)
+        items = np.zeros((model_shards, cfg.num_layers, lpad, 7), np.int32)
+        for l, w in enumerate(wls):
+            items[:, l, :w.padded_length] = w.items
+            # pad rows replicate each device's last row (valid=0)
+            for d in range(model_shards):
+                items[d, l, w.padded_length:] = items[d, l,
+                                                      w.padded_length - 1]
+                items[d, l, w.padded_length:, 3:6] = 0
+        if row_mode:
+            attend = hplb_prefill_attention_rows(
+                mesh, block_q=BLOCK, block_kv=BLOCK)
+        else:
+            attend = hplb_prefill_attention(
+                mesh, block_q=BLOCK, block_kv=BLOCK, kv_sharded=kv_sharded)
+
+        if spec.module == "llava":
+            bb = spec.full.backbone
+            def fn(params, tokens, items, patches):
+                return tfm.prefill(
+                    params, tokens, bb, cache_len=None,
+                    attn_override=lambda l, q, k, v: attend(
+                        l, q, k, v, items),
+                    extra_embeddings=patches)
+            abstract = {
+                "tokens": batch_a["tokens"],
+                "items": jax.ShapeDtypeStruct(items.shape, jnp.int32),
+                "patches": batch_a["patches"],
+            }
+            in_sh = {
+                "tokens": NamedSharding(mesh, sh.batch_specs(
+                    batch_a, mesh)["tokens"]),
+                "items": NamedSharding(mesh, P("model")),
+                "patches": NamedSharding(mesh, sh.batch_specs(
+                    batch_a, mesh)["patches"]),
+            }
+        else:
+            def fn(params, tokens, items):
+                return tfm.prefill(
+                    params, tokens, spec.full, cache_len=None,
+                    attn_override=lambda l, q, k, v: attend(
+                        l, q, k, v, items))
+            abstract = {
+                "tokens": batch_a["tokens"],
+                "items": jax.ShapeDtypeStruct(items.shape, jnp.int32),
+            }
+            in_sh = {
+                "tokens": NamedSharding(mesh, bspec["tokens"]),
+                "items": NamedSharding(mesh, P("model")),
+            }
+        in_sh = {"params": _named(mesh, pspec), **in_sh}
+        abstract = {"params": params_a, **abstract}
+        meta = {"kind": "prefill", "sparse": True,
+                "plan_imbalance": plan.mean_imbalance,
+                "worklist_lpad": int(lpad)}
+    else:
+        # native prefill / forward paths
+        if spec.module == "mamba2":
+            from repro.models.mamba2 import forward
+            fn = lambda params, tokens: forward(params, tokens, spec.full)
+        elif spec.module == "rglru":
+            from repro.models.rglru import forward
+            fn = lambda params, tokens: forward(params, tokens, spec.full)
+        elif spec.module == "whisper":
+            from repro.models.whisper import forward as wfwd
+            fn = lambda params, tokens, frames: wfwd(
+                params, {"tokens": tokens, "frames": frames}, spec.full)
+        elif spec.module in ("transformer", "llava"):
+            from repro.models import transformer as tfm
+            cfg = spec.full if spec.module == "transformer" \
+                else spec.full.backbone
+            if spec.module == "llava":
+                def fn(params, tokens, patches):
+                    return tfm.prefill(params, tokens, cfg,
+                                       extra_embeddings=patches)
+            else:
+                def fn(params, tokens):
+                    return tfm.prefill(params, tokens, cfg)
+        else:
+            raise ValueError(spec.module)
+        abstract = {"params": params_a, **batch_a}
+        in_sh = {"params": _named(mesh, pspec),
+                 **{k: NamedSharding(mesh, v) for k, v in bspec.items()}}
+        meta = {"kind": "prefill", "sparse": False}
+
+    return BuiltStep(
+        name=f"{spec.arch_id}:{shape.name}:prefill",
+        fn=fn, abstract=abstract, in_shardings=in_sh,
+        out_shardings=None, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Decode (budgeted flash-decode for attention archs; native otherwise)
+# ---------------------------------------------------------------------------
+
+def _decode_block_ids_sharded(plan, cfg, cache_len: int, n_shards: int):
+    """Per-shard decode block lists [n_shards, Hkv, nb_loc], -1 padded.
+
+    Budget per kv head = max over its q heads; blocks = sink + recent.
+    Blocks are assigned to the seq-shard that OWNS them (global block id //
+    blocks_per_shard) — the HPLB-balanced analogue for sequence sharding.
+    """
+    gsz = cfg.group_size
+    nkv_blocks = cache_len // BLOCK
+    blocks_per_shard = nkv_blocks // n_shards
+    hkv = cfg.num_kv_heads
+    budgets = np.stack([
+        lp.budgets.reshape(hkv, gsz).max(axis=1) for lp in plan.layers
+    ])  # [L, Hkv]
+    nb = np.minimum(-(-budgets // BLOCK), nkv_blocks)
+    nb_loc = 1
+    L = nb.shape[0]
+    # use layer-0 budgets for the shared input shape; per-layer lists are
+    # stacked on a leading L dim
+    ids_layers = []
+    for l in range(L):
+        shard_lists = [[[] for _ in range(hkv)] for _ in range(n_shards)]
+        for h in range(hkv):
+            n = int(nb[l, h])
+            sel = [0] + list(range(nkv_blocks - (n - 1), nkv_blocks))
+            sel = sorted(set(b for b in sel if 0 <= b < nkv_blocks))[:n]
+            for b in sel:
+                s = min(b // max(blocks_per_shard, 1), n_shards - 1)
+                shard_lists[s][h].append(b)
+        nb_loc = max(nb_loc, max(len(shard_lists[s][h])
+                                 for s in range(n_shards)
+                                 for h in range(hkv)))
+        ids_layers.append(shard_lists)
+    ids = np.full((L, n_shards, hkv, nb_loc), -1, np.int32)
+    for l, shard_lists in enumerate(ids_layers):
+        for s in range(n_shards):
+            for h in range(hkv):
+                v = shard_lists[s][h]
+                ids[l, s, h, :len(v)] = v
+    return ids
+
+
+def build_decode_step(spec: ArchSpec, shape: ShapeSpec, mesh,
+                      *, sparse: bool = True,
+                      cache_dtype=None) -> BuiltStep:
+    B, S = shape.global_batch, shape.seq_len
+    params_a = _abstract_params(spec)
+    pspec = sh.param_specs(params_a, mesh)
+    data_a = input_specs(spec, shape)
+    model_shards = mesh.shape.get("model", 1)
+
+    if spec.module == "mamba2":
+        from repro.models import mamba2 as m2
+        cfg = spec.full
+        state_a = jax.eval_shape(lambda: m2.init_state(cfg, B))
+        fn = lambda params, state, token: m2.decode_step(
+            params, state, token, cfg)
+        abstract = {"params": params_a, "state": state_a,
+                    "token": data_a["token"]}
+        in_sh = {"params": _named(mesh, pspec),
+                 "state": _named(mesh, sh.cache_specs(state_a, mesh)),
+                 "token": NamedSharding(mesh, sh.batch_specs(
+                     data_a, mesh)["token"])}
+        meta = {"kind": "decode", "native": "ssm"}
+    elif spec.module == "rglru":
+        from repro.models import rglru as rg
+        cfg = spec.full
+        state_a = jax.eval_shape(lambda: rg.init_state(cfg, B))
+        fn = lambda params, state, token: rg.decode_step(
+            params, state, token, S - 1, cfg)
+        abstract = {"params": params_a, "state": state_a,
+                    "token": data_a["token"]}
+        in_sh = {"params": _named(mesh, pspec),
+                 "state": _named(mesh, sh.cache_specs(state_a, mesh)),
+                 "token": NamedSharding(mesh, sh.batch_specs(
+                     data_a, mesh)["token"])}
+        meta = {"kind": "decode", "native": "hybrid"}
+    elif spec.module == "whisper":
+        from repro.models import whisper as wh
+        cfg = spec.full
+        cache_a = jax.eval_shape(lambda: wh.init_cache(cfg, B, S))
+        fn = lambda params, cache, memory, token: wh.decode_step(
+            params, cache, memory, token, S - 1, cfg)
+        abstract = {"params": params_a, "cache": cache_a,
+                    "memory": data_a["memory"], "token": data_a["token"]}
+        in_sh = {"params": _named(mesh, pspec),
+                 "cache": NamedSharding(mesh, sh.cache_specs(cache_a, mesh)),
+                 "memory": NamedSharding(mesh, sh.batch_specs(
+                     data_a, mesh)["memory"]),
+                 "token": NamedSharding(mesh, sh.batch_specs(
+                     data_a, mesh)["token"])}
+        meta = {"kind": "decode", "native": "encdec"}
+    else:  # transformer / llava: budgeted flash-decode, seq-sharded cache
+        from repro.models import transformer as tfm
+        cfg = spec.full if spec.module == "transformer" \
+            else spec.full.backbone
+        cache_a = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, B, S, dtype=cache_dtype))
+        cache_spec = sh.cache_specs(cache_a, mesh)
+        # seq-shard axes: whatever cache_specs put on the seq dim
+        seq_entry = cache_spec[4]
+        if seq_entry is None:
+            seq_axes = ()
+        elif isinstance(seq_entry, tuple):
+            seq_axes = seq_entry
+        else:
+            seq_axes = (seq_entry,)
+        if sparse and spec.hplb != "none" and seq_axes:
+            plan, _ = _serve_plan(spec, S, model_shards)
+            n_sh = int(np.prod([mesh.shape[a] for a in seq_axes]))
+            ids = _decode_block_ids_sharded(plan, cfg, S, n_sh)
+            batch_axes = tuple(
+                a for a in ("pod", "data")
+                if a in mesh.axis_names and a not in seq_axes)
+            if batch_axes and B % int(np.prod(
+                    [mesh.shape[a] for a in batch_axes])) != 0:
+                batch_axes = ()
+            attend_by_layer = flash_decode_attention(
+                mesh, block_kv=BLOCK, seq_axes=seq_axes,
+                batch_axes=batch_axes)
+
+            def fn(params, cache, token, ids):
+                pos = S - 1
+                return tfm.decode_step(
+                    params, cache, token, pos, cfg,
+                    attn_override=lambda l, q, kc, vc: attend_by_layer(
+                        q, kc, vc, ids[l], pos))
+            abstract = {"params": params_a, "cache": cache_a,
+                        "token": data_a["token"],
+                        "ids": jax.ShapeDtypeStruct(ids.shape, jnp.int32)}
+            sspec = seq_axes[0] if len(seq_axes) == 1 else seq_axes
+            in_sh = {"params": _named(mesh, pspec),
+                     "cache": NamedSharding(mesh, cache_spec),
+                     "token": NamedSharding(mesh, sh.batch_specs(
+                         data_a, mesh)["token"]),
+                     "ids": NamedSharding(mesh, P(None, sspec))}
+            meta = {"kind": "decode", "sparse": True,
+                    "seq_axes": list(seq_axes),
+                    "nb_loc": int(ids.shape[-1])}
+        else:
+            def fn(params, cache, token):
+                return tfm.decode_step(params, cache, token, S - 1, cfg)
+            abstract = {"params": params_a, "cache": cache_a,
+                        "token": data_a["token"]}
+            in_sh = {"params": _named(mesh, pspec),
+                     "cache": NamedSharding(mesh, cache_spec),
+                     "token": NamedSharding(mesh, sh.batch_specs(
+                         data_a, mesh)["token"])}
+            meta = {"kind": "decode", "sparse": False}
+
+    return BuiltStep(
+        name=f"{spec.arch_id}:{shape.name}:decode",
+        fn=fn, abstract=abstract, in_shardings=in_sh,
+        out_shardings=None, meta=meta)
+
+
+def build_step(spec: ArchSpec, shape: ShapeSpec, mesh, **kw) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(spec, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(spec, shape, mesh, **kw)
+    return build_decode_step(spec, shape, mesh, **kw)

@@ -1,0 +1,17 @@
+"""The 10 assigned architectures, as composable pure-JAX model families.
+
+- ``transformer`` : decoder LM (dense GQA, local/global, MoE hook) —
+  minitron-8b, smollm-135m, gemma3-1b, yi-6b, granite-moe, llama4-scout.
+- ``moe``         : capacity-based sorted-dispatch MoE FFN (EP-ready).
+- ``mamba2``      : SSD state-space LM (attention-free).
+- ``rglru``       : Griffin/RecurrentGemma hybrid (RG-LRU + local attn).
+- ``whisper``     : encoder-decoder audio backbone (stub conv frontend).
+- ``llava``       : VLM backbone (stub anyres patch frontend).
+"""
+from repro.models import common
+from repro.models.transformer import TransformerConfig
+from repro.models.moe import MoEConfig
+from repro.models.mamba2 import Mamba2Config
+from repro.models.rglru import GriffinConfig
+from repro.models.whisper import WhisperConfig
+from repro.models.llava import LlavaConfig

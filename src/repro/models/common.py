@@ -1,0 +1,111 @@
+"""Shared model building blocks (pure-functional, explicit param pytrees).
+
+Conventions
+-----------
+- params are nested dicts of jnp arrays; init fns take an ``rng`` and a
+  config and return the tree.  No framework magic — jit/pjit-friendly.
+- activations default to bf16 compute with f32 normalization statistics and
+  f32 logits (the MaxText-style mixed-precision recipe).
+- weight layout: projections are ``[in, out]`` (column-major heads) so the
+  TP sharding specs in ``repro.sharding`` slice the out dim for QKV/up and
+  the in dim for O/down.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype=jnp.bfloat16,
+               scale: float | None = None):
+    scale = (1.0 / np.sqrt(in_dim)) if scale is None else scale
+    return (jax.random.normal(rng, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32)
+            * (1.0 / np.sqrt(dim))).astype(dtype)
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return jnp.ones((dim,), dtype)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(x: jnp.ndarray, p, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    """GELU MLP with biases (Whisper-style)."""
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_up) + b_up)
+    return jnp.einsum("...f,fd->...d", h, w_down) + b_down
+
+
+def mlp_init(rng, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "gate": dense_init(r1, d_model, d_ff, dtype),
+        "up": dense_init(r2, d_model, d_ff, dtype),
+        "down": dense_init(r3, d_ff, d_model, dtype),
+    }
+
+
+def attn_init(rng, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, dtype=jnp.bfloat16):
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(rq, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(rk, d_model, num_kv_heads * head_dim, dtype),
+        "wv": dense_init(rv, d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(ro, num_heads * head_dim, d_model, dtype),
+    }
+
+
+def split_heads(x: jnp.ndarray, num_heads: int):
+    """[..., S, H*D] -> [..., H, S, D]"""
+    *b, s, hd = x.shape
+    d = hd // num_heads
+    return x.reshape(*b, s, num_heads, d).swapaxes(-3, -2)
+
+
+def merge_heads(x: jnp.ndarray):
+    """[..., H, S, D] -> [..., S, H*D]"""
+    *b, h, s, d = x.shape
+    return x.swapaxes(-3, -2).reshape(*b, s, h * d)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None):
+    """Mean token cross-entropy; logits [..., V] f32-cast internally."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,63 @@
+"""LLaVA-NeXT backbone (Mistral-7B decoder + stub anyres vision frontend).
+
+Per the assignment, only the transformer BACKBONE is modeled; the vision
+tower + anyres tiling produce *precomputed patch embeddings* supplied by
+``input_specs()`` as ``patches [B, n_patches, d_model]``.  Early fusion:
+patch embeddings are prepended to the token embeddings, and attention /
+S-HPLB treat the fused sequence uniformly (sparsity budgets apply to the
+joint sequence, which is how sparse attention sees multimodal prompts).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.transformer import TransformerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LlavaConfig:
+    backbone: TransformerConfig
+    num_patches: int = 576      # one anyres tile of 24x24 (stub default)
+
+    @property
+    def name(self) -> str:
+        return self.backbone.name
+
+    @property
+    def num_params(self) -> int:
+        return self.backbone.num_params
+
+    @property
+    def active_params(self) -> int:
+        return self.backbone.active_params
+
+
+def init_params(rng, cfg: LlavaConfig):
+    return tfm.init_params(rng, cfg.backbone)
+
+
+def forward(params, batch, cfg: LlavaConfig, *, remat: bool = False):
+    """batch = {"tokens": [B, S_text], "patches": [B, P, d]} -> logits over
+    the text positions (patch positions contribute context only)."""
+    logits = tfm.forward(params, batch["tokens"], cfg.backbone,
+                         extra_embeddings=batch["patches"], remat=remat)
+    return logits[:, batch["patches"].shape[1]:]
+
+
+def loss_fn(params, batch, cfg: LlavaConfig, *, remat: bool = False):
+    from repro.models import common
+    logits = forward(params, batch, cfg, remat=remat)
+    return common.cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+def prefill(params, tokens, patches, cfg: LlavaConfig, **kw):
+    """Fused-sequence prefill (serving path)."""
+    return tfm.prefill(params, tokens, cfg.backbone,
+                       extra_embeddings=patches, **kw)
+
+
+decode_step = tfm.decode_step
+init_cache = tfm.init_cache

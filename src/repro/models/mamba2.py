@@ -1,0 +1,243 @@
+"""Mamba-2 (SSD — state-space duality) language model [arXiv:2405.21060].
+
+Attention-free assigned arch (mamba2-1.3b).  S-HPLB is inapplicable (no
+softmax attention heads / budgets) — see DESIGN.md §Arch-applicability; the
+SSD state heads are homogeneous, so plain even head sharding over ``model``
+is already balanced.
+
+Implementation: the chunked SSD algorithm (minimal discrete form):
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T ;   y_t = C_t h_t + D x_t
+
+computed per chunk of Q tokens as (i) intra-chunk quadratic term with the
+decay-weighted causal mask, (ii) inter-chunk state carried by a lax.scan.
+HLO is O(1) in sequence length; per-token cost is O(N_state * P) — the
+sub-quadratic property that makes mamba2 the natural long_500k arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.sharding.ctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    name: str = "mamba2"
+    num_layers: int = 4
+    d_model: int = 256
+    d_state: int = 128
+    head_dim: int = 64           # P
+    expand: int = 2
+    chunk: int = 128
+    vocab_size: int = 1024
+    dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = True
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def num_params(self) -> int:
+        di, d = self.d_inner, self.d_model
+        per_layer = (d * (2 * di + 2 * self.d_state + self.num_heads)  # in_proj
+                     + di * d                                           # out
+                     + 2 * self.num_heads                               # A, D
+                     + d)                                               # norm
+        return (self.num_layers * per_layer
+                + self.vocab_size * d + d)
+
+    @property
+    def active_params(self) -> int:
+        return self.num_params
+
+
+def _layer_init(rng, cfg: Mamba2Config):
+    rx, rz, rb, rc, rdt, ro = jax.random.split(rng, 6)
+    di, d, ns, H = cfg.d_inner, cfg.d_model, cfg.d_state, cfg.num_heads
+    # separate projections (instead of one fused in_proj) so TP shards the
+    # d_inner/head outputs over `model` without splitting semantic segments
+    return {
+        "wx": common.dense_init(rx, d, di, cfg.dtype),
+        "wz": common.dense_init(rz, d, di, cfg.dtype),
+        "wB": common.dense_init(rb, d, ns, cfg.dtype),
+        "wC": common.dense_init(rc, d, ns, cfg.dtype),
+        "wdt": common.dense_init(rdt, d, H, cfg.dtype),
+        "out_proj": common.dense_init(ro, di, d, cfg.dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": common.rmsnorm_init(d),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+    }
+
+
+def init_params(rng, cfg: Mamba2Config):
+    r_emb, r_layers = jax.random.split(rng)
+    layer_rngs = jax.random.split(r_layers, cfg.num_layers)
+    layers = jax.vmap(lambda r: _layer_init(r, cfg))(layer_rngs)
+    return {
+        "embed": common.embed_init(r_emb, cfg.vocab_size, cfg.d_model,
+                                   cfg.dtype),
+        "layers": layers,
+        "ln_f": common.rmsnorm_init(cfg.d_model),
+    }
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x:  [b, S, H, P]  (b may be 1; vmap outside for batch)
+    dt: [b, S, H]     (positive)
+    A:  [H]           (negative)
+    B, C: [b, S, N]   (single group, broadcast over heads)
+    D:  [H]
+    Returns y [b, S, H, P] and final state [b, H, N, P].
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]               # [b,nc,q,H] (<=0)
+    dA_cum = jnp.cumsum(dA, axis=2)                 # within-chunk cumsum
+
+    # intra-chunk (quadratic within chunk, causal decay-weighted):
+    # y_intra[t] = sum_{s<=t} C_t·B_s exp(dA_cum[t]-dA_cum[s]) dt_s x_s
+    CB = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)      # [b,nc,q,q]
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # [b,nc,t,s,H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    w = CB[..., None] * decay                        # [b,nc,t,s,H]
+    y_intra = jnp.einsum("bctsh,bcsh,bcshp->bcthp", w, dtc, xc)
+
+    # chunk-level state updates:
+    # state_c = sum_s exp(dA_cum[last]-dA_cum[s]) dt_s B_s x_s^T  [b,H,N,P]
+    last = dA_cum[:, :, -1:, :]                      # [b,nc,1,H]
+    state_w = jnp.exp(last - dA_cum)                 # [b,nc,q,H]
+    chunk_state = jnp.einsum("bcsh,bcsh,bcsn,bcshp->bchnp",
+                             state_w, dtc, Bc, xc)   # [b,nc,H,N,P]
+    chunk_decay = jnp.exp(last[:, :, 0, :])          # [b,nc,H] total decay
+
+    def scan_body(h_prev, ins):
+        cs, cd = ins                                  # [b,H,N,P], [b,H]
+        h = h_prev * cd[:, :, None, None] + cs
+        return h, h_prev
+
+    h0 = (jnp.zeros((b, H, N, P), jnp.float32) if init_state is None
+          else init_state)
+    hT, h_before = jax.lax.scan(
+        scan_body,
+        h0,
+        (chunk_state.swapaxes(0, 1).astype(jnp.float32),
+         chunk_decay.swapaxes(0, 1).astype(jnp.float32)))
+    # h_before[c] = state entering chunk c  [nc,b,H,N,P]
+
+    # inter-chunk: y_inter[t] = C_t · (exp(dA_cum[t]) * h_before)
+    in_decay = jnp.exp(dA_cum)                       # [b,nc,q,H]
+    y_inter = jnp.einsum("bctn,cbhnp,bcth->bcthp",
+                         Cc, h_before, in_decay)
+
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    y = y + x * D[None, None, :, None]
+    return y.astype(x.dtype), hT
+
+
+def _mamba_layer(x, lp, cfg: Mamba2Config):
+    """x [B, S, d] -> [B, S, d]."""
+    B_, S, d = x.shape
+    di, ns, H, P = cfg.d_inner, cfg.d_state, cfg.num_heads, cfg.head_dim
+    h = common.rmsnorm(x, lp["norm"])
+    xin = jnp.einsum("bsd,df->bsf", h, lp["wx"])
+    z = jnp.einsum("bsd,df->bsf", h, lp["wz"])
+    Bv = jnp.einsum("bsd,df->bsf", h, lp["wB"])
+    Cv = jnp.einsum("bsd,df->bsf", h, lp["wC"])
+    dt = jnp.einsum("bsd,df->bsf", h, lp["wdt"])
+    xin = xin.reshape(B_, S, H, P)
+    xin = constrain(xin, "batch", None, "model", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    y, _ = ssd_chunked(xin.astype(jnp.float32), dt, A,
+                       Bv.astype(jnp.float32), Cv.astype(jnp.float32),
+                       lp["D"], cfg.chunk)
+    y = (y.reshape(B_, S, di) * jax.nn.silu(z.astype(jnp.float32))).astype(
+        x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", y, lp["out_proj"])
+    return x + constrain(out, "batch", None, None)
+
+
+def forward(params, tokens, cfg: Mamba2Config, *, remat: bool = False):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+    pad = (-x.shape[1]) % cfg.chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    body = lambda x, lp: (_mamba_layer(x, lp, cfg), None)
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    if pad:
+        x = x[:, :tokens.shape[1]]
+    x = common.rmsnorm(x, params["ln_f"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return constrain(logits.astype(jnp.float32), "batch", None, "model")
+
+
+def loss_fn(params, batch, cfg: Mamba2Config, *, remat: bool = False):
+    logits = forward(params, batch["tokens"], cfg, remat=remat)
+    return common.cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# -- recurrent decode (O(1) per token) --------------------------------------
+
+def init_state(cfg: Mamba2Config, batch: int):
+    """Recurrent decode state [L, B, H, N, P] (f32)."""
+    return jnp.zeros((cfg.num_layers, batch, cfg.num_heads, cfg.d_state,
+                      cfg.head_dim), jnp.float32)
+
+
+def decode_step(params, state, token, cfg: Mamba2Config):
+    """One-token recurrent step: (logits [B, V], new state)."""
+    x = jnp.take(params["embed"], token[:, None], axis=0)  # [B,1,d]
+    di, ns, H, P = cfg.d_inner, cfg.d_state, cfg.num_heads, cfg.head_dim
+
+    def body(x, ins):
+        lp, st = ins                                   # st [B,H,N,P]
+        h = common.rmsnorm(x, lp["norm"])
+        xin = jnp.einsum("bsd,df->bsf", h, lp["wx"])
+        z = jnp.einsum("bsd,df->bsf", h, lp["wz"])
+        Bv = jnp.einsum("bsd,df->bsf", h, lp["wB"])
+        Cv = jnp.einsum("bsd,df->bsf", h, lp["wC"])
+        dt = jnp.einsum("bsd,df->bsf", h, lp["wdt"])
+        xin = xin.reshape(-1, H, P).astype(jnp.float32)          # [B,H,P]
+        dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                              + lp["dt_bias"])                    # [B,H]
+        A = -jnp.exp(lp["A_log"])
+        dA = jnp.exp(dt1 * A[None])                               # [B,H]
+        B1 = Bv[:, 0].astype(jnp.float32)                         # [B,N]
+        C1 = Cv[:, 0].astype(jnp.float32)
+        st_new = (st * dA[:, :, None, None]
+                  + jnp.einsum("bh,bn,bhp->bhnp", dt1, B1, xin))
+        y = jnp.einsum("bn,bhnp->bhp", C1, st_new)
+        y = y + xin * lp["D"][None, :, None]
+        y = (y.reshape(-1, 1, di)
+             * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        out = jnp.einsum("bsf,fd->bsd", y, lp["out_proj"])
+        return x + out, st_new
+
+    x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+    x = common.rmsnorm(x, params["ln_f"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])[:, 0]
+    return logits.astype(jnp.float32), new_state

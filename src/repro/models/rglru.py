@@ -1,0 +1,300 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Pattern (recurrentgemma-2b): repeating (recurrent, recurrent, local-attn) —
+"1:2" attention:recurrent ratio.  The RG-LRU gated linear recurrence
+
+    r_t = sigmoid(W_a x_t + b_a);   i_t = sigmoid(W_x x_t + b_x)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is computed with ``jax.lax.associative_scan`` (parallel prefix over the
+linear recurrence) — O(S log S) work, O(1)-in-S HLO, TPU-friendly.
+
+S-HPLB applicability (DESIGN.md §Arch-applicability): the *local attention*
+layers take head budgets (their structural budget = window blocks, and
+selection within the window can still be sparsified); the RG-LRU layers are
+attention-free — no budgets — and shard dimension-parallel over ``model``.
+Budget shifting across the RG-LRU/attention boundary is NOT applicable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.attention.flash_scan import flash_scan_attention
+from repro.attention.rope import apply_rope
+from repro.models import common
+from repro.sharding.ctx import constrain
+
+LRU_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GriffinConfig:
+    name: str = "griffin"
+    num_layers: int = 3
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 1
+    d_ff: int = 768
+    vocab_size: int = 1024
+    head_dim: int | None = None
+    lru_width: int | None = None
+    conv_width: int = 4
+    local_window: int = 2048
+    pattern: str = "RRA"       # R = recurrent, A = local attention
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def lru_width_(self) -> int:
+        return self.lru_width or self.d_model
+
+    def layer_kind(self, layer: int) -> str:
+        return self.pattern[layer % len(self.pattern)]
+
+    @property
+    def num_params(self) -> int:
+        d, w = self.d_model, self.lru_width_
+        dh = self.head_dim_
+        rec_layer = (2 * d * w + w * d            # in (x,gate) + out proj
+                     + self.conv_width * w         # conv
+                     + 3 * w                       # Lambda, W_a diag-ish, b
+                     + 2 * w)                      # gates (diagonal W_a/W_x)
+        attn_layer = d * dh * (self.num_heads * 2 + self.num_kv_heads * 2)
+        mlp = 3 * d * self.d_ff
+        n_rec = sum(1 for l in range(self.num_layers)
+                    if self.layer_kind(l) == "R")
+        n_attn = self.num_layers - n_rec
+        per_norms = self.num_layers * 2 * d
+        return (n_rec * (rec_layer + mlp) + n_attn * (attn_layer + mlp)
+                + per_norms + self.vocab_size * d + d)
+
+    @property
+    def active_params(self) -> int:
+        return self.num_params
+
+
+def _rec_layer_init(rng, cfg: GriffinConfig):
+    r1, r2, r3, r4 = jax.random.split(rng, 4)
+    d, w = cfg.d_model, cfg.lru_width_
+    return {
+        "in_x": common.dense_init(r1, d, w, cfg.dtype),
+        "in_gate": common.dense_init(r2, d, w, cfg.dtype),
+        "conv": (jax.random.normal(r3, (cfg.conv_width, w), jnp.float32)
+                 * 0.1).astype(jnp.float32),
+        "lam": jnp.full((w,), 1.0, jnp.float32),     # Lambda (softplus > 0)
+        "wa": jnp.zeros((w,), jnp.float32),          # recurrence gate (diag)
+        "wx": jnp.zeros((w,), jnp.float32),          # input gate (diag)
+        "out": common.dense_init(r4, w, d, cfg.dtype),
+    }
+
+
+def _attn_layer_init(rng, cfg: GriffinConfig):
+    return common.attn_init(rng, cfg.d_model, cfg.num_heads,
+                            cfg.num_kv_heads, cfg.head_dim_, cfg.dtype)
+
+
+def init_params(rng, cfg: GriffinConfig):
+    r_emb, r_layers = jax.random.split(rng)
+    rngs = jax.random.split(r_layers, cfg.num_layers)
+    layers = []
+    for l in range(cfg.num_layers):
+        r_mix, r_mlp = jax.random.split(rngs[l])
+        kind = cfg.layer_kind(l)
+        mix = (_rec_layer_init(r_mix, cfg) if kind == "R"
+               else _attn_layer_init(r_mix, cfg))
+        layers.append({
+            "mix": mix,
+            "mlp": common.mlp_init(r_mlp, cfg.d_model, cfg.d_ff, cfg.dtype),
+            "ln1": common.rmsnorm_init(cfg.d_model),
+            "ln2": common.rmsnorm_init(cfg.d_model),
+        })
+    return {
+        "embed": common.embed_init(r_emb, cfg.vocab_size, cfg.d_model,
+                                   cfg.dtype),
+        "layers": layers,
+        "ln_f": common.rmsnorm_init(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def rg_lru(x, r_gate, i_gate, lam, h0=None):
+    """x [B,S,W]; gates same; returns (y [B,S,W], h_last [B,W]).
+
+    h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t),
+    log a_t = -c * softplus(lam) * r_t   (computed in f32 log space).
+    """
+    log_a = -LRU_C * jax.nn.softplus(lam)[None, None, :] * r_gate
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) in a numerically-stable form
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i_gate * x)
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh, hh[:, -1, :]
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x [B,S,W], w [K,W]; state [B,K-1,W] or None."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return out, new_state
+
+
+def _recurrent_block(x, mp, cfg: GriffinConfig, conv_state=None, h0=None):
+    """Griffin recurrent temporal-mixing block."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, mp["in_gate"])
+                       .astype(jnp.float32))
+    xb = jnp.einsum("bsd,dw->bsw", x, mp["in_x"]).astype(jnp.float32)
+    xb, new_conv = _causal_conv(xb, mp["conv"], conv_state)
+    r = jax.nn.sigmoid(mp["wa"][None, None, :] * xb)
+    i = jax.nn.sigmoid(mp["wx"][None, None, :] * xb)
+    y, h_last = rg_lru(xb, r, i, mp["lam"], h0)
+    y = (y * gate).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, mp["out"])
+    return constrain(out, "batch", None, None), new_conv, h_last
+
+
+def _attention_block(x, mp, cfg: GriffinConfig, positions):
+    q = common.split_heads(jnp.einsum("bsd,df->bsf", x, mp["wq"]),
+                           cfg.num_heads)
+    k = common.split_heads(jnp.einsum("bsd,df->bsf", x, mp["wk"]),
+                           cfg.num_kv_heads)
+    v = common.split_heads(jnp.einsum("bsd,df->bsf", x, mp["wv"]),
+                           cfg.num_kv_heads)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_scan_attention(q, k, v, causal=True, window=cfg.local_window)
+    o = common.merge_heads(o)
+    return jnp.einsum("bsf,fd->bsd", o, mp["wo"])
+
+
+def forward(params, tokens, cfg: GriffinConfig, *, remat: bool = False):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])
+    for l, lp in enumerate(params["layers"]):
+        def fn(x, lp=lp, l=l):
+            h = common.rmsnorm(x, lp["ln1"])
+            if cfg.layer_kind(l) == "R":
+                mix, _, _ = _recurrent_block(h, lp["mix"], cfg)
+            else:
+                mix = _attention_block(h, lp["mix"], cfg, positions)
+            x = x + mix
+            h2 = common.rmsnorm(x, lp["ln2"])
+            return x + common.swiglu(h2, lp["mlp"]["gate"], lp["mlp"]["up"],
+                                     lp["mlp"]["down"])
+        x = jax.checkpoint(fn)(x) if remat else fn(x)
+    x = common.rmsnorm(x, params["ln_f"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return constrain(logits.astype(jnp.float32), "batch", None, "model")
+
+
+def loss_fn(params, batch, cfg: GriffinConfig, *, remat: bool = False):
+    logits = forward(params, batch["tokens"], cfg, remat=remat)
+    return common.cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(window) attention cache + O(1) recurrent state
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: GriffinConfig, batch: int, window_cache: int | None = None):
+    """Per-layer states: recurrent h/conv for R layers, rolling KV for A."""
+    w = cfg.lru_width_
+    wc = window_cache or cfg.local_window
+    states = []
+    for l in range(cfg.num_layers):
+        if cfg.layer_kind(l) == "R":
+            states.append({
+                "h": jnp.zeros((batch, w), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+            })
+        else:
+            states.append({
+                "k": jnp.zeros((batch, cfg.num_kv_heads, wc, cfg.head_dim_),
+                               cfg.dtype),
+                "v": jnp.zeros((batch, cfg.num_kv_heads, wc, cfg.head_dim_),
+                               cfg.dtype),
+            })
+    return states
+
+
+def decode_step(params, states, token, pos, cfg: GriffinConfig):
+    """One-token step; attention layers use a rolling window cache."""
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    positions = jnp.asarray(pos)[None]
+    new_states = []
+    for l, lp in enumerate(params["layers"]):
+        st = states[l]
+        h = common.rmsnorm(x, lp["ln1"])
+        if cfg.layer_kind(l) == "R":
+            gate = jax.nn.gelu(
+                jnp.einsum("bsd,dw->bsw", h, lp["mix"]["in_gate"])
+                .astype(jnp.float32))
+            xb = jnp.einsum("bsd,dw->bsw", h, lp["mix"]["in_x"]).astype(
+                jnp.float32)
+            xb, new_conv = _causal_conv(xb, lp["mix"]["conv"], st["conv"])
+            r = jax.nn.sigmoid(lp["mix"]["wa"][None, None, :] * xb)
+            i = jax.nn.sigmoid(lp["mix"]["wx"][None, None, :] * xb)
+            y, h_last = rg_lru(xb, r, i, lp["mix"]["lam"], st["h"])
+            y = (y * gate).astype(x.dtype)
+            mix = jnp.einsum("bsw,wd->bsd", y, lp["mix"]["out"])
+            new_states.append({"h": h_last, "conv": new_conv})
+        else:
+            mp = lp["mix"]
+            q = common.split_heads(
+                jnp.einsum("bsd,df->bsf", h, mp["wq"]), cfg.num_heads)
+            k1 = common.split_heads(
+                jnp.einsum("bsd,df->bsf", h, mp["wk"]), cfg.num_kv_heads)
+            v1 = common.split_heads(
+                jnp.einsum("bsd,df->bsf", h, mp["wv"]), cfg.num_kv_heads)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k1 = apply_rope(k1, positions, cfg.rope_theta)
+            wc = st["k"].shape[2]
+            slot = jnp.mod(pos, wc)
+            kc = jax.lax.dynamic_update_slice(
+                st["k"], k1.astype(st["k"].dtype), (0, 0, slot, 0))
+            vc = jax.lax.dynamic_update_slice(
+                st["v"], v1.astype(st["v"].dtype), (0, 0, slot, 0))
+            # positions stored in the ring: derive from slot arithmetic
+            idx = jnp.arange(wc)
+            age = jnp.mod(slot - idx, wc)          # 0 = newest
+            kpos = pos - age
+            valid = (kpos >= 0) & (kpos > pos - cfg.local_window)
+            from repro.models.transformer import _decode_attend  # shared
+            o = _decode_attend(q, kc, vc, valid[None, None, :], None)
+            o = common.merge_heads(o)
+            mix = jnp.einsum("bsf,fd->bsd", o, mp["wo"])
+            new_states.append({"k": kc, "v": vc})
+        x = x + mix
+        h2 = common.rmsnorm(x, lp["ln2"])
+        x = x + common.swiglu(h2, lp["mlp"]["gate"], lp["mlp"]["up"],
+                              lp["mlp"]["down"])
+    x = common.rmsnorm(x, params["ln_f"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])[:, 0]
+    return logits.astype(jnp.float32), new_states

@@ -1,0 +1,477 @@
+"""Decoder-only transformer LM — the workhorse for 7 of the 10 assigned archs.
+
+Covers: minitron-8b, smollm-135m, yi-6b (plain GQA); gemma3-1b (5:1
+local:global pattern); granite-moe / llama4-scout (MoE FFN via
+``repro.models.moe``); llava-next (backbone; patch embeddings injected via
+``extra_embeddings``).
+
+Functional style: explicit param pytrees, pure functions.  Layer loop is a
+``lax.scan`` over stacked layer params when the config is uniform (fast
+compile for the 40-cell dry-run) and a Python loop otherwise (exact per-
+layer-kind FLOPs for local/global patterns).
+
+Three entry points (all jit/pjit-compatible, O(1) HLO in seq len):
+- :func:`forward`      — training forward: tokens -> logits.
+- :func:`prefill`      — serving prefill: tokens -> (last logits, KV cache);
+                         dense or S-HPLB sparse (work-list) attention.
+- :func:`decode_step`  — one-token decode against the cache; dense or
+                         budgeted-sparse (gathered KV blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.attention.flash_scan import flash_scan_attention
+from repro.attention.worklist_jnp import batched_worklist_attention
+from repro.attention.dense import attention_maps, decode_attention_ref
+from repro.attention.rope import apply_rope
+from repro.models import common
+from repro.models.moe import MoEConfig, moe_ffn, moe_init
+from repro.sharding.ctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 2
+    d_ff: int = 512
+    vocab_size: int = 1024
+    head_dim: int | None = None
+    rope_theta: float = 10000.0
+    max_seq_len: int = 131072
+    # layer pattern, cycled: 'G' global causal, 'L' local sliding window
+    attn_pattern: str = "G"
+    local_window: int = 4096
+    moe: MoEConfig | None = None
+    dtype: Any = jnp.bfloat16
+    block_q: int = 128
+    block_kv: int = 128
+    tie_embeddings: bool = True
+    # "scan" = lax.scan over stacked layers (uniform pattern only),
+    # "unroll" = python loop (needed for mixed local/global exact windows)
+    layer_loop: str = "auto"
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def group_size(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def layer_kind(self, layer: int) -> str:
+        return self.attn_pattern[layer % len(self.attn_pattern)]
+
+    @property
+    def uniform(self) -> bool:
+        # MoE layers are structurally uniform too — scan-over-layers works
+        return len(set(self.attn_pattern)) == 1
+
+    @property
+    def loop_mode(self) -> str:
+        if self.layer_loop != "auto":
+            return self.layer_loop
+        return "scan" if self.uniform else "unroll"
+
+    @property
+    def num_params(self) -> int:
+        """Exact parameter count (embeddings included once if tied)."""
+        dh = self.head_dim_
+        attn = self.d_model * dh * (self.num_heads * 2 +
+                                    self.num_kv_heads * 2)
+        if self.moe is not None:
+            ffn = (self.d_model * self.moe.num_experts +      # router
+                   3 * self.d_model * self.d_ff * self.moe.num_experts)
+        else:
+            ffn = 3 * self.d_model * self.d_ff
+        norms = 2 * self.d_model
+        per_layer = attn + ffn + norms
+        embed = self.vocab_size * self.d_model
+        head = 0 if self.tie_embeddings else embed
+        return self.num_layers * per_layer + embed + head + self.d_model
+
+    @property
+    def active_params(self) -> int:
+        """Active (per-token) params for MoE rooflines (6*N_active*D)."""
+        if self.moe is None:
+            return self.num_params
+        dh = self.head_dim_
+        attn = self.d_model * dh * (self.num_heads * 2 + self.num_kv_heads * 2)
+        ffn = (self.d_model * self.moe.num_experts +
+               3 * self.d_model * self.d_ff * self.moe.experts_per_token)
+        per_layer = attn + ffn + 2 * self.d_model
+        embed = self.vocab_size * self.d_model
+        head = 0 if self.tie_embeddings else embed
+        return self.num_layers * per_layer + embed + head + self.d_model
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(rng, cfg: TransformerConfig):
+    r_attn, r_ffn = jax.random.split(rng)
+    p = {
+        "attn": common.attn_init(
+            r_attn, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.head_dim_, cfg.dtype),
+        "ln1": common.rmsnorm_init(cfg.d_model),
+        "ln2": common.rmsnorm_init(cfg.d_model),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_init(r_ffn, cfg.d_model, cfg.d_ff, cfg.moe, cfg.dtype)
+    else:
+        p["mlp"] = common.mlp_init(r_ffn, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def init_params(rng, cfg: TransformerConfig):
+    r_emb, r_layers, r_head = jax.random.split(rng, 3)
+    layer_rngs = jax.random.split(r_layers, cfg.num_layers)
+    if cfg.loop_mode == "scan":
+        # stacked: every leaf gets leading [L] dim
+        stacked = jax.vmap(lambda r: _layer_init(r, cfg))(layer_rngs)
+        layers = stacked
+    else:
+        layers = [_layer_init(layer_rngs[i], cfg)
+                  for i in range(cfg.num_layers)]
+    params = {
+        "embed": common.embed_init(r_emb, cfg.vocab_size, cfg.d_model,
+                                   cfg.dtype),
+        "layers": layers,
+        "ln_f": common.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(
+            r_head, cfg.d_model, cfg.vocab_size, cfg.dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-layer
+# ---------------------------------------------------------------------------
+
+def _qkv(x, ap, cfg: TransformerConfig, positions):
+    """x [B,S,d] -> q [B,H,S,Dh], k/v [B,Hkv,S,Dh] with RoPE applied."""
+    q = jnp.einsum("bsd,df->bsf", x, ap["wq"])
+    k = jnp.einsum("bsd,df->bsf", x, ap["wk"])
+    v = jnp.einsum("bsd,df->bsf", x, ap["wv"])
+    q = common.split_heads(q, cfg.num_heads)
+    k = common.split_heads(k, cfg.num_kv_heads)
+    v = common.split_heads(v, cfg.num_kv_heads)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attend_dense(q, k, v, cfg: TransformerConfig, window, q_offset=0):
+    return flash_scan_attention(
+        q, k, v, causal=True, window=window, q_offset=q_offset,
+        block_q=cfg.block_q, block_kv=cfg.block_kv)
+
+
+def attention_layer(
+    x, ap, cfg: TransformerConfig, *,
+    window: int | None,
+    positions,
+    sparse_items=None,
+    maps_out: list | None = None,
+):
+    """Full attention sub-layer (pre-norm residual outside)."""
+    B = x.shape[0]
+    q, k, v = _qkv(x, ap, cfg, positions)
+    q = constrain(q, "batch", "model", None, None)
+    k = constrain(k, "batch", "model", None, None)
+    v = constrain(v, "batch", "model", None, None)
+    if maps_out is not None:
+        maps_out.append(attention_maps(q, k))
+    if sparse_items is not None:
+        o = batched_worklist_attention(
+            q, k, v, jnp.asarray(sparse_items),
+            block_q=cfg.block_q, block_kv=cfg.block_kv)
+    else:
+        o = _attend_dense(q, k, v, cfg, window)
+    o = common.merge_heads(o)
+    out = jnp.einsum("bsf,fd->bsd", o, ap["wo"])
+    return constrain(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Layer + model forward
+# ---------------------------------------------------------------------------
+
+def _ffn(x, lp, cfg: TransformerConfig):
+    if cfg.moe is not None:
+        return moe_ffn(x, lp["moe"], cfg.moe)
+    h = common.swiglu(x, lp["mlp"]["gate"], lp["mlp"]["up"],
+                      lp["mlp"]["down"])
+    return constrain(h, "batch", None, None)
+
+
+def _layer_fwd(x, lp, cfg: TransformerConfig, *, window, positions,
+               sparse_items=None, maps_out=None):
+    h = common.rmsnorm(x, lp["ln1"])
+    x = x + attention_layer(h, lp["attn"], cfg, window=window,
+                            positions=positions, sparse_items=sparse_items,
+                            maps_out=maps_out)
+    h = common.rmsnorm(x, lp["ln2"])
+    x = x + _ffn(h, lp, cfg)
+    return x
+
+
+def _logits(x, params, cfg: TransformerConfig):
+    x = common.rmsnorm(x, params["ln_f"])
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return constrain(logits.astype(jnp.float32), "batch", None, "model")
+
+
+def _window_of(cfg: TransformerConfig, layer: int) -> int | None:
+    return cfg.local_window if cfg.layer_kind(layer) == "L" else None
+
+
+def forward(params, tokens, cfg: TransformerConfig, *,
+            extra_embeddings=None, maps_out=None, remat: bool = False):
+    """Training/eval forward.  tokens [B, S] int32 -> logits [B, S, V] f32.
+
+    extra_embeddings: optional [B, S_extra, d] prepended (VLM/audio stubs).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if extra_embeddings is not None:
+        x = jnp.concatenate([extra_embeddings.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", None, None)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    if cfg.loop_mode == "scan" and maps_out is None:
+        body = lambda x, lp: (_layer_fwd(
+            x, lp, cfg, window=_window_of(cfg, 0), positions=positions), None)
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for l in range(cfg.num_layers):
+            fn = lambda x, lp, l=l: _layer_fwd(
+                x, lp, cfg, window=_window_of(cfg, l), positions=positions,
+                maps_out=maps_out)
+            if remat:
+                fn = jax.checkpoint(fn)
+            x = fn(x, params["layers"][l])
+    return _logits(x, params, cfg)
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, *, remat: bool = False):
+    logits = forward(params, batch["tokens"], cfg, remat=remat)
+    return common.cross_entropy(logits, batch["labels"],
+                                batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None):
+    """KV cache [L, 2, B, Hkv, Smax, Dh]."""
+    dtype = dtype or cfg.dtype
+    return jnp.zeros(
+        (cfg.num_layers, 2, batch, cfg.num_kv_heads, max_len, cfg.head_dim_),
+        dtype)
+
+
+def prefill(params, tokens, cfg: TransformerConfig, *,
+            cache_len: int | None = None,
+            sparse_items=None,
+            attn_override=None,
+            extra_embeddings=None):
+    """Prefill: tokens [B, S] -> (logits_last [B, V], cache).
+
+    ``sparse_items``: per-layer work-lists [L][Litems, 7] (S-HPLB sparse
+    prefill, single-device path) or None (dense).  ``attn_override(l, q, k,
+    v) -> o`` replaces the attention compute entirely (the serving engine
+    injects the shard_map S-HPLB island here).  The cache always stores the
+    FULL K/V (sparsity reduces attention compute, not cache contents).
+    """
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if extra_embeddings is not None:
+        x = jnp.concatenate([extra_embeddings.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", None, None)
+    Sx = x.shape[1]
+    max_len = cache_len or Sx
+    positions = jnp.arange(Sx)
+    cache_k, cache_v = [], []
+
+    def layer(x, lp, l):
+        h = common.rmsnorm(x, lp["ln1"])
+        q, k, v = _qkv(h, lp["attn"], cfg, positions)
+        q = constrain(q, "batch", "model", None, None)
+        k = constrain(k, "batch", "model", None, None)
+        v = constrain(v, "batch", "model", None, None)
+        items = None if sparse_items is None else sparse_items[l]
+        if attn_override is not None:
+            o = attn_override(l, q, k, v)
+        elif items is not None:
+            o = batched_worklist_attention(
+                q, k, v, jnp.asarray(items),
+                block_q=cfg.block_q, block_kv=cfg.block_kv)
+        else:
+            o = _attend_dense(q, k, v, cfg, _window_of(cfg, l))
+        o = common.merge_heads(o)
+        x = x + constrain(
+            jnp.einsum("bsf,fd->bsd", o, lp["attn"]["wo"]), "batch", None, None)
+        h2 = common.rmsnorm(x, lp["ln2"])
+        x = x + _ffn(h2, lp, cfg)
+        pad = max_len - Sx
+        kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x, kc, vc
+
+    layers = params["layers"]
+    if cfg.loop_mode == "scan":
+        def body(x, lp):
+            x, kc, vc = layer(x, lp, 0)
+            return x, (kc, vc)
+        x, (ks, vs) = jax.lax.scan(body, x, layers)
+        cache = jnp.stack([ks, vs], axis=1)  # [L, 2, B, Hkv, Smax, Dh]
+    else:
+        for l in range(cfg.num_layers):
+            x, kc, vc = layer(x, layers[l], l)
+            cache_k.append(kc)
+            cache_v.append(vc)
+        cache = jnp.stack(
+            [jnp.stack(cache_k), jnp.stack(cache_v)], axis=1)
+    cache = constrain(cache, None, None, "batch", "model", None, None)
+    logits = _logits(x[:, -1:, :], params, cfg)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
+                block_ids=None, cache_len: int | jnp.ndarray | None = None,
+                attn_override=None):
+    """One decode step.
+
+    token [B] int32; pos scalar OR [B] int32 (current position per
+    sequence, 0-based — per-sequence positions enable continuous batching).
+    cache [L, 2, B, Hkv, Smax, Dh]; returns (logits [B, V], new cache).
+
+    ``block_ids``: [L, Hkv, nb] int32 selected KV blocks per layer/kv-head
+    (S-HPLB budgeted decode — gathers only the selected blocks, which is the
+    memory-roofline win; pad with -1) or None for dense decode over the full
+    cache.  ``attn_override(l, q, kc, vc) -> o [B, H, 1, Dh]`` replaces the
+    attention compute (serving engine's shard_map flash-decode island).
+    """
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)  # [B, 1, d]
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    smax = cache.shape[4]
+    clen = pos_arr + 1 if cache_len is None else jnp.broadcast_to(
+        jnp.asarray(cache_len), (B,))
+
+    def layer(x, lp, layer_cache, l, items_l):
+        h = common.rmsnorm(x, lp["ln1"])
+        ap = lp["attn"]
+        q = common.split_heads(jnp.einsum("bsd,df->bsf", h, ap["wq"]),
+                               cfg.num_heads)
+        k = common.split_heads(jnp.einsum("bsd,df->bsf", h, ap["wk"]),
+                               cfg.num_kv_heads)
+        v = common.split_heads(jnp.einsum("bsd,df->bsf", h, ap["wv"]),
+                               cfg.num_kv_heads)
+        rope = lambda t, p: apply_rope(t, p[None], cfg.rope_theta)
+        q = jax.vmap(rope)(q, pos_arr)
+        k = jax.vmap(rope)(k, pos_arr)
+        upd = lambda c, kn, p: jax.lax.dynamic_update_slice(
+            c, kn.astype(c.dtype), (0, p, 0))
+        kc = jax.vmap(upd)(layer_cache[0], k, pos_arr)
+        vc = jax.vmap(upd)(layer_cache[1], v, pos_arr)
+        window = _window_of(cfg, l)
+        if attn_override is not None:
+            o = attn_override(l, q, kc, vc)
+        elif items_l is not None:
+            # gather selected kv blocks; items_l: [Hkv, nb], -1 = padding
+            blk = cfg.block_kv
+            nb = items_l.shape[-1]
+            safe_ids = jnp.maximum(items_l, 0)
+            gk = _gather_blocks(kc, safe_ids, blk)  # [B, Hkv, nb*blk, Dh]
+            gv = _gather_blocks(vc, safe_ids, blk)
+            # positions of gathered tokens for masking
+            gpos = (safe_ids[..., None] * blk +
+                    jnp.arange(blk)[None, None, :]).reshape(
+                        cfg.num_kv_heads, nb * blk)  # [Hkv, nb*blk]
+            real = jnp.repeat(items_l >= 0, blk, axis=-1)  # [Hkv, nb*blk]
+            valid = (gpos[None] <= pos_arr[:, None, None]) & real[None]
+            if window is not None:
+                valid = valid & (gpos[None] > (pos_arr[:, None, None]
+                                               - window))
+            o = _decode_attend(q, gk, gv, valid, cfg)
+        else:
+            kpos = jnp.arange(smax)
+            valid = kpos[None] < clen[:, None]      # [B, Smax]
+            if window is not None:
+                valid = valid & (kpos[None] > (pos_arr[:, None] - window))
+            o = _decode_attend(q, kc, vc, valid[:, None], cfg)
+        o = common.merge_heads(o)
+        x = x + jnp.einsum("bsf,fd->bsd", o, lp["attn"]["wo"])
+        h2 = common.rmsnorm(x, lp["ln2"])
+        x = x + _ffn(h2, lp, cfg)
+        return x, jnp.stack([kc, vc])
+
+    if cfg.loop_mode == "scan":
+        if block_ids is None:
+            def body(x, scan_in):
+                lp, layer_cache = scan_in
+                x, new_c = layer(x, lp, layer_cache, 0, None)
+                return x, new_c
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        else:
+            def body(x, scan_in):
+                lp, layer_cache, items_l = scan_in
+                x, new_c = layer(x, lp, layer_cache, 0, items_l)
+                return x, new_c
+            x, new_cache = jax.lax.scan(
+                body, x, (params["layers"], cache, jnp.asarray(block_ids)))
+    else:
+        new_layers = []
+        for l in range(cfg.num_layers):
+            items_l = None if block_ids is None else jnp.asarray(block_ids[l])
+            x, nc = layer(x, params["layers"][l], cache[l], l, items_l)
+            new_layers.append(nc)
+        new_cache = jnp.stack(new_layers)
+    logits = _logits(x, params, cfg)[:, 0]
+    return logits, new_cache
+
+
+def _gather_blocks(c, block_ids, blk):
+    """c [B, Hkv, Smax, Dh], block_ids [Hkv, nb] -> [B, Hkv, nb*blk, Dh]."""
+    B, hkv, smax, dh = c.shape
+    nb = block_ids.shape[-1]
+    cb = c.reshape(B, hkv, smax // blk, blk, dh)
+    g = jnp.take_along_axis(
+        cb, block_ids[None, :, :, None, None].astype(jnp.int32),
+        axis=2)  # [B, Hkv, nb, blk, Dh]
+    return g.reshape(B, hkv, nb * blk, dh)
+
+
+def _decode_attend(q, k, v, valid, cfg: TransformerConfig):
+    """q [B,H,1,Dh]; k/v [B,Hkv,Skv,Dh]; valid [B|1, Hkv|1, Skv] bool."""
+    B, H, _, dh = q.shape
+    hkv = k.shape[1]
+    G = H // hkv
+    qg = q.reshape(B, hkv, G, dh)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    s = jnp.where(valid[:, :, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, 1, dh).astype(q.dtype)

@@ -1,0 +1,10 @@
+"""Serving: S-HPLB engine, shard_map attention islands, KV cache,
+continuous batching, sampling."""
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.kv_cache import BlockAllocator, SlotCache
+from repro.serving.sampler import SamplingParams, sample
+from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.sharded_attention import (
+    flash_decode_attention,
+    hplb_prefill_attention,
+)

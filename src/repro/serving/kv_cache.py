@@ -1,0 +1,94 @@
+"""Block KV-cache management for continuous batching.
+
+Two layers:
+
+- :class:`BlockAllocator` — host-side bookkeeping of a fixed pool of
+  128-token cache blocks (vLLM-style): per-sequence block tables, alloc on
+  append, free on completion.  The scheduler uses it for admission control
+  (a request is admitted only if its prefill fits the free pool).
+
+- :class:`SlotCache` — the device-side contiguous cache [L, 2, B_slots,
+  Hkv, Smax, Dh] with a free-slot map.  Sequences claim a slot at admission
+  and release it at completion; slot reuse avoids reallocation.
+
+The attention kernels address the cache contiguously per slot (TPU-friendly
+128-aligned layout); the block granularity exists for admission math and for
+the S-HPLB decode budgets (block ids index 128-token cache blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class BlockAllocator:
+    num_blocks: int
+    block: int = 128
+
+    def __post_init__(self):
+        self._free: list[int] = list(range(self.num_blocks))
+        self._tables: dict[int, list[int]] = {}
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_needed(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.block)
+
+    def can_allocate(self, num_tokens: int) -> bool:
+        return self.blocks_needed(num_tokens) <= len(self._free)
+
+    def allocate(self, seq_id: int, num_tokens: int) -> list[int]:
+        need = self.blocks_needed(num_tokens)
+        if need > len(self._free):
+            raise MemoryError(
+                f"KV pool exhausted: need {need}, free {len(self._free)}")
+        got = [self._free.pop() for _ in range(need)]
+        self._tables.setdefault(seq_id, []).extend(got)
+        return got
+
+    def append_token(self, seq_id: int, cur_len: int) -> None:
+        """Grow the table when a decode step crosses a block boundary."""
+        if cur_len % self.block == 0:
+            self.allocate(seq_id, 1)
+
+    def table(self, seq_id: int) -> list[int]:
+        return self._tables.get(seq_id, [])
+
+    def free(self, seq_id: int) -> None:
+        self._free.extend(self._tables.pop(seq_id, []))
+
+
+class SlotCache:
+    """Fixed-slot device cache with host-side slot map."""
+
+    def __init__(self, make_cache_fn, num_slots: int):
+        """``make_cache_fn(num_slots) -> device cache pytree`` (batch dim =
+        slots)."""
+        self.cache = make_cache_fn(num_slots)
+        self.num_slots = num_slots
+        self._free = list(range(num_slots))
+        self._of_seq: dict[int, int] = {}
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def claim(self, seq_id: int) -> int:
+        if not self._free:
+            raise MemoryError("no free cache slots")
+        s = self._free.pop()
+        self._of_seq[seq_id] = s
+        return s
+
+    def slot(self, seq_id: int) -> int:
+        return self._of_seq[seq_id]
+
+    def release(self, seq_id: int) -> None:
+        s = self._of_seq.pop(seq_id, None)
+        if s is not None:
+            self._free.append(s)

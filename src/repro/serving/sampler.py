@@ -1,0 +1,36 @@
+"""Token sampling: greedy / temperature / top-k / top-p, pure jnp."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # 0 => greedy
+    top_k: int = 0               # 0 => disabled
+    top_p: float = 1.0           # 1 => disabled
+    max_tokens: int = 64
+    stop_token: int | None = None
+
+
+def sample(logits: jnp.ndarray, rng, params: SamplingParams) -> jnp.ndarray:
+    """logits [B, V] -> tokens [B] int32."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / params.temperature
+    if params.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -params.top_k][:, None]
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    if params.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumsum >= top_p; keep everything above cutoff
+        cutoff_idx = jnp.argmax(csum >= params.top_p, axis=-1)
+        cutoff = jnp.take_along_axis(
+            sorted_logits, cutoff_idx[:, None], axis=-1)
+        logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

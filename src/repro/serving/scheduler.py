@@ -1,0 +1,134 @@
+"""Continuous-batching scheduler (prefill + decode interleave).
+
+Standard serving control loop: a FIFO of pending requests; each tick admits
+as many pending requests as cache slots/blocks allow (running their
+prefills), then advances ALL active sequences by one decode step as a single
+batch.  Completion on stop-token or max_tokens; slots and blocks are
+recycled.  This is the host-side half of the paper's serving story — the
+device-side half (the S-HPLB attention itself) lives in the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.serving.kv_cache import BlockAllocator, SlotCache
+from repro.serving.sampler import SamplingParams
+from repro.utils.logging import get_logger
+
+log = get_logger("scheduler")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [S] int32
+    sampling: SamplingParams = SamplingParams()
+    # filled during execution:
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    admitted: int = 0
+    completed: int = 0
+    decode_steps: int = 0
+    prefill_tokens: int = 0
+
+
+class ContinuousBatcher:
+    """Drives (prefill_fn, decode_fn) over a stream of requests.
+
+    prefill_fn(tokens[1, S], slot) -> first sampled token
+    decode_fn(active_slots, tokens, positions) -> next tokens (per slot)
+    (engine-provided closures that own params/cache device state)
+    """
+
+    def __init__(self, *, num_slots: int, num_blocks: int,
+                 max_seq_len: int, block: int = 128):
+        self.alloc = BlockAllocator(num_blocks, block)
+        self.max_seq_len = max_seq_len
+        self.pending: deque[Request] = deque()
+        self.active: dict[int, Request] = {}
+        self.lengths: dict[int, int] = {}
+        self.stats = SchedulerStats()
+        self._slots_free = list(range(num_slots))
+        self._slot_of: dict[int, int] = {}
+
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.pending or self.active)
+
+    def _admit(self, prefill_fn):
+        while self.pending and self._slots_free:
+            req = self.pending[0]
+            need = len(req.prompt) + req.sampling.max_tokens
+            if need > self.max_seq_len:
+                req.done = True
+                self.pending.popleft()
+                log.warning("request %d too long (%d) — rejected",
+                            req.rid, need)
+                continue
+            if not self.alloc.can_allocate(need):
+                break  # wait for frees
+            slot = self._slots_free.pop()
+            self._slot_of[req.rid] = slot
+            self.alloc.allocate(req.rid, need)
+            self.pending.popleft()
+            first = prefill_fn(req.prompt[None, :], slot)
+            req.generated.append(int(first))
+            self.active[req.rid] = req
+            self.lengths[req.rid] = len(req.prompt) + 1
+            self.stats.admitted += 1
+            self.stats.prefill_tokens += len(req.prompt)
+
+    def _retire(self, req: Request):
+        req.done = True
+        slot = self._slot_of.pop(req.rid)
+        self._slots_free.append(slot)
+        self.alloc.free(req.rid)
+        del self.active[req.rid]
+        del self.lengths[req.rid]
+        self.stats.completed += 1
+
+    def tick(self, prefill_fn: Callable, decode_fn: Callable) -> list[Request]:
+        """One scheduler iteration; returns requests completed this tick."""
+        self._admit(prefill_fn)
+        finished = []
+        if self.active:
+            rids = sorted(self.active)
+            slots = [self._slot_of[r] for r in rids]
+            tokens = np.array([self.active[r].generated[-1] for r in rids],
+                              np.int32)
+            positions = np.array([self.lengths[r] - 1 for r in rids],
+                                 np.int32)
+            nxt = decode_fn(slots, tokens, positions)
+            self.stats.decode_steps += 1
+            for r, t in zip(rids, np.asarray(nxt)):
+                req = self.active[r]
+                req.generated.append(int(t))
+                self.lengths[r] += 1
+                sp = req.sampling
+                if (len(req.generated) >= sp.max_tokens
+                        or (sp.stop_token is not None
+                            and int(t) == sp.stop_token)):
+                    finished.append(req)
+        for req in finished:
+            self._retire(req)
+        return finished
+
+    def run(self, prefill_fn, decode_fn, max_ticks: int = 100_000):
+        """Drain all requests; returns completed requests in finish order."""
+        done = []
+        ticks = 0
+        while self.busy and ticks < max_ticks:
+            done.extend(self.tick(prefill_fn, decode_fn))
+            ticks += 1
+        return done

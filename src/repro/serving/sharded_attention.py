@@ -1,0 +1,197 @@
+"""shard_map S-HPLB attention islands (DESIGN.md §2.4).
+
+Per-device DISTINCT work is impossible under plain GSPMD jit (one program,
+uniform shapes); the S-HPLB execution model therefore runs inside shard_map
+islands over the ``model`` axis:
+
+- :func:`hplb_prefill_attention` — each model-shard executes ITS OWN
+  work-list (the per-device lists built by the HPLB planner; lengths
+  equalized to max_d L_d, which the partitioner minimizes).  Heads are
+  already permuted into slot order in the weights, so shard d's q/k/v slices
+  are exactly its assigned heads.
+
+- :func:`flash_decode_attention` — decode against a SEQUENCE-sharded KV
+  cache (the long-context layout): each shard computes a partial online
+  softmax over its local kv blocks — budgeted via per-shard block-id lists —
+  and the partials merge with the flash-decoding (acc, m, l) combine over
+  the mesh axes.  S-HPLB balances the per-shard block counts.
+
+Both islands use the pure-jnp work-list executors on CPU and the Pallas
+kernels (kernels.ops) on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.attention.worklist_jnp import worklist_attention
+
+NEG_INF = -1e30
+
+
+def _batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def hplb_prefill_attention(mesh, *, block_q=128, block_kv=128,
+                           kv_sharded: bool = True):
+    """Build the shard_map prefill attention: (q, k, v, items) -> o.
+
+    q [B, H, S, D] sharded (batch, model, -, -); items
+    [n_model, L, Lpad, 7] sharded on axis 0 — inside the island each shard
+    sees its own [1, L, Lpad, 7] list.  Returns a callable taking the LAYER
+    index to slice items (so one shard_map signature serves every layer).
+
+    ``kv_sharded``: kv_group mode (kv heads sharded with their q heads,
+    item kv indices device-local).  False = kv_replication mode (fewer kv
+    heads than shards, e.g. minitron 8 kv over 16): k/v replicate over the
+    model axis (shard_map inserts the all-gather) and item kv indices are
+    GLOBAL.
+    """
+    ba = _batch_axes(mesh)
+    bspec = ba[0] if len(ba) == 1 else (ba if ba else None)
+    kv_spec = "model" if kv_sharded else None
+
+    def attend(l, q, k, v, items):
+        def island(q_l, k_l, v_l, items_l):
+            # q_l [B_l, H_loc, S, D]; items_l [1, L, Lpad, 7]
+            it = items_l[0, l]
+            fn = functools.partial(
+                worklist_attention, items=it,
+                block_q=block_q, block_kv=block_kv)
+            return jax.vmap(lambda qq, kk, vv: fn(qq, kk, vv))(q_l, k_l, v_l)
+
+        return shard_map(
+            island, mesh=mesh,
+            in_specs=(P(bspec, "model", None, None),
+                      P(bspec, kv_spec, None, None),
+                      P(bspec, kv_spec, None, None),
+                      P("model", None, None, None)),
+            out_specs=P(bspec, "model", None, None),
+            check_vma=False,
+        )(q, k, v, items)
+
+    return attend
+
+
+def hplb_prefill_attention_rows(mesh, *, block_q=128, block_kv=128):
+    """Row-mode shard_map prefill: (head, q_blk) rows partitioned over the
+    model axis (archs whose head count does not divide the mesh — see
+    ``core.worklist.build_row_worklist``).  q/k/v replicated inside the
+    island; disjoint output tiles combine via psum over 'model'."""
+    ba = _batch_axes(mesh)
+    bspec = ba[0] if len(ba) == 1 else (ba if ba else None)
+
+    def attend(l, q, k, v, items):
+        def island(q_l, k_l, v_l, items_l):
+            it = items_l[0, l]
+            fn = functools.partial(
+                worklist_attention, items=it,
+                block_q=block_q, block_kv=block_kv)
+            o = jax.vmap(lambda qq, kk, vv: fn(qq, kk, vv))(q_l, k_l, v_l)
+            return jax.lax.psum(o, "model")
+
+        return shard_map(
+            island, mesh=mesh,
+            in_specs=(P(bspec, None, None, None),
+                      P(bspec, None, None, None),
+                      P(bspec, None, None, None),
+                      P("model", None, None, None)),
+            out_specs=P(bspec, None, None, None),
+            check_vma=False,
+        )(q, k, v, items)
+
+    return attend
+
+
+def flash_decode_attention(mesh, *, block_kv=128, seq_axes=("model",),
+                           batch_axes=None):
+    """Build the shard_map budgeted flash-decode: (q, kc, vc, ids, pos) -> o.
+
+    kc/vc [B, Hkv, S, D] sharded on S over ``seq_axes``; ids
+    [n_shards, Hkv, nb_loc] int32 GLOBAL block indices owned by each shard
+    (-1 padding), sharded on axis 0.  q [B, H, 1, D] replicated over
+    seq_axes.  Partial (acc, m, l) per shard; psum-merge over seq_axes.
+    ``batch_axes``: axes sharding the batch dim (default: all of pod/data
+    not used for seq; pass () when B is too small to shard — long_500k B=1).
+    """
+    if batch_axes is None:
+        batch_axes = tuple(a for a in _batch_axes(mesh)
+                           if a not in seq_axes)
+    ba = tuple(batch_axes)
+    bspec = ba[0] if len(ba) == 1 else (ba if ba else None)
+    sspec = seq_axes[0] if len(seq_axes) == 1 else tuple(seq_axes)
+
+    def attend(q, kc, vc, ids, pos):
+        B, H, _, dh = q.shape
+        hkv = kc.shape[1]
+        G = H // hkv
+        smax = kc.shape[2]
+        n_shards = int(np.prod([mesh.shape[a] for a in seq_axes]))
+        s_loc = smax // n_shards
+        nblk_loc = s_loc // block_kv
+
+        def island(q_l, kc_l, vc_l, ids_l):
+            # q_l [B_l, H, 1, D]; kc_l [B_l, Hkv, S_loc, D];
+            # ids_l [1, Hkv, nb_loc] (global block ids)
+            if len(seq_axes) == 1:
+                sidx = jax.lax.axis_index(seq_axes[0])
+            else:
+                sidx = jax.lax.axis_index(seq_axes)
+            ids0 = ids_l[0]                                   # [Hkv, nb_loc]
+            local = ids0 - sidx * nblk_loc
+            ok = (ids0 >= 0) & (local >= 0) & (local < nblk_loc)
+            safe = jnp.clip(local, 0, nblk_loc - 1)
+            blk = block_kv
+            Bl = kc_l.shape[0]
+            kb = kc_l.reshape(Bl, hkv, nblk_loc, blk, dh)
+            vb = vc_l.reshape(Bl, hkv, nblk_loc, blk, dh)
+            nb = safe.shape[-1]
+            gk = jnp.take_along_axis(
+                kb, safe[None, :, :, None, None].astype(jnp.int32), axis=2
+            ).reshape(Bl, hkv, nb * blk, dh)
+            gv = jnp.take_along_axis(
+                vb, safe[None, :, :, None, None].astype(jnp.int32), axis=2
+            ).reshape(Bl, hkv, nb * blk, dh)
+            gpos = ((ids0 * blk)[..., None]
+                    + jnp.arange(blk)[None, None, :]).reshape(
+                        hkv, nb * blk)
+            valid = (jnp.repeat(ok, blk, axis=-1) & (gpos <= pos))[None]
+
+            qg = q_l.reshape(Bl, hkv, G, dh).astype(jnp.float32)
+            s = jnp.einsum("bhgd,bhkd->bhgk", qg,
+                           gk.astype(jnp.float32)) * (dh ** -0.5)
+            s = jnp.where(valid[:, :, None, :], s, NEG_INF)
+            m = s.max(axis=-1)                                # [B,hkv,G]
+            p = jnp.where(valid[:, :, None, :],
+                          jnp.exp(s - m[..., None]), 0.0)
+            l = p.sum(axis=-1)
+            acc = jnp.einsum("bhgk,bhkd->bhgd", p, gv.astype(jnp.float32))
+            # flash-decoding merge across seq shards
+            gm = jax.lax.pmax(m, seq_axes if len(seq_axes) > 1
+                              else seq_axes[0])
+            scale = jnp.exp(m - gm)
+            l = jax.lax.psum(l * scale, seq_axes if len(seq_axes) > 1
+                             else seq_axes[0])
+            acc = jax.lax.psum(acc * scale[..., None],
+                               seq_axes if len(seq_axes) > 1
+                               else seq_axes[0])
+            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            return out.reshape(Bl, H, 1, dh).astype(q_l.dtype)
+
+        return shard_map(
+            island, mesh=mesh,
+            in_specs=(P(bspec, None, None, None),
+                      P(bspec, None, sspec, None),
+                      P(bspec, None, sspec, None),
+                      P(sspec, None, None)),
+            out_specs=P(bspec, None, None, None),
+            check_vma=False,
+        )(q, kc, vc, ids)
+
+    return attend

@@ -1,0 +1,4 @@
+"""Distribution: PartitionSpec rules, logical-axis constraints, elastic
+resharding."""
+from repro.sharding.ctx import constrain, logical_spec
+from repro.sharding import specs

@@ -1,0 +1,192 @@
+"""PartitionSpec rules for every parameter / input / state tree.
+
+Rule-based: each leaf's spec is chosen by its tree path + rank, then
+SANITIZED against the actual mesh — any dim not divisible by its assigned
+axis size falls back to replication for that dim (e.g. whisper's odd vocab
+51865 cannot be vocab-parallel over 16 shards; granite's 49155 likewise).
+This keeps one rule set correct across smoke configs, the single-pod
+16x16 mesh and the multi-pod 2x16x16 mesh.
+
+Axis conventions (DESIGN.md §5):
+    batch-like dims    -> ('pod', 'data')   [whichever exist in the mesh]
+    head / ffn / vocab -> 'model'           [TP; heads are HPLB-permuted]
+    experts            -> 'model'           [EP]
+    cache seq (decode) -> 'model' fallback when kv heads don't divide,
+                          'data' for long-context (sequence parallelism)
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import numpy as np
+import jax
+from jax.sharding import PartitionSpec as P
+
+# (path regex, rank) -> logical spec builder.  Checked in order.
+# Paths are '/'-joined key names, e.g. "layers/attn/wq" or "layers/[3]/mlp/gate".
+_PARAM_RULES: list[tuple[str, dict[int, tuple]]] = [
+    # attention projections
+    (r".*(wq|wk|wv)$",        {2: (None, "model"), 3: (None, None, "model")}),
+    (r".*wo$",                {2: ("model", None), 3: (None, "model", None)}),
+    # MoE expert weights [E, d, f] / [E, f, d] (+stacked [L, E, ...])
+    (r".*moe/(gate|up|down)$", {3: ("model", None, None),
+                                4: (None, "model", None, None)}),
+    (r".*router$",            {2: (None, None), 3: (None, None, None)}),
+    # dense MLP
+    (r".*(gate|up)$",         {2: (None, "model"), 3: (None, None, "model")}),
+    (r".*down$",              {2: ("model", None), 3: (None, "model", None)}),
+    # mamba2 projections: d_inner / heads over model
+    (r".*(wx|wz|wdt)$",       {2: (None, "model"), 3: (None, None, "model")}),
+    (r".*(wB|wC)$",           {2: (None, None), 3: (None, None, None)}),
+    (r".*out_proj$",          {2: ("model", None), 3: (None, "model", None)}),
+    # rglru recurrent block
+    (r".*(in_x|in_gate)$",    {2: (None, "model")}),
+    (r".*mix/out$",           {2: ("model", None)}),
+    (r".*conv$",              {2: (None, "model")}),
+    (r".*(lam|wa)$",          {1: ("model",)}),
+    # embeddings / heads
+    (r".*embed$",             {2: ("model", None)}),
+    (r".*lm_head$",           {2: (None, "model")}),
+    (r".*pos_(enc|dec)$",     {2: (None, None)}),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"[{p.idx}]")
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _mesh_sizes(mesh) -> dict[str, int]:
+    # works for both Mesh and AbstractMesh
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def _resolve(logical: tuple, shape: tuple, sizes: dict[str, int],
+             batch_axes: tuple[str, ...]) -> P:
+    """Logical -> physical spec with divisibility sanitation."""
+    out = []
+    for ax, dim in zip(logical, shape):
+        if ax is None:
+            out.append(None)
+            continue
+        if ax == "batch":
+            phys = tuple(a for a in batch_axes if a in sizes)
+            total = int(np.prod([sizes[a] for a in phys])) if phys else 1
+            if phys and dim % total == 0:
+                out.append(phys if len(phys) > 1 else phys[0])
+            else:
+                # try partial (drop pod first)
+                phys2 = tuple(a for a in phys if a != "pod")
+                if phys2 and dim % np.prod([sizes[a] for a in phys2]) == 0:
+                    out.append(phys2 if len(phys2) > 1 else phys2[0])
+                else:
+                    out.append(None)
+            continue
+        size = sizes.get(ax)
+        if size is None or dim % size != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def param_specs(params_shape, mesh) -> Any:
+    """Pytree of PartitionSpec matching an (abstract) param tree."""
+    sizes = _mesh_sizes(mesh)
+    batch_axes = ("pod", "data")
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        rank = len(leaf.shape)
+        for pat, by_rank in _PARAM_RULES:
+            if re.match(pat, ps) and rank in by_rank:
+                return _resolve(by_rank[rank], leaf.shape, sizes, batch_axes)
+        return P()  # replicate (norms, scalars, biases)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def batch_specs(batch_shape, mesh) -> Any:
+    """Inputs: leading dim batch-sharded, rest replicated."""
+    sizes = _mesh_sizes(mesh)
+
+    def leaf_spec(path, leaf):
+        logical = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return _resolve(logical, leaf.shape, sizes, ("pod", "data"))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_shape)
+
+
+def cache_specs(cache_shape, mesh, *, long_context: bool = False) -> Any:
+    """KV cache / decode state specs.
+
+    Transformer cache [L, 2, B, Hkv, Smax, Dh]: batch over ('pod','data'),
+    then 'model' on the kv-head dim when divisible, else on the seq dim
+    (sequence-parallel cache — the long_500k path, where batch=1 also stops
+    using the data axis, so 'data' joins the seq shard).
+    """
+    sizes = _mesh_sizes(mesh)
+    data_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    data_total = int(np.prod([sizes[a] for a in data_axes])) if data_axes \
+        else 1
+    model = sizes.get("model", 1)
+
+    def _axes_entry(axes: tuple[str, ...]):
+        return axes[0] if len(axes) == 1 else axes
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        rank = len(shape)
+        if rank >= 5:  # [L?, 2?, B, Hkv, S, Dh]-like KV cache
+            b_idx, h_idx, s_idx = rank - 4, rank - 3, rank - 2
+            spec = [None] * rank
+            seq_axes: list[str] = []
+            # batch over data axes when it divides; otherwise (long_500k
+            # B=1) the data axes move to the sequence dim (context/SP shard)
+            if data_axes and shape[b_idx] % data_total == 0:
+                spec[b_idx] = _axes_entry(data_axes)
+            else:
+                seq_axes.extend(data_axes)
+            # model axis: kv heads when divisible, else joins the seq shard
+            if model > 1 and shape[h_idx] % model == 0:
+                spec[h_idx] = "model"
+            elif model > 1:
+                seq_axes.append("model")
+            if seq_axes:
+                total = int(np.prod([sizes[a] for a in seq_axes]))
+                if shape[s_idx] % total == 0:
+                    spec[s_idx] = _axes_entry(tuple(seq_axes))
+            return P(*spec)
+        if rank >= 2:
+            # small states: rglru h [B, w] / conv [B, K-1, w],
+            # mamba state [L, B, H, N, P]
+            spec = [None] * rank
+            if rank >= 4:
+                b_idx, h_idx = rank - 4, rank - 3
+            else:
+                b_idx, h_idx = 0, rank - 1
+            if data_axes and shape[b_idx] % data_total == 0:
+                spec[b_idx] = _axes_entry(data_axes)
+            if model > 1 and shape[h_idx] % model == 0:
+                spec[h_idx] = "model"
+            return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+
+def opt_specs(opt_shape, params_spec) -> Any:
+    """Optimizer state mirrors param shardings; scalars replicated."""
+    return {
+        "m": params_spec,
+        "v": params_spec,
+        "step": P(),
+    }

@@ -1,0 +1,6 @@
+"""Training substrate: optimizer, train-step factory, checkpointing,
+gradient compression."""
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state, lr_at
+from repro.training.train_step import TrainConfig, make_train_state, make_train_step
+from repro.training.checkpoint import CheckpointManager
+from repro.training.compression import compress_decompress, quantize_int8

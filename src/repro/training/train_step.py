@@ -1,0 +1,96 @@
+"""Train-step factory: loss + grad + AdamW, with microbatch accumulation,
+remat policies, and optional int8 gradient compression.
+
+The returned ``train_step(state, batch) -> (state, metrics)`` is a pure
+function ready for ``jax.jit`` under a mesh (GSPMD handles DP/TP; the
+gradient all-reduce over the data/pod axes is inserted by XLA from the
+shardings).  Distributed-optimization hooks:
+
+- ``microbatches > 1``: sequential accumulation (lax.scan) — memory for
+  long-seq training;
+- ``remat``: "none" | "full" — activation checkpointing per layer;
+- ``compress_grads``: int8 quantization with error feedback applied to the
+  gradient BEFORE the (XLA-inserted) all-reduce, emulating compressed
+  data-parallel all-reduce (see ``repro.training.compression``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.compression import compress_decompress
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    remat: str = "none"              # "none" | "full"
+    compress_grads: bool = False
+
+
+def make_train_state(rng, init_params_fn, train_cfg: TrainConfig):
+    params = init_params_fn(rng)
+    state = {
+        "params": params,
+        "opt": init_opt_state(params),
+    }
+    if train_cfg.compress_grads:
+        state["err"] = jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return state
+
+
+def make_train_step(
+    loss_fn: Callable,           # loss_fn(params, batch, *, remat) -> scalar
+    train_cfg: TrainConfig,
+):
+    remat = train_cfg.remat != "none"
+
+    def compute_grads(params, batch):
+        if train_cfg.microbatches <= 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, remat=remat))(params)
+            return loss, grads
+
+        mb = train_cfg.microbatches
+
+        def slice_mb(x, i):
+            bsz = x.shape[0] // mb
+            return jax.lax.dynamic_slice_in_dim(x, i * bsz, bsz, axis=0)
+
+        def body(carry, i):
+            loss_acc, grad_acc = carry
+            micro = jax.tree.map(lambda x: slice_mb(x, i), batch)
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, micro, remat=remat))(params)
+            grad_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+            return (loss_acc + loss, grad_acc), None
+
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero_grads),
+            jnp.arange(mb))
+        inv = 1.0 / mb
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grad_sum)
+
+    def train_step(state, batch):
+        loss, grads = compute_grads(state["params"], batch)
+        new_err = None
+        if train_cfg.compress_grads:
+            grads, new_err = compress_decompress(grads, state["err"])
+        params, opt, metrics = adamw_update(
+            state["params"], grads, state["opt"], train_cfg.optimizer)
+        new_state = {"params": params, "opt": opt}
+        if new_err is not None:
+            new_state["err"] = new_err
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,23 @@
+from repro.utils.trees import (
+    tree_bytes,
+    tree_count,
+    tree_summary,
+    tree_cast,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    global_norm,
+)
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_summary",
+    "tree_cast",
+    "tree_zeros_like",
+    "tree_add",
+    "tree_scale",
+    "global_norm",
+    "get_logger",
+]

@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the single
+real CPU device (the 512-device flag is dry-run-only).  Multi-device tests
+spawn subprocesses that set the flag before importing jax."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,127 @@
+"""Attention substrate: flash_scan modes, selection policies, masks."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.attention.masks as masks
+from repro.attention import (
+    antidiagonal_block_scores,
+    dense_attention,
+    flash_attention_ref,
+    quest_block_scores,
+    streaming_policy,
+    strided_policy,
+    topk_select,
+)
+from repro.attention.flash_scan import flash_scan_attention
+
+
+def _bqkv(B, H, Hkv, S, D, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (B, H, S, D)),
+            jax.random.normal(ks[1], (B, Hkv, S, D)),
+            jax.random.normal(ks[2], (B, Hkv, S, D)))
+
+
+class TestFlashScan:
+    @pytest.mark.parametrize("S", [128, 200, 384])
+    @pytest.mark.parametrize("G", [1, 2])
+    def test_causal(self, S, G):
+        q, k, v = _bqkv(2, 2 * G, 2, S, 32)
+        o = flash_scan_attention(q, k, v, causal=True)
+        r = dense_attention(q, k, v, mask=masks.causal_mask(S)[None, None])
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+    @pytest.mark.parametrize("w", [64, 150, 1000])
+    def test_window(self, w):
+        q, k, v = _bqkv(1, 4, 2, 384, 32)
+        o = flash_scan_attention(q, k, v, causal=True, window=w)
+        m = masks.sliding_window_mask(384, window=w)
+        r = dense_attention(q, k, v, mask=m[None, None])
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+    def test_cross(self):
+        q, k, v = _bqkv(1, 2, 2, 256, 32)
+        q = q[:, :, :128]
+        o = flash_scan_attention(q, k, v, causal=False)
+        r = dense_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+    def test_differentiable(self):
+        q, k, v = _bqkv(1, 2, 2, 256, 32)
+        g = jax.grad(lambda q: flash_scan_attention(
+            q, k, v, causal=True).sum())(q)
+        assert bool(jnp.isfinite(g).all())
+
+
+class TestPolicies:
+    @settings(max_examples=25, deadline=None)
+    @given(nb=st.integers(1, 10), nq=st.integers(1, 12),
+           head=st.integers(0, 7))
+    def test_streaming_properties(self, nb, nq, head):
+        sels = streaming_policy(head, nb, nq, nq)
+        for qb, sel in enumerate(sels):
+            assert len(sel) <= nb or len(sel) <= qb + 1
+            assert (sel <= qb).all()           # causal
+            assert (sel >= 0).all()
+            assert len(np.unique(sel)) == len(sel)
+            assert 0 in sel                    # sink kept
+            if nb >= 2 or qb == 0:             # budget 1 keeps sink only
+                assert qb in sel               # local kept
+
+    @settings(max_examples=25, deadline=None)
+    @given(nb=st.integers(1, 10), nq=st.integers(1, 12),
+           head=st.integers(0, 7))
+    def test_strided_properties(self, nb, nq, head):
+        sels = strided_policy(head, nb, nq, nq)
+        for qb, sel in enumerate(sels):
+            assert len(sel) == min(nb, qb + 1)  # uses full budget
+            assert (sel <= qb).all()
+            assert len(np.unique(sel)) == len(sel)
+
+    def test_topk_select_budget_and_causality(self):
+        H, nq = 4, 8
+        scores = np.random.default_rng(0).standard_normal((H, nq, nq))
+        budgets = np.array([1, 2, 3, 8])
+        sels = topk_select(scores, budgets)
+        for h in range(H):
+            for qb in range(nq):
+                assert len(sels[h][qb]) == min(budgets[h], qb + 1)
+                assert (sels[h][qb] <= qb).all()
+                assert 0 in sels[h][qb]
+                if budgets[h] >= 2 or qb == 0:  # budget 1 keeps sink only
+                    assert qb in sels[h][qb]
+
+    def test_quest_scores_find_planted_block(self):
+        """A kv block with keys aligned to the query scores highest."""
+        H, S, D = 2, 512, 64
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.standard_normal((H, S, D)).astype(np.float32))
+        k = rng.standard_normal((1, S, D)).astype(np.float32) * 0.1
+        k[0, 256:384] = np.asarray(q[0, -1]) * 0.5  # plant block 2
+        scores = quest_block_scores(q, jnp.asarray(k), 128)
+        assert int(jnp.argmax(scores[0, -1, :4])) == 2
+
+    def test_antidiagonal_scores_shape(self):
+        q, k, _ = _bqkv(1, 4, 2, 512, 64)
+        s = antidiagonal_block_scores(q[0], k[0], 128)
+        assert s.shape == (4, 4, 4)
+        assert bool(jnp.isfinite(s).all())
+
+
+class TestMasks:
+    def test_streaming_mask_matches_policy(self):
+        m = masks.streaming_mask(8, sink=2, recent=3)
+        m = np.asarray(m)
+        assert m[7, 0] and m[7, 1]       # sinks
+        assert m[7, 5] and m[7, 6] and m[7, 7]  # recents
+        assert not m[7, 3]
+        assert not m[2, 3]               # causal
+
+    def test_block_mask_expand_causal(self):
+        bm = np.ones((2, 2), bool)
+        tok = masks.expand_block_mask(bm, 4, 8, 8)
+        assert tok[0, 0] and not tok[0, 1]
+        assert tok.shape == (8, 8)

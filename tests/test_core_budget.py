@@ -1,0 +1,122 @@
+"""Budget allocation: paper's max-min greedy vs exact oracle + invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.budget import (
+    maxmin_allocation,
+    topp_allocation,
+    uniform_allocation,
+    waterfill_allocation,
+)
+from repro.core.sparsity import synthetic_head_curves
+
+SEQ = 8192
+BLOCK = 128
+
+
+def _prof(heads=16, seed=0):
+    return synthetic_head_curves(1, heads, seed=seed)
+
+
+class TestUniform:
+    def test_equal_budgets(self):
+        a = uniform_allocation(_prof(), layer=0, k=1024, seq_len=SEQ)
+        assert (a.budgets == a.budgets[0]).all()
+        assert a.budgets[0] == 1024
+
+    def test_quantization_and_floor(self):
+        a = uniform_allocation(_prof(), layer=0, k=100, seq_len=SEQ)
+        assert (a.budgets == 128).all()  # floored to one block
+
+
+class TestMaxMin:
+    def test_conserves_total(self):
+        total = 16 * 1024
+        a = maxmin_allocation(_prof(), layer=0, total=total, seq_len=SEQ)
+        assert abs(a.total - total) < BLOCK * 2
+
+    def test_improves_min_recovery_over_uniform(self):
+        total = 16 * 1024
+        u = uniform_allocation(_prof(), layer=0, k=1024, seq_len=SEQ)
+        m = maxmin_allocation(_prof(), layer=0, total=total, seq_len=SEQ)
+        assert m.min_recovery >= u.min_recovery - 1e-9
+
+    def test_respects_floor(self):
+        a = maxmin_allocation(_prof(), layer=0, total=16 * 256, seq_len=SEQ)
+        assert (a.budgets >= 128).all()
+
+    def test_block_quantized(self):
+        a = maxmin_allocation(_prof(), layer=0, total=16 * 1000, seq_len=SEQ)
+        assert (a.budgets % BLOCK == 0).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 100), heads=st.sampled_from([4, 8, 9, 16]),
+           k=st.sampled_from([256, 512, 2048]))
+    def test_greedy_near_waterfill_oracle(self, seed, heads, k):
+        """Property: the paper's greedy reaches the exact max-min optimum to
+        within (a little more than) one block quantum of recovery."""
+        prof = synthetic_head_curves(1, heads, seed=seed)
+        total = heads * k
+        g = maxmin_allocation(prof, layer=0, total=total, seq_len=SEQ)
+        w = waterfill_allocation(prof, layer=0, total=total, seq_len=SEQ)
+        assert w.min_recovery >= g.min_recovery - 0.05
+        assert g.min_recovery >= w.min_recovery - 0.05
+
+
+class TestTopP:
+    def test_budgets_hit_target_recovery(self):
+        a = topp_allocation(_prof(), layer=0, p=0.9, seq_len=SEQ)
+        # every non-saturated head reaches >= p recovery
+        assert (a.recovery >= 0.9 - 0.02).all()
+
+    def test_total_varies_with_p(self):
+        lo = topp_allocation(_prof(), layer=0, p=0.5, seq_len=SEQ)
+        hi = topp_allocation(_prof(), layer=0, p=0.95, seq_len=SEQ)
+        assert hi.total > lo.total
+
+
+class TestProfile:
+    def test_recovery_curves_monotone(self):
+        p = _prof()
+        assert (np.diff(p.curves, axis=-1) >= -1e-12).all()
+
+    def test_stability_across_seeds(self):
+        """Paper Fig. 6: per-head budgets correlate strongly across
+        calibration sets (different seeds = different datasets)."""
+        a, b = _prof(seed=0), _prof(seed=5)
+        assert a.stability_vs(b) > 0.95
+
+    def test_heterogeneity_exists(self):
+        p = _prof()
+        assert p.heterogeneity(0, target=0.9) > 2.0  # paper Fig. 4
+
+    def test_serialization_roundtrip(self, tmp_path):
+        p = _prof()
+        path = str(tmp_path / "prof.npz")
+        p.save(path)
+        from repro.core.sparsity import HeadSparsityProfile
+        q = HeadSparsityProfile.load(path)
+        np.testing.assert_allclose(p.curves, q.curves)
+        np.testing.assert_allclose(p.grid, q.grid)
+
+
+class TestRecoveryCurve:
+    def test_uniform_attention(self):
+        """Uniform weights: top-k fraction f recovers exactly f."""
+        from repro.core.sparsity import recovery_curve
+        n = 256
+        w = np.tril(np.ones((n, n))) / np.arange(1, n + 1)[:, None]
+        grid = np.array([0.0, 0.25, 0.5, 1.0])
+        rec = recovery_curve(w, grid)
+        assert rec[-1] == pytest.approx(1.0, abs=1e-9)
+        assert rec[1] == pytest.approx(0.25, abs=0.05)
+
+    def test_delta_attention(self):
+        """All mass on one token: any nonzero budget recovers ~1."""
+        from repro.core.sparsity import recovery_curve
+        n = 128
+        w = np.zeros((n, n))
+        w[np.arange(n), 0] = 1.0
+        rec = recovery_curve(w, np.array([0.01, 0.5, 1.0]))
+        assert rec[0] == pytest.approx(1.0, abs=1e-9)

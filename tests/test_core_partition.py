@@ -1,0 +1,77 @@
+"""Multiway partitioning: LPT (paper) vs KK vs exact DP oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (
+    best_partition,
+    dp_partition,
+    kk_partition,
+    lpt_partition,
+    naive_partition,
+    refine_partition,
+)
+
+weights_strategy = st.lists(st.integers(1, 50), min_size=4, max_size=10)
+
+
+class TestInvariants:
+    @settings(max_examples=50, deadline=None)
+    @given(w=weights_strategy, d=st.integers(2, 4))
+    def test_every_item_assigned_once(self, w, d):
+        for fn in (naive_partition, lpt_partition, kk_partition):
+            a = fn(w, d)
+            assert len(a.device_of) == len(w)
+            assert ((a.device_of >= 0) & (a.device_of < d)).all()
+            # loads consistent with assignment
+            loads = np.zeros(d, np.int64)
+            np.add.at(loads, a.device_of, np.asarray(w))
+            np.testing.assert_array_equal(loads, a.loads)
+
+    @settings(max_examples=50, deadline=None)
+    @given(w=weights_strategy, d=st.integers(2, 3))
+    def test_lpt_matches_dp_bound(self, w, d):
+        """LPT is a (4/3 - 1/3m)-approximation of the exact optimum."""
+        opt = dp_partition(w, d).makespan
+        lpt = lpt_partition(w, d).makespan
+        assert lpt <= opt * (4 / 3) + 1
+
+    @settings(max_examples=50, deadline=None)
+    @given(w=weights_strategy, d=st.integers(2, 3))
+    def test_refinement_never_hurts(self, w, d):
+        base = lpt_partition(w, d)
+        ref = refine_partition(w, base)
+        assert ref.makespan <= base.makespan
+
+    @settings(max_examples=50, deadline=None)
+    @given(w=weights_strategy, d=st.integers(2, 3))
+    def test_best_beats_components(self, w, d):
+        b = best_partition(w, d)
+        assert b.makespan <= lpt_partition(w, d).makespan
+        assert b.makespan >= dp_partition(w, d).makespan  # oracle lower bound
+
+
+class TestPaperScenario:
+    def test_lpt_beats_naive_on_heterogeneous_budgets(self):
+        """Paper Fig. 8: naive contiguous HP on heterogeneous budgets is
+        imbalanced; LPT fixes it."""
+        rng = np.random.default_rng(0)
+        w = np.sort(rng.integers(128, 4096, size=32))[::-1]  # sorted = worst
+        naive = naive_partition(w, 4, mode="contiguous")
+        lpt = lpt_partition(w, 4)
+        assert naive.imbalance > 1.5       # imbalance like the paper's 2.78x
+        assert lpt.imbalance < 1.1
+        assert lpt.makespan < naive.makespan
+
+    def test_imbalance_definition(self):
+        a = naive_partition([4, 4, 4, 4], 2, mode="round_robin")
+        assert a.imbalance == pytest.approx(1.0)
+
+    def test_kk_beats_lpt_sometimes(self):
+        # classic LPT-adversarial instance
+        w = [5, 5, 4, 4, 3, 3, 3]
+        assert kk_partition(w, 2).makespan <= lpt_partition(w, 2).makespan
+
+    def test_dp_exact_small(self):
+        assert dp_partition([5, 4, 3, 3, 3], 2).makespan == 9
+        assert dp_partition([10, 9, 8, 7, 6, 5], 3).makespan == 15

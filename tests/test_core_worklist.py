@@ -1,0 +1,144 @@
+"""Work-list construction invariants (the SPMD execution contract)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.attention.policies import streaming_policy, strided_policy
+from repro.core.worklist import (
+    F_FIRST,
+    F_HEAD,
+    F_KVBLK,
+    F_LAST,
+    F_QBLK,
+    F_VALID,
+    WorkList,
+    build_row_worklist,
+    build_worklist,
+    worklist_from_budgets,
+)
+
+
+def _check_contract(wl: WorkList):
+    """The kernel's correctness contract:
+    - items of one (head, q_blk) are contiguous and ascending in kv_blk,
+    - each run starts with first=1 and ends with last=1,
+    - padding rows have valid=0 and replicate the last real row's indices.
+    """
+    for d in range(wl.num_devices):
+        items = wl.items[d]
+        n = int(wl.lengths[d])
+        run_key = None
+        prev_kv = -1
+        for i in range(n):
+            row = items[i]
+            assert row[F_VALID] == 1
+            key = (row[F_HEAD], row[F_QBLK])
+            if key != run_key:
+                assert row[F_FIRST] == 1, f"run start missing first @ {i}"
+                if i > 0:
+                    assert items[i - 1][F_LAST] == 1
+                run_key = key
+                prev_kv = -1
+            else:
+                assert row[F_FIRST] == 0
+            assert row[F_KVBLK] > prev_kv, "kv blocks must ascend in a run"
+            prev_kv = row[F_KVBLK]
+            # causality (block level)
+            assert row[F_KVBLK] <= row[F_QBLK]
+        if n > 0:
+            assert items[n - 1][F_LAST] == 1
+        for i in range(n, wl.padded_length):
+            assert items[i][F_VALID] == 0
+            if n > 0:
+                assert items[i][F_HEAD] == items[n - 1][F_HEAD]
+                assert items[i][F_QBLK] == items[n - 1][F_QBLK]
+        # runs never revisit a (head, q_blk)
+        keys = [tuple(r[[F_HEAD, F_QBLK]]) for r in items[:n]]
+        seen = set()
+        last = None
+        for k in keys:
+            if k != last:
+                assert k not in seen, "revisited (head, q_blk) run"
+                seen.add(k)
+                last = k
+
+
+class TestBuildWorklist:
+    @settings(max_examples=20, deadline=None)
+    @given(h=st.sampled_from([2, 4, 8]), d=st.sampled_from([1, 2]),
+           nb=st.integers(1, 6), seed=st.integers(0, 20))
+    def test_contract_streaming(self, h, d, nb, seed):
+        nq = 8
+        budgets = np.full(h, nb * 128)
+        wl = worklist_from_budgets(
+            budgets, num_devices=d, seq_len=nq * 128, block=128,
+            policy_fn=streaming_policy)
+        _check_contract(wl)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 50))
+    def test_contract_heterogeneous(self, seed):
+        rng = np.random.default_rng(seed)
+        budgets = rng.integers(1, 8, size=8) * 128
+        wl = worklist_from_budgets(
+            budgets, num_devices=2, seq_len=1024, block=128,
+            policy_fn=strided_policy, group_size=2)
+        _check_contract(wl)
+
+    def test_padding_waste_balanced_vs_not(self):
+        """Balanced budgets across devices waste less than skewed ones —
+        the quantity S-HPLB minimizes."""
+        bal = worklist_from_budgets(
+            np.array([512, 512, 512, 512]), num_devices=2, seq_len=1024,
+            block=128, policy_fn=streaming_policy)
+        skew = worklist_from_budgets(
+            np.array([1024, 1024, 128, 128]), num_devices=2, seq_len=1024,
+            block=128, policy_fn=streaming_policy)
+        assert bal.padding_waste <= skew.padding_waste
+
+    def test_all_selections_covered(self):
+        """Every selected (head, qb, kb) appears exactly once."""
+        nq = 6
+        sels = [strided_policy(h, 3, nq, nq) for h in range(4)]
+        wl = build_worklist(sels, np.array([0, 0, 1, 1]), 2, nq, nq, 128)
+        got = set()
+        for d in range(2):
+            for i in range(int(wl.lengths[d])):
+                r = wl.items[d, i]
+                # reconstruct global head: device d, local head
+                got.add((d, r[F_HEAD], r[F_QBLK], r[F_KVBLK]))
+        want = set()
+        for h in range(4):
+            dev, loc = divmod(h, 2)
+            for qb in range(nq):
+                for kb in sels[h][qb]:
+                    want.add((dev, loc, qb, int(kb)))
+        assert got == want
+
+
+class TestRowWorklist:
+    @settings(max_examples=10, deadline=None)
+    @given(h=st.sampled_from([3, 4, 5]), d=st.sampled_from([4, 8]))
+    def test_contract_and_coverage(self, h, d):
+        nq = 8
+        sels = [streaming_policy(i, 2 + i % 3, nq, nq) for i in range(h)]
+        wl = build_row_worklist(sels, num_devices=d, num_q_blocks=nq,
+                                num_kv_blocks=nq, block=128)
+        _check_contract(wl)
+        got = set()
+        for dd in range(d):
+            for i in range(int(wl.lengths[dd])):
+                r = wl.items[dd, i]
+                got.add((int(r[F_HEAD]), int(r[F_QBLK]), int(r[F_KVBLK])))
+        want = {(hh, qb, int(kb)) for hh in range(h) for qb in range(nq)
+                for kb in sels[hh][qb]}
+        assert got == want
+
+    def test_row_mode_balances_better_than_head_mode_possible(self):
+        """With 3 heads on 4 devices head-mode is impossible; row mode
+        distributes rows with low imbalance."""
+        nq = 16
+        sels = [streaming_policy(i, 4, nq, nq) for i in range(3)]
+        wl = build_row_worklist(sels, num_devices=4, num_q_blocks=nq,
+                                num_kv_blocks=nq, block=128)
+        assert wl.imbalance < 1.3

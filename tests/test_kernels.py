@@ -1,0 +1,134 @@
+"""Per-kernel allclose vs the pure-jnp oracles: shape/dtype sweeps
+(interpret=True executes the kernel bodies on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.attention.policies import streaming_policy, strided_policy
+from repro.core.worklist import build_worklist
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.ref import (
+    flash_attention_oracle,
+    sparse_decode_oracle,
+    sparse_prefill_oracle,
+)
+from repro.kernels.sparse_decode import build_decode_worklist
+from repro.kernels.ops import sparse_decode, sparse_prefill
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _qkv(H, Hkv, Sq, Skv, D, dtype, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (H, Sq, D), dtype)
+    k = jax.random.normal(k2, (Hkv, Skv, D), dtype)
+    v = jax.random.normal(k3, (Hkv, Skv, D), dtype)
+    return q, k, v
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("H,Hkv,S,D", [
+        (4, 4, 256, 64),     # MHA
+        (4, 2, 256, 64),     # GQA
+        (8, 1, 128, 128),    # MQA, aligned head dim
+        (2, 2, 384, 32),     # odd-ish dims
+        (3, 1, 200, 48),     # ragged seq + unaligned dims
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_vs_oracle(self, H, Hkv, S, D, dtype, causal):
+        q, k, v = _qkv(H, Hkv, S, S, D, dtype)
+        out = flash_attention(q, k, v, causal=causal, interpret=True)
+        ref = flash_attention_oracle(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=TOL[dtype], rtol=TOL[dtype])
+
+    def test_cross_attention_shapes(self):
+        q, k, v = _qkv(2, 2, 128, 320, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=False, interpret=True)
+        ref = flash_attention_oracle(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestSparsePrefill:
+    @pytest.mark.parametrize("H,Hkv,S,D,policy", [
+        (4, 2, 512, 64, strided_policy),
+        (4, 4, 384, 64, streaming_policy),
+        (8, 2, 512, 128, strided_policy),
+        (2, 1, 256, 32, streaming_policy),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_oracle(self, H, Hkv, S, D, policy, dtype):
+        q, k, v = _qkv(H, Hkv, S, S, D, dtype)
+        nq = -(-S // 128)
+        rng = np.random.default_rng(0)
+        nbs = rng.integers(1, nq + 1, size=H)
+        sels = [policy(h, int(nbs[h]), nq, nq) for h in range(H)]
+        wl = build_worklist(sels, np.zeros(H, np.int64), 1, nq, nq, 128,
+                            kv_head_of_head=np.arange(H) // (H // Hkv))
+        out = sparse_prefill(q, k, v, wl.items[0], interpret=True)
+        ref = sparse_prefill_oracle(q, k, v, wl.items[0])
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=TOL[dtype], rtol=TOL[dtype])
+
+    def test_full_budget_equals_dense(self):
+        """All blocks selected == dense causal flash."""
+        q, k, v = _qkv(4, 2, 256, 256, 64, jnp.float32)
+        nq = 2
+        sels = [[np.arange(qb + 1) for qb in range(nq)] for _ in range(4)]
+        wl = build_worklist(sels, np.zeros(4, np.int64), 1, nq, nq, 128,
+                            kv_head_of_head=np.arange(4) // 2)
+        out = sparse_prefill(q, k, v, wl.items[0], interpret=True)
+        ref = flash_attention_oracle(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestSparseDecode:
+    @pytest.mark.parametrize("B,Hkv,G,Smax,D", [
+        (2, 2, 4, 512, 64),
+        (1, 4, 1, 384, 128),
+        (3, 1, 8, 256, 32),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_oracle(self, B, Hkv, G, Smax, D, dtype):
+        keys = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(keys[0], (B, Hkv, G, D), dtype)
+        kc = jax.random.normal(keys[1], (B, Hkv, Smax, D), dtype)
+        vc = jax.random.normal(keys[2], (B, Hkv, Smax, D), dtype)
+        nkv = Smax // 128
+        rng = np.random.default_rng(2)
+        sels = [[np.sort(rng.choice(nkv, size=int(rng.integers(1, nkv + 1)),
+                                    replace=False))
+                 for _ in range(Hkv)] for _ in range(B)]
+        wl = build_decode_worklist(sels, num_devices=1,
+                                   kv_heads_per_device=Hkv, block=128)
+        cache_len = Smax - 60
+        out = sparse_decode(q, kc, vc, wl.items[0], cache_len=cache_len,
+                            interpret=True)
+        ref = sparse_decode_oracle(q, kc, vc, wl.items[0],
+                                   cache_len=cache_len)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=TOL[dtype], rtol=TOL[dtype])
+
+
+class TestWorklistJnpMatchesKernel:
+    """The pure-jnp work-list executor and the Pallas kernel implement the
+    same contract — used interchangeably (models on CPU / kernels on TPU)."""
+
+    def test_same_outputs(self):
+        from repro.attention.worklist_jnp import worklist_attention
+        q, k, v = _qkv(4, 2, 384, 384, 64, jnp.float32)
+        nq = 3
+        sels = [strided_policy(h, 2, nq, nq) for h in range(4)]
+        wl = build_worklist(sels, np.zeros(4, np.int64), 1, nq, nq, 128,
+                            kv_head_of_head=np.arange(4) // 2)
+        a = sparse_prefill(q, k, v, wl.items[0], interpret=True)
+        b = worklist_attention(q, k, v, jnp.asarray(wl.items[0]))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-6, rtol=2e-6)

@@ -1,0 +1,136 @@
+"""Serving: engine fidelity, continuous batching, cache bookkeeping,
+sampler."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.sparsity import synthetic_head_curves
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.kv_cache import BlockAllocator
+from repro.serving.sampler import sample
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+CFG = TransformerConfig(num_layers=2, d_model=64, num_heads=4,
+                        num_kv_heads=2, d_ff=128, vocab_size=256,
+                        layer_loop="unroll")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return synthetic_head_curves(CFG.num_layers, CFG.num_heads)
+
+
+class TestEngineFidelity:
+    def test_sparse_full_budget_matches_dense(self, params, profile):
+        """Budget = seq_len => S-HPLB sparse serving reproduces the dense
+        engine's greedy outputs exactly (permutation is a no-op on the
+        function; work-lists cover the full causal set)."""
+        prompts = [np.random.default_rng(i).integers(0, 256, size=(40,))
+                   for i in range(3)]
+        dense = Engine(CFG, params,
+                       EngineConfig(attention="dense", max_seq_len=256,
+                                    num_slots=4))
+        sparse = Engine(CFG, params,
+                        EngineConfig(attention="sparse",
+                                     budget_per_head=256,  # == max_seq_len
+                                     max_seq_len=256, num_slots=4),
+                        profile=profile)
+        sp = SamplingParams(max_tokens=8)  # greedy
+        da = dense.serve(prompts, sp)
+        sa = sparse.serve(prompts, sp)
+        for a, b in zip(da, sa):
+            assert a.generated == b.generated
+
+    def test_sparse_low_budget_still_generates(self, params, profile):
+        eng = Engine(CFG, params,
+                     EngineConfig(attention="sparse", budget_per_head=128,
+                                  max_seq_len=256, num_slots=2),
+                     profile=profile)
+        done = eng.serve([np.arange(50) % 256], SamplingParams(max_tokens=5))
+        assert len(done) == 1 and len(done[0].generated) == 5
+
+
+class TestScheduler:
+    def test_admission_respects_slots(self):
+        calls = {"prefill": 0, "decode": 0}
+
+        def prefill(toks, slot):
+            calls["prefill"] += 1
+            return 1
+
+        def decode(slots, toks, pos):
+            calls["decode"] += 1
+            return np.ones(len(slots), np.int32)
+
+        b = ContinuousBatcher(num_slots=2, num_blocks=64, max_seq_len=256)
+        for i in range(5):
+            b.submit(Request(rid=i, prompt=np.arange(10),
+                             sampling=SamplingParams(max_tokens=3)))
+        done = b.run(prefill, decode)
+        assert len(done) == 5
+        assert calls["prefill"] == 5
+        assert b.stats.completed == 5
+        assert not b.busy
+
+    def test_rejects_too_long(self):
+        b = ContinuousBatcher(num_slots=2, num_blocks=64, max_seq_len=64)
+        b.submit(Request(rid=0, prompt=np.arange(100),
+                         sampling=SamplingParams(max_tokens=10)))
+        done = b.run(lambda t, s: 0, lambda s, t, p: np.zeros(len(s)))
+        assert len(done) == 0 and not b.busy
+
+
+class TestBlockAllocator:
+    def test_alloc_free_cycle(self):
+        a = BlockAllocator(num_blocks=10, block=128)
+        a.allocate(1, 500)   # 4 blocks
+        a.allocate(2, 700)   # 6 blocks
+        assert a.free_blocks == 0
+        assert not a.can_allocate(1)
+        a.free(1)
+        assert a.free_blocks == 4
+        a.allocate(3, 512)
+        assert a.free_blocks == 0
+
+    def test_append_token_grows_at_boundary(self):
+        a = BlockAllocator(num_blocks=4, block=128)
+        a.allocate(1, 128)
+        assert len(a.table(1)) == 1
+        a.append_token(1, 128)  # crossing into block 2
+        assert len(a.table(1)) == 2
+        a.append_token(1, 129)  # no growth mid-block
+        assert len(a.table(1)) == 2
+
+    def test_exhaustion_raises(self):
+        a = BlockAllocator(num_blocks=2, block=128)
+        with pytest.raises(MemoryError):
+            a.allocate(1, 1000)
+
+
+class TestSampler:
+    def test_greedy_is_argmax(self):
+        logits = jnp.asarray([[1.0, 5.0, 2.0], [3.0, 0.0, 9.0]])
+        t = sample(logits, jax.random.PRNGKey(0),
+                   SamplingParams(temperature=0.0))
+        assert t.tolist() == [1, 2]
+
+    def test_topk_restricts_support(self):
+        logits = jnp.asarray([[0.0, 10.0, 9.0, -5.0]])
+        for seed in range(20):
+            t = sample(logits, jax.random.PRNGKey(seed),
+                       SamplingParams(temperature=1.0, top_k=2))
+            assert int(t[0]) in (1, 2)
+
+    def test_top_p_restricts_support(self):
+        logits = jnp.asarray([[10.0, 1.0, 0.5, 0.2]])
+        for seed in range(20):
+            t = sample(logits, jax.random.PRNGKey(seed),
+                       SamplingParams(temperature=1.0, top_p=0.5))
+            assert int(t[0]) == 0
