@@ -1,9 +1,10 @@
 """Benchmark driver — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME] [--smoke]
 
 Prints ``benchmark,metric,value`` CSV to stdout; JSON details land in
-``artifacts/bench/``.
+``artifacts/bench/``.  ``--smoke`` runs the fast CI subset (quick sizes,
+hot-path suites only) so PRs catch decode/prefill perf regressions.
 """
 from __future__ import annotations
 
@@ -25,19 +26,28 @@ SUITES = [
     ("lb_ablation", "paper Fig. 11"),
 ]
 
+# fast subset exercising the serving hot paths (CI perf smoke)
+SMOKE = ("load_balance", "latency_attention")
+
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced example counts (CI mode)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI perf smoke: --quick sizes, hot-path suites only")
     args = ap.parse_args()
+    if args.smoke:
+        args.quick = True
 
     os.makedirs(OUT, exist_ok=True)
     print("benchmark,metric,value")
     failures = 0
     for name, paper_ref in SUITES:
         if args.only and name != args.only:
+            continue
+        if args.smoke and not args.only and name not in SMOKE:
             continue
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()

@@ -3,8 +3,15 @@
 - ``flash_attn``     : dense flash attention (baseline).
 - ``sparse_prefill`` : work-list block-sparse flash (the S-HPLB mechanism).
 - ``sparse_decode``  : work-list budgeted decode against a KV cache.
+- ``flash_decode``   : fused budgeted flash-decode streaming selected
+                       blocks in place (zero-copy serving hot path).
 
 Use via ``repro.kernels.ops``; oracles in ``repro.kernels.ref``.
 """
 from repro.kernels import ops, ref
-from repro.kernels.ops import flash_attention, sparse_prefill, sparse_decode
+from repro.kernels.ops import (
+    flash_attention,
+    flash_decode,
+    sparse_prefill,
+    sparse_decode,
+)

@@ -1,0 +1,347 @@
+"""Fused budgeted flash-decode kernel (DESIGN.md §2.3).
+
+The serving decode hot path previously gathered each head's selected KV
+blocks into a dense ``[B, Hkv, nb*blk, D]`` buffer and ran a dense einsum
+over it — touching every selected byte TWICE (gather write + einsum read)
+and allocating a second cache-sized buffer.  Decode attention is memory
+bound, so that doubling erases the sparsity advantage the HPLB planner
+balanced for.  This kernel streams the selected blocks straight from the
+slot cache:
+
+    one work item = one (slot, kv_head, kv_block) matvec tile,
+    grid = (L,);  item metadata + per-slot positions ride in SMEM via
+    scalar prefetch;  BlockSpec index maps address the cache IN PLACE.
+
+Exactly ``budget_blocks x block_kv x D`` bytes of K/V move HBM->VMEM per
+(slot, kv head) — the roofline the paper claims.  GQA query heads are
+grouped so one K/V tile serves all ``G`` rows of its group; the online
+softmax carries ``(acc, m, l)`` across the contiguous items of one
+(slot, kv head) run.
+
+Work-item layout (int32, shared with ``sparse_decode`` / the HPLB decode
+work-lists so balanced per-device lists drop in unchanged):
+
+    [:, 0] slot (batch)   [:, 3] is_first   -> reset accumulator
+    [:, 1] kv_head        [:, 4] is_last    -> finalize + write
+    [:, 2] kv_block       [:, 5] valid      -> 0 = padding (skip compute)
+
+Positions are PER SLOT and dynamic (continuous batching: every slot sits at
+a different length): token ``kpos`` contributes iff ``kpos <= pos[slot]``.
+Because both the item table and ``pos`` are data (not trace constants),
+re-selecting blocks at block boundaries never recompiles.
+
+The kernel emits flash-decoding partials ``(out, m, l)`` so a sequence-
+sharded cache can merge shard-local results with the standard
+``exp(m - max m)`` rescale (``serving.sharded_attention``); single-shard
+callers just take ``out``.
+
+``flash_decode_reference`` is the pure-jnp twin for CPU: a ``lax.scan``
+over the block list with ``dynamic_slice`` — the same "no dense gather"
+access pattern, validated by jaxpr inspection in the tests and benchmark.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.sparse_decode import (
+    DEC_FIELDS,
+    D_BATCH,
+    D_FIRST,
+    D_KVBLK,
+    D_KVHEAD,
+    D_LAST,
+    D_VALID,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Work-item table from per-slot block ids (inside jit — ids are data)
+# ---------------------------------------------------------------------------
+
+def decode_items_from_ids(block_ids: jnp.ndarray) -> jnp.ndarray:
+    """``block_ids [B, Hkv, nb]`` (-1 pad, pads trailing) -> items
+    ``[B*Hkv*nb, DEC_FIELDS]``.
+
+    Fixed-stride layout: row ``(b, h, j)`` at index ``(b*Hkv + h)*nb + j``.
+    ``is_first``/``is_last`` are set at ``j == 0`` / ``j == nb-1``
+    UNCONDITIONALLY so every (slot, kv head) tile is initialized and
+    finalized even when its selection is empty (the finalize writes zeros /
+    ``m = NEG_INF`` / ``l = 0`` — the identity of the cross-shard merge).
+    All ops are jnp: the table is rebuilt on-device each step from the
+    runtime selection without recompiling.
+    """
+    B, hkv, nb = block_ids.shape
+    flat = block_ids.reshape(-1).astype(jnp.int32)
+    n = flat.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    j = idx % nb
+    bh = idx // nb
+    items = jnp.stack([
+        bh // hkv,                                   # D_BATCH
+        bh % hkv,                                    # D_KVHEAD
+        jnp.maximum(flat, 0),                        # D_KVBLK (clipped)
+        (j == 0).astype(jnp.int32),                  # D_FIRST
+        (j == nb - 1).astype(jnp.int32),             # D_LAST
+        (flat >= 0).astype(jnp.int32),               # D_VALID
+    ], axis=1)
+    return items
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _flash_decode_kernel(
+    items_ref, pos_ref,          # SMEM (scalar prefetch)
+    q_ref, k_ref, v_ref,         # VMEM tiles via index maps
+    o_ref, m_out_ref, l_out_ref,  # VMEM out tiles
+    acc_ref, m_ref, l_ref,       # VMEM scratch
+    *,
+    scale: float,
+    block_kv: int,
+    window: int | None,
+):
+    i = pl.program_id(0)
+    valid = items_ref[i, D_VALID] == 1
+    first = items_ref[i, D_FIRST] == 1
+    last = items_ref[i, D_LAST] == 1
+    kvblk = items_ref[i, D_KVBLK]
+    pos = pos_ref[items_ref[i, D_BATCH]]
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(valid)
+    def _compute():
+        qt = q_ref[0, 0].astype(jnp.float32)   # [G, d]
+        kt = k_ref[0, 0].astype(jnp.float32)   # [block_kv, d]
+        vt = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qt, kt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [G, block_kv]
+        kpos = kvblk * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = kpos <= pos
+        if window is not None:
+            mask &= kpos > pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(last)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)
+        out = jnp.where(l > 0.0, out, 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+        m_out_ref[0, 0] = jnp.broadcast_to(m_ref[...], m_out_ref.shape[2:])
+        l_out_ref[0, 0] = jnp.broadcast_to(l, l_out_ref.shape[2:])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_kv", "scale", "window", "interpret"),
+)
+def flash_decode_kernel(
+    q: jnp.ndarray,        # [B, Hkv, G, D]  (GQA-grouped query rows)
+    k_cache: jnp.ndarray,  # [B, Hkv, Smax, D]
+    v_cache: jnp.ndarray,
+    items: jnp.ndarray,    # [L, DEC_FIELDS] int32 work-item table
+    pos: jnp.ndarray,      # [B] int32 per-slot last position (inclusive)
+    *,
+    block_kv: int = 128,
+    scale: float | None = None,
+    window: int | None = None,
+    interpret: bool = False,
+):
+    """Execute a decode work-list against the slot cache in place.
+
+    Returns flash-decoding partials ``(out, m, l)``: ``out [B, Hkv, G, D]``
+    f32, normalized within this cache shard, ``m``/``l [B, Hkv, G]`` f32
+    softmax statistics for cross-shard merging.  Every (slot, kv head) must be
+    covered by a first..last item run (``decode_items_from_ids`` guarantees
+    it; HPLB work-lists cover every head by construction — the sink block).
+    """
+    B, hkv, G, dh = q.shape
+    smax = k_cache.shape[2]
+    scale_v = float(dh ** -0.5) if scale is None else float(scale)
+
+    pad_g = (-G) % 8        # sublane alignment
+    dh_pad = (-dh) % 128    # lane alignment
+    pad_s = (-smax) % block_kv
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_g), (0, dh_pad)))
+    kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad_s), (0, dh_pad)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad_s), (0, dh_pad)))
+    Gp, dp = G + pad_g, dh + dh_pad
+    L = items.shape[0]
+
+    kernel = functools.partial(
+        _flash_decode_kernel, scale=scale_v, block_kv=block_kv,
+        window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, 1, Gp, dp),
+                         lambda i, it, p: (it[i, D_BATCH],
+                                           it[i, D_KVHEAD], 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, dp),
+                         lambda i, it, p: (it[i, D_BATCH], it[i, D_KVHEAD],
+                                           it[i, D_KVBLK], 0)),
+            pl.BlockSpec((1, 1, block_kv, dp),
+                         lambda i, it, p: (it[i, D_BATCH], it[i, D_KVHEAD],
+                                           it[i, D_KVBLK], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Gp, dp),
+                         lambda i, it, p: (it[i, D_BATCH],
+                                           it[i, D_KVHEAD], 0, 0)),
+            pl.BlockSpec((1, 1, Gp, 128),
+                         lambda i, it, p: (it[i, D_BATCH],
+                                           it[i, D_KVHEAD], 0, 0)),
+            pl.BlockSpec((1, 1, Gp, 128),
+                         lambda i, it, p: (it[i, D_BATCH],
+                                           it[i, D_KVHEAD], 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Gp, dp), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            # f32 out: these are merge-able partials (see reference)
+            jax.ShapeDtypeStruct((B, hkv, Gp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((B, hkv, Gp, 128), jnp.float32),
+            jax.ShapeDtypeStruct((B, hkv, Gp, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(items, pos.astype(jnp.int32), qp, kp, vp)
+    return (out[:, :, :G, :dh], m[:, :, :G, 0], l[:, :, :G, 0])
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference executor (CPU serving path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("block_kv", "scale", "window"))
+def flash_decode_reference(
+    q: jnp.ndarray,          # [B, Hkv, G, D]
+    k_cache: jnp.ndarray,    # [B, Hkv, Smax, D]
+    v_cache: jnp.ndarray,
+    block_ids: jnp.ndarray,  # [B, Hkv, nb] int32, -1 pad
+    pos: jnp.ndarray,        # [B] int32 last position (inclusive)
+    *,
+    block_kv: int = 128,
+    scale: float | None = None,
+    window: int | None = None,
+):
+    """jnp twin of :func:`flash_decode_kernel` — identical contract and
+    returns, zero-copy access pattern (``lax.scan`` over the block list
+    with per-block ``dynamic_slice``; no ``[B, Hkv, nb*blk, D]`` gather
+    materializes in the jaxpr)."""
+    B, hkv, G, dh = q.shape
+    smax = k_cache.shape[2]
+    scale_v = float(dh ** -0.5) if scale is None else float(scale)
+    pad_s = (-smax) % block_kv
+    kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+
+    def one_head(qh, kh, vh, ids, p):
+        # qh [G, D]; kh/vh [Smax_pad, D]; ids [nb]; p scalar
+
+        def step(carry, blk_id):
+            acc, m, l = carry
+            ok = blk_id >= 0
+            safe = jnp.maximum(blk_id, 0)
+            kt = jax.lax.dynamic_slice(
+                kh, (safe * block_kv, 0), (block_kv, dh))
+            vt = jax.lax.dynamic_slice(
+                vh, (safe * block_kv, 0), (block_kv, dh))
+            # mixed-precision dots (f32 accumulate) WITHOUT an explicit
+            # tile convert: a convert-of-slice is loop-invariant-hoistable
+            # into a full-cache f32 copy, which would silently reintroduce
+            # the memory traffic this path exists to avoid.
+            s = jax.lax.dot_general(
+                qh, kt, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale_v  # [G, blk]
+            kpos = safe * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            mask = (kpos <= p) & ok
+            if window is not None:
+                mask &= kpos > p - window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+            pr = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
+            acc_new = acc * alpha + jax.lax.dot_general(
+                pr.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            acc = jnp.where(ok, acc_new, acc)
+            m = jnp.where(ok, m_new, m)
+            l = jnp.where(ok, l_new, l)
+            return (acc, m, l), None
+
+        acc0 = jnp.zeros((G, dh), jnp.float32)
+        m0 = jnp.full((G, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((G, 1), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), ids,
+                                      unroll=True)
+        out = acc / jnp.maximum(l, 1e-30)
+        out = jnp.where(l > 0.0, out, 0.0)
+        # out stays f32: cross-shard merges re-weight these partials, and a
+        # bf16 round-trip here would quantize every merged element.  The
+        # single-shard caller (ops.flash_decode) downcasts once at the end.
+        return out, m[:, 0], l[:, 0]
+
+    # vmap over kv heads then slots
+    per_head = jax.vmap(one_head, in_axes=(0, 0, 0, 0, None))
+    out, m, l = jax.vmap(per_head)(q.astype(k_cache.dtype), kp, vp,
+                                   block_ids.astype(jnp.int32),
+                                   pos.astype(jnp.int32))
+    return out, m, l
+
+
+def merge_partials(outs, ms, ls):
+    """Flash-decoding combine of per-shard partials along a leading axis.
+
+    ``outs [S, ..., D]`` shard-normalized outputs, ``ms``/``ls [S, ...]``.
+    Returns the exact global softmax output (used by tests; the shard_map
+    island does the same algebra with psum/pmax collectives).
+    """
+    gm = jnp.max(ms, axis=0)
+    w = jnp.exp(ms - gm[None]) * ls
+    num = jnp.sum(outs.astype(jnp.float32) * w[..., None], axis=0)
+    den = jnp.maximum(jnp.sum(w, axis=0), 1e-30)
+    return (num / den[..., None]).astype(outs.dtype)
+
+
+__all__ = [
+    "decode_items_from_ids",
+    "flash_decode_kernel",
+    "flash_decode_reference",
+    "merge_partials",
+]

@@ -11,6 +11,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attn import flash_attention as _flash
+from repro.kernels.flash_decode import (
+    decode_items_from_ids,
+    flash_decode_kernel as _flash_decode_kernel,
+    flash_decode_reference as _flash_decode_ref,
+    merge_partials,
+)
 from repro.kernels.sparse_prefill import sparse_prefill_attention as _sparse_prefill
 from repro.kernels.sparse_decode import (
     DecodeWorkList,
@@ -49,10 +55,50 @@ def sparse_decode(q, k_cache, v_cache, items, *, cache_len, block_kv=128,
                           interpret=interpret)
 
 
+def flash_decode(q, k_cache, v_cache, block_ids, pos, *, block_kv=128,
+                 scale=None, window=None, partials=False, use_kernel=None,
+                 interpret=None):
+    """Fused budgeted flash-decode: stream only the selected KV blocks.
+
+    q ``[B, H, 1, D]`` (serving layout — GQA grouping happens here);
+    caches ``[B, Hkv, Smax, D]``; ``block_ids [B, Hkv, nb]`` int32 selected
+    cache blocks (-1 pad, trailing); ``pos [B]`` per-slot last position.
+
+    ``partials=True`` returns ``(out [B,H,1,D], m, l [B,Hkv,G])`` for the
+    flash-decoding cross-shard merge; otherwise just ``out``.  On TPU the
+    Pallas kernel runs; elsewhere the jnp reference executes the same
+    zero-copy access pattern (scan + dynamic_slice, no dense gather).
+    """
+    B, H, _, dh = q.shape
+    hkv = k_cache.shape[1]
+    G = H // hkv
+    qg = q.reshape(B, hkv, G, dh)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        if interpret is None:
+            interpret = not _on_tpu()
+        items = decode_items_from_ids(jnp.asarray(block_ids))
+        out, m, l = _flash_decode_kernel(
+            qg, k_cache, v_cache, items, jnp.asarray(pos),
+            block_kv=block_kv, scale=scale, window=window,
+            interpret=interpret)
+    else:
+        out, m, l = _flash_decode_ref(
+            qg, k_cache, v_cache, jnp.asarray(block_ids), jnp.asarray(pos),
+            block_kv=block_kv, scale=scale, window=window)
+    out = out.reshape(B, H, 1, dh)
+    if partials:
+        return out, m, l        # out is f32 — merge-able without requantizing
+    return out.astype(q.dtype)
+
+
 __all__ = [
     "flash_attention",
     "sparse_prefill",
     "sparse_decode",
+    "flash_decode",
+    "merge_partials",
     "DecodeWorkList",
     "build_decode_worklist",
 ]

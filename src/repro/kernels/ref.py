@@ -7,6 +7,7 @@ and by the CPU execution path of the models.
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.attention.block_sparse import block_sparse_attention_ref, masked_attention
@@ -58,6 +59,66 @@ def sparse_prefill_oracle(q, k, v, items, *, block_q=128, block_kv=128,
     v_per_head = jnp.take(v, kv_of_head, axis=0)
     return block_sparse_attention_ref(
         q, k_per_head, v_per_head, block_mask, block=block_q, scale=scale)
+
+
+def gather_decode_reference(q, k_cache, v_cache, block_ids, pos, *,
+                            block_kv=128):
+    """The LEGACY budgeted-decode path: dense block gather + einsum.
+
+    Serving-layout twin of ``ops.flash_decode`` (q ``[B, H, 1, D]``,
+    ids ``[B, Hkv, nb]``, per-slot ``pos``), kept as the baseline the
+    fused kernel is benchmarked and regression-tested against — it
+    materializes exactly the ``[B, Hkv, nb*blk, D]`` buffer the fused
+    path exists to avoid.
+    """
+    B, H, _, dh = q.shape
+    hkv = k_cache.shape[1]
+    G = H // hkv
+    nb = block_ids.shape[-1]
+    smax = k_cache.shape[2]
+    pad = (-smax) % block_kv
+    kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nkv = kp.shape[2] // block_kv
+    ids = jnp.asarray(block_ids)
+    pos = jnp.asarray(pos)
+    safe = jnp.maximum(ids, 0)
+    kb = kp.reshape(B, hkv, nkv, block_kv, dh)
+    vb = vp.reshape(B, hkv, nkv, block_kv, dh)
+    gk = jnp.take_along_axis(
+        kb, safe[:, :, :, None, None].astype(jnp.int32), axis=2
+    ).reshape(B, hkv, nb * block_kv, dh)
+    gv = jnp.take_along_axis(
+        vb, safe[:, :, :, None, None].astype(jnp.int32), axis=2
+    ).reshape(B, hkv, nb * block_kv, dh)
+    gpos = (safe[..., None] * block_kv
+            + jnp.arange(block_kv)[None, None, None]
+            ).reshape(B, hkv, nb * block_kv)
+    valid = (jnp.repeat(ids >= 0, block_kv, axis=-1)
+             & (gpos <= pos[:, None, None]))
+    qg = q.reshape(B, hkv, G, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg,
+                   gk.astype(jnp.float32)) * (dh ** -0.5)
+    s = jnp.where(valid[:, :, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", w, gv.astype(jnp.float32))
+    return o.reshape(B, H, 1, dh).astype(q.dtype)
+
+
+def gather_output_sizes(jaxpr, acc=None):
+    """Element counts of every ``gather`` output anywhere in a jaxpr
+    (recursing into scan/cond/pjit sub-jaxprs).  The fused-decode audit:
+    the dense ``[B, Hkv, nb*blk, D]`` buffer must never appear."""
+    acc = [] if acc is None else acc
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "gather":
+            acc.extend(int(np.prod(v.aval.shape)) for v in eqn.outvars)
+        for p in eqn.params.values():
+            for pi in (p if isinstance(p, (list, tuple)) else (p,)):
+                inner = getattr(pi, "jaxpr", pi)
+                if hasattr(inner, "eqns"):
+                    gather_output_sizes(inner, acc)
+    return acc
 
 
 def sparse_decode_oracle(q, k_cache, v_cache, items, *, cache_len,

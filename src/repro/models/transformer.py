@@ -30,6 +30,7 @@ from repro.attention.flash_scan import flash_scan_attention
 from repro.attention.worklist_jnp import batched_worklist_attention
 from repro.attention.dense import attention_maps, decode_attention_ref
 from repro.attention.rope import apply_rope
+from repro.kernels import ops as kernel_ops
 from repro.models import common
 from repro.models.moe import MoEConfig, moe_ffn, moe_init
 from repro.sharding.ctx import constrain
@@ -294,7 +295,8 @@ def prefill(params, tokens, cfg: TransformerConfig, *,
             cache_len: int | None = None,
             sparse_items=None,
             attn_override=None,
-            extra_embeddings=None):
+            extra_embeddings=None,
+            last_index=None):
     """Prefill: tokens [B, S] -> (logits_last [B, V], cache).
 
     ``sparse_items``: per-layer work-lists [L][Litems, 7] (S-HPLB sparse
@@ -302,6 +304,9 @@ def prefill(params, tokens, cfg: TransformerConfig, *,
     v) -> o`` replaces the attention compute entirely (the serving engine
     injects the shard_map S-HPLB island here).  The cache always stores the
     FULL K/V (sparsity reduces attention compute, not cache contents).
+    ``last_index``: position of the last REAL token (traced scalar ok) —
+    logits are read there instead of at row -1, so prompts padded up to a
+    compile bucket still sample from the right row.
     """
     B, S = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
@@ -353,7 +358,12 @@ def prefill(params, tokens, cfg: TransformerConfig, *,
         cache = jnp.stack(
             [jnp.stack(cache_k), jnp.stack(cache_v)], axis=1)
     cache = constrain(cache, None, None, "batch", "model", None, None)
-    logits = _logits(x[:, -1:, :], params, cfg)[:, 0]
+    if last_index is None:
+        x_last = x[:, -1:, :]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
+    logits = _logits(x_last, params, cfg)[:, 0]
     return logits, cache
 
 
@@ -366,11 +376,13 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
     sequence, 0-based — per-sequence positions enable continuous batching).
     cache [L, 2, B, Hkv, Smax, Dh]; returns (logits [B, V], new cache).
 
-    ``block_ids``: [L, Hkv, nb] int32 selected KV blocks per layer/kv-head
-    (S-HPLB budgeted decode — gathers only the selected blocks, which is the
-    memory-roofline win; pad with -1) or None for dense decode over the full
-    cache.  ``attn_override(l, q, kc, vc) -> o [B, H, 1, Dh]`` replaces the
-    attention compute (serving engine's shard_map flash-decode island).
+    ``block_ids``: selected KV blocks per layer/kv-head, ``[L, Hkv, nb]``
+    (shared across slots) or ``[L, B, Hkv, nb]`` (per-slot, position-aware
+    continuous batching) int32, -1 padded — S-HPLB budgeted decode.  The
+    fused flash-decode streams ONLY those blocks from the cache (the
+    memory-roofline win; no dense gather buffer).  None = dense decode over
+    the full cache.  ``attn_override(l, q, kc, vc) -> o [B, H, 1, Dh]``
+    replaces the attention compute (serving engine's shard_map island).
     """
     B = token.shape[0]
     x = jnp.take(params["embed"], token[:, None], axis=0)  # [B, 1, d]
@@ -399,22 +411,14 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
         if attn_override is not None:
             o = attn_override(l, q, kc, vc)
         elif items_l is not None:
-            # gather selected kv blocks; items_l: [Hkv, nb], -1 = padding
-            blk = cfg.block_kv
-            nb = items_l.shape[-1]
-            safe_ids = jnp.maximum(items_l, 0)
-            gk = _gather_blocks(kc, safe_ids, blk)  # [B, Hkv, nb*blk, Dh]
-            gv = _gather_blocks(vc, safe_ids, blk)
-            # positions of gathered tokens for masking
-            gpos = (safe_ids[..., None] * blk +
-                    jnp.arange(blk)[None, None, :]).reshape(
-                        cfg.num_kv_heads, nb * blk)  # [Hkv, nb*blk]
-            real = jnp.repeat(items_l >= 0, blk, axis=-1)  # [Hkv, nb*blk]
-            valid = (gpos[None] <= pos_arr[:, None, None]) & real[None]
-            if window is not None:
-                valid = valid & (gpos[None] > (pos_arr[:, None, None]
-                                               - window))
-            o = _decode_attend(q, gk, gv, valid, cfg)
+            # fused budgeted flash-decode: stream only the selected blocks
+            # from the cache in place (no [B, Hkv, nb*blk, Dh] gather).
+            # items_l: [Hkv, nb] (shared) or [B, Hkv, nb] (per-slot).
+            ids_b = (jnp.broadcast_to(items_l[None], (B,) + items_l.shape)
+                     if items_l.ndim == 2 else items_l)
+            o = kernel_ops.flash_decode(
+                q, kc, vc, ids_b, pos_arr, block_kv=cfg.block_kv,
+                window=window)
         else:
             kpos = jnp.arange(smax)
             valid = kpos[None] < clen[:, None]      # [B, Smax]
@@ -450,17 +454,6 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
         new_cache = jnp.stack(new_layers)
     logits = _logits(x, params, cfg)[:, 0]
     return logits, new_cache
-
-
-def _gather_blocks(c, block_ids, blk):
-    """c [B, Hkv, Smax, Dh], block_ids [Hkv, nb] -> [B, Hkv, nb*blk, Dh]."""
-    B, hkv, smax, dh = c.shape
-    nb = block_ids.shape[-1]
-    cb = c.reshape(B, hkv, smax // blk, blk, dh)
-    g = jnp.take_along_axis(
-        cb, block_ids[None, :, :, None, None].astype(jnp.int32),
-        axis=2)  # [B, Hkv, nb, blk, Dh]
-    return g.reshape(B, hkv, nb * blk, dh)
 
 
 def _decode_attend(q, k, v, valid, cfg: TransformerConfig):

@@ -50,6 +50,10 @@ class EngineConfig:
     num_model_shards: int = 1        # HP degree for planning
     max_seq_len: int = 4096
     num_slots: int = 8
+    # prefill compile-bucket policy: "pow2" pads prompts up to the next
+    # power of two (compile count O(log max_seq_len)); "exact" compiles one
+    # program per distinct prompt length (the old behavior).
+    prefill_buckets: str = "pow2"
 
 
 class Engine:
@@ -81,6 +85,14 @@ class Engine:
         self._prefill_jit = {}
         self._decode_jit = None
         self._rng = jax.random.PRNGKey(0)
+        # position-aware decode selection: ids depend only on the slot's
+        # current BLOCK count, so they are recomputed exactly at block
+        # boundaries and memoized per block count.  _nb_cap fixes the padded
+        # width so changing selections never change shapes (no recompiles).
+        self._decode_ids_by_nblocks: dict[int, np.ndarray] = {}
+        self._nb_cap: int | None = None
+        # donation is a no-op warning on backends without buffer aliasing
+        self._donate = jax.default_backend() != "cpu"
 
     # -- offline artifacts -------------------------------------------------
     def _permute_params(self, params):
@@ -140,12 +152,15 @@ class Engine:
         self._worklists_cache[seq_len] = out
         return out
 
-    def decode_block_ids(self, cache_len: int) -> np.ndarray:
-        """[L, Hkv, nb_max] decode budgets -> selected blocks (-1 pad).
+    def decode_block_ids(self, cache_len: int,
+                         nb_pad: int | None = None) -> np.ndarray:
+        """[L, Hkv, nb] decode budgets -> selected blocks (-1 pad).
 
         Per kv head: budget = max over its q heads (slot order); blocks =
         sink + most recent (streaming within budget; selection policy for
-        decode can be swapped for quest scores at runtime).
+        decode can be swapped for quest scores at runtime).  ``nb_pad``
+        fixes the trailing width (position-aware serving pads every
+        selection to the max-budget width so shapes are step-invariant).
         """
         assert self.plan is not None
         cfg = self.cfg
@@ -160,48 +175,97 @@ class Engine:
                             nkv_blocks)
             nb_max = max(nb_max, int(nb.max()))
             per_layer.append(nb)
-        ids = np.full((cfg.num_layers, cfg.num_kv_heads, nb_max), -1,
+        width = nb_max if nb_pad is None else nb_pad
+        ids = np.full((cfg.num_layers, cfg.num_kv_heads, width), -1,
                       np.int32)
         for l, nb in enumerate(per_layer):
             for h in range(cfg.num_kv_heads):
-                n = int(nb[h])
+                n = min(int(nb[h]), width)
                 sel = [0] + list(range(nkv_blocks - (n - 1), nkv_blocks))
                 sel = sorted(set(b for b in sel if 0 <= b < nkv_blocks))[:n]
                 ids[l, h, :len(sel)] = sel
         return ids
 
+    def _decode_ids_for_nblocks(self, nblocks: int) -> np.ndarray:
+        """Memoized position-aware selection for a slot holding ``nblocks``
+        cache blocks — recomputed only when a slot crosses a block
+        boundary, padded to the engine-wide ``_nb_cap`` width."""
+        if self._nb_cap is None:
+            self._nb_cap = self.decode_block_ids(
+                self.ecfg.max_seq_len).shape[-1]
+        nblocks = max(1, min(nblocks,
+                             self.ecfg.max_seq_len // self.ecfg.block))
+        got = self._decode_ids_by_nblocks.get(nblocks)
+        if got is None:
+            got = self.decode_block_ids(nblocks * self.ecfg.block,
+                                        nb_pad=self._nb_cap)
+            self._decode_ids_by_nblocks[nblocks] = got
+        return got
+
     # -- jitted steps --------------------------------------------------------
-    def _prefill_fn(self, seq_len: int):
-        if seq_len not in self._prefill_jit:
+    def _prefill_bucket(self, seq_len: int) -> int:
+        """Compile bucket for a prompt length: next power of two (floored
+        at one block, capped at max_seq_len), or the exact length."""
+        if self.ecfg.prefill_buckets != "pow2":
+            return seq_len
+        b = self.ecfg.block
+        while b < seq_len:
+            b *= 2
+        return min(b, self.ecfg.max_seq_len)
+
+    def _prefill_fn(self, bucket: int):
+        """Jitted prefill step for one compile bucket.
+
+        The slot cache is threaded THROUGH the jit and donated: the
+        sequence cache lands in the slot via an in-jit dynamic_update_slice
+        instead of the old out-of-jit whole-cache copy, so the hot path
+        never materializes a second [L, 2, slots, Hkv, Smax, Dh] buffer.
+        ``slot`` and ``last_idx`` are traced scalars — one compile serves
+        every slot and every real length within the bucket.
+        """
+        if bucket not in self._prefill_jit:
             if self.ecfg.attention == "sparse":
-                wls = self.worklists_for(seq_len)
+                wls = self.worklists_for(bucket)
                 items = [jnp.asarray(w.items.reshape(-1, w.items.shape[-1]))
                          for w in wls]
             else:
                 items = None
 
-            @jax.jit
-            def run(params, tokens):
-                return tfm.prefill(params, tokens, self.cfg,
-                                   cache_len=self.ecfg.max_seq_len,
-                                   sparse_items=items)
-            self._prefill_jit[seq_len] = run
-        return self._prefill_jit[seq_len]
+            def run(params, cache, tokens, slot, last_idx):
+                logits, seq_cache = tfm.prefill(
+                    params, tokens, self.cfg,
+                    cache_len=self.ecfg.max_seq_len,
+                    sparse_items=items, last_index=last_idx)
+                cache = jax.lax.dynamic_update_slice(
+                    cache, seq_cache.astype(cache.dtype),
+                    (0, 0, slot, 0, 0, 0))
+                return logits, cache
+
+            self._prefill_jit[bucket] = jax.jit(
+                run, donate_argnums=(1,) if self._donate else ())
+        return self._prefill_jit[bucket]
 
     def _decode_fn(self):
+        """Jitted decode step.  Sparse block ids enter as DATA ([L, B, Hkv,
+        nb] per-slot selections) so position-aware re-selection at block
+        boundaries never recompiles; the cache is donated."""
         if self._decode_jit is None:
-            if self.ecfg.attention == "sparse":
-                bids = jnp.asarray(
-                    self.decode_block_ids(self.ecfg.max_seq_len))
-            else:
-                bids = None
+            sparse = self.ecfg.attention == "sparse"
 
-            @jax.jit
-            def run(params, cache, token, pos):
+            def run(params, cache, token, pos, bids):
                 return tfm.decode_step(params, cache, token, pos, self.cfg,
                                        block_ids=bids,
                                        cache_len=pos + 1)
-            self._decode_jit = run
+
+            def run_dense(params, cache, token, pos):
+                return tfm.decode_step(params, cache, token, pos, self.cfg,
+                                       block_ids=None,
+                                       cache_len=pos + 1)
+
+            donate = (1,) if self._donate else ()
+            self._decode_jit = (jax.jit(run, donate_argnums=donate) if sparse
+                                else jax.jit(run_dense,
+                                             donate_argnums=donate))
         return self._decode_jit
 
     # -- public API -----------------------------------------------------------
@@ -210,12 +274,12 @@ class Engine:
         """Prefill one sequence into cache slot; returns first token."""
         tokens = np.atleast_2d(np.asarray(tokens, np.int32))
         S = tokens.shape[-1]
-        run = self._prefill_fn(S)
-        logits, seq_cache = run(self.params, jnp.asarray(tokens))
-        # write the sequence cache into the slot
-        self.cache = jax.lax.dynamic_update_slice(
-            self.cache, seq_cache.astype(self.cache.dtype),
-            (0, 0, slot, 0, 0, 0))
+        bucket = self._prefill_bucket(S)
+        if bucket > S:
+            tokens = np.pad(tokens, ((0, 0), (0, bucket - S)))
+        run = self._prefill_fn(bucket)
+        logits, self.cache = run(self.params, self.cache,
+                                 jnp.asarray(tokens), slot, S - 1)
         self._rng, sub = jax.random.split(self._rng)
         return int(sample(logits, sub, sampling)[0])
 
@@ -227,8 +291,22 @@ class Engine:
         pos_all = np.zeros((self.ecfg.num_slots,), np.int32)
         tok_all[list(slots)] = tokens
         pos_all[list(slots)] = positions
-        logits, self.cache = run(self.params, self.cache,
-                                 jnp.asarray(tok_all), jnp.asarray(pos_all))
+        if self.ecfg.attention == "sparse":
+            # per-slot position-aware selection, refreshed at block
+            # boundaries (ids are a function of the slot's block count)
+            blk = self.ecfg.block
+            per_slot = [self._decode_ids_for_nblocks((int(p) + 1 + blk - 1)
+                                                     // blk)
+                        for p in pos_all]
+            bids = np.stack(per_slot, axis=1)  # [L, B, Hkv, nb_cap]
+            logits, self.cache = run(self.params, self.cache,
+                                     jnp.asarray(tok_all),
+                                     jnp.asarray(pos_all),
+                                     jnp.asarray(bids))
+        else:
+            logits, self.cache = run(self.params, self.cache,
+                                     jnp.asarray(tok_all),
+                                     jnp.asarray(pos_all))
         self._rng, sub = jax.random.split(self._rng)
         toks = sample(logits, sub, sampling)
         return np.asarray(toks)[list(slots)]

@@ -27,9 +27,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from repro.sharding.compat import shard_map
 
 from repro.attention.worklist_jnp import worklist_attention
+from repro.kernels import ops
 
 NEG_INF = -1e30
 
@@ -146,43 +148,29 @@ def flash_decode_attention(mesh, *, block_kv=128, seq_axes=("model",),
             ids0 = ids_l[0]                                   # [Hkv, nb_loc]
             local = ids0 - sidx * nblk_loc
             ok = (ids0 >= 0) & (local >= 0) & (local < nblk_loc)
-            safe = jnp.clip(local, 0, nblk_loc - 1)
-            blk = block_kv
+            local_ids = jnp.where(ok, local, -1)
             Bl = kc_l.shape[0]
-            kb = kc_l.reshape(Bl, hkv, nblk_loc, blk, dh)
-            vb = vc_l.reshape(Bl, hkv, nblk_loc, blk, dh)
-            nb = safe.shape[-1]
-            gk = jnp.take_along_axis(
-                kb, safe[None, :, :, None, None].astype(jnp.int32), axis=2
-            ).reshape(Bl, hkv, nb * blk, dh)
-            gv = jnp.take_along_axis(
-                vb, safe[None, :, :, None, None].astype(jnp.int32), axis=2
-            ).reshape(Bl, hkv, nb * blk, dh)
-            gpos = ((ids0 * blk)[..., None]
-                    + jnp.arange(blk)[None, None, :]).reshape(
-                        hkv, nb * blk)
-            valid = (jnp.repeat(ok, blk, axis=-1) & (gpos <= pos))[None]
-
-            qg = q_l.reshape(Bl, hkv, G, dh).astype(jnp.float32)
-            s = jnp.einsum("bhgd,bhkd->bhgk", qg,
-                           gk.astype(jnp.float32)) * (dh ** -0.5)
-            s = jnp.where(valid[:, :, None, :], s, NEG_INF)
-            m = s.max(axis=-1)                                # [B,hkv,G]
-            p = jnp.where(valid[:, :, None, :],
-                          jnp.exp(s - m[..., None]), 0.0)
-            l = p.sum(axis=-1)
-            acc = jnp.einsum("bhgk,bhkd->bhgd", p, gv.astype(jnp.float32))
+            # fused budgeted flash-decode against the LOCAL cache shard —
+            # streams only this shard's selected blocks, no dense gather.
+            # Positions shift by the shard's token offset so the in-kernel
+            # `kpos <= pos` mask matches global causality.
+            pos_local = (jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (Bl,))
+                         - sidx * nblk_loc * block_kv)
+            out, m, l = ops.flash_decode(
+                q_l, kc_l, vc_l,
+                jnp.broadcast_to(local_ids[None],
+                                 (Bl, hkv, local_ids.shape[-1])),
+                pos_local, block_kv=block_kv, partials=True)
             # flash-decoding merge across seq shards
-            gm = jax.lax.pmax(m, seq_axes if len(seq_axes) > 1
-                              else seq_axes[0])
-            scale = jnp.exp(m - gm)
-            l = jax.lax.psum(l * scale, seq_axes if len(seq_axes) > 1
-                             else seq_axes[0])
-            acc = jax.lax.psum(acc * scale[..., None],
-                               seq_axes if len(seq_axes) > 1
-                               else seq_axes[0])
-            out = acc / jnp.maximum(l, 1e-30)[..., None]
-            return out.reshape(Bl, H, 1, dh).astype(q_l.dtype)
+            ax = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+            gm = jax.lax.pmax(m, ax)                          # [B,hkv,G]
+            w = jnp.exp(m - gm) * l
+            den = jax.lax.psum(w, ax)
+            num = jax.lax.psum(
+                out.astype(jnp.float32).reshape(Bl, hkv, G, dh)
+                * w[..., None], ax)
+            o = num / jnp.maximum(den, 1e-30)[..., None]
+            return o.reshape(Bl, H, 1, dh).astype(q_l.dtype)
 
         return shard_map(
             island, mesh=mesh,

@@ -1,0 +1,72 @@
+"""Version compatibility shims for the jax sharding APIs this repo uses.
+
+Two call sites moved across jax releases:
+
+- ``shard_map``: new jax exports it at top level (``jax.shard_map``) with a
+  ``check_vma`` kwarg; 0.4.x only has ``jax.experimental.shard_map`` whose
+  equivalent kwarg is ``check_rep``.
+- ``set_mesh``: new jax has ``jax.set_mesh(mesh)`` as a context manager;
+  0.4.x uses the ``Mesh`` object itself as the context.
+
+Everything else (``Mesh``, ``PartitionSpec``, ``NamedSharding``,
+``jax.make_mesh``) is stable across the supported range.
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+
+try:  # jax >= 0.6 style
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` kwarg rename
+    papered over (the replication check is what both names control)."""
+    kw = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if "check_vma" in _SHARD_MAP_PARAMS:
+        kw["check_vma"] = check_vma
+    elif "check_rep" in _SHARD_MAP_PARAMS:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, **kw)
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for jit/sharding resolution."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    if hasattr(mesh, "__enter__"):  # 0.4.x: Mesh is its own context
+        return mesh
+    return contextlib.nullcontext(mesh)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """``jax.sharding.AbstractMesh`` across the signature change (new:
+    ``(sizes, names)``; 0.4.x: a single ``((name, size), ...)`` tuple)."""
+    AM = jax.sharding.AbstractMesh
+    try:
+        return AM(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AM(tuple(zip(axis_names, axis_sizes)))
+
+
+def get_abstract_mesh():
+    """The mesh currently activated via :func:`set_mesh` (or None)."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    try:  # 0.4.x: the Mesh context manager sets thread_resources
+        from jax._src.mesh import thread_resources
+        return thread_resources.env.physical_mesh
+    except Exception:  # pragma: no cover - very old/new jax
+        return None
+
+
+__all__ = ["shard_map", "set_mesh", "get_abstract_mesh", "abstract_mesh"]

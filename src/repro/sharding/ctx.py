@@ -25,7 +25,8 @@ LOGICAL = {
 
 
 def _mesh_axes() -> tuple[str, ...]:
-    m = jax.sharding.get_abstract_mesh()
+    from repro.sharding.compat import get_abstract_mesh
+    m = get_abstract_mesh()
     if m is None or m.empty:
         return ()
     return tuple(m.axis_names)

@@ -23,8 +23,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.sharding.compat import shard_map
 
 
 def pipeline_apply(stage_fn, mesh, *, axis: str = "pipe",

@@ -1,6 +1,7 @@
 """Budget allocation: paper's max-min greedy vs exact oracle + invariants."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.budget import (

@@ -1,6 +1,7 @@
 """Multiway partitioning: LPT (paper) vs KK vs exact DP oracle."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import (

@@ -1,6 +1,7 @@
 """Work-list construction invariants (the SPMD execution contract)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.attention.policies import streaming_policy, strided_policy

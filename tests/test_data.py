@@ -1,6 +1,7 @@
 """Data: tokenizer roundtrip, stream determinism, RULER task validity."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import TASKS, make_batch, make_example, train_mixture_batch

@@ -26,6 +26,7 @@ def test_hplb_prefill_island_multidevice_matches_dense():
     out = _run("""
 import warnings; warnings.filterwarnings("ignore")
 import numpy as np, jax, jax.numpy as jnp
+from repro.sharding.compat import set_mesh
 from repro.attention.worklist_jnp import causal_items
 from repro.attention import flash_attention_ref
 from repro.core.worklist import worklist_from_budgets
@@ -44,7 +45,7 @@ wl = worklist_from_budgets(np.full(H, S), num_devices=4, seq_len=S,
                            block=128, policy_fn=full, group_size=2)
 items = np.tile(wl.items[:, None], (1, 3, 1, 1))  # [4, L=3 layers, Lpad, 7]
 attend = hplb_prefill_attention(mesh)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     o = jax.jit(lambda q, k, v, it: attend(1, q, k, v, it))(
         q, k, v, jnp.asarray(items))
 r = jax.vmap(lambda a, b, c: flash_attention_ref(a, b, c, causal=True))(q, k, v)
@@ -61,6 +62,7 @@ def test_flash_decode_island_multidevice():
     out = _run("""
 import warnings; warnings.filterwarnings("ignore")
 import numpy as np, jax, jax.numpy as jnp
+from repro.sharding.compat import set_mesh
 from repro.serving.sharded_attention import flash_decode_attention
 from repro.attention import dense_attention
 mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -77,7 +79,7 @@ for s in range(n_sh):
         ids[s, h] = np.arange(s * (nblk // n_sh), (s + 1) * (nblk // n_sh))
 pos = 900
 attend = flash_decode_attention(mesh, seq_axes=("model",))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     o = jax.jit(lambda *a: attend(*a, pos))(q, kc, vc, jnp.asarray(ids))
 mask = (jnp.arange(Smax) <= pos)[None, None]
 r = dense_attention(q, kc, vc, mask=mask[:, :, None])
@@ -95,6 +97,7 @@ def test_gspmd_train_step_multidevice_matches_single():
 import warnings; warnings.filterwarnings("ignore")
 import functools
 import numpy as np, jax, jax.numpy as jnp
+from repro.sharding.compat import set_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.data.synthetic import lm_batch
 from repro.models.transformer import TransformerConfig, init_params, loss_fn
@@ -112,7 +115,7 @@ s1, m1 = jax.jit(step)(state, b)
 # sharded
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 pspec = sh.param_specs(jax.eval_shape(lambda: state["params"]), mesh)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     sharded_state = {
         "params": jax.device_put(state["params"], jax.tree.map(
             lambda s: NamedSharding(mesh, s), pspec,
@@ -134,6 +137,7 @@ def test_elastic_checkpoint_reshard():
 import warnings; warnings.filterwarnings("ignore")
 import tempfile
 import numpy as np, jax, jax.numpy as jnp
+from repro.sharding.compat import set_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.training import CheckpointManager
 tree = {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.ones((8,))}
@@ -161,13 +165,14 @@ def test_moe_expert_parallel_multidevice():
     out = _run("""
 import warnings; warnings.filterwarnings("ignore")
 import numpy as np, jax, jax.numpy as jnp
+from repro.sharding.compat import set_mesh
 from repro.models.moe import MoEConfig, moe_ffn, moe_init
 cfg = MoEConfig(num_experts=8, experts_per_token=2)
 p = moe_init(jax.random.PRNGKey(0), 32, 64, cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32), jnp.float32)
 y1 = moe_ffn(x, p, cfg)
 mesh = jax.make_mesh((2, 4), ("data", "model"))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y2 = jax.jit(lambda x, p: moe_ffn(x, p, cfg))(x, p)
 err = float(jnp.abs(y1.astype(jnp.float32) - y2.astype(jnp.float32)).max())
 assert err < 2e-2, err

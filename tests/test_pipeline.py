@@ -8,6 +8,7 @@ def test_pipeline_matches_sequential():
     script = """
 import warnings; warnings.filterwarnings("ignore")
 import numpy as np, jax, jax.numpy as jnp
+from repro.sharding.compat import set_mesh
 from repro.sharding.pipeline import pipeline_apply
 mesh = jax.make_mesh((4,), ("pipe",))
 S, d = 4, 16
@@ -17,7 +18,7 @@ stage_fn = lambda w, x: jnp.tanh(x @ w)
 x = jnp.asarray(rng.standard_normal((8, d)).astype(np.float32))
 for M in (4, 8):
     fn = pipeline_apply(stage_fn, mesh, microbatches=M)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y = jax.jit(lambda ws, x: fn(ws, x))(ws, x)
     ref = x
     for s in range(S):

@@ -57,6 +57,49 @@ class TestEngineFidelity:
         assert len(done) == 1 and len(done[0].generated) == 5
 
 
+class TestEngineHotPath:
+    def test_prefill_bucketing_bounds_compiles(self, params, profile):
+        """Distinct prompt lengths map onto pow2 buckets: compile count is
+        O(log max_seq_len), not O(#lengths)."""
+        eng = Engine(CFG, params,
+                     EngineConfig(attention="sparse", budget_per_head=256,
+                                  max_seq_len=256, num_slots=4),
+                     profile=profile)
+        prompts = [np.arange(n) % 256 for n in (10, 23, 40, 100, 129, 200)]
+        done = eng.serve(prompts, SamplingParams(max_tokens=3))
+        assert len(done) == len(prompts)
+        # 6 lengths -> at most {128, 256} buckets
+        assert set(eng._prefill_jit) <= {128, 256}
+
+    def test_bucketed_matches_exact_prefill(self, params, profile):
+        """Padding a prompt up to its bucket changes nothing downstream."""
+        mk = lambda mode: Engine(
+            CFG, params,
+            EngineConfig(attention="sparse", budget_per_head=256,
+                         max_seq_len=256, num_slots=2,
+                         prefill_buckets=mode),
+            profile=profile)
+        prompts = [np.random.default_rng(3).integers(0, 256, size=(37,))]
+        sp = SamplingParams(max_tokens=6)  # greedy
+        a = mk("pow2").serve(prompts, sp)
+        b = mk("exact").serve(prompts, sp)
+        assert a[0].generated == b[0].generated
+
+    def test_decode_selection_tracks_position(self, params, profile):
+        """Block selection is recomputed as slots cross block boundaries
+        instead of being frozen at max_seq_len."""
+        eng = Engine(CFG, params,
+                     EngineConfig(attention="sparse", budget_per_head=128,
+                                  max_seq_len=512, num_slots=1),
+                     profile=profile)
+        eng.serve([np.arange(250) % 256], SamplingParams(max_tokens=12))
+        # crossed the 256-token boundary mid-generation: ids for both block
+        # counts were materialized, at the capped width
+        assert {2, 3} <= set(eng._decode_ids_by_nblocks)
+        widths = {a.shape[-1] for a in eng._decode_ids_by_nblocks.values()}
+        assert widths == {eng._nb_cap}
+
+
 class TestScheduler:
     def test_admission_respects_slots(self):
         calls = {"prefill": 0, "decode": 0}
