@@ -24,10 +24,11 @@ SUITES = [
     ("latency_attention", "paper Fig. 9"),
     ("skyline", "paper Fig. 10"),
     ("lb_ablation", "paper Fig. 11"),
+    ("serving", "chunked-prefill tick loop (TTFT/ITL)"),
 ]
 
 # fast subset exercising the serving hot paths (CI perf smoke)
-SMOKE = ("load_balance", "latency_attention")
+SMOKE = ("load_balance", "latency_attention", "serving")
 
 
 def main() -> int:

@@ -46,14 +46,16 @@ def main():
         eng = Engine(
             CFG, params,
             EngineConfig(attention=mode, budget_per_head=96,
-                         max_seq_len=512, num_slots=4, policy="strided"),
+                         max_seq_len=512, num_slots=4, policy="strided",
+                         prefill_mode="chunked", prefill_chunk_tokens=128),
             profile=profile if mode == "sparse" else None)
         t0 = time.time()
         done = eng.serve(prompts, SamplingParams(max_tokens=6))
         dt = time.time() - t0
         gens = [decode(r.generated) for r in done]
-        print(f"[{mode}] served {len(done)} requests in {dt:.1f}s; "
-              f"generations: {gens}")
+        ttft = [f"{r.ttft * 1e3:.0f}" for r in done if r.ttft is not None]
+        print(f"[{mode}] served {len(done)} requests in {dt:.1f}s "
+              f"(ttft ms: {', '.join(ttft)}); generations: {gens}")
         if mode == "sparse":
             from repro.core.planner import plan_summary
             s = plan_summary(eng.plan)

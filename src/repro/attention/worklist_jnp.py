@@ -62,11 +62,19 @@ def worklist_attention(
     block_q: int = 128,
     block_kv: int = 128,
     scale: float | None = None,
+    q_offset: jnp.ndarray | int | None = None,
+    kv_len: jnp.ndarray | int | None = None,
 ):
     """Execute a work-list with a single lax.scan (one device's list).
 
     Mirrors ``kernels.sparse_prefill.sparse_prefill_attention``; (head, q_blk)
     tiles with no items yield zero rows.
+
+    ``q_offset`` / ``kv_len`` support chunked prefill: queries live at global
+    positions ``q_offset + i`` (item q_blk stays chunk-local) and attend kv
+    positions ``< kv_len`` of a cache longer than the chunk.  Both are traced
+    scalars — one compile serves every chunk offset.  ``None`` (the default)
+    is the classic whole-sequence behavior (offset 0, kv_len = Skv).
     """
     hq, sq, dh = q.shape
     hkv, skv, _ = k.shape
@@ -104,7 +112,10 @@ def worklist_attention(
         s = (qt @ kt.T) * scale_v
         qpos = qblk * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         kpos = kvblk * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = (kpos <= qpos) & (kpos < skv) & (qpos < sq) & valid
+        qpos_g = qpos if q_offset is None else qpos + q_offset
+        klim = skv if kv_len is None else jnp.minimum(
+            jnp.asarray(kv_len, jnp.int32), skv)
+        mask = (kpos <= qpos_g) & (kpos < klim) & (qpos < sq) & valid
         s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
         p = jnp.where(mask, jnp.exp(s - m_new), 0.0)

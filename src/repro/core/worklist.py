@@ -239,6 +239,52 @@ def worklist_from_budgets(
     )
 
 
+def chunk_items(items: np.ndarray, q_blk_start: int, q_blk_count: int,
+                pad_to: int | None = None) -> np.ndarray:
+    """Slice a flattened work-list to the q-block window ``[q_blk_start,
+    q_blk_start + q_blk_count)`` — the chunked-prefill view of a full-prompt
+    list (DESIGN.md §2.6).
+
+    ``items``: one device's ``[N, ITEM_FIELDS]`` list.  Kept items have
+    F_QBLK remapped to chunk-local indices; F_KVBLK stays GLOBAL (the chunk
+    attends the whole resident KV prefix).  (head, q_blk) groups are kept
+    intact, so the F_FIRST/F_LAST accumulator protocol survives the slice.
+    ``pad_to`` pads with the last real item replicated at valid=0 (the same
+    convention as :func:`build_worklist`); chunk lists padded to one width
+    enter the jitted chunk prefill as DATA, so varying chunk offsets never
+    recompile.
+    """
+    it = np.asarray(items).reshape(-1, ITEM_FIELDS)
+    keep = ((it[:, F_VALID] == 1)
+            & (it[:, F_QBLK] >= q_blk_start)
+            & (it[:, F_QBLK] < q_blk_start + q_blk_count))
+    out = it[keep].copy()
+    out[:, F_QBLK] -= q_blk_start
+    if pad_to is None:
+        return out
+    if len(out) > pad_to:
+        raise ValueError(
+            f"chunk work-list ({len(out)} items) exceeds pad_to={pad_to}")
+    padded = np.zeros((pad_to, ITEM_FIELDS), dtype=np.int32)
+    padded[: len(out)] = out
+    if len(out):
+        pad_row = out[-1].copy()
+        pad_row[F_FIRST] = 0
+        pad_row[F_LAST] = 0
+        pad_row[F_VALID] = 0
+        padded[len(out):] = pad_row
+    return padded
+
+
+def chunk_item_counts(items: np.ndarray, num_q_blocks: int) -> np.ndarray:
+    """Per-q-block real-item counts of one device's list ``[N, 7]`` —
+    sliding-window sums over this give the compile-time item cap for a
+    chunk bucket (``Engine._chunk_item_cap``)."""
+    it = np.asarray(items).reshape(-1, ITEM_FIELDS)
+    real = it[it[:, F_VALID] == 1]
+    return np.bincount(real[:, F_QBLK], minlength=num_q_blocks)[:num_q_blocks]
+
+
 def build_row_worklist(
     selections: list[list[np.ndarray]],
     *,

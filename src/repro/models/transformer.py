@@ -27,7 +27,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.attention.flash_scan import flash_scan_attention
-from repro.attention.worklist_jnp import batched_worklist_attention
+from repro.attention.worklist_jnp import (
+    batched_worklist_attention,
+    worklist_attention,
+)
 from repro.attention.dense import attention_maps, decode_attention_ref
 from repro.attention.rope import apply_rope
 from repro.kernels import ops as kernel_ops
@@ -369,7 +372,7 @@ def prefill(params, tokens, cfg: TransformerConfig, *,
 
 def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
                 block_ids=None, cache_len: int | jnp.ndarray | None = None,
-                attn_override=None):
+                active=None, attn_override=None):
     """One decode step.
 
     token [B] int32; pos scalar OR [B] int32 (current position per
@@ -381,8 +384,12 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
     continuous batching) int32, -1 padded — S-HPLB budgeted decode.  The
     fused flash-decode streams ONLY those blocks from the cache (the
     memory-roofline win; no dense gather buffer).  None = dense decode over
-    the full cache.  ``attn_override(l, q, kc, vc) -> o [B, H, 1, Dh]``
-    replaces the attention compute (serving engine's shard_map island).
+    the full cache.  ``active``: optional [B] bool — slots marked False
+    (free, or mid-chunked-prefill under mixed ticks) keep their cache rows
+    UNTOUCHED; without it the batched step would clobber row ``pos`` (= 0
+    for padded slots) of every slot in the batch.  ``attn_override(l, q,
+    kc, vc) -> o [B, H, 1, Dh]`` replaces the attention compute (serving
+    engine's shard_map island).
     """
     B = token.shape[0]
     x = jnp.take(params["embed"], token[:, None], axis=0)  # [B, 1, d]
@@ -403,10 +410,21 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
         rope = lambda t, p: apply_rope(t, p[None], cfg.rope_theta)
         q = jax.vmap(rope)(q, pos_arr)
         k = jax.vmap(rope)(k, pos_arr)
-        upd = lambda c, kn, p: jax.lax.dynamic_update_slice(
-            c, kn.astype(c.dtype), (0, p, 0))
-        kc = jax.vmap(upd)(layer_cache[0], k, pos_arr)
-        vc = jax.vmap(upd)(layer_cache[1], v, pos_arr)
+        if active is None:
+            upd = lambda c, kn, p: jax.lax.dynamic_update_slice(
+                c, kn.astype(c.dtype), (0, p, 0))
+            kc = jax.vmap(upd)(layer_cache[0], k, pos_arr)
+            vc = jax.vmap(upd)(layer_cache[1], v, pos_arr)
+        else:
+            # inactive slots write their CURRENT row back (a no-op update):
+            # the batched step must never mutate a freed or mid-prefill slot
+            def upd(c, kn, p, a):
+                cur = jax.lax.dynamic_slice(c, (0, p, 0), kn.shape)
+                kn = jnp.where(a, kn.astype(c.dtype), cur)
+                return jax.lax.dynamic_update_slice(c, kn, (0, p, 0))
+            act = jnp.asarray(active)
+            kc = jax.vmap(upd)(layer_cache[0], k, pos_arr, act)
+            vc = jax.vmap(upd)(layer_cache[1], v, pos_arr, act)
         window = _window_of(cfg, l)
         if attn_override is not None:
             o = attn_override(l, q, kc, vc)
@@ -468,3 +486,113 @@ def _decode_attend(q, k, v, valid, cfg: TransformerConfig):
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bhkd->bhgd", w, v.astype(jnp.float32))
     return o.reshape(B, H, 1, dh).astype(q.dtype)
+
+
+def _chunk_attend(q, k, v, valid, cfg: TransformerConfig):
+    """Masked multi-query attend for dense chunked prefill.
+
+    q [B,H,C,Dh]; k/v [B,Hkv,Skv,Dh]; valid [B|1, Hkv|1, C, Skv] bool.
+    The per-chunk validity mask (causal at a traced offset + kv length)
+    cannot be a static pair list, so this computes the [C, Skv] score tile
+    with a mask — fine at C x Smax chunk scale; a TPU deployment would swap
+    in a Pallas chunk kernel with the same contract.
+    """
+    B, H, C, dh = q.shape
+    hkv = k.shape[1]
+    G = H // hkv
+    qg = q.reshape(B, hkv, G, C, dh)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    s = jnp.where(valid[:, :, None, :, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, C, dh).astype(q.dtype)
+
+
+def prefill_chunk(params, cache, tokens, slot, q_offset,
+                  cfg: TransformerConfig, *,
+                  kv_len=None, sparse_items=None, last_index=None):
+    """Partial prefill: attend one chunk of queries against the KV prefix
+    already resident in the slot cache, writing the chunk's K/V at a traced
+    offset (the chunked-prefill half of the serving tick, DESIGN.md §2.6).
+
+    tokens [1, C] int32 (one sequence; C is the chunk compile bucket);
+    cache [L, 2, B, Hkv, Smax, Dh] — the engine's FULL slot cache, threaded
+    through and updated in place (donation-friendly);
+    ``slot`` / ``q_offset`` / ``kv_len`` / ``last_index`` are traced scalars:
+    one compile serves every slot, chunk offset, and real chunk length.
+    ``kv_len`` = q_offset + real_chunk_len (cache positions >= kv_len are
+    masked; defaults to q_offset + C).  ``sparse_items``: [L, P, 7] chunk
+    work-lists (chunk-local q_blk, GLOBAL kv_blk — from
+    ``core.worklist.chunk_items``) entering as DATA, or None for dense
+    masked attention.  Returns (logits [1, V] read at chunk-local
+    ``last_index``, new cache).
+    """
+    B, C = tokens.shape
+    smax = cache.shape[4]
+    slot = jnp.asarray(slot, jnp.int32)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    kv_len = (q_offset + C if kv_len is None
+              else jnp.asarray(kv_len, jnp.int32))
+    positions = q_offset + jnp.arange(C)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+
+    def layer(x, lp, layer_cache, l, items_l):
+        h = common.rmsnorm(x, lp["ln1"])
+        q, k, v = _qkv(h, lp["attn"], cfg, positions)
+        q = constrain(q, "batch", "model", None, None)
+        upd = lambda c, new: jax.lax.dynamic_update_slice(
+            c, new.astype(c.dtype), (slot, 0, q_offset, 0))
+        kc = upd(layer_cache[0], k[0][None])
+        vc = upd(layer_cache[1], v[0][None])
+        ks = jax.lax.dynamic_slice_in_dim(kc, slot, 1, axis=0)
+        vs = jax.lax.dynamic_slice_in_dim(vc, slot, 1, axis=0)
+        window = _window_of(cfg, l)
+        if items_l is not None:
+            o = worklist_attention(
+                q[0], ks[0], vs[0], items_l,
+                block_q=cfg.block_q, block_kv=cfg.block_kv,
+                q_offset=q_offset, kv_len=kv_len)[None]
+        else:
+            kpos = jnp.arange(smax)
+            valid = ((kpos[None, :] <= positions[:, None])
+                     & (kpos[None, :] < kv_len))          # [C, Smax]
+            if window is not None:
+                valid = valid & (kpos[None, :] > positions[:, None] - window)
+            o = _chunk_attend(q, ks, vs, valid[None, None], cfg)
+        o = common.merge_heads(o)
+        x = x + jnp.einsum("bsf,fd->bsd", o, lp["attn"]["wo"])
+        h2 = common.rmsnorm(x, lp["ln2"])
+        x = x + _ffn(h2, lp, cfg)
+        return x, jnp.stack([kc, vc])
+
+    if cfg.loop_mode == "scan":
+        if sparse_items is None:
+            def body(x, scan_in):
+                lp, layer_cache = scan_in
+                x, new_c = layer(x, lp, layer_cache, 0, None)
+                return x, new_c
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        else:
+            def body(x, scan_in):
+                lp, layer_cache, items_l = scan_in
+                x, new_c = layer(x, lp, layer_cache, 0, items_l)
+                return x, new_c
+            x, new_cache = jax.lax.scan(
+                body, x, (params["layers"], cache, jnp.asarray(sparse_items)))
+    else:
+        new_layers = []
+        for l in range(cfg.num_layers):
+            items_l = (None if sparse_items is None
+                       else jnp.asarray(sparse_items[l]))
+            x, nc = layer(x, params["layers"][l], cache[l], l, items_l)
+            new_layers.append(nc)
+        new_cache = jnp.stack(new_layers)
+    if last_index is None:
+        x_last = x[:, -1:, :]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
+    logits = _logits(x_last, params, cfg)[:, 0]
+    return logits, new_cache

@@ -28,7 +28,13 @@ import jax.numpy as jnp
 from repro.attention.policies import policy_by_name
 from repro.core.planner import HPLBPlan, make_plan, permute_attention_params
 from repro.core.sparsity import HeadSparsityProfile
-from repro.core.worklist import WorkList, blocks_for_budget, worklist_from_budgets
+from repro.core.worklist import (
+    WorkList,
+    blocks_for_budget,
+    chunk_item_counts,
+    chunk_items,
+    worklist_from_budgets,
+)
 from repro.models import transformer as tfm
 from repro.models.transformer import TransformerConfig
 from repro.serving.sampler import SamplingParams, sample
@@ -54,6 +60,13 @@ class EngineConfig:
     # power of two (compile count O(log max_seq_len)); "exact" compiles one
     # program per distinct prompt length (the old behavior).
     prefill_buckets: str = "pow2"
+    # chunked prefill (Sarathi-style mixed ticks): each scheduler tick runs
+    # at most one prefill chunk of <= prefill_chunk_tokens alongside the
+    # full decode batch, so admissions never stall decodes.  "monolithic"
+    # prefills whole prompts at admission (the old behavior; kept as the
+    # benchmark baseline).
+    prefill_mode: str = "chunked"    # "chunked" | "monolithic"
+    prefill_chunk_tokens: int = 256  # per-tick token budget (chunk cap)
 
 
 class Engine:
@@ -83,6 +96,24 @@ class Engine:
         self.cache = tfm.init_cache(cfg, engine_cfg.num_slots,
                                     engine_cfg.max_seq_len)
         self._prefill_jit = {}
+        # chunked prefill: one compile per chunk bucket (pow2 from block up
+        # to prefill_chunk_tokens); chunk work-lists enter as DATA padded to
+        # a per-bucket item cap, so chunk offsets never recompile.  Chunks
+        # accumulate into a single-sequence STAGING cache (the scheduler
+        # holds at most one partially-prefilled sequence) merged into the
+        # slot cache once at the final chunk — per-chunk cache traffic is
+        # O(staging), not O(all slots), and decode never sees a
+        # mid-prefill slot.
+        self._prefill_chunk_jit = {}
+        self._chunk_cap: dict[int, int] = {}
+        self._chunk_wl_cache: dict[tuple, np.ndarray] = {}
+        if engine_cfg.prefill_mode == "chunked":
+            # chunk geometry (offsets, buckets, work-list windows) counts
+            # in whole cache blocks; monolithic mode has no such constraint
+            assert engine_cfg.max_seq_len % engine_cfg.block == 0, \
+                "chunked prefill needs max_seq_len % block == 0"
+        self._staging = None  # allocated on first chunked prefill
+        self._merge_jit = None
         self._decode_jit = None
         self._rng = jax.random.PRNGKey(0)
         # position-aware decode selection: ids depend only on the slot's
@@ -91,8 +122,12 @@ class Engine:
         # width so changing selections never change shapes (no recompiles).
         self._decode_ids_by_nblocks: dict[int, np.ndarray] = {}
         self._nb_cap: int | None = None
-        # donation is a no-op warning on backends without buffer aliasing
-        self._donate = jax.default_backend() != "cpu"
+        # the slot cache is exclusively engine-owned and threaded through
+        # every jitted step, so it is always donated: XLA CPU aliases
+        # donated buffers since jax 0.4.x (measured ~200x on the in-place
+        # cache update), and backends without aliasing degrade to a copy
+        # with a warning — never an error.
+        self._donate = True
 
     # -- offline artifacts -------------------------------------------------
     def _permute_params(self, params):
@@ -181,8 +216,13 @@ class Engine:
         for l, nb in enumerate(per_layer):
             for h in range(cfg.num_kv_heads):
                 n = min(int(nb[h]), width)
-                sel = [0] + list(range(nkv_blocks - (n - 1), nkv_blocks))
-                sel = sorted(set(b for b in sel if 0 <= b < nkv_blocks))[:n]
+                # the NEWEST block (holding the token just written) is
+                # always selected — at n == 1 it wins over the sink, else
+                # sink + the n-1 most recent.  (The old `[0] + recent(n-1)`
+                # attended ONLY the sink at minimum budget, silently
+                # dropping recency/causality.)
+                recent = range(max(0, nkv_blocks - max(1, n - 1)), nkv_blocks)
+                sel = sorted(set(([0] if n > 1 else []) + list(recent)))[:n]
                 ids[l, h, :len(sel)] = sel
         return ids
 
@@ -245,6 +285,91 @@ class Engine:
                 run, donate_argnums=(1,) if self._donate else ())
         return self._prefill_jit[bucket]
 
+    def _chunk_bucket(self, chunk_len: int, q_offset: int) -> int:
+        """Compile bucket for one prefill chunk: next power of two (floored
+        at one block), capped at the cache rows LEFT after ``q_offset`` —
+        an uncapped bucket would make the K/V dynamic_update_slice clamp
+        its start index and silently overwrite earlier rows.  The cap is a
+        block multiple (max_seq_len and q_offset both are), so the bucket
+        always spans whole q-blocks for the work-list slicing."""
+        b = self.ecfg.block
+        while b < chunk_len:
+            b *= 2
+        room = self.ecfg.max_seq_len - q_offset
+        assert chunk_len <= room, "chunk overruns the slot cache"
+        return min(b, room)
+
+    def _chunk_item_cap(self, nqc: int) -> int:
+        """Fixed item-array width for a chunk of ``nqc`` q blocks: the max
+        work-list items any nqc-block q-window can hold at max_seq_len
+        (selection counts per q block depend only on the block index and
+        the head budget, so this bounds every prompt bucket)."""
+        got = self._chunk_cap.get(nqc)
+        if got is not None:
+            return got
+        wls = self.worklists_for(self._prefill_bucket(self.ecfg.max_seq_len))
+        nmax = self.ecfg.max_seq_len // self.ecfg.block
+        cap = 1
+        for wl in wls:
+            counts = chunk_item_counts(wl.items, nmax)
+            win = np.convolve(counts, np.ones(min(nqc, nmax), np.int64),
+                              mode="valid")
+            cap = max(cap, int(win.max()))
+        cap = -(-cap // 8) * 8  # friendly multiple
+        self._chunk_cap[nqc] = cap
+        return cap
+
+    def _chunk_worklists(self, prompt_len: int, q_offset: int,
+                         bucket: int) -> np.ndarray:
+        """[L, P, 7] chunk work-lists: the monolithic prompt-bucket lists
+        sliced to this chunk's q-block window (selections are EXACTLY the
+        ones monolithic prefill would run, so chunked == monolithic
+        token-for-token under greedy sampling).  Memoized — the slice
+        depends only on (prompt bucket, offset, bucket), and re-filtering
+        every layer's full list sits on the serving hot path."""
+        assert bucket % self.ecfg.block == 0, "chunk bucket spans q-blocks"
+        assert q_offset % self.ecfg.block == 0, "chunk offsets block-aligned"
+        pbucket = self._prefill_bucket(prompt_len)
+        nqc = bucket // self.ecfg.block
+        ob = q_offset // self.ecfg.block
+        key = (pbucket, ob, nqc)
+        got = self._chunk_wl_cache.get(key)
+        if got is None:
+            cap = self._chunk_item_cap(nqc)
+            full = self.worklists_for(pbucket)
+            got = np.stack([
+                chunk_items(wl.items, ob, nqc, pad_to=cap) for wl in full])
+            self._chunk_wl_cache[key] = got
+        return got
+
+    def _prefill_chunk_fn(self, bucket: int):
+        """Jitted chunked-prefill step for one chunk compile bucket.
+
+        The slot cache threads through and is donated (same zero-copy
+        contract as monolithic prefill); ``slot`` / ``q_offset`` / ``kv_len``
+        / ``last_idx`` are traced scalars and sparse work-lists enter as
+        data, so one compile serves every slot, offset, and selection."""
+        if bucket not in self._prefill_chunk_jit:
+            sparse = self.ecfg.attention == "sparse"
+
+            def run(params, cache, tokens, slot, off, kv_len, last_idx,
+                    items):
+                return tfm.prefill_chunk(
+                    params, cache, tokens, slot, off, self.cfg,
+                    kv_len=kv_len, sparse_items=items, last_index=last_idx)
+
+            def run_dense(params, cache, tokens, slot, off, kv_len,
+                          last_idx):
+                return tfm.prefill_chunk(
+                    params, cache, tokens, slot, off, self.cfg,
+                    kv_len=kv_len, sparse_items=None, last_index=last_idx)
+
+            donate = (1,) if self._donate else ()
+            self._prefill_chunk_jit[bucket] = (
+                jax.jit(run, donate_argnums=donate) if sparse
+                else jax.jit(run_dense, donate_argnums=donate))
+        return self._prefill_chunk_jit[bucket]
+
     def _decode_fn(self):
         """Jitted decode step.  Sparse block ids enter as DATA ([L, B, Hkv,
         nb] per-slot selections) so position-aware re-selection at block
@@ -252,15 +377,15 @@ class Engine:
         if self._decode_jit is None:
             sparse = self.ecfg.attention == "sparse"
 
-            def run(params, cache, token, pos, bids):
+            def run(params, cache, token, pos, bids, act):
                 return tfm.decode_step(params, cache, token, pos, self.cfg,
                                        block_ids=bids,
-                                       cache_len=pos + 1)
+                                       cache_len=pos + 1, active=act)
 
-            def run_dense(params, cache, token, pos):
+            def run_dense(params, cache, token, pos, act):
                 return tfm.decode_step(params, cache, token, pos, self.cfg,
                                        block_ids=None,
-                                       cache_len=pos + 1)
+                                       cache_len=pos + 1, active=act)
 
             donate = (1,) if self._donate else ()
             self._decode_jit = (jax.jit(run, donate_argnums=donate) if sparse
@@ -283,14 +408,67 @@ class Engine:
         self._rng, sub = jax.random.split(self._rng)
         return int(sample(logits, sub, sampling)[0])
 
+    def prefill_chunk_into_slot(self, tokens: np.ndarray, slot: int,
+                                q_offset: int, prompt_len: int,
+                                sampling: SamplingParams = SamplingParams(),
+                                is_final: bool = True) -> int | None:
+        """Prefill one chunk of a sequence into its cache slot.
+
+        ``tokens``: the chunk's real tokens [c]; ``q_offset``: tokens of
+        this sequence already resident in the slot (block-aligned — the
+        scheduler only emits block-aligned non-final chunks).  Returns the
+        first sampled token when ``is_final`` (logits read at the chunk's
+        last real row), else None.
+        """
+        if self._staging is None:
+            self._staging = tfm.init_cache(self.cfg, 1,
+                                           self.ecfg.max_seq_len)
+        tokens = np.asarray(tokens, np.int32)
+        c = tokens.shape[-1]
+        bucket = self._chunk_bucket(c, q_offset)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :c] = tokens
+        run = self._prefill_chunk_fn(bucket)
+        if self.ecfg.attention == "sparse":
+            items = jnp.asarray(
+                self._chunk_worklists(prompt_len, q_offset, bucket))
+            logits, self._staging = run(self.params, self._staging,
+                                        jnp.asarray(toks), 0, q_offset,
+                                        q_offset + c, c - 1, items)
+        else:
+            logits, self._staging = run(self.params, self._staging,
+                                        jnp.asarray(toks), 0, q_offset,
+                                        q_offset + c, c - 1)
+        if not is_final:
+            return None
+        self.cache = self._merge_staging(slot)
+        self._rng, sub = jax.random.split(self._rng)
+        return int(sample(logits, sub, sampling)[0])
+
+    def _merge_staging(self, slot: int):
+        """One donated dynamic_update_slice lands the staged sequence in
+        its slot — the same single-copy insert monolithic prefill does.
+        Stale staging rows past the new sequence ride along exactly like
+        monolithic bucket padding: masked by position everywhere."""
+        if self._merge_jit is None:
+            def merge(cache, staging, slot):
+                return jax.lax.dynamic_update_slice(
+                    cache, staging.astype(cache.dtype),
+                    (0, 0, slot, 0, 0, 0))
+            self._merge_jit = jax.jit(
+                merge, donate_argnums=(0,) if self._donate else ())
+        return self._merge_jit(self.cache, self._staging, slot)
+
     def decode_slots(self, slots, tokens, positions,
                      sampling: SamplingParams = SamplingParams()):
         """Advance all slots one step; returns sampled tokens for `slots`."""
         run = self._decode_fn()
         tok_all = np.zeros((self.ecfg.num_slots,), np.int32)
         pos_all = np.zeros((self.ecfg.num_slots,), np.int32)
+        act_all = np.zeros((self.ecfg.num_slots,), bool)
         tok_all[list(slots)] = tokens
         pos_all[list(slots)] = positions
+        act_all[list(slots)] = True  # padded slots must not write KV
         if self.ecfg.attention == "sparse":
             # per-slot position-aware selection, refreshed at block
             # boundaries (ids are a function of the slot's block count)
@@ -302,31 +480,57 @@ class Engine:
             logits, self.cache = run(self.params, self.cache,
                                      jnp.asarray(tok_all),
                                      jnp.asarray(pos_all),
-                                     jnp.asarray(bids))
+                                     jnp.asarray(bids),
+                                     jnp.asarray(act_all))
         else:
             logits, self.cache = run(self.params, self.cache,
                                      jnp.asarray(tok_all),
-                                     jnp.asarray(pos_all))
+                                     jnp.asarray(pos_all),
+                                     jnp.asarray(act_all))
         self._rng, sub = jax.random.split(self._rng)
         toks = sample(logits, sub, sampling)
         return np.asarray(toks)[list(slots)]
 
-    def serve(self, prompts: list[np.ndarray],
-              sampling: SamplingParams = SamplingParams()) -> list[Request]:
-        """Continuous-batching serve of a list of prompts."""
-        batcher = ContinuousBatcher(
+    def make_batcher(self) -> ContinuousBatcher:
+        """A ContinuousBatcher sized for this engine (chunked mixed ticks
+        when ``prefill_mode == "chunked"``, else monolithic)."""
+        chunked = self.ecfg.prefill_mode == "chunked"
+        return ContinuousBatcher(
             num_slots=self.ecfg.num_slots,
             num_blocks=self.ecfg.num_slots
             * (self.ecfg.max_seq_len // self.ecfg.block),
             max_seq_len=self.ecfg.max_seq_len,
-            block=self.ecfg.block)
+            block=self.ecfg.block,
+            token_budget=self.ecfg.prefill_chunk_tokens if chunked else None)
+
+    def step_fns(self, sampling: SamplingParams = SamplingParams()):
+        """(prefill_chunk_fn, decode_fn) closures for a ContinuousBatcher."""
+        def prefill_chunk(toks, slot, q_offset, is_final, prompt_len):
+            if self.ecfg.prefill_mode == "monolithic":
+                # whole prompt in one chunk: the prompt-bucketed hot path
+                return self.prefill_into_slot(toks[0], slot, sampling)
+            return self.prefill_chunk_into_slot(
+                toks[0], slot, q_offset, prompt_len, sampling,
+                is_final=is_final)
+
+        def decode(slots, toks, pos):
+            return self.decode_slots(slots, toks, pos, sampling)
+
+        return prefill_chunk, decode
+
+    def serve(self, prompts: list[np.ndarray],
+              sampling: SamplingParams = SamplingParams()) -> list[Request]:
+        """Continuous-batching serve of a list of prompts.
+
+        Returns ONE Request per submitted prompt, in rid (= input) order:
+        completed requests carry their generated tokens; over-length
+        requests come back with ``rejected=True`` and no tokens, so zipping
+        results with inputs never misaligns.
+        """
+        batcher = self.make_batcher()
         for i, pr in enumerate(prompts):
             batcher.submit(Request(rid=i, prompt=np.asarray(pr, np.int32),
                                    sampling=sampling))
-        done = batcher.run(
-            lambda toks, slot: self.prefill_into_slot(toks[0], slot,
-                                                      sampling),
-            lambda slots, toks, pos: self.decode_slots(slots, toks, pos,
-                                                       sampling))
+        done = batcher.run(*self.step_fns(sampling))
         log.info("served %d requests: %s", len(done), batcher.stats)
         return sorted(done, key=lambda r: r.rid)

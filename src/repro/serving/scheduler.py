@@ -1,17 +1,41 @@
-"""Continuous-batching scheduler (prefill + decode interleave).
+"""Continuous-batching scheduler: chunked prefill + mixed prefill/decode
+ticks (Sarathi-style).
 
-Standard serving control loop: a FIFO of pending requests; each tick admits
-as many pending requests as cache slots/blocks allow (running their
-prefills), then advances ALL active sequences by one decode step as a single
-batch.  Completion on stop-token or max_tokens; slots and blocks are
-recycled.  This is the host-side half of the paper's serving story — the
-device-side half (the S-HPLB attention itself) lives in the engine.
+The serving control loop used to run whole-prompt prefills at admission,
+stalling every active decode for the full prefill latency of each arrival —
+exactly the inter-token tail the paper's balanced attention is supposed to
+protect.  Instead, each tick now fills a TOKEN BUDGET with at most one
+prefill CHUNK plus the full decode batch:
+
+- prompts are split into block-aligned chunks (only the final chunk may be
+  partial, so every chunk's cache offset stays block-aligned for the
+  work-list slicing in the engine);
+- the chunk size adapts to the decode load: ``max(block, token_budget -
+  num_active_decodes)`` tokens, so a long-context arrival is amortized over
+  many ticks and decodes keep stepping;
+- ``token_budget=None`` degrades to the old monolithic behavior (one
+  whole-prompt chunk at admission) — kept as the benchmark baseline.
+
+Correctness contracts (all previously violated):
+
+- over-length requests are REJECTED but still returned (``rejected=True``)
+  in finish order, so ``completed + rejected == submitted`` and callers can
+  zip results with inputs;
+- the token sampled at prefill passes through the same completion check as
+  decode tokens (a stop-token emitted at prefill ends the request, and
+  ``max_tokens=1`` yields exactly one token);
+- slots and blocks are recycled through admit -> retire cycles.
+
+Completion on stop-token or max_tokens.  This is the host-side half of the
+paper's serving story — the device-side half (the S-HPLB attention itself)
+lives in the engine.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Any, Callable
+from typing import Callable
 
 import numpy as np
 
@@ -30,49 +54,108 @@ class Request:
     # filled during execution:
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    rejected: bool = False              # refused at admission (over-length)
+    prefill_pos: int = 0                # prompt tokens prefilled so far
+    # wall-clock telemetry (scheduler clock): submit time + one stamp per
+    # generated token -> TTFT / inter-token latency in the serving bench
+    t_submit: float | None = None
+    token_times: list[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def ttft(self) -> float | None:
+        if self.t_submit is None or not self.token_times:
+            return None
+        return self.token_times[0] - self.t_submit
+
+    @property
+    def itl(self) -> list[float]:
+        return list(np.diff(self.token_times)) if len(
+            self.token_times) > 1 else []
 
 
 @dataclasses.dataclass
 class SchedulerStats:
     admitted: int = 0
     completed: int = 0
+    rejected: int = 0
     decode_steps: int = 0
     prefill_tokens: int = 0
+    prefill_chunks: int = 0
 
 
 class ContinuousBatcher:
-    """Drives (prefill_fn, decode_fn) over a stream of requests.
+    """Drives (prefill_chunk_fn, decode_fn) over a stream of requests.
 
-    prefill_fn(tokens[1, S], slot) -> first sampled token
+    prefill_chunk_fn(tokens[1, C], slot, q_offset, is_final, prompt_len)
+        -> first sampled token when ``is_final`` else None
     decode_fn(active_slots, tokens, positions) -> next tokens (per slot)
     (engine-provided closures that own params/cache device state)
+
+    ``token_budget``: per-tick token budget shared by one prefill chunk and
+    the decode batch (each active decode counts one token).  ``None`` =
+    monolithic prefill (whole prompt in one chunk at admission).
     """
 
     def __init__(self, *, num_slots: int, num_blocks: int,
-                 max_seq_len: int, block: int = 128):
+                 max_seq_len: int, block: int = 128,
+                 token_budget: int | None = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.alloc = BlockAllocator(num_blocks, block)
         self.max_seq_len = max_seq_len
+        self.block = block
+        self.token_budget = token_budget
         self.pending: deque[Request] = deque()
         self.active: dict[int, Request] = {}
+        self.prefilling: Request | None = None
         self.lengths: dict[int, int] = {}
         self.stats = SchedulerStats()
         self._slots_free = list(range(num_slots))
         self._slot_of: dict[int, int] = {}
+        self._clock = clock
 
     def submit(self, req: Request):
+        req.t_submit = self._clock()
         self.pending.append(req)
 
     @property
     def busy(self) -> bool:
-        return bool(self.pending or self.active)
+        return bool(self.pending or self.active or self.prefilling)
 
-    def _admit(self, prefill_fn):
+    @property
+    def num_free_slots(self) -> int:
+        return len(self._slots_free)
+
+    # -- completion (ONE check for prefill-sampled and decode tokens) --------
+    def _record_token(self, req: Request, token: int) -> bool:
+        """Append a sampled token; True iff the request just completed."""
+        req.generated.append(int(token))
+        req.token_times.append(self._clock())
+        sp = req.sampling
+        return (len(req.generated) >= sp.max_tokens
+                or (sp.stop_token is not None
+                    and int(token) == sp.stop_token))
+
+    # -- lifecycle -----------------------------------------------------------
+    def _admit(self, prefill_chunk_fn, finished: list[Request]):
+        """Claim slots/blocks for pending requests.
+
+        Chunked mode holds at most ONE partially-prefilled sequence (its
+        chunks run in ``_prefill_step``); monolithic mode prefills every
+        admitted prompt whole, right here (the old behavior, kept as the
+        benchmark baseline).  Over-length requests are rejected AND
+        returned via ``finished`` so no request is ever silently dropped.
+        """
         while self.pending and self._slots_free:
+            if self.token_budget is not None and self.prefilling is not None:
+                break
             req = self.pending[0]
             need = len(req.prompt) + req.sampling.max_tokens
             if need > self.max_seq_len:
                 req.done = True
+                req.rejected = True
                 self.pending.popleft()
+                self.stats.rejected += 1
+                finished.append(req)
                 log.warning("request %d too long (%d) — rejected",
                             req.rid, need)
                 continue
@@ -82,26 +165,69 @@ class ContinuousBatcher:
             self._slot_of[req.rid] = slot
             self.alloc.allocate(req.rid, need)
             self.pending.popleft()
-            first = prefill_fn(req.prompt[None, :], slot)
-            req.generated.append(int(first))
-            self.active[req.rid] = req
-            self.lengths[req.rid] = len(req.prompt) + 1
             self.stats.admitted += 1
-            self.stats.prefill_tokens += len(req.prompt)
+            if self.token_budget is None:
+                first = prefill_chunk_fn(req.prompt[None, :], slot, 0,
+                                         True, len(req.prompt))
+                req.prefill_pos = len(req.prompt)
+                self.stats.prefill_tokens += len(req.prompt)
+                self.stats.prefill_chunks += 1
+                self._finish_prefill(req, first, finished)
+            else:
+                self.prefilling = req
+
+    def _prefill_step(self, prefill_chunk_fn, finished: list[Request]):
+        """Run at most one prefill chunk, sized to the tick's leftover
+        token budget (decodes reserve one token each)."""
+        req = self.prefilling
+        if req is None:
+            return
+        remaining = len(req.prompt) - req.prefill_pos
+        budget = max(self.block, self.token_budget - len(self.active))
+        chunk = min(remaining, budget)
+        final = chunk == remaining
+        if not final:
+            # non-final chunks stay block-aligned so every chunk's cache
+            # offset is a block boundary (work-list slicing relies on it);
+            # chunk == budget >= block here, so flooring keeps chunk >= block
+            chunk = (chunk // self.block) * self.block
+        toks = req.prompt[None, req.prefill_pos:req.prefill_pos + chunk]
+        first = prefill_chunk_fn(toks, self._slot_of[req.rid],
+                                 req.prefill_pos, final, len(req.prompt))
+        req.prefill_pos += chunk
+        self.stats.prefill_tokens += chunk
+        self.stats.prefill_chunks += 1
+        if final:
+            self.prefilling = None
+            self._finish_prefill(req, first, finished)
+
+    def _finish_prefill(self, req: Request, first, finished: list[Request]):
+        """Prefill done: record the first sampled token and either retire
+        (stop token / max_tokens=1 — the check decode uses) or activate."""
+        self.lengths[req.rid] = len(req.prompt) + 1
+        if self._record_token(req, int(first)):
+            self._retire(req)
+            finished.append(req)
+        else:
+            self.active[req.rid] = req
 
     def _retire(self, req: Request):
         req.done = True
         slot = self._slot_of.pop(req.rid)
         self._slots_free.append(slot)
         self.alloc.free(req.rid)
-        del self.active[req.rid]
-        del self.lengths[req.rid]
+        self.active.pop(req.rid, None)
+        self.lengths.pop(req.rid, None)
         self.stats.completed += 1
 
-    def tick(self, prefill_fn: Callable, decode_fn: Callable) -> list[Request]:
-        """One scheduler iteration; returns requests completed this tick."""
-        self._admit(prefill_fn)
-        finished = []
+    def tick(self, prefill_chunk_fn: Callable,
+             decode_fn: Callable) -> list[Request]:
+        """One scheduler iteration; returns requests finished this tick
+        (completed AND rejected — ``completed + rejected == submitted``)."""
+        finished: list[Request] = []
+        self._admit(prefill_chunk_fn, finished)
+        if self.token_budget is not None:
+            self._prefill_step(prefill_chunk_fn, finished)
         if self.active:
             rids = sorted(self.active)
             slots = [self._slot_of[r] for r in rids]
@@ -111,24 +237,23 @@ class ContinuousBatcher:
                                  np.int32)
             nxt = decode_fn(slots, tokens, positions)
             self.stats.decode_steps += 1
+            done_now = []
             for r, t in zip(rids, np.asarray(nxt)):
                 req = self.active[r]
-                req.generated.append(int(t))
                 self.lengths[r] += 1
-                sp = req.sampling
-                if (len(req.generated) >= sp.max_tokens
-                        or (sp.stop_token is not None
-                            and int(t) == sp.stop_token)):
-                    finished.append(req)
-        for req in finished:
-            self._retire(req)
+                if self._record_token(req, int(t)):
+                    done_now.append(req)
+            for req in done_now:
+                self._retire(req)
+                finished.append(req)
         return finished
 
-    def run(self, prefill_fn, decode_fn, max_ticks: int = 100_000):
-        """Drain all requests; returns completed requests in finish order."""
+    def run(self, prefill_chunk_fn, decode_fn, max_ticks: int = 100_000):
+        """Drain all requests; returns finished requests (completed and
+        rejected) in finish order."""
         done = []
         ticks = 0
         while self.busy and ticks < max_ticks:
-            done.extend(self.tick(prefill_fn, decode_fn))
+            done.extend(self.tick(prefill_chunk_fn, decode_fn))
             ticks += 1
         return done

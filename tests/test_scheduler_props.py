@@ -1,0 +1,153 @@
+"""Property-style scheduler invariants over random request streams.
+
+A fake engine tracks every slot/block mutation the scheduler requests, so
+the invariants the serving loop must uphold are checked end-to-end:
+
+- conservation: ``completed + rejected == submitted`` — no request is ever
+  silently dropped (rejected ones come back flagged);
+- slot/block recycling: after drain, every slot and block is free again,
+  and concurrency never exceeded the pools;
+- no decode tick touches a slot that is free or still mid-prefill;
+- chunked prefill covers each admitted prompt exactly once, in order, with
+  block-aligned non-final chunks;
+- per-request output contracts: <= max_tokens tokens, stop-token is final,
+  rejected requests generate nothing.
+
+Pure host-side (no jax) — runs in milliseconds, so many random streams.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.sampler import SamplingParams
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+class FakeEngine:
+    """Slot-accurate stand-in for the device engine."""
+
+    def __init__(self, batcher: ContinuousBatcher, rng, stop_token=None):
+        self.b = batcher
+        self.rng = rng
+        self.stop_token = stop_token
+        self.prefilled: dict[int, int] = {}   # slot -> tokens written
+        self.owner: dict[int, int] = {}       # slot -> rid
+        self.violations: list[str] = []
+
+    def _rid_of_slot(self, slot):
+        for rid, s in self.b._slot_of.items():
+            if s == slot:
+                return rid
+        return None
+
+    def prefill(self, toks, slot, q_offset, is_final, prompt_len):
+        rid = self._rid_of_slot(slot)
+        if rid is None:
+            self.violations.append(f"prefill into unclaimed slot {slot}")
+        if q_offset == 0:
+            self.prefilled[slot] = 0
+            self.owner[slot] = rid
+        if self.prefilled.get(slot) != q_offset:
+            self.violations.append(
+                f"chunk gap/overlap at slot {slot}: cache has "
+                f"{self.prefilled.get(slot)}, chunk starts {q_offset}")
+        if not is_final and toks.shape[-1] % self.b.block:
+            self.violations.append("non-final chunk not block-aligned")
+        self.prefilled[slot] = q_offset + toks.shape[-1]
+        if is_final and self.prefilled[slot] != prompt_len:
+            self.violations.append(
+                f"prompt not covered: {self.prefilled[slot]} != {prompt_len}")
+        return int(self.rng.integers(0, 50)) if is_final else None
+
+    def decode(self, slots, toks, pos):
+        legal = {self.b._slot_of[r] for r in self.b.active}
+        for s in slots:
+            if s not in legal:
+                self.violations.append(
+                    f"decode tick mutates non-active slot {s}")
+            if self.owner.get(s) != self._rid_of_slot(s):
+                self.violations.append(
+                    f"decode into slot {s} not owned by its request")
+        return self.rng.integers(0, 50, size=len(slots)).astype(np.int32)
+
+
+def _stream(seed: int, token_budget):
+    rng = np.random.default_rng(seed)
+    num_slots = int(rng.integers(1, 5))
+    max_seq_len = 512
+    block = 128
+    num_blocks = num_slots * (max_seq_len // block)
+    b = ContinuousBatcher(num_slots=num_slots, num_blocks=num_blocks,
+                          max_seq_len=max_seq_len, block=block,
+                          token_budget=token_budget)
+    eng = FakeEngine(b, rng, stop_token=5)
+    n = int(rng.integers(3, 16))
+    reqs = []
+    for i in range(n):
+        # a few over-length prompts mixed in (1/6 chance)
+        length = (int(rng.integers(max_seq_len, max_seq_len * 2))
+                  if rng.random() < 1 / 6
+                  else int(rng.integers(1, 450)))
+        sp = SamplingParams(
+            max_tokens=int(rng.integers(1, 8)),
+            stop_token=5 if rng.random() < 0.5 else None)
+        reqs.append(Request(rid=i, prompt=np.arange(length) % 256,
+                            sampling=sp))
+    # stagger arrivals: submit a prefix, run a few ticks, submit the rest
+    cut = int(rng.integers(0, n + 1))
+    for r in reqs[:cut]:
+        b.submit(r)
+    done = []
+    for _ in range(int(rng.integers(0, 5))):
+        done.extend(b.tick(eng.prefill, eng.decode))
+    for r in reqs[cut:]:
+        b.submit(r)
+    done.extend(b.run(eng.prefill, eng.decode))
+    return b, eng, reqs, done
+
+
+@pytest.mark.parametrize("token_budget", [None, 128, 256, 512])
+@pytest.mark.parametrize("seed", range(12))
+def test_stream_invariants(seed, token_budget):
+    b, eng, reqs, done = _stream(seed, token_budget)
+    assert eng.violations == []
+    assert not b.busy
+    # conservation: every submitted request comes back exactly once
+    assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
+    assert b.stats.completed + b.stats.rejected == len(reqs)
+    # slot + block recycling
+    assert sorted(b._slots_free) == list(range(b.num_free_slots))
+    assert b.num_free_slots == len(set(b._slots_free))
+    assert b.alloc.free_blocks == b.alloc.num_blocks
+    assert b._slot_of == {}
+    # per-request contracts
+    for r in done:
+        assert r.done
+        sp = r.sampling
+        if r.rejected:
+            assert r.generated == []
+            assert len(r.prompt) + sp.max_tokens > b.max_seq_len
+            continue
+        assert 1 <= len(r.generated) <= sp.max_tokens
+        if sp.stop_token is not None and sp.stop_token in r.generated:
+            assert r.generated[-1] == sp.stop_token
+            assert r.generated.count(sp.stop_token) == 1
+        assert len(r.token_times) == len(r.generated)
+        assert r.ttft is not None and r.ttft >= 0
+
+
+@pytest.mark.parametrize("token_budget", [None, 256])
+def test_slot_reuse_across_admit_retire_cycles(token_budget):
+    """More requests than slots forces admit -> retire -> admit reuse; the
+    same physical slots must serve multiple requests sequentially."""
+    rng = np.random.default_rng(99)
+    b = ContinuousBatcher(num_slots=2, num_blocks=8, max_seq_len=512,
+                          block=128, token_budget=token_budget)
+    eng = FakeEngine(b, rng)
+    for i in range(7):
+        b.submit(Request(rid=i, prompt=np.arange(100),
+                         sampling=SamplingParams(max_tokens=3)))
+    done = b.run(eng.prefill, eng.decode)
+    assert eng.violations == []
+    assert len(done) == 7 and b.stats.completed == 7
+    # only 2 physical slots existed; every request got one
+    assert b.num_free_slots == 2

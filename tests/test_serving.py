@@ -59,8 +59,8 @@ class TestEngineFidelity:
 
 class TestEngineHotPath:
     def test_prefill_bucketing_bounds_compiles(self, params, profile):
-        """Distinct prompt lengths map onto pow2 buckets: compile count is
-        O(log max_seq_len), not O(#lengths)."""
+        """Distinct prompt lengths map onto pow2 chunk buckets: compile
+        count is O(log chunk_tokens), not O(#lengths)."""
         eng = Engine(CFG, params,
                      EngineConfig(attention="sparse", budget_per_head=256,
                                   max_seq_len=256, num_slots=4),
@@ -68,8 +68,8 @@ class TestEngineHotPath:
         prompts = [np.arange(n) % 256 for n in (10, 23, 40, 100, 129, 200)]
         done = eng.serve(prompts, SamplingParams(max_tokens=3))
         assert len(done) == len(prompts)
-        # 6 lengths -> at most {128, 256} buckets
-        assert set(eng._prefill_jit) <= {128, 256}
+        # 6 lengths -> at most {128, 256} chunk buckets
+        assert set(eng._prefill_chunk_jit) <= {128, 256}
 
     def test_bucketed_matches_exact_prefill(self, params, profile):
         """Padding a prompt up to its bucket changes nothing downstream."""
@@ -77,13 +77,89 @@ class TestEngineHotPath:
             CFG, params,
             EngineConfig(attention="sparse", budget_per_head=256,
                          max_seq_len=256, num_slots=2,
-                         prefill_buckets=mode),
+                         prefill_buckets=mode, prefill_mode="monolithic"),
             profile=profile)
         prompts = [np.random.default_rng(3).integers(0, 256, size=(37,))]
         sp = SamplingParams(max_tokens=6)  # greedy
         a = mk("pow2").serve(prompts, sp)
         b = mk("exact").serve(prompts, sp)
         assert a[0].generated == b[0].generated
+
+    @pytest.mark.parametrize("attn", ["sparse", "dense"])
+    def test_chunked_matches_monolithic_serve(self, params, profile, attn):
+        """Greedy generations are IDENTICAL between chunked and monolithic
+        prefill — chunk work-lists are slices of the monolithic lists and
+        the chunk executor accumulates the same tiles in the same order."""
+        prompts = [np.random.default_rng(i).integers(0, 256, size=(n,))
+                   for i, n in enumerate((40, 300, 130, 70))]
+        sp = SamplingParams(max_tokens=8)  # greedy
+        outs = {}
+        for mode in ("monolithic", "chunked"):
+            eng = Engine(
+                CFG, params,
+                EngineConfig(attention=attn, budget_per_head=512,
+                             max_seq_len=512, num_slots=4,
+                             prefill_mode=mode, prefill_chunk_tokens=128),
+                profile=profile if attn == "sparse" else None)
+            outs[mode] = [r.generated for r in eng.serve(prompts, sp)]
+        assert outs["chunked"] == outs["monolithic"]
+
+    @pytest.mark.parametrize("attn,max_seq,chunk,plen", [
+        # final chunk's pow2 bucket exceeds the cache rows left after
+        # q_offset (regression: the K/V write clamped and overwrote
+        # earlier rows)
+        ("dense", 896, 512, 880),
+        ("sparse", 896, 512, 880),
+        # chunk budget NOT a pow2 multiple of block (regression: the
+        # bucket spanned more q-blocks than the work-list slice covered)
+        ("sparse", 512, 192, 300),
+    ])
+    def test_chunked_matches_monolithic_odd_geometry(self, params, profile,
+                                                     attn, max_seq, chunk,
+                                                     plen):
+        prompts = [np.random.default_rng(7).integers(0, 256, size=(plen,)),
+                   np.random.default_rng(8).integers(0, 256, size=(70,))]
+        sp = SamplingParams(max_tokens=8)  # greedy
+        outs = {}
+        for mode in ("monolithic", "chunked"):
+            eng = Engine(
+                CFG, params,
+                EngineConfig(attention=attn, budget_per_head=max_seq,
+                             max_seq_len=max_seq, num_slots=2,
+                             prefill_mode=mode, prefill_chunk_tokens=chunk),
+                profile=profile if attn == "sparse" else None)
+            outs[mode] = [r.generated for r in eng.serve(prompts, sp)]
+        assert outs["chunked"] == outs["monolithic"]
+
+    def test_mixed_ticks_interleave_prefill_and_decode(self, params,
+                                                       profile):
+        """A long admission no longer stalls the decode batch: while the
+        long prompt chunk-prefills, earlier requests keep decoding."""
+        eng = Engine(CFG, params,
+                     EngineConfig(attention="sparse", budget_per_head=512,
+                                  max_seq_len=512, num_slots=4,
+                                  prefill_chunk_tokens=128),
+                     profile=profile)
+        sp = SamplingParams(max_tokens=12)
+        batcher = eng.make_batcher()
+        pf, df = eng.step_fns(sp)
+        batcher.submit(Request(rid=0, prompt=np.arange(30) % 256,
+                               sampling=sp))
+        batcher.tick(pf, df)          # rid 0 prefilled + first decode
+        assert 0 in batcher.active
+        batcher.submit(Request(rid=1, prompt=np.arange(400) % 256,
+                               sampling=sp))
+        n0 = len(batcher.active[0].generated)
+        ticks_while_prefilling = 0
+        while batcher.prefilling is not None or batcher.pending:
+            batcher.tick(pf, df)
+            ticks_while_prefilling += 1
+        # the 400-token prompt needed multiple chunk ticks, and rid 0
+        # decoded through every one of them
+        assert ticks_while_prefilling >= 3
+        assert len(batcher.active[0].generated) >= n0 + 3
+        batcher.run(pf, df)
+        assert batcher.stats.completed == 2
 
     def test_decode_selection_tracks_position(self, params, profile):
         """Block selection is recomputed as slots cross block boundaries
@@ -99,19 +175,46 @@ class TestEngineHotPath:
         widths = {a.shape[-1] for a in eng._decode_ids_by_nblocks.values()}
         assert widths == {eng._nb_cap}
 
+    def test_decode_newest_block_at_floor_budget(self, params, profile):
+        """Regression: at the minimum budget (floor == block -> exactly one
+        block per kv head) decode must attend the block holding the token
+        just written.  The old `[0] + recent(n-1)` selection attended ONLY
+        the sink at n == 1, silently losing recency/causality."""
+        eng = Engine(CFG, params,
+                     EngineConfig(attention="sparse", budget_per_head=128,
+                                  allocator="uniform", max_seq_len=512,
+                                  num_slots=1),
+                     profile=profile)
+        for nkv in (1, 2, 3, 4):
+            ids = eng.decode_block_ids(nkv * 128)
+            assert ((ids >= 0).sum(-1) == 1).all()    # floor budget: 1 block
+            assert (ids[..., 0] == nkv - 1).all()     # ...and it's the newest
+        # at any budget, the newest block is in every head's selection
+        eng2 = Engine(CFG, params,
+                      EngineConfig(attention="sparse", budget_per_head=256,
+                                   max_seq_len=512, num_slots=1),
+                      profile=profile)
+        ids = eng2.decode_block_ids(512)
+        assert (ids == 512 // 128 - 1).any(-1).all()
+
+
+def _fake_fns(first_token=1, decode_token=1):
+    calls = {"prefill": 0, "decode": 0}
+
+    def prefill(toks, slot, q_offset, is_final, prompt_len):
+        calls["prefill"] += 1
+        return first_token if is_final else None
+
+    def decode(slots, toks, pos):
+        calls["decode"] += 1
+        return np.full(len(slots), decode_token, np.int32)
+
+    return prefill, decode, calls
+
 
 class TestScheduler:
     def test_admission_respects_slots(self):
-        calls = {"prefill": 0, "decode": 0}
-
-        def prefill(toks, slot):
-            calls["prefill"] += 1
-            return 1
-
-        def decode(slots, toks, pos):
-            calls["decode"] += 1
-            return np.ones(len(slots), np.int32)
-
+        prefill, decode, calls = _fake_fns()
         b = ContinuousBatcher(num_slots=2, num_blocks=64, max_seq_len=256)
         for i in range(5):
             b.submit(Request(rid=i, prompt=np.arange(10),
@@ -122,12 +225,72 @@ class TestScheduler:
         assert b.stats.completed == 5
         assert not b.busy
 
-    def test_rejects_too_long(self):
+    def test_rejected_requests_are_returned(self):
+        """Over-length requests are refused but NOT dropped: they come back
+        flagged, so completed + rejected == submitted and result lists zip
+        with the inputs."""
+        prefill, decode, _ = _fake_fns()
         b = ContinuousBatcher(num_slots=2, num_blocks=64, max_seq_len=64)
         b.submit(Request(rid=0, prompt=np.arange(100),
                          sampling=SamplingParams(max_tokens=10)))
-        done = b.run(lambda t, s: 0, lambda s, t, p: np.zeros(len(s)))
-        assert len(done) == 0 and not b.busy
+        b.submit(Request(rid=1, prompt=np.arange(10),
+                         sampling=SamplingParams(max_tokens=3)))
+        done = b.run(prefill, decode)
+        assert len(done) == 2 and not b.busy
+        by_rid = {r.rid: r for r in done}
+        assert by_rid[0].rejected and by_rid[0].done
+        assert by_rid[0].generated == []
+        assert not by_rid[1].rejected
+        assert b.stats.completed + b.stats.rejected == 2
+
+    def test_stop_token_at_prefill_ends_request(self):
+        """A prefill that samples the stop token must finish the request —
+        the completion check is shared with the decode path."""
+        stop = 7
+        prefill, decode, calls = _fake_fns(first_token=stop)
+        b = ContinuousBatcher(num_slots=2, num_blocks=64, max_seq_len=256)
+        b.submit(Request(rid=0, prompt=np.arange(10),
+                         sampling=SamplingParams(max_tokens=50,
+                                                 stop_token=stop)))
+        done = b.run(prefill, decode)
+        assert len(done) == 1
+        assert done[0].generated == [stop]
+        assert calls["decode"] == 0  # never decoded past the stop
+
+    def test_max_tokens_one_samples_exactly_one(self):
+        prefill, decode, calls = _fake_fns()
+        b = ContinuousBatcher(num_slots=2, num_blocks=64, max_seq_len=256)
+        b.submit(Request(rid=0, prompt=np.arange(10),
+                         sampling=SamplingParams(max_tokens=1)))
+        done = b.run(prefill, decode)
+        assert done[0].generated == [1]
+        assert calls["decode"] == 0
+
+    def test_chunked_prefill_covers_prompt_block_aligned(self):
+        """Token-budget ticks split the prompt into block-aligned chunks
+        (only the final chunk may be partial) that exactly cover it."""
+        chunks = []
+
+        def prefill(toks, slot, q_offset, is_final, prompt_len):
+            chunks.append((q_offset, toks.shape[-1], is_final))
+            return 1 if is_final else None
+
+        def decode(slots, toks, pos):
+            return np.ones(len(slots), np.int32)
+
+        b = ContinuousBatcher(num_slots=2, num_blocks=64, max_seq_len=1024,
+                              block=128, token_budget=256)
+        b.submit(Request(rid=0, prompt=np.arange(700),
+                         sampling=SamplingParams(max_tokens=2)))
+        b.run(prefill, decode)
+        assert sum(c for _, c, _ in chunks) == 700
+        pos = 0
+        for off, c, final in chunks:
+            assert off == pos and off % 128 == 0
+            if not final:
+                assert c % 128 == 0
+            pos += c
+        assert chunks[-1][2] and b.stats.prefill_chunks == len(chunks)
 
 
 class TestBlockAllocator:
