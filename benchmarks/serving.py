@@ -13,6 +13,14 @@ CI machines are noisy and one contended rep should not set the record) for
 both modes, verifies the generated tokens are IDENTICAL (greedy; chunk
 work-lists are slices of the monolithic ones), and writes
 ``BENCH_serving.json``.
+
+Also records KV-MEMORY CAPACITY (DESIGN.md §2.7): max concurrent
+sequences vs HBM bytes for the paged block pool vs the contiguous slot
+cache at EQUAL cache bytes, under a mixed prompt-length stream at 4k
+``max_seq_len``.  Contiguous reserves a full max-length row per sequence
+(capacity = slot count); paged admits by ``ceil((prompt + max_new) /
+block)`` blocks through the real ``BlockAllocator`` reservation math, so
+short/medium prompts pack several-fold more tenants into the same bytes.
 """
 from __future__ import annotations
 
@@ -27,6 +35,7 @@ import jax.numpy as jnp
 from repro.core.sparsity import synthetic_head_curves
 from repro.models.transformer import TransformerConfig, init_params
 from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.kv_cache import BlockAllocator
 from repro.serving.scheduler import Request
 
 CFG = TransformerConfig(
@@ -67,6 +76,53 @@ def _metrics(by_rid):
         "itl_p50_ms": float(np.percentile(itl, 50)),
         "itl_p99_ms": float(np.percentile(itl, 99)),
         "ttft_long_ms": float(by_rid[NUM_SHORT].ttft * 1e3),
+    }
+
+
+def _kv_capacity(block: int = 128, max_seq: int = 4096,
+                 max_new: int = 64, streams: int = 5):
+    """Max concurrent sequences at equal cache bytes, paged vs contiguous.
+
+    Host-side admission math against the REAL allocator (the same
+    reservation accounting the serving loop uses), medianed over several
+    sampled mixed-length prompt streams.  Bytes are computed from the
+    benchmark model's cache geometry; the paged pool and the contiguous
+    slab have identical per-token bytes, so equal blocks == equal HBM.
+    """
+    bytes_per_block = (CFG.num_layers * 2 * CFG.num_kv_heads * block
+                       * CFG.head_dim_ * 4)   # f32 (the bench engine dtype)
+    # mixed production-ish lengths: mostly chat-scale, a long-context tail
+    lens = np.array([256, 512, 768, 1024, 2048, max_seq - max_new])
+    probs = np.array([0.25, 0.25, 0.2, 0.15, 0.1, 0.05])
+    curve = []
+    for slots in (4, 8, 16):
+        total_blocks = slots * (max_seq // block)
+        paged_counts = []
+        for s in range(streams):
+            rng = np.random.default_rng(s)
+            stream = rng.choice(lens, p=probs, size=4 * total_blocks)
+            a = BlockAllocator(total_blocks, block)
+            n = 0
+            for i, plen in enumerate(stream):
+                if not a.can_admit(int(plen) + max_new):
+                    break
+                a.admit(i, int(plen), max_new)
+                n += 1
+            paged_counts.append(n)
+        paged = int(np.median(paged_counts))
+        curve.append({
+            "cache_bytes": total_blocks * bytes_per_block,
+            "num_blocks": total_blocks,
+            "contiguous_seqs": slots,    # one max_seq row per sequence
+            "paged_seqs": paged,
+            "ratio": paged / slots,
+        })
+    return {
+        "block": block, "max_seq_len": max_seq, "max_new_tokens": max_new,
+        "bytes_per_block": bytes_per_block,
+        "prompt_mix": {"lengths": lens.tolist(), "probs": probs.tolist()},
+        "points": curve,
+        "min_ratio": min(c["ratio"] for c in curve),
     }
 
 
@@ -122,6 +178,7 @@ def run(out_dir: str, quick: bool = False):
     identical = gens["chunked"] == gens["monolithic"]
     speedup = (results["monolithic"]["itl_p99_ms"]
                / results["chunked"]["itl_p99_ms"])
+    capacity = _kv_capacity()
     payload = {
         "config": {"long_len": long_len, "chunk_tokens": chunk,
                    "num_short": NUM_SHORT, "short_len": SHORT_LEN,
@@ -129,12 +186,17 @@ def run(out_dir: str, quick: bool = False):
         "modes": results,
         "tokens_identical": identical,
         "itl_p99_speedup": speedup,
+        "kv_capacity": capacity,
     }
     with open(os.path.join(out_dir, "BENCH_serving.json"), "w") as f:
         json.dump(payload, f, indent=2)
 
     rows = [("tokens_identical", float(identical)),
-            ("itl_p99_speedup", speedup)]
+            ("itl_p99_speedup", speedup),
+            ("kv_capacity_min_ratio", capacity["min_ratio"])]
+    for pt in capacity["points"]:
+        rows.append((f"kv_capacity_paged_seqs_{pt['contiguous_seqs']}slots",
+                     pt["paged_seqs"]))
     for mode, m in results.items():
         for k in ("itl_p50_ms", "itl_p99_ms", "ttft_long_ms"):
             rows.append((f"{k}_{mode}", m[k]))

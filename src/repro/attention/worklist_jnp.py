@@ -145,3 +145,98 @@ def batched_worklist_attention(q, k, v, items, **kw):
     """vmap over a leading batch dim; items shared across the batch."""
     fn = functools.partial(worklist_attention, **kw)
     return jax.vmap(lambda qq, kk, vv: fn(qq, kk, vv, items))(q, k, v)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv", "scale"))
+def worklist_attention_paged(
+    q: jnp.ndarray,       # [H, Sq, D]
+    k_pool: jnp.ndarray,  # [N, Hkv, block_kv, D]  device block pool
+    v_pool: jnp.ndarray,
+    items: jnp.ndarray,   # [L, ITEM_FIELDS] int32 (kv_blk LOGICAL)
+    table: jnp.ndarray,   # [T] int32 logical kv block -> pool block (-1)
+    *,
+    block_q: int = 128,
+    block_kv: int = 128,
+    scale: float | None = None,
+    q_offset: jnp.ndarray | int | None = None,
+    kv_len: jnp.ndarray | int | None = None,
+):
+    """Paged twin of :func:`worklist_attention` (DESIGN.md §2.7): the K/V
+    tiles come from a device block POOL through the sequence's block table
+    instead of a contiguous per-sequence cache.  Item ``kv_blk`` stays in
+    the LOGICAL namespace (positions and masks derive from it); only the
+    slice ADDRESS is table-indirected, so tile values, masks, and the
+    accumulation order — hence the bit pattern of the output — match the
+    contiguous executor on equal cache contents.  ``kv_len`` masks
+    positions past the resident prefix, which also guarantees every
+    contributing logical block is mapped; unmapped (-1) entries are
+    clamped to pool block 0 and masked out.
+    """
+    hq, sq, dh = q.shape
+    assert k_pool.shape[2] == block_kv, "pool block size != block_kv"
+    scale_v = (dh ** -0.5) if scale is None else scale
+    pad_q = (-sq) % block_q
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0))).astype(jnp.float32)
+    sqp = qp.shape[1]
+    tbl = table.astype(jnp.int32)
+    klim_default = tbl.shape[0] * block_kv
+
+    out0 = jnp.zeros((hq, sqp, dh), jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    m0 = jnp.full((block_q, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+
+    def step(carry, it):
+        out, acc, m, l = carry
+        head, qblk, kvblk = it[F_HEAD], it[F_QBLK], it[F_KVBLK]
+        kvh = it[F_KVHEAD]
+        first = it[F_FIRST] == 1
+        last = it[F_LAST] == 1
+        valid = it[F_VALID] == 1
+
+        acc = jnp.where(first, jnp.zeros_like(acc), acc)
+        m = jnp.where(first, jnp.full_like(m, -jnp.inf), m)
+        l = jnp.where(first, jnp.zeros_like(l), l)
+
+        phys = tbl[jnp.maximum(kvblk, 0)]
+        mapped = phys >= 0
+        safe = jnp.maximum(phys, 0)
+        qt = jax.lax.dynamic_slice(
+            qp, (head, qblk * block_q, 0), (1, block_q, dh))[0]
+        kt = jax.lax.dynamic_slice(
+            k_pool, (safe, kvh, 0, 0),
+            (1, 1, block_kv, dh))[0, 0].astype(jnp.float32)
+        vt = jax.lax.dynamic_slice(
+            v_pool, (safe, kvh, 0, 0),
+            (1, 1, block_kv, dh))[0, 0].astype(jnp.float32)
+        s = (qt @ kt.T) * scale_v
+        qpos = qblk * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = kvblk * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qpos_g = qpos if q_offset is None else qpos + q_offset
+        klim = klim_default if kv_len is None else jnp.minimum(
+            jnp.asarray(kv_len, jnp.int32), klim_default)
+        mask = ((kpos <= qpos_g) & (kpos < klim) & (qpos < sq)
+                & valid & mapped)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + p @ vt
+        # no-op the accumulator update on invalid (padding) items
+        acc = jnp.where(valid, acc_new, acc)
+        l = jnp.where(valid, l_new, l)
+        m = jnp.where(valid, m_new, m)
+
+        write = valid & last
+        norm = acc / jnp.maximum(l, 1e-30)
+        norm = jnp.where(l > 0.0, norm, 0.0)
+        cur = jax.lax.dynamic_slice(
+            out, (head, qblk * block_q, 0), (1, block_q, dh))[0]
+        tile = jnp.where(write, norm, cur)
+        out = jax.lax.dynamic_update_slice(
+            out, tile[None], (head, qblk * block_q, 0))
+        return (out, acc, m, l), None
+
+    (out, _, _, _), _ = jax.lax.scan(step, (out0, acc0, m0, l0), items)
+    return out[:, :sq, :].astype(q.dtype)

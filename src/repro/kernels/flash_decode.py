@@ -38,6 +38,19 @@ callers just take ``out``.
 ``flash_decode_reference`` is the pure-jnp twin for CPU: a ``lax.scan``
 over the block list with ``dynamic_slice`` — the same "no dense gather"
 access pattern, validated by jaxpr inspection in the tests and benchmark.
+
+PAGED variants (DESIGN.md §2.7): the cache is a device block pool
+``[N, Hkv, block, D]`` and the selection's LOGICAL block ids translate to
+pool-global physical blocks through a per-slot block table ``[B, T]``
+(-1 = unmapped).  The selection, positions, and masks stay in the logical
+namespace — ``kpos = logical_blk * block + lane`` — only the ADDRESS is
+indirected, so the budget allocator's ids flow unchanged down to the grid:
+
+- :func:`flash_decode_paged_kernel` — the table rides in SMEM as a third
+  scalar-prefetch operand and the K/V BlockSpec index maps dereference it
+  (``table[slot, logical_blk]``), streaming pool blocks in place;
+- :func:`flash_decode_paged_reference` — the jnp twin: ``lax.scan`` over
+  the logical list, ``dynamic_slice`` at the table-translated pool index.
 """
 from __future__ import annotations
 
@@ -325,6 +338,239 @@ def flash_decode_reference(
     return out, m, l
 
 
+# ---------------------------------------------------------------------------
+# Paged variants: block-table indirection into a device block pool
+# ---------------------------------------------------------------------------
+
+def _flash_decode_paged_kernel(
+    items_ref, tbl_ref, pos_ref,   # SMEM (scalar prefetch)
+    q_ref, k_ref, v_ref,           # VMEM tiles via index maps
+    o_ref, m_out_ref, l_out_ref,   # VMEM out tiles
+    acc_ref, m_ref, l_ref,         # VMEM scratch
+    *,
+    scale: float,
+    block_kv: int,
+    window: int | None,
+):
+    """Same online-softmax body as :func:`_flash_decode_kernel`, but the
+    K/V tiles arrive from the block POOL via the table-indirected index
+    maps, and an item is additionally invalid when its table entry is
+    unmapped (``table[slot, logical] < 0`` — e.g. a shard that does not own
+    the block under a block-sharded pool)."""
+    i = pl.program_id(0)
+    kvblk = items_ref[i, D_KVBLK]
+    slot = items_ref[i, D_BATCH]
+    mapped = tbl_ref[slot, kvblk] >= 0
+    valid = (items_ref[i, D_VALID] == 1) & mapped
+    first = items_ref[i, D_FIRST] == 1
+    last = items_ref[i, D_LAST] == 1
+    pos = pos_ref[slot]
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(valid)
+    def _compute():
+        qt = q_ref[0, 0].astype(jnp.float32)   # [G, d]
+        kt = k_ref[0, 0].astype(jnp.float32)   # [block_kv, d]
+        vt = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qt, kt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [G, block_kv]
+        # positions come from the LOGICAL block id — the physical pool
+        # index carries no position information
+        kpos = kvblk * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = kpos <= pos
+        if window is not None:
+            mask &= kpos > pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(last)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)
+        out = jnp.where(l > 0.0, out, 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+        m_out_ref[0, 0] = jnp.broadcast_to(m_ref[...], m_out_ref.shape[2:])
+        l_out_ref[0, 0] = jnp.broadcast_to(l, l_out_ref.shape[2:])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_kv", "scale", "window", "interpret"),
+)
+def flash_decode_paged_kernel(
+    q: jnp.ndarray,        # [B, Hkv, G, D]  (GQA-grouped query rows)
+    k_pool: jnp.ndarray,   # [N, Hkv, block_kv, D]  device block pool
+    v_pool: jnp.ndarray,
+    items: jnp.ndarray,    # [L, DEC_FIELDS] int32, D_KVBLK LOGICAL
+    table: jnp.ndarray,    # [B, T] int32 logical -> pool block (-1 unmapped)
+    pos: jnp.ndarray,      # [B] int32 per-slot last position (inclusive)
+    *,
+    block_kv: int = 128,
+    scale: float | None = None,
+    window: int | None = None,
+    interpret: bool = False,
+):
+    """Paged twin of :func:`flash_decode_kernel`: one (slot, kv_head,
+    logical_block) matvec tile per grid step, the K/V BlockSpec index maps
+    dereference the block table in SMEM (scalar-prefetch indirection), so
+    exactly the selected pool blocks move HBM->VMEM — same roofline as the
+    contiguous kernel, token-granular memory."""
+    B, hkv, G, dh = q.shape
+    assert k_pool.shape[2] == block_kv, "pool block size != block_kv"
+    scale_v = float(dh ** -0.5) if scale is None else float(scale)
+
+    pad_g = (-G) % 8        # sublane alignment
+    dh_pad = (-dh) % 128    # lane alignment
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_g), (0, dh_pad)))
+    kp = jnp.pad(k_pool, ((0, 0), (0, 0), (0, 0), (0, dh_pad)))
+    vp = jnp.pad(v_pool, ((0, 0), (0, 0), (0, 0), (0, dh_pad)))
+    Gp, dp = G + pad_g, dh + dh_pad
+    L = items.shape[0]
+
+    kernel = functools.partial(
+        _flash_decode_paged_kernel, scale=scale_v, block_kv=block_kv,
+        window=window)
+
+    def kv_index(i, it, tb, p):
+        # clamp unmapped (-1) entries to pool block 0: the item is masked
+        # invalid in the body, the prefetch just needs a legal address
+        return (jnp.maximum(tb[it[i, D_BATCH], it[i, D_KVBLK]], 0),
+                it[i, D_KVHEAD], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, 1, Gp, dp),
+                         lambda i, it, tb, p: (it[i, D_BATCH],
+                                               it[i, D_KVHEAD], 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, dp), kv_index),
+            pl.BlockSpec((1, 1, block_kv, dp), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Gp, dp),
+                         lambda i, it, tb, p: (it[i, D_BATCH],
+                                               it[i, D_KVHEAD], 0, 0)),
+            pl.BlockSpec((1, 1, Gp, 128),
+                         lambda i, it, tb, p: (it[i, D_BATCH],
+                                               it[i, D_KVHEAD], 0, 0)),
+            pl.BlockSpec((1, 1, Gp, 128),
+                         lambda i, it, tb, p: (it[i, D_BATCH],
+                                               it[i, D_KVHEAD], 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Gp, dp), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, hkv, Gp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((B, hkv, Gp, 128), jnp.float32),
+            jax.ShapeDtypeStruct((B, hkv, Gp, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(items, table.astype(jnp.int32), pos.astype(jnp.int32), qp, kp, vp)
+    return (out[:, :, :G, :dh], m[:, :, :G, 0], l[:, :, :G, 0])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_kv", "scale", "window"))
+def flash_decode_paged_reference(
+    q: jnp.ndarray,          # [B, Hkv, G, D]
+    k_pool: jnp.ndarray,     # [N, Hkv, block_kv, D]
+    v_pool: jnp.ndarray,
+    block_ids: jnp.ndarray,  # [B, Hkv, nb] int32 LOGICAL ids, -1 pad
+    table: jnp.ndarray,      # [B, T] int32 logical -> pool block (-1)
+    pos: jnp.ndarray,        # [B] int32 last position (inclusive)
+    *,
+    block_kv: int = 128,
+    scale: float | None = None,
+    window: int | None = None,
+):
+    """jnp twin of :func:`flash_decode_paged_kernel` — identical contract
+    and returns.  ``lax.scan`` over the logical block list with a per-block
+    ``dynamic_slice`` at the table-translated pool index: no gather of the
+    sequence's blocks into a contiguous view ever materializes, and the
+    accumulation order (hence bit pattern) matches the contiguous
+    :func:`flash_decode_reference` on equal cache contents."""
+    B, hkv, G, dh = q.shape
+    assert k_pool.shape[2] == block_kv, "pool block size != block_kv"
+    scale_v = float(dh ** -0.5) if scale is None else float(scale)
+    tbl = table.astype(jnp.int32)
+
+    def one_slot(qb, ids_b, tbl_b, p):
+        # qb [Hkv, G, D]; ids_b [Hkv, nb]; tbl_b [T]; p scalar
+
+        def one_head(qh, ids, h_idx):
+
+            def step(carry, blk_id):
+                acc, m, l = carry
+                safe_logical = jnp.maximum(blk_id, 0)
+                phys = tbl_b[safe_logical]
+                ok = (blk_id >= 0) & (phys >= 0)
+                safe = jnp.maximum(phys, 0)
+                kt = jax.lax.dynamic_slice(
+                    k_pool, (safe, h_idx, 0, 0), (1, 1, block_kv, dh))[0, 0]
+                vt = jax.lax.dynamic_slice(
+                    v_pool, (safe, h_idx, 0, 0), (1, 1, block_kv, dh))[0, 0]
+                s = jax.lax.dot_general(
+                    qh, kt, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32) * scale_v
+                kpos = safe_logical * block_kv + jax.lax.broadcasted_iota(
+                    jnp.int32, s.shape, 1)
+                mask = (kpos <= p) & ok
+                if window is not None:
+                    mask &= kpos > p - window
+                s = jnp.where(mask, s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+                pr = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
+                acc_new = acc * alpha + jax.lax.dot_general(
+                    pr.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                acc = jnp.where(ok, acc_new, acc)
+                m = jnp.where(ok, m_new, m)
+                l = jnp.where(ok, l_new, l)
+                return (acc, m, l), None
+
+            acc0 = jnp.zeros((G, dh), jnp.float32)
+            m0 = jnp.full((G, 1), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((G, 1), jnp.float32)
+            (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), ids,
+                                          unroll=True)
+            out = acc / jnp.maximum(l, 1e-30)
+            out = jnp.where(l > 0.0, out, 0.0)
+            return out, m[:, 0], l[:, 0]
+
+        return jax.vmap(one_head)(qb, ids_b,
+                                  jnp.arange(hkv, dtype=jnp.int32))
+
+    out, m, l = jax.vmap(one_slot)(q.astype(k_pool.dtype),
+                                   block_ids.astype(jnp.int32), tbl,
+                                   pos.astype(jnp.int32))
+    return out, m, l
+
+
 def merge_partials(outs, ms, ls):
     """Flash-decoding combine of per-shard partials along a leading axis.
 
@@ -342,6 +588,8 @@ def merge_partials(outs, ms, ls):
 __all__ = [
     "decode_items_from_ids",
     "flash_decode_kernel",
+    "flash_decode_paged_kernel",
+    "flash_decode_paged_reference",
     "flash_decode_reference",
     "merge_partials",
 ]

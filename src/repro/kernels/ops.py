@@ -14,6 +14,8 @@ from repro.kernels.flash_attn import flash_attention as _flash
 from repro.kernels.flash_decode import (
     decode_items_from_ids,
     flash_decode_kernel as _flash_decode_kernel,
+    flash_decode_paged_kernel as _flash_decode_paged_kernel,
+    flash_decode_paged_reference as _flash_decode_paged_ref,
     flash_decode_reference as _flash_decode_ref,
     merge_partials,
 )
@@ -93,11 +95,50 @@ def flash_decode(q, k_cache, v_cache, block_ids, pos, *, block_kv=128,
     return out.astype(q.dtype)
 
 
+def flash_decode_paged(q, k_pool, v_pool, block_ids, table, pos, *,
+                       block_kv=128, scale=None, window=None, partials=False,
+                       use_kernel=None, interpret=None):
+    """Paged fused flash-decode: stream selected blocks from the pool.
+
+    q ``[B, H, 1, D]`` (serving layout — GQA grouping happens here);
+    pools ``[N, Hkv, block_kv, D]``; ``block_ids [B, Hkv, nb]`` int32
+    LOGICAL selected blocks (-1 pad, trailing); ``table [B, T]`` int32
+    logical -> pool-global translation (-1 = unmapped, masked); ``pos [B]``
+    per-slot last position.  Same returns/partials contract as
+    :func:`flash_decode`; on TPU the scalar-prefetch table-indirection
+    kernel runs, elsewhere the jnp reference with the identical zero-copy
+    access pattern.
+    """
+    B, H, _, dh = q.shape
+    hkv = k_pool.shape[1]
+    G = H // hkv
+    qg = q.reshape(B, hkv, G, dh)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        if interpret is None:
+            interpret = not _on_tpu()
+        items = decode_items_from_ids(jnp.asarray(block_ids))
+        out, m, l = _flash_decode_paged_kernel(
+            qg, k_pool, v_pool, items, jnp.asarray(table), jnp.asarray(pos),
+            block_kv=block_kv, scale=scale, window=window,
+            interpret=interpret)
+    else:
+        out, m, l = _flash_decode_paged_ref(
+            qg, k_pool, v_pool, jnp.asarray(block_ids), jnp.asarray(table),
+            jnp.asarray(pos), block_kv=block_kv, scale=scale, window=window)
+    out = out.reshape(B, H, 1, dh)
+    if partials:
+        return out, m, l        # out is f32 — merge-able without requantizing
+    return out.astype(q.dtype)
+
+
 __all__ = [
     "flash_attention",
     "sparse_prefill",
     "sparse_decode",
     "flash_decode",
+    "flash_decode_paged",
     "merge_partials",
     "DecodeWorkList",
     "build_decode_worklist",

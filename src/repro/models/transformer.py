@@ -30,6 +30,7 @@ from repro.attention.flash_scan import flash_scan_attention
 from repro.attention.worklist_jnp import (
     batched_worklist_attention,
     worklist_attention,
+    worklist_attention_paged,
 )
 from repro.attention.dense import attention_maps, decode_attention_ref
 from repro.attention.rope import apply_rope
@@ -287,11 +288,49 @@ def loss_fn(params, batch, cfg: TransformerConfig, *, remat: bool = False):
 
 def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
                dtype=None):
-    """KV cache [L, 2, B, Hkv, Smax, Dh]."""
+    """Contiguous KV cache [L, 2, B, Hkv, Smax, Dh]."""
     dtype = dtype or cfg.dtype
     return jnp.zeros(
         (cfg.num_layers, 2, batch, cfg.num_kv_heads, max_len, cfg.head_dim_),
         dtype)
+
+
+def init_paged_cache(cfg: TransformerConfig, num_blocks: int, block: int,
+                     dtype=None):
+    """Paged KV block pool [L, 2, N, Hkv, block, Dh] (DESIGN.md §2.7).
+
+    ``num_blocks`` is the TOTAL physical block count — callers that want a
+    trash block (``serving.kv_cache.PagedKVCache``) include it here.  The
+    block is the single unit of device memory: sequences own scattered
+    pool blocks through their block tables, so HBM scales with resident
+    TOKENS, not with ``num_slots * max_seq_len``.
+    """
+    dtype = dtype or cfg.dtype
+    return jnp.zeros(
+        (cfg.num_layers, 2, num_blocks, cfg.num_kv_heads, block,
+         cfg.head_dim_), dtype)
+
+
+def scatter_seq_cache_paged(pool, seq_cache, table):
+    """Land a whole prefilled sequence cache in the pool (monolithic
+    prefill's paged merge — the block-scatter twin of the contiguous
+    ``dynamic_update_slice`` slot insert).
+
+    ``seq_cache [L, 2, 1, Hkv, S, Dh]`` with ``S`` a block multiple;
+    ``table [T]`` int32 logical -> pool block (-1 pad).  Blocks past the
+    mapped prefix (bucket padding) scatter into the trash block (the
+    pool's last physical block) — the paged analogue of the stale padded
+    rows the contiguous layout masks by position.
+    """
+    L, _, _, hkv, S, dh = seq_cache.shape
+    block = pool.shape[4]
+    trash = pool.shape[2] - 1
+    nblk = S // block
+    blocks = jnp.moveaxis(
+        seq_cache[:, :, 0].reshape(L, 2, hkv, nblk, block, dh), 3, 2)
+    tbl = jnp.asarray(table, jnp.int32)[:nblk]
+    gids = jnp.where(tbl >= 0, tbl, trash)
+    return pool.at[:, :, gids].set(blocks.astype(pool.dtype))
 
 
 def prefill(params, tokens, cfg: TransformerConfig, *,
@@ -596,3 +635,212 @@ def prefill_chunk(params, cache, tokens, slot, q_offset,
             x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
     logits = _logits(x_last, params, cfg)[:, 0]
     return logits, new_cache
+
+
+def prefill_chunk_paged(params, pool, tokens, table, q_offset,
+                        cfg: TransformerConfig, *,
+                        kv_len=None, sparse_items=None, last_index=None):
+    """Paged partial prefill (DESIGN.md §2.7): the chunk's K/V lands
+    directly in the sequence's pool blocks (a block SCATTER at the
+    table-translated indices — no staging cache, no final merge), and the
+    chunk queries attend the resident prefix through the block table.
+
+    tokens [1, C] int32 with C a whole number of cache blocks (the chunk
+    compile bucket); pool [L, 2, N, Hkv, block, Dh]; ``table [T]`` int32
+    logical -> pool block for THIS sequence (-1 pad — bucket-padding
+    blocks past the prompt scatter into the trash block N-1);
+    ``q_offset`` / ``kv_len`` / ``last_index`` are traced scalars and the
+    table is data, so one compile per chunk bucket serves every sequence,
+    offset, and block placement.  Sparse items execute via
+    ``worklist_attention_paged`` (per-block pool slices, zero gather);
+    dense chunks gather the table's blocks into a contiguous [Smax] view —
+    O(one sequence), exactly the staging traffic of the contiguous path.
+    Returns (logits [1, V] at chunk-local ``last_index``, new pool).
+    """
+    B, C = tokens.shape
+    block = pool.shape[4]
+    trash = pool.shape[2] - 1
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim_
+    assert C % block == 0, "chunk bucket must span whole cache blocks"
+    nblk = C // block
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    kv_len = (q_offset + C if kv_len is None
+              else jnp.asarray(kv_len, jnp.int32))
+    positions = q_offset + jnp.arange(C)
+    tbl = jnp.asarray(table, jnp.int32)
+    T = tbl.shape[0]
+    ob = q_offset // block
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+
+    def layer(x, lp, layer_pool, l, items_l):
+        h = common.rmsnorm(x, lp["ln1"])
+        q, k, v = _qkv(h, lp["attn"], cfg, positions)
+        q = constrain(q, "batch", "model", None, None)
+        # block-scatter the chunk's K/V through the table
+        gsl = jax.lax.dynamic_slice(tbl, (ob,), (nblk,))
+        gids = jnp.where(gsl >= 0, gsl, trash)
+        as_blocks = lambda t: jnp.moveaxis(
+            t[0].reshape(hkv, nblk, block, dh), 1, 0)
+        kc = layer_pool[0].at[gids].set(
+            as_blocks(k).astype(layer_pool.dtype))
+        vc = layer_pool[1].at[gids].set(
+            as_blocks(v).astype(layer_pool.dtype))
+        window = _window_of(cfg, l)
+        if items_l is not None:
+            o = worklist_attention_paged(
+                q[0], kc, vc, items_l, tbl,
+                block_q=cfg.block_q, block_kv=block,
+                q_offset=q_offset, kv_len=kv_len)[None]
+        else:
+            view = lambda c: jnp.moveaxis(
+                jnp.take(c, jnp.maximum(tbl, 0), axis=0), 0, 1
+            ).reshape(hkv, T * block, dh)
+            kpos = jnp.arange(T * block)
+            valid = ((kpos[None, :] <= positions[:, None])
+                     & (kpos[None, :] < kv_len))          # [C, T*block]
+            if window is not None:
+                valid = valid & (kpos[None, :] > positions[:, None] - window)
+            o = _chunk_attend(q, view(kc)[None], view(vc)[None],
+                              valid[None, None], cfg)
+        o = common.merge_heads(o)
+        x = x + jnp.einsum("bsf,fd->bsd", o, lp["attn"]["wo"])
+        h2 = common.rmsnorm(x, lp["ln2"])
+        x = x + _ffn(h2, lp, cfg)
+        return x, jnp.stack([kc, vc])
+
+    if cfg.loop_mode == "scan":
+        if sparse_items is None:
+            def body(x, scan_in):
+                lp, layer_pool = scan_in
+                x, new_c = layer(x, lp, layer_pool, 0, None)
+                return x, new_c
+            x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
+        else:
+            def body(x, scan_in):
+                lp, layer_pool, items_l = scan_in
+                x, new_c = layer(x, lp, layer_pool, 0, items_l)
+                return x, new_c
+            x, new_pool = jax.lax.scan(
+                body, x, (params["layers"], pool, jnp.asarray(sparse_items)))
+    else:
+        new_layers = []
+        for l in range(cfg.num_layers):
+            items_l = (None if sparse_items is None
+                       else jnp.asarray(sparse_items[l]))
+            x, nc = layer(x, params["layers"][l], pool[l], l, items_l)
+            new_layers.append(nc)
+        new_pool = jnp.stack(new_layers)
+    if last_index is None:
+        x_last = x[:, -1:, :]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
+    logits = _logits(x_last, params, cfg)[:, 0]
+    return logits, new_pool
+
+
+def decode_step_paged(params, pool, token, pos, table,
+                      cfg: TransformerConfig, *,
+                      block_ids=None, cache_len=None, active=None):
+    """One paged decode step (DESIGN.md §2.7).
+
+    token [B] int32; pos scalar OR [B] int32; pool [L, 2, N, Hkv, block,
+    Dh]; ``table [B, T]`` int32 per-slot block tables (logical -> pool
+    block, -1 = unmapped/free slot).  Each row's K/V is a SINGLE-BLOCK
+    ``dynamic_update_slice`` into its current block; rows that are
+    inactive (``active`` False) or unmapped write the trash block N-1, so
+    the batched step never needs a read-modify-write mask.  ``block_ids``
+    ([L, Hkv, nb] or [L, B, Hkv, nb], LOGICAL, -1 pad) select the blocks
+    the budgeted flash-decode streams from the pool through the table;
+    None = dense decode over the resident prefix (a gathered contiguous
+    view — the contiguous baseline's math bit-for-bit).  Returns
+    (logits [B, V], new pool).
+    """
+    B = token.shape[0]
+    block = pool.shape[4]
+    trash = pool.shape[2] - 1
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim_
+    x = jnp.take(params["embed"], token[:, None], axis=0)  # [B, 1, d]
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    clen = pos_arr + 1 if cache_len is None else jnp.broadcast_to(
+        jnp.asarray(cache_len), (B,))
+    tbl = jnp.asarray(table, jnp.int32)
+    T = tbl.shape[1]
+    act = (jnp.ones((B,), bool) if active is None
+           else jnp.asarray(active))
+
+    def layer(x, lp, layer_pool, l, items_l):
+        h = common.rmsnorm(x, lp["ln1"])
+        ap = lp["attn"]
+        q = common.split_heads(jnp.einsum("bsd,df->bsf", h, ap["wq"]),
+                               cfg.num_heads)
+        k = common.split_heads(jnp.einsum("bsd,df->bsf", h, ap["wk"]),
+                               cfg.num_kv_heads)
+        v = common.split_heads(jnp.einsum("bsd,df->bsf", h, ap["wv"]),
+                               cfg.num_kv_heads)
+        rope = lambda t, p: apply_rope(t, p[None], cfg.rope_theta)
+        q = jax.vmap(rope)(q, pos_arr)
+        k = jax.vmap(rope)(k, pos_arr)
+
+        # one vectorized scatter per tensor: row b lands at
+        # (pool block, row offset) = (table[b, pos//block], pos % block);
+        # inactive/unmapped rows collapse onto the trash block (their
+        # values are junk by contract, so duplicate trash hits are fine)
+        phys = jnp.take_along_axis(tbl, (pos_arr // block)[:, None],
+                                   axis=1)[:, 0]
+        gids = jnp.where(act & (phys >= 0), phys, trash)       # [B]
+        offs = pos_arr % block                                 # [B]
+        heads = jnp.arange(hkv)
+
+        def write(c, new):
+            return c.at[gids[:, None], heads[None, :],
+                        offs[:, None]].set(new[:, :, 0, :].astype(c.dtype))
+
+        kc = write(layer_pool[0], k)
+        vc = write(layer_pool[1], v)
+        window = _window_of(cfg, l)
+        if items_l is not None:
+            ids_b = (jnp.broadcast_to(items_l[None], (B,) + items_l.shape)
+                     if items_l.ndim == 2 else items_l)
+            o = kernel_ops.flash_decode_paged(
+                q, kc, vc, ids_b, tbl, pos_arr, block_kv=block,
+                window=window)
+        else:
+            view = lambda c: jnp.moveaxis(
+                jnp.take(c, jnp.maximum(tbl, 0), axis=0), 1, 2
+            ).reshape(B, hkv, T * block, dh)
+            kpos = jnp.arange(T * block)
+            valid = kpos[None] < clen[:, None]            # [B, T*block]
+            if window is not None:
+                valid = valid & (kpos[None] > (pos_arr[:, None] - window))
+            o = _decode_attend(q, view(kc), view(vc), valid[:, None], cfg)
+        o = common.merge_heads(o)
+        x = x + jnp.einsum("bsf,fd->bsd", o, lp["attn"]["wo"])
+        h2 = common.rmsnorm(x, lp["ln2"])
+        x = x + _ffn(h2, lp, cfg)
+        return x, jnp.stack([kc, vc])
+
+    if cfg.loop_mode == "scan":
+        if block_ids is None:
+            def body(x, scan_in):
+                lp, layer_pool = scan_in
+                x, new_c = layer(x, lp, layer_pool, 0, None)
+                return x, new_c
+            x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
+        else:
+            def body(x, scan_in):
+                lp, layer_pool, items_l = scan_in
+                x, new_c = layer(x, lp, layer_pool, 0, items_l)
+                return x, new_c
+            x, new_pool = jax.lax.scan(
+                body, x, (params["layers"], pool, jnp.asarray(block_ids)))
+    else:
+        new_layers = []
+        for l in range(cfg.num_layers):
+            items_l = None if block_ids is None else jnp.asarray(block_ids[l])
+            x, nc = layer(x, params["layers"][l], pool[l], l, items_l)
+            new_layers.append(nc)
+        new_pool = jnp.stack(new_layers)
+    logits = _logits(x, params, cfg)[:, 0]
+    return logits, new_pool

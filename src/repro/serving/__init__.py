@@ -1,10 +1,11 @@
-"""Serving: S-HPLB engine, shard_map attention islands, KV cache,
-continuous batching, sampling."""
+"""Serving: S-HPLB engine, shard_map attention islands, paged/contiguous
+KV cache, continuous batching, sampling."""
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.kv_cache import BlockAllocator, SlotCache
+from repro.serving.kv_cache import BlockAllocator, PagedKVCache, SlotCache
 from repro.serving.sampler import SamplingParams, sample
 from repro.serving.scheduler import ContinuousBatcher, Request
 from repro.serving.sharded_attention import (
     flash_decode_attention,
+    flash_decode_attention_paged,
     hplb_prefill_attention,
 )

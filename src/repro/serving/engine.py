@@ -4,9 +4,13 @@ continuous batching, sampling.
 The engine owns:
 - the offline artifacts: sparsity profile -> HPLB plan (budgets +
   head permutation) -> per-layer work-lists / decode block budgets;
-- the device state: HPLB-permuted params, slot cache;
+- the device state: HPLB-permuted params, and the KV cache in one of two
+  layouts (``cache_layout``): the default PAGED block pool
+  [L, 2, N+1, Hkv, block, Dh] addressed through per-sequence block tables
+  (token-granular HBM — DESIGN.md §2.7), or the legacy CONTIGUOUS slot
+  cache [L, 2, B_slots, Hkv, Smax, Dh] kept as the parity baseline;
 - the jitted step functions (prefill with sparse work-lists; decode with
-  budgeted block gathers; per-sequence positions for continuous batching).
+  budgeted block streams; per-sequence positions for continuous batching).
 
 Attention modes:
     "dense"  — full attention (the FlashAttention baseline of the paper);
@@ -37,6 +41,7 @@ from repro.core.worklist import (
 )
 from repro.models import transformer as tfm
 from repro.models.transformer import TransformerConfig
+from repro.serving.kv_cache import PagedKVCache
 from repro.serving.sampler import SamplingParams, sample
 from repro.serving.scheduler import ContinuousBatcher, Request
 from repro.utils.logging import get_logger
@@ -67,6 +72,15 @@ class EngineConfig:
     # benchmark baseline).
     prefill_mode: str = "chunked"    # "chunked" | "monolithic"
     prefill_chunk_tokens: int = 256  # per-tick token budget (chunk cap)
+    # device KV layout: "paged" (block pool + per-sequence block tables —
+    # HBM scales with resident tokens, admission is block-granular) or
+    # "contiguous" (every sequence reserves a max_seq_len slot; the parity
+    # baseline).  DESIGN.md §2.7.
+    cache_layout: str = "paged"
+    # paged pool size in blocks; None = num_slots * max_seq_len / block
+    # (byte-parity with the contiguous layout).  Smaller pools trade
+    # worst-case capacity for HBM; admission guards via reservations.
+    num_kv_blocks: int | None = None
 
 
 class Engine:
@@ -93,8 +107,27 @@ class Engine:
             params = self._permute_params(params)
         self.params = params
         self._worklists_cache: dict[int, list] = {}
-        self.cache = tfm.init_cache(cfg, engine_cfg.num_slots,
-                                    engine_cfg.max_seq_len)
+        if engine_cfg.cache_layout == "paged":
+            assert engine_cfg.max_seq_len % engine_cfg.block == 0, \
+                "paged layout needs max_seq_len % block == 0"
+            nblocks = (engine_cfg.num_kv_blocks
+                       or engine_cfg.num_slots
+                       * (engine_cfg.max_seq_len // engine_cfg.block))
+            self.kv = PagedKVCache(
+                lambda n: tfm.init_paged_cache(cfg, n, engine_cfg.block),
+                num_blocks=nblocks, block=engine_cfg.block,
+                table_width=engine_cfg.max_seq_len // engine_cfg.block)
+            # self.cache is the LIVE pool threaded through the jitted
+            # steps (donated); self.kv keeps the allocator/tables and is
+            # re-pointed at the new buffer after every step
+            self.cache = self.kv.pool
+        else:
+            assert engine_cfg.cache_layout == "contiguous", \
+                f"unknown cache_layout {engine_cfg.cache_layout!r}"
+            self.kv = None
+            self.cache = tfm.init_cache(cfg, engine_cfg.num_slots,
+                                        engine_cfg.max_seq_len)
+        self._batcher = None   # bound by make_batcher (paged table lookups)
         self._prefill_jit = {}
         # chunked prefill: one compile per chunk bucket (pow2 from block up
         # to prefill_chunk_tokens); chunk work-lists enter as DATA padded to
@@ -242,6 +275,24 @@ class Engine:
             self._decode_ids_by_nblocks[nblocks] = got
         return got
 
+    # -- paged-layout plumbing ----------------------------------------------
+    @property
+    def paged(self) -> bool:
+        return self.kv is not None
+
+    def _set_cache(self, cache) -> None:
+        """Adopt the buffer a jitted step returned; keep the PagedKVCache
+        handle pointing at the live pool."""
+        self.cache = cache
+        if self.kv is not None:
+            self.kv.pool = cache
+
+    def _table_for_slot(self, slot: int) -> np.ndarray:
+        """[T] int32 pool block ids (-1 pad) of the sequence in ``slot``."""
+        assert self._batcher is not None, \
+            "paged engine steps need a batcher (make_batcher binds it)"
+        return self.kv.table_row(self._batcher.rid_of_slot(slot))
+
     # -- jitted steps --------------------------------------------------------
     def _prefill_bucket(self, seq_len: int) -> int:
         """Compile bucket for a prompt length: next power of two (floored
@@ -280,6 +331,34 @@ class Engine:
                     cache, seq_cache.astype(cache.dtype),
                     (0, 0, slot, 0, 0, 0))
                 return logits, cache
+
+            self._prefill_jit[bucket] = jax.jit(
+                run, donate_argnums=(1,) if self._donate else ())
+        return self._prefill_jit[bucket]
+
+    def _prefill_paged_fn(self, bucket: int):
+        """Paged monolithic prefill for one compile bucket: the sequence
+        cache is computed at the bucket length (not max_seq_len — the
+        paged layout never materializes a max-length row) and lands in the
+        pool with one block scatter through the table
+        (``tfm.scatter_seq_cache_paged``).  The pool is donated; the table
+        is data, so one compile serves every block placement."""
+        if bucket not in self._prefill_jit:
+            blk = self.ecfg.block
+            bucket_pad = -(-bucket // blk) * blk
+            if self.ecfg.attention == "sparse":
+                wls = self.worklists_for(bucket)
+                items = [jnp.asarray(w.items.reshape(-1, w.items.shape[-1]))
+                         for w in wls]
+            else:
+                items = None
+
+            def run(params, pool, tokens, table, last_idx):
+                logits, seq_cache = tfm.prefill(
+                    params, tokens, self.cfg, cache_len=bucket_pad,
+                    sparse_items=items, last_index=last_idx)
+                pool = tfm.scatter_seq_cache_paged(pool, seq_cache, table)
+                return logits, pool
 
             self._prefill_jit[bucket] = jax.jit(
                 run, donate_argnums=(1,) if self._donate else ())
@@ -351,18 +430,36 @@ class Engine:
         data, so one compile serves every slot, offset, and selection."""
         if bucket not in self._prefill_chunk_jit:
             sparse = self.ecfg.attention == "sparse"
+            if self.paged:
+                # paged: no staging cache, no slot — the chunk scatters
+                # straight into the sequence's pool blocks via the table
+                def run(params, pool, tokens, table, off, kv_len, last_idx,
+                        items):
+                    return tfm.prefill_chunk_paged(
+                        params, pool, tokens, table, off, self.cfg,
+                        kv_len=kv_len, sparse_items=items,
+                        last_index=last_idx)
 
-            def run(params, cache, tokens, slot, off, kv_len, last_idx,
-                    items):
-                return tfm.prefill_chunk(
-                    params, cache, tokens, slot, off, self.cfg,
-                    kv_len=kv_len, sparse_items=items, last_index=last_idx)
+                def run_dense(params, pool, tokens, table, off, kv_len,
+                              last_idx):
+                    return tfm.prefill_chunk_paged(
+                        params, pool, tokens, table, off, self.cfg,
+                        kv_len=kv_len, sparse_items=None,
+                        last_index=last_idx)
+            else:
+                def run(params, cache, tokens, slot, off, kv_len, last_idx,
+                        items):
+                    return tfm.prefill_chunk(
+                        params, cache, tokens, slot, off, self.cfg,
+                        kv_len=kv_len, sparse_items=items,
+                        last_index=last_idx)
 
-            def run_dense(params, cache, tokens, slot, off, kv_len,
-                          last_idx):
-                return tfm.prefill_chunk(
-                    params, cache, tokens, slot, off, self.cfg,
-                    kv_len=kv_len, sparse_items=None, last_index=last_idx)
+                def run_dense(params, cache, tokens, slot, off, kv_len,
+                              last_idx):
+                    return tfm.prefill_chunk(
+                        params, cache, tokens, slot, off, self.cfg,
+                        kv_len=kv_len, sparse_items=None,
+                        last_index=last_idx)
 
             donate = (1,) if self._donate else ()
             self._prefill_chunk_jit[bucket] = (
@@ -376,16 +473,26 @@ class Engine:
         boundaries never recompiles; the cache is donated."""
         if self._decode_jit is None:
             sparse = self.ecfg.attention == "sparse"
+            if self.paged:
+                def run(params, pool, token, pos, table, bids, act):
+                    return tfm.decode_step_paged(
+                        params, pool, token, pos, table, self.cfg,
+                        block_ids=bids, cache_len=pos + 1, active=act)
 
-            def run(params, cache, token, pos, bids, act):
-                return tfm.decode_step(params, cache, token, pos, self.cfg,
-                                       block_ids=bids,
-                                       cache_len=pos + 1, active=act)
+                def run_dense(params, pool, token, pos, table, act):
+                    return tfm.decode_step_paged(
+                        params, pool, token, pos, table, self.cfg,
+                        block_ids=None, cache_len=pos + 1, active=act)
+            else:
+                def run(params, cache, token, pos, bids, act):
+                    return tfm.decode_step(
+                        params, cache, token, pos, self.cfg, block_ids=bids,
+                        cache_len=pos + 1, active=act)
 
-            def run_dense(params, cache, token, pos, act):
-                return tfm.decode_step(params, cache, token, pos, self.cfg,
-                                       block_ids=None,
-                                       cache_len=pos + 1, active=act)
+                def run_dense(params, cache, token, pos, act):
+                    return tfm.decode_step(
+                        params, cache, token, pos, self.cfg, block_ids=None,
+                        cache_len=pos + 1, active=act)
 
             donate = (1,) if self._donate else ()
             self._decode_jit = (jax.jit(run, donate_argnums=donate) if sparse
@@ -396,15 +503,24 @@ class Engine:
     # -- public API -----------------------------------------------------------
     def prefill_into_slot(self, tokens: np.ndarray, slot: int,
                           sampling: SamplingParams = SamplingParams()) -> int:
-        """Prefill one sequence into cache slot; returns first token."""
+        """Prefill one sequence into its cache (the slot's row under the
+        contiguous layout; the sequence's pool blocks under the paged
+        layout); returns the first sampled token."""
         tokens = np.atleast_2d(np.asarray(tokens, np.int32))
         S = tokens.shape[-1]
         bucket = self._prefill_bucket(S)
         if bucket > S:
             tokens = np.pad(tokens, ((0, 0), (0, bucket - S)))
-        run = self._prefill_fn(bucket)
-        logits, self.cache = run(self.params, self.cache,
-                                 jnp.asarray(tokens), slot, S - 1)
+        if self.paged:
+            run = self._prefill_paged_fn(bucket)
+            table = jnp.asarray(self._table_for_slot(slot))
+            logits, cache = run(self.params, self.cache,
+                                jnp.asarray(tokens), table, S - 1)
+        else:
+            run = self._prefill_fn(bucket)
+            logits, cache = run(self.params, self.cache,
+                                jnp.asarray(tokens), slot, S - 1)
+        self._set_cache(cache)
         self._rng, sub = jax.random.split(self._rng)
         return int(sample(logits, sub, sampling)[0])
 
@@ -420,28 +536,37 @@ class Engine:
         first sampled token when ``is_final`` (logits read at the chunk's
         last real row), else None.
         """
-        if self._staging is None:
-            self._staging = tfm.init_cache(self.cfg, 1,
-                                           self.ecfg.max_seq_len)
         tokens = np.asarray(tokens, np.int32)
         c = tokens.shape[-1]
         bucket = self._chunk_bucket(c, q_offset)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :c] = tokens
         run = self._prefill_chunk_fn(bucket)
-        if self.ecfg.attention == "sparse":
-            items = jnp.asarray(
-                self._chunk_worklists(prompt_len, q_offset, bucket))
-            logits, self._staging = run(self.params, self._staging,
-                                        jnp.asarray(toks), 0, q_offset,
-                                        q_offset + c, c - 1, items)
+        sparse = self.ecfg.attention == "sparse"
+        items = (jnp.asarray(self._chunk_worklists(prompt_len, q_offset,
+                                                   bucket))
+                 if sparse else None)
+        if self.paged:
+            # chunks scatter straight into the sequence's pool blocks —
+            # no staging cache, no merge, and decode never observes a
+            # mid-prefill sequence because its blocks are disjoint
+            table = jnp.asarray(self._table_for_slot(slot))
+            args = (self.params, self.cache, jnp.asarray(toks), table,
+                    q_offset, q_offset + c, c - 1)
+            logits, cache = run(*args, items) if sparse else run(*args)
+            self._set_cache(cache)
         else:
-            logits, self._staging = run(self.params, self._staging,
-                                        jnp.asarray(toks), 0, q_offset,
-                                        q_offset + c, c - 1)
+            if self._staging is None:
+                self._staging = tfm.init_cache(self.cfg, 1,
+                                               self.ecfg.max_seq_len)
+            args = (self.params, self._staging, jnp.asarray(toks), 0,
+                    q_offset, q_offset + c, c - 1)
+            logits, self._staging = (run(*args, items) if sparse
+                                     else run(*args))
         if not is_final:
             return None
-        self.cache = self._merge_staging(slot)
+        if not self.paged:
+            self._set_cache(self._merge_staging(slot))
         self._rng, sub = jax.random.split(self._rng)
         return int(sample(logits, sub, sampling)[0])
 
@@ -469,6 +594,15 @@ class Engine:
         tok_all[list(slots)] = tokens
         pos_all[list(slots)] = positions
         act_all[list(slots)] = True  # padded slots must not write KV
+        extra = []
+        if self.paged:
+            # per-slot block tables (data): -1 rows for unbound slots
+            # route their writes into the trash block
+            table = np.full((self.ecfg.num_slots, self.kv.table_width), -1,
+                            np.int32)
+            for s in slots:
+                table[s] = self._table_for_slot(s)
+            extra = [jnp.asarray(table)]
         if self.ecfg.attention == "sparse":
             # per-slot position-aware selection, refreshed at block
             # boundaries (ids are a function of the slot's block count)
@@ -477,31 +611,45 @@ class Engine:
                                                      // blk)
                         for p in pos_all]
             bids = np.stack(per_slot, axis=1)  # [L, B, Hkv, nb_cap]
-            logits, self.cache = run(self.params, self.cache,
-                                     jnp.asarray(tok_all),
-                                     jnp.asarray(pos_all),
-                                     jnp.asarray(bids),
-                                     jnp.asarray(act_all))
+            logits, cache = run(self.params, self.cache,
+                                jnp.asarray(tok_all),
+                                jnp.asarray(pos_all),
+                                *extra,
+                                jnp.asarray(bids),
+                                jnp.asarray(act_all))
         else:
-            logits, self.cache = run(self.params, self.cache,
-                                     jnp.asarray(tok_all),
-                                     jnp.asarray(pos_all),
-                                     jnp.asarray(act_all))
+            logits, cache = run(self.params, self.cache,
+                                jnp.asarray(tok_all),
+                                jnp.asarray(pos_all),
+                                *extra,
+                                jnp.asarray(act_all))
+        self._set_cache(cache)
         self._rng, sub = jax.random.split(self._rng)
         toks = sample(logits, sub, sampling)
         return np.asarray(toks)[list(slots)]
 
     def make_batcher(self) -> ContinuousBatcher:
         """A ContinuousBatcher sized for this engine (chunked mixed ticks
-        when ``prefill_mode == "chunked"``, else monolithic)."""
+        when ``prefill_mode == "chunked"``, else monolithic).
+
+        Paged layout: the batcher SHARES the PagedKVCache's allocator, so
+        admission control and the device pool count the very same blocks
+        — a request is admitted when its blocks fit, and ``num_slots``
+        only bounds the decode batch width.
+        """
         chunked = self.ecfg.prefill_mode == "chunked"
-        return ContinuousBatcher(
+        nblocks = (self.kv.num_blocks if self.paged
+                   else self.ecfg.num_slots
+                   * (self.ecfg.max_seq_len // self.ecfg.block))
+        b = ContinuousBatcher(
             num_slots=self.ecfg.num_slots,
-            num_blocks=self.ecfg.num_slots
-            * (self.ecfg.max_seq_len // self.ecfg.block),
+            num_blocks=nblocks,
             max_seq_len=self.ecfg.max_seq_len,
             block=self.ecfg.block,
-            token_budget=self.ecfg.prefill_chunk_tokens if chunked else None)
+            token_budget=self.ecfg.prefill_chunk_tokens if chunked else None,
+            allocator=self.kv.alloc if self.paged else None)
+        self._batcher = b
+        return b
 
     def step_fns(self, sampling: SamplingParams = SamplingParams()):
         """(prefill_chunk_fn, decode_fn) closures for a ContinuousBatcher."""

@@ -1,19 +1,29 @@
-"""Block KV-cache management for continuous batching.
+"""KV-cache memory management for continuous batching (DESIGN.md §2.7).
 
-Two layers:
+Three layers:
 
 - :class:`BlockAllocator` — host-side bookkeeping of a fixed pool of
-  128-token cache blocks (vLLM-style): per-sequence block tables, alloc on
-  append, free on completion.  The scheduler uses it for admission control
-  (a request is admitted only if its prefill fits the free pool).
+  ``block``-token cache blocks (vLLM-style) and the ONE source of truth for
+  KV memory.  A sequence is *admitted* with a reservation for its worst
+  case (prompt + max new tokens) but only *maps* physical blocks as tokens
+  actually land in the cache: prompt blocks at admission, decode blocks one
+  at a time via :meth:`append_token` as generation crosses block
+  boundaries.  Freed blocks return to the pool and are reused by later
+  sequences.  Conservation invariant (checked by the property tests):
+  ``allocated_blocks == sum(ceil(len/block))`` over live sequences at
+  every scheduler tick.
 
-- :class:`SlotCache` — the device-side contiguous cache [L, 2, B_slots,
-  Hkv, Smax, Dh] with a free-slot map.  Sequences claim a slot at admission
-  and release it at completion; slot reuse avoids reallocation.
+- :class:`PagedKVCache` — the paged device cache: a block pool
+  ``[L, 2, num_blocks+1, Hkv, block, Dh]`` (the last block is the TRASH
+  block — writes of inactive decode rows land there) addressed through
+  per-sequence block tables.  The allocator's table entries index the
+  pool's block axis directly, so block ids are one namespace from the
+  budget allocator down to the attention kernels.
 
-The attention kernels address the cache contiguously per slot (TPU-friendly
-128-aligned layout); the block granularity exists for admission math and for
-the S-HPLB decode budgets (block ids index 128-token cache blocks).
+- :class:`SlotCache` — the legacy contiguous cache [L, 2, B_slots, Hkv,
+  Smax, Dh] with a free-slot map (``cache_layout="contiguous"``), kept as
+  the parity baseline: every sequence reserves ``max_seq_len`` tokens of
+  device memory, so capacity is slot-bound rather than token-bound.
 """
 from __future__ import annotations
 
@@ -31,40 +41,149 @@ class BlockAllocator:
     def __post_init__(self):
         self._free: list[int] = list(range(self.num_blocks))
         self._tables: dict[int, list[int]] = {}
+        self._lens: dict[int, int] = {}       # cache-resident tokens
+        self._reserved: dict[int, int] = {}   # worst-case blocks per seq
 
+    # -- accounting views ---------------------------------------------------
     @property
     def free_blocks(self) -> int:
+        """Physically unmapped blocks."""
         return len(self._free)
+
+    @property
+    def allocated_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def reserved_unmapped(self) -> int:
+        """Blocks promised to admitted sequences but not yet mapped."""
+        return sum(r - len(self._tables.get(s, ()))
+                   for s, r in self._reserved.items())
+
+    @property
+    def available_blocks(self) -> int:
+        """Admission headroom: free minus outstanding reservations.  Using
+        this (not ``free_blocks``) for admission guarantees decode growth
+        can never exhaust the pool mid-generation."""
+        return len(self._free) - self.reserved_unmapped
 
     def blocks_needed(self, num_tokens: int) -> int:
         return -(-num_tokens // self.block)
 
-    def can_allocate(self, num_tokens: int) -> bool:
-        return self.blocks_needed(num_tokens) <= len(self._free)
+    def seq_tokens(self, seq_id: int) -> int:
+        """Cache-resident tokens accounted to ``seq_id``."""
+        return self._lens.get(seq_id, 0)
 
-    def allocate(self, seq_id: int, num_tokens: int) -> list[int]:
-        need = self.blocks_needed(num_tokens)
-        if need > len(self._free):
+    @property
+    def live_seqs(self) -> tuple[int, ...]:
+        return tuple(self._lens)
+
+    def conserves(self) -> bool:
+        """The invariant the scheduler must uphold at every tick."""
+        return self.allocated_blocks == sum(
+            self.blocks_needed(n) for n in self._lens.values())
+
+    # -- lifecycle ----------------------------------------------------------
+    def can_admit(self, num_tokens: int) -> bool:
+        return self.blocks_needed(num_tokens) <= self.available_blocks
+
+    def admit(self, seq_id: int, prompt_tokens: int,
+              max_new_tokens: int = 0) -> list[int]:
+        """Reserve the worst case, map the prompt's blocks now.
+
+        The reservation (``prompt + max_new`` blocks) is an accounting
+        upper bound — no specific block ids are held — so unfilled headroom
+        stays usable by :meth:`can_admit` checks of later arrivals only
+        once this sequence frees.  Returns the mapped prompt block ids.
+        """
+        if seq_id in self._reserved:
+            raise ValueError(f"seq {seq_id} already admitted")
+        total = self.blocks_needed(prompt_tokens + max_new_tokens)
+        if total > self.available_blocks:
             raise MemoryError(
-                f"KV pool exhausted: need {need}, free {len(self._free)}")
-        got = [self._free.pop() for _ in range(need)]
-        self._tables.setdefault(seq_id, []).extend(got)
-        return got
+                f"KV pool exhausted: need {total}, "
+                f"available {self.available_blocks}")
+        self._reserved[seq_id] = total
+        self._tables[seq_id] = []
+        self._lens[seq_id] = 0
+        self._grow(seq_id, self.blocks_needed(prompt_tokens))
+        self._lens[seq_id] = prompt_tokens
+        return list(self._tables[seq_id])
 
-    def append_token(self, seq_id: int, cur_len: int) -> None:
-        """Grow the table when a decode step crosses a block boundary."""
-        if cur_len % self.block == 0:
-            self.allocate(seq_id, 1)
+    def _grow(self, seq_id: int, n_new: int) -> None:
+        if n_new > len(self._free):
+            raise MemoryError(
+                f"KV pool exhausted: need {n_new}, free {len(self._free)}")
+        table = self._tables[seq_id]
+        if len(table) + n_new > self._reserved[seq_id]:
+            raise MemoryError(
+                f"seq {seq_id} grows past its reservation "
+                f"({len(table)}+{n_new} > {self._reserved[seq_id]})")
+        table.extend(self._free.pop() for _ in range(n_new))
+
+    def append_token(self, seq_id: int) -> None:
+        """Account one more cache-resident token; map a fresh block exactly
+        when the new token crosses a block boundary.  Called by the
+        scheduler for every active sequence on every decode tick (the token
+        the decode step writes at its current position).  Exception-safe:
+        a refused growth (past the reservation, or an exhausted pool)
+        leaves the accounting untouched."""
+        new_len = self._lens[seq_id] + 1
+        need = self.blocks_needed(new_len)
+        have = len(self._tables[seq_id])
+        if need > have:
+            self._grow(seq_id, need - have)
+        self._lens[seq_id] = new_len
 
     def table(self, seq_id: int) -> list[int]:
         return self._tables.get(seq_id, [])
 
     def free(self, seq_id: int) -> None:
         self._free.extend(self._tables.pop(seq_id, []))
+        self._lens.pop(seq_id, None)
+        self._reserved.pop(seq_id, None)
+
+
+class PagedKVCache:
+    """Device block pool + host block tables (one id namespace).
+
+    ``make_pool_fn(total_blocks) -> [L, 2, total_blocks, Hkv, block, Dh]``
+    builds the device pool; ``num_blocks`` usable blocks are managed by the
+    embedded :class:`BlockAllocator` and one extra physical block — index
+    ``num_blocks``, :attr:`trash_block` — absorbs writes of inactive decode
+    batch rows so the jitted step needs no write masking.
+
+    ``table_width`` fixes the per-sequence block-table width (=
+    ``max_seq_len // block``): table rows enter the jitted steps as DATA
+    padded with ``-1``, so table growth never recompiles.
+    """
+
+    def __init__(self, make_pool_fn, *, num_blocks: int, block: int,
+                 table_width: int):
+        self.pool = make_pool_fn(num_blocks + 1)
+        self.alloc = BlockAllocator(num_blocks, block)
+        self.block = block
+        self.trash_block = num_blocks
+        self.table_width = table_width
+
+    @property
+    def num_blocks(self) -> int:
+        return self.alloc.num_blocks
+
+    def table_row(self, seq_id: int) -> np.ndarray:
+        """``[table_width]`` int32 global block ids, -1 padded."""
+        row = np.full((self.table_width,), -1, np.int32)
+        t = self.alloc.table(seq_id)
+        row[:len(t)] = t
+        return row
+
+    def pool_bytes(self) -> int:
+        return self.pool.size * self.pool.dtype.itemsize
 
 
 class SlotCache:
-    """Fixed-slot device cache with host-side slot map."""
+    """Fixed-slot contiguous device cache with host-side slot map (the
+    ``cache_layout="contiguous"`` baseline)."""
 
     def __init__(self, make_cache_fn, num_slots: int):
         """``make_cache_fn(num_slots) -> device cache pytree`` (batch dim =

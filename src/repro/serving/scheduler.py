@@ -24,7 +24,21 @@ Correctness contracts (all previously violated):
 - the token sampled at prefill passes through the same completion check as
   decode tokens (a stop-token emitted at prefill ends the request, and
   ``max_tokens=1`` yields exactly one token);
-- slots and blocks are recycled through admit -> retire cycles.
+- slots and blocks are recycled through admit -> retire cycles;
+- KV blocks are TOKEN-GRANULAR: admission reserves a request's worst case
+  (prompt + max_tokens — so decode growth can never exhaust the pool) but
+  maps only the prompt's blocks; every decode tick accounts the token it
+  writes via ``alloc.append_token`` (mapping a fresh block exactly at block
+  boundaries) and completion frees the sequence's blocks for reuse.  The
+  conservation invariant ``allocated == sum(ceil(len/block))`` holds at
+  every tick (tests/test_paged_kv.py).
+
+The allocator may be SHARED with the engine's :class:`~repro.serving.
+kv_cache.PagedKVCache` (pass ``allocator=``): the scheduler then drives
+admission against the same pool whose block ids the device cache and the
+attention kernels address — one source of truth.  Under the paged layout
+``num_slots`` only bounds the decode batch width; capacity is the block
+pool.
 
 Completion on stop-token or max_tokens.  This is the host-side half of the
 paper's serving story — the device-side half (the S-HPLB attention itself)
@@ -39,7 +53,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.serving.kv_cache import BlockAllocator, SlotCache
+from repro.serving.kv_cache import BlockAllocator
 from repro.serving.sampler import SamplingParams
 from repro.utils.logging import get_logger
 
@@ -99,8 +113,13 @@ class ContinuousBatcher:
     def __init__(self, *, num_slots: int, num_blocks: int,
                  max_seq_len: int, block: int = 128,
                  token_budget: int | None = None,
+                 allocator: BlockAllocator | None = None,
                  clock: Callable[[], float] = time.monotonic):
-        self.alloc = BlockAllocator(num_blocks, block)
+        # ``allocator``: share the engine's PagedKVCache allocator so the
+        # scheduler's admission math and the device pool's block ids are the
+        # same object; None builds a private one (host-only tests, and the
+        # contiguous layout where blocks are pure accounting).
+        self.alloc = allocator or BlockAllocator(num_blocks, block)
         self.max_seq_len = max_seq_len
         self.block = block
         self.token_budget = token_budget
@@ -111,7 +130,13 @@ class ContinuousBatcher:
         self.stats = SchedulerStats()
         self._slots_free = list(range(num_slots))
         self._slot_of: dict[int, int] = {}
+        self._rid_of: dict[int, int] = {}   # inverse: slot -> rid
         self._clock = clock
+
+    def rid_of_slot(self, slot: int) -> int:
+        """The request currently bound to ``slot`` (the paged engine maps
+        slots to block tables through this)."""
+        return self._rid_of[slot]
 
     def submit(self, req: Request):
         req.t_submit = self._clock()
@@ -159,11 +184,15 @@ class ContinuousBatcher:
                 log.warning("request %d too long (%d) — rejected",
                             req.rid, need)
                 continue
-            if not self.alloc.can_allocate(need):
+            if not self.alloc.can_admit(need):
                 break  # wait for frees
             slot = self._slots_free.pop()
             self._slot_of[req.rid] = slot
-            self.alloc.allocate(req.rid, need)
+            self._rid_of[slot] = req.rid
+            # reserve the worst case, map the prompt's blocks now (decode
+            # blocks map lazily via append_token at block boundaries)
+            self.alloc.admit(req.rid, len(req.prompt),
+                             req.sampling.max_tokens)
             self.pending.popleft()
             self.stats.admitted += 1
             if self.token_budget is None:
@@ -214,6 +243,7 @@ class ContinuousBatcher:
     def _retire(self, req: Request):
         req.done = True
         slot = self._slot_of.pop(req.rid)
+        self._rid_of.pop(slot, None)
         self._slots_free.append(slot)
         self.alloc.free(req.rid)
         self.active.pop(req.rid, None)
@@ -235,6 +265,11 @@ class ContinuousBatcher:
                               np.int32)
             positions = np.array([self.lengths[r] - 1 for r in rids],
                                  np.int32)
+            # account the token each decode writes BEFORE the device step —
+            # a boundary-crossing write needs its block mapped (the paged
+            # engine reads the table this call may have just grown)
+            for r in rids:
+                self.alloc.append_token(r)
             nxt = decode_fn(slots, tokens, positions)
             self.stats.decode_steps += 1
             done_now = []

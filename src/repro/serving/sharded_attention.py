@@ -111,6 +111,75 @@ def hplb_prefill_attention_rows(mesh, *, block_q=128, block_kv=128):
     return attend
 
 
+def flash_decode_attention_paged(mesh, *, block_kv=128, seq_axes=("model",),
+                                 batch_axes=None):
+    """Paged twin of :func:`flash_decode_attention`: the device cache is a
+    block POOL ``[N, Hkv, block, D]`` sharded on its BLOCK axis over
+    ``seq_axes`` (each shard owns pool blocks ``[s*N_loc, (s+1)*N_loc)``),
+    and selections stay LOGICAL — the per-slot block table ``[B, T]``
+    (pool-GLOBAL ids) is remapped shard-local inside the island, entries
+    another shard owns becoming -1 (masked).  Because positions derive
+    from the logical ids, no position shifting is needed; partials merge
+    with the same flash-decoding psum/pmax combine.  S-HPLB balance now
+    acts on the one true unit: per-shard POOL BLOCK counts.
+    """
+    if batch_axes is None:
+        batch_axes = tuple(a for a in _batch_axes(mesh)
+                           if a not in seq_axes)
+    ba = tuple(batch_axes)
+    bspec = ba[0] if len(ba) == 1 else (ba if ba else None)
+    sspec = seq_axes[0] if len(seq_axes) == 1 else tuple(seq_axes)
+
+    def attend(q, k_pool, v_pool, ids, table, pos):
+        B, H, _, dh = q.shape
+        hkv = k_pool.shape[1]
+        G = H // hkv
+        n_pool = k_pool.shape[0]
+        n_shards = int(np.prod([mesh.shape[a] for a in seq_axes]))
+        n_loc = n_pool // n_shards
+        # per-slot positions shard with the batch like q/ids/table do
+        pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+
+        def island(q_l, kp_l, vp_l, ids_l, tbl_l, pos_l):
+            # q_l [B_l, H, 1, D]; kp_l [N_loc, Hkv, blk, D];
+            # ids_l [B_l, Hkv, nb] LOGICAL; tbl_l [B_l, T] GLOBAL pool ids
+            if len(seq_axes) == 1:
+                sidx = jax.lax.axis_index(seq_axes[0])
+            else:
+                sidx = jax.lax.axis_index(seq_axes)
+            lo = sidx * n_loc
+            local = tbl_l - lo
+            ok = (tbl_l >= 0) & (local >= 0) & (local < n_loc)
+            tbl_local = jnp.where(ok, local, -1)
+            Bl = q_l.shape[0]
+            out, m, l = ops.flash_decode_paged(
+                q_l, kp_l, vp_l, ids_l, tbl_local, pos_l,
+                block_kv=block_kv, partials=True)
+            ax = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+            gm = jax.lax.pmax(m, ax)                          # [B,hkv,G]
+            w = jnp.exp(m - gm) * l
+            den = jax.lax.psum(w, ax)
+            num = jax.lax.psum(
+                out.astype(jnp.float32).reshape(Bl, hkv, G, dh)
+                * w[..., None], ax)
+            o = num / jnp.maximum(den, 1e-30)[..., None]
+            return o.reshape(Bl, H, 1, dh).astype(q_l.dtype)
+
+        return shard_map(
+            island, mesh=mesh,
+            in_specs=(P(bspec, None, None, None),
+                      P(sspec, None, None, None),
+                      P(sspec, None, None, None),
+                      P(bspec, None, None),
+                      P(bspec, None),
+                      P(bspec)),
+            out_specs=P(bspec, None, None, None),
+            check_vma=False,
+        )(q, k_pool, v_pool, ids, table, pos_b)
+
+    return attend
+
+
 def flash_decode_attention(mesh, *, block_kv=128, seq_axes=("model",),
                            batch_axes=None):
     """Build the shard_map budgeted flash-decode: (q, kc, vc, ids, pos) -> o.

@@ -1,14 +1,23 @@
 """Fused budgeted flash-decode: kernel/reference parity vs the dense
 oracle and the legacy gather path, zero-copy jaxpr guarantees, cross-shard
-partial merging, and per-slot position masking."""
+partial merging, per-slot position masking — and the PAGED twins
+(block-pool + block-table indirection, DESIGN.md §2.7): paged executors
+must match the contiguous ones bit-for-bit on equal cache contents."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.attention.worklist_jnp import (
+    causal_items,
+    worklist_attention,
+    worklist_attention_paged,
+)
 from repro.kernels.flash_decode import (
     decode_items_from_ids,
     flash_decode_kernel,
+    flash_decode_paged_kernel,
+    flash_decode_paged_reference,
     flash_decode_reference,
     merge_partials,
 )
@@ -149,6 +158,136 @@ class TestParity:
         ro, _, _ = flash_decode_reference(
             q, kc, vc, jnp.asarray(ids), jnp.asarray(pos), block_kv=BLK)
         np.testing.assert_allclose(np.asarray(ro), ref, atol=2e-5, rtol=2e-5)
+
+
+def _paginate(kc, vc, seed=0, extra_blocks=2):
+    """Scatter a contiguous cache [B, Hkv, Smax, D] into a block pool
+    [N, Hkv, BLK, D] under a random per-slot logical->physical table.
+    Returns (k_pool, v_pool, table [B, T])."""
+    B, Hkv, Smax, D = kc.shape
+    T = Smax // BLK
+    N = B * T + extra_blocks
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(N)[:B * T].reshape(B, T).astype(np.int32)
+    k_pool = np.zeros((N, Hkv, BLK, D), np.asarray(kc).dtype)
+    v_pool = np.zeros((N, Hkv, BLK, D), np.asarray(vc).dtype)
+    for b in range(B):
+        for j in range(T):
+            k_pool[perm[b, j]] = np.asarray(
+                kc)[b, :, j * BLK:(j + 1) * BLK, :]
+            v_pool[perm[b, j]] = np.asarray(
+                vc)[b, :, j * BLK:(j + 1) * BLK, :]
+    return jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(perm)
+
+
+class TestPagedParity:
+    """Paged pool + block-table executors vs the contiguous twins."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_paged_reference_matches_contiguous_bitwise(self, dtype):
+        B, Hkv, G, Smax, D = 3, 2, 4, 512, 64
+        q, kc, vc, ids, pos = _rand_case(B, Hkv, G, Smax, D, dtype, seed=11)
+        kp, vp, tbl = _paginate(kc, vc, seed=12)
+        co, cm, cl = flash_decode_reference(
+            q, kc, vc, jnp.asarray(ids), jnp.asarray(pos), block_kv=BLK)
+        po, pm, plg = flash_decode_paged_reference(
+            q, kp, vp, jnp.asarray(ids), tbl, jnp.asarray(pos),
+            block_kv=BLK)
+        # identical tiles, identical accumulation order -> identical bits
+        assert np.array_equal(np.asarray(co), np.asarray(po))
+        assert np.array_equal(np.asarray(cm), np.asarray(pm))
+        assert np.array_equal(np.asarray(cl), np.asarray(plg))
+
+    @pytest.mark.parametrize("window", [None, 192])
+    def test_paged_kernel_matches_reference(self, window):
+        B, Hkv, G, Smax, D = 2, 2, 4, 384, 64
+        q, kc, vc, ids, pos = _rand_case(B, Hkv, G, Smax, D, jnp.float32,
+                                         seed=21)
+        kp, vp, tbl = _paginate(kc, vc, seed=22)
+        ref = _dense_oracle(q, kc, vc, ids, pos, window=window)
+        items = decode_items_from_ids(jnp.asarray(ids))
+        ko, km, kl = flash_decode_paged_kernel(
+            q, kp, vp, items, tbl, jnp.asarray(pos), block_kv=BLK,
+            window=window, interpret=True)
+        ro, rm, rl = flash_decode_paged_reference(
+            q, kp, vp, jnp.asarray(ids), tbl, jnp.asarray(pos),
+            block_kv=BLK, window=window)
+        np.testing.assert_allclose(np.asarray(ko), ref, atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(ro), ref, atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(km), np.asarray(rm),
+                                   atol=1e-6, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(kl), np.asarray(rl),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_unmapped_table_entries_are_masked(self):
+        """A -1 table entry (unmapped logical block / foreign shard's
+        block) contributes nothing, in reference and kernel alike."""
+        B, Hkv, G, Smax, D = 2, 2, 2, 512, 32
+        q, kc, vc, ids, pos = _rand_case(B, Hkv, G, Smax, D, jnp.float32,
+                                         seed=31)
+        kp, vp, tbl = _paginate(kc, vc, seed=32)
+        # drop logical block 1 everywhere; the oracle sees its selection
+        # removed instead
+        tbl_mask = np.asarray(tbl).copy()
+        tbl_mask[:, 1] = -1
+        ids_removed = np.where(ids == 1, -1, ids)
+        ref = _dense_oracle(q, kc, vc, ids_removed, pos)
+        ro, _, _ = flash_decode_paged_reference(
+            q, kp, vp, jnp.asarray(ids), jnp.asarray(tbl_mask),
+            jnp.asarray(pos), block_kv=BLK)
+        ko, _, _ = flash_decode_paged_kernel(
+            q, kp, vp, decode_items_from_ids(jnp.asarray(ids)),
+            jnp.asarray(tbl_mask), jnp.asarray(pos), block_kv=BLK,
+            interpret=True)
+        np.testing.assert_allclose(np.asarray(ro), ref, atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(ko), ref, atol=2e-5, rtol=2e-5)
+
+    def test_paged_shard_merge_matches_global(self):
+        """Block-sharded pool: each shard remaps the GLOBAL table to its
+        local block range (-1 elsewhere); merged partials equal the global
+        softmax — the paged flash-decode island's algebra."""
+        B, Hkv, G, Smax, D = 2, 3, 4, 512, 64
+        q, kc, vc, ids, pos = _rand_case(B, Hkv, G, Smax, D, jnp.float32,
+                                         seed=41)
+        kp, vp, tbl = _paginate(kc, vc, seed=42, extra_blocks=4)
+        ref = _dense_oracle(q, kc, vc, ids, pos)
+        N = kp.shape[0]
+        n_sh = 2
+        n_loc = -(-N // n_sh)
+        outs, ms, ls = [], [], []
+        for s in range(n_sh):
+            lo, hi = s * n_loc, min((s + 1) * n_loc, N)
+            local = np.asarray(tbl) - lo
+            ok = (np.asarray(tbl) >= lo) & (np.asarray(tbl) < hi)
+            tbl_local = np.where(ok, local, -1).astype(np.int32)
+            o, m, l = flash_decode_paged_reference(
+                q, kp[lo:hi], vp[lo:hi], jnp.asarray(ids),
+                jnp.asarray(tbl_local), jnp.asarray(pos), block_kv=BLK)
+            outs.append(o), ms.append(m), ls.append(l)
+        merged = merge_partials(jnp.stack(outs), jnp.stack(ms),
+                                jnp.stack(ls))
+        np.testing.assert_allclose(np.asarray(merged), ref,
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_worklist_paged_matches_contiguous_bitwise(self):
+        """Chunked-prefill executor: the paged work-list twin reproduces
+        the contiguous one bit-for-bit (same tiles, same order) through a
+        scrambled block table."""
+        H, Hkv, S, D = 4, 2, 384, 32
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        qx = jax.random.normal(ks[0], (H, S, D), jnp.float32)
+        kx = jax.random.normal(ks[1], (Hkv, S, D), jnp.float32)
+        vx = jax.random.normal(ks[2], (Hkv, S, D), jnp.float32)
+        kp, vp, tbl = _paginate(kx[None], vx[None], seed=6)
+        kv_of_head = np.arange(H) // (H // Hkv)
+        items = causal_items(H, S // BLK, kv_of_head)
+        base = worklist_attention(qx, kx, vx, jnp.asarray(items),
+                                  block_q=BLK, block_kv=BLK,
+                                  q_offset=0, kv_len=S)
+        paged = worklist_attention_paged(qx, kp, vp, jnp.asarray(items),
+                                         tbl[0], block_q=BLK, block_kv=BLK,
+                                         q_offset=0, kv_len=S)
+        assert np.array_equal(np.asarray(base), np.asarray(paged))
 
 
 class TestZeroCopy:

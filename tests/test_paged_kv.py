@@ -1,0 +1,201 @@
+"""Paged KV-cache bookkeeping: allocator safety under interleaved
+admit/append/free streams, the serving loop's block-conservation
+invariant, and PagedKVCache table plumbing (DESIGN.md §2.7).
+
+Host-side only (no jax compute) — runs in milliseconds, so many random
+streams.  The hypothesis-driven twins live in tests/test_paged_kv_props.py
+(skipped where hypothesis is absent); the device-side halves (paged
+executors, engine parity) in tests/test_flash_decode.py and
+tests/test_serving.py.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import BlockAllocator, PagedKVCache
+from repro.serving.sampler import SamplingParams
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+# ---------------------------------------------------------------------------
+# Allocator invariants under random interleaved op streams
+# ---------------------------------------------------------------------------
+
+def _check_no_double_assignment(a: BlockAllocator):
+    assigned = [b for s in a.live_seqs for b in a.table(s)]
+    assert len(assigned) == len(set(assigned)), "block double-assigned"
+    free = set(a._free)
+    assert not (free & set(assigned)), "block both free and assigned"
+    assert len(free) + len(assigned) == a.num_blocks, "blocks leaked"
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_random_interleaved_streams_deterministic(seed):
+    """np.random twin of the hypothesis stream property (which needs the
+    optional hypothesis dep): interleaved admit/append/free never
+    double-assigns a block, conservation holds after every op, and
+    draining restores the whole pool."""
+    rng = np.random.default_rng(seed)
+    num_blocks = int(rng.integers(2, 25))
+    block = int(rng.choice([16, 128]))
+    a = BlockAllocator(num_blocks, block)
+    live: dict[int, int] = {}
+    next_seq = 0
+    for _ in range(int(rng.integers(1, 50))):
+        op = rng.choice(["admit", "append", "free"] if live else ["admit"])
+        if op == "admit":
+            prompt = int(rng.integers(1, num_blocks * block + 1))
+            max_new = int(rng.integers(0, 2 * block + 1))
+            if a.can_admit(prompt + max_new):
+                a.admit(next_seq, prompt, max_new)
+                live[next_seq] = max(0, max_new - 1)
+            else:
+                with pytest.raises(MemoryError):
+                    a.admit(next_seq, prompt, max_new)
+            next_seq += 1
+        elif op == "append":
+            sid = int(rng.choice(sorted(live)))
+            if live[sid] > 0:
+                a.append_token(sid)
+                live[sid] -= 1
+        else:
+            sid = int(rng.choice(sorted(live)))
+            a.free(sid)
+            del live[sid]
+        _check_no_double_assignment(a)
+        assert a.conserves()
+        assert a.available_blocks >= 0
+    for sid in list(live):
+        a.free(sid)
+    assert a.free_blocks == a.num_blocks
+    assert a.allocated_blocks == 0 and a.conserves()
+
+
+def test_freed_blocks_are_reused():
+    """Blocks released by a completed sequence physically serve later
+    sequences (the paged capacity story: one pool, many tenants)."""
+    a = BlockAllocator(num_blocks=4, block=128)
+    first = set(a.admit(1, 512))
+    assert len(first) == 4
+    a.free(1)
+    second = set(a.admit(2, 512))
+    assert second == first           # the very same physical blocks
+    a.free(2)
+    assert a.free_blocks == 4
+
+
+def test_append_past_reservation_raises():
+    a = BlockAllocator(num_blocks=8, block=4)
+    a.admit(1, 3, max_new_tokens=1)  # reserved exactly 1 block
+    a.append_token(1)                # token 4 still fits block 1
+    with pytest.raises(MemoryError):
+        a.append_token(1)            # token 5 needs an unreserved block
+    assert a.conserves()             # the refused append left no trace
+
+
+# ---------------------------------------------------------------------------
+# Serving-loop conservation: allocated == sum(ceil(len/block)) every tick
+# ---------------------------------------------------------------------------
+
+class _FakeSteps:
+    """Minimal closures for a host-only batcher drive."""
+
+    def __init__(self, rng):
+        self.rng = rng
+
+    def prefill(self, toks, slot, q_offset, is_final, prompt_len):
+        return int(self.rng.integers(0, 50)) if is_final else None
+
+    def decode(self, slots, toks, pos):
+        return self.rng.integers(0, 50, size=len(slots)).astype(np.int32)
+
+
+def _conservation_holds(b: ContinuousBatcher) -> bool:
+    a = b.alloc
+    if not a.conserves():
+        return False
+    # cross-check allocator accounting against scheduler state: an active
+    # sequence has written prompt + generated - 1 tokens (the newest
+    # sampled token is in flight, not yet in the cache); a mid-prefill
+    # sequence claimed its whole prompt at admission.
+    for rid, req in b.active.items():
+        if a.seq_tokens(rid) != len(req.prompt) + len(req.generated) - 1:
+            return False
+    if b.prefilling is not None:
+        if a.seq_tokens(b.prefilling.rid) != len(b.prefilling.prompt):
+            return False
+    return True
+
+
+@pytest.mark.parametrize("token_budget", [None, 128, 256])
+@pytest.mark.parametrize("seed", range(8))
+def test_block_conservation_every_tick(seed, token_budget):
+    rng = np.random.default_rng(seed)
+    num_slots = int(rng.integers(1, 5))
+    b = ContinuousBatcher(num_slots=num_slots,
+                          num_blocks=num_slots * 4, max_seq_len=512,
+                          block=128, token_budget=token_budget)
+    eng = _FakeSteps(rng)
+    for i in range(int(rng.integers(3, 12))):
+        length = int(rng.integers(1, 450))
+        b.submit(Request(rid=i, prompt=np.arange(length) % 256,
+                         sampling=SamplingParams(
+                             max_tokens=int(rng.integers(1, 8)))))
+    ticks = 0
+    while b.busy and ticks < 10_000:
+        b.tick(eng.prefill, eng.decode)
+        assert _conservation_holds(b), f"conservation broken at tick {ticks}"
+        ticks += 1
+    assert not b.busy
+    assert b.alloc.free_blocks == b.alloc.num_blocks
+    assert b.alloc.allocated_blocks == 0
+
+
+def test_decode_growth_maps_blocks_at_boundaries():
+    """A request whose generation crosses a block boundary gains exactly
+    one block at the crossing tick — the accounting admission control now
+    sees (the old loop never called append_token, so generated tokens were
+    invisible to the allocator)."""
+    b = ContinuousBatcher(num_slots=1, num_blocks=4, max_seq_len=512,
+                          block=128, token_budget=256)
+    rng = np.random.default_rng(0)
+    eng = _FakeSteps(rng)
+    # 127-token prompt: the first decode writes position 127 — the last
+    # row of block 1; the second decode crosses into block 2
+    b.submit(Request(rid=0, prompt=np.arange(127),
+                     sampling=SamplingParams(max_tokens=6)))
+    b.tick(eng.prefill, eng.decode)   # admit + prefill + first decode
+    assert len(b.alloc.table(0)) == 1
+    assert b.alloc.seq_tokens(0) == 128
+    b.tick(eng.prefill, eng.decode)   # second decode: boundary crossing
+    assert len(b.alloc.table(0)) == 2
+    assert b.alloc.seq_tokens(0) == 129
+    b.run(eng.prefill, eng.decode)
+    assert b.alloc.free_blocks == 4
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache plumbing
+# ---------------------------------------------------------------------------
+
+def _mk_pool(total_blocks):
+    # stand-in device pool [L=1, 2, N, Hkv=1, block=4, Dh=2]
+    return np.zeros((1, 2, total_blocks, 1, 4, 2), np.float32)
+
+
+def test_paged_cache_trash_block_and_tables():
+    kv = PagedKVCache(_mk_pool, num_blocks=6, block=4, table_width=3)
+    assert kv.pool.shape[2] == 7          # +1 physical trash block
+    assert kv.trash_block == 6            # ...outside the allocator's ids
+    kv.alloc.admit(0, 9)                  # 3 blocks
+    row = kv.table_row(0)
+    assert row.shape == (3,) and (row >= 0).all()
+    assert kv.trash_block not in set(row.tolist())
+    kv.alloc.admit(1, 4)
+    row1 = kv.table_row(1)
+    assert row1[0] >= 0 and (row1[1:] == -1).all()
+    assert not set(row.tolist()) & {int(row1[0])}
+    kv.alloc.free(0)
+    kv.alloc.free(1)
+    assert kv.alloc.free_blocks == 6
+
+

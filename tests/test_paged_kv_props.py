@@ -1,0 +1,96 @@
+"""Hypothesis property tests for BlockAllocator / PagedKVCache reuse
+(DESIGN.md §2.7): interleaved claim/append/free streams never
+double-assign a block, and the free pool is fully restored after all
+sequences complete.
+
+Deterministic np.random twins of the same invariants run unconditionally
+in tests/test_paged_kv.py; this module adds hypothesis's adversarial
+shrinking where the dep is available (it is in CI via ``.[test]``).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import numpy as np
+
+from repro.serving.kv_cache import BlockAllocator, PagedKVCache
+
+
+def _check_no_double_assignment(a: BlockAllocator):
+    assigned = [b for s in a.live_seqs for b in a.table(s)]
+    assert len(assigned) == len(set(assigned)), "block double-assigned"
+    free = set(a._free)
+    assert not (free & set(assigned)), "block both free and assigned"
+    assert len(free) + len(assigned) == a.num_blocks, "blocks leaked"
+
+
+def _mk_pool(total_blocks):
+    # stand-in device pool [L=1, 2, N, Hkv=1, block=4, Dh=2]
+    return np.zeros((1, 2, total_blocks, 1, 4, 2), np.float32)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_interleaved_streams_never_double_assign(data):
+    """Random admit/append/free interleavings: every block is either free
+    or owned by exactly one sequence, conservation holds after every op,
+    and draining restores the whole pool."""
+    num_blocks = data.draw(st.integers(2, 24), label="num_blocks")
+    block = data.draw(st.sampled_from([16, 128]), label="block")
+    a = BlockAllocator(num_blocks, block)
+    live: dict[int, int] = {}   # seq -> decode appends still allowed
+    next_seq = 0
+    for _ in range(data.draw(st.integers(1, 40), label="n_ops")):
+        ops = ["admit"] + (["append", "free"] if live else [])
+        op = data.draw(st.sampled_from(ops))
+        if op == "admit":
+            prompt = data.draw(st.integers(1, num_blocks * block))
+            max_new = data.draw(st.integers(0, 2 * block))
+            if a.can_admit(prompt + max_new):
+                a.admit(next_seq, prompt, max_new)
+                # decode may write at most prompt + max_new - 1 tokens
+                # (the final sampled token never lands in the cache)
+                live[next_seq] = max(0, max_new - 1)
+            else:
+                with pytest.raises(MemoryError):
+                    a.admit(next_seq, prompt, max_new)
+            next_seq += 1   # rejected ids are never reused
+        elif op == "append":
+            sid = data.draw(st.sampled_from(sorted(live)))
+            if live[sid] > 0:
+                a.append_token(sid)
+                live[sid] -= 1
+        else:
+            sid = data.draw(st.sampled_from(sorted(live)))
+            a.free(sid)
+            del live[sid]
+        _check_no_double_assignment(a)
+        assert a.conserves()
+        assert a.available_blocks >= 0
+    for sid in list(live):
+        a.free(sid)
+    assert a.free_blocks == a.num_blocks
+    assert a.available_blocks == a.num_blocks
+    assert a.allocated_blocks == 0 and a.conserves()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 40), min_size=1, max_size=12),
+       st.randoms(use_true_random=False))
+def test_paged_cache_pool_restored_after_all_complete(lengths, rnd):
+    """Interleaved sequence lifetimes through the PagedKVCache allocator:
+    all blocks return and no table ever references the trash block."""
+    kv = PagedKVCache(_mk_pool, num_blocks=16, block=4, table_width=10)
+    live = []
+    for i, n in enumerate(lengths):
+        n = min(n, 10 * 4)
+        if kv.alloc.can_admit(n):
+            kv.alloc.admit(i, n)
+            live.append(i)
+            assert kv.trash_block not in set(kv.alloc.table(i))
+        if live and rnd.random() < 0.5:
+            kv.alloc.free(live.pop(rnd.randrange(len(live))))
+    for i in live:
+        kv.alloc.free(i)
+    assert kv.alloc.free_blocks == 16

@@ -118,6 +118,7 @@ def test_stream_invariants(seed, token_budget):
     assert sorted(b._slots_free) == list(range(b.num_free_slots))
     assert b.num_free_slots == len(set(b._slots_free))
     assert b.alloc.free_blocks == b.alloc.num_blocks
+    assert b.alloc.conserves() and b.alloc.reserved_unmapped == 0
     assert b._slot_of == {}
     # per-request contracts
     for r in done:

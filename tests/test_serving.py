@@ -198,6 +198,83 @@ class TestEngineHotPath:
         assert (ids == 512 // 128 - 1).any(-1).all()
 
 
+class TestPagedLayout:
+    """cache_layout="paged" (the default) vs the contiguous parity
+    baseline: identical greedy tokens on the chunked-prefill + decode
+    serving path, and token-granular admission."""
+
+    @pytest.mark.parametrize("attn,pattern,mode", [
+        ("sparse", "G", "chunked"),      # S-HPLB budgeted decode
+        ("dense", "G", "chunked"),       # dense baseline
+        ("dense", "GL", "chunked"),      # windowed (local) layers
+        ("sparse", "G", "monolithic"),   # whole-prompt scatter merge
+    ])
+    def test_paged_matches_contiguous_serve(self, params, profile, attn,
+                                            pattern, mode):
+        cfg = (CFG if pattern == "G"
+               else TransformerConfig(
+                   num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                   d_ff=128, vocab_size=256, layer_loop="unroll",
+                   attn_pattern=pattern, local_window=160))
+        p = params if pattern == "G" else init_params(
+            jax.random.PRNGKey(0), cfg)
+        prompts = [np.random.default_rng(i).integers(0, 256, size=(n,))
+                   for i, n in enumerate((40, 300, 130, 70))]
+        sp = SamplingParams(max_tokens=8)  # greedy
+        outs = {}
+        for layout in ("contiguous", "paged"):
+            eng = Engine(
+                cfg, p,
+                EngineConfig(attention=attn, budget_per_head=512,
+                             max_seq_len=512, num_slots=4,
+                             prefill_mode=mode, cache_layout=layout),
+                profile=profile if attn == "sparse" else None)
+            outs[layout] = [r.generated for r in eng.serve(prompts, sp)]
+        assert outs["paged"] == outs["contiguous"]
+
+    def test_paged_admission_is_block_granular(self, params, profile):
+        """With a pool smaller than num_slots * max_seq_len, admission is
+        bounded by BLOCKS (token-granular), not slots — and everything
+        still drains with blocks conserved."""
+        eng = Engine(CFG, params,
+                     EngineConfig(attention="sparse", budget_per_head=256,
+                                  max_seq_len=512, num_slots=4,
+                                  num_kv_blocks=6),  # 768 tokens of HBM
+                     profile=profile)
+        prompts = [np.random.default_rng(i).integers(0, 256, size=(300,))
+                   for i in range(4)]
+        done = eng.serve(prompts, SamplingParams(max_tokens=4))
+        assert len(done) == 4 and all(len(r.generated) == 4 for r in done)
+        alloc = eng.kv.alloc
+        assert alloc.free_blocks == alloc.num_blocks == 6
+        assert alloc.conserves()
+
+    def test_paged_pool_is_token_not_slot_bound(self, params, profile):
+        """The same pool bytes hold MORE short sequences than the
+        contiguous layout's slot count — the capacity headline, at engine
+        granularity (benchmarks/serving.py measures the full curve)."""
+        # contiguous: 2 slots x 512 tokens = 8 blocks of HBM, 2 sequences
+        # paged: the same 8 blocks hold 4 x (70 + 8) -> 4 x 1 block
+        eng = Engine(CFG, params,
+                     EngineConfig(attention="sparse", budget_per_head=256,
+                                  max_seq_len=512, num_slots=4,
+                                  num_kv_blocks=8),
+                     profile=profile)
+        b = eng.make_batcher()
+        pf, df = eng.step_fns(SamplingParams(max_tokens=8))
+        for i in range(4):
+            b.submit(Request(rid=i,
+                             prompt=np.arange(70 + i) % 256,
+                             sampling=SamplingParams(max_tokens=8)))
+        peak = 0
+        while b.busy:
+            b.tick(pf, df)
+            peak = max(peak, len(b._slot_of))   # sequences resident at once
+        assert b.stats.completed == 4
+        # all four were resident at once on 2-contiguous-slots' bytes
+        assert peak == 4
+
+
 def _fake_fns(first_token=1, decode_token=1):
     calls = {"prefill": 0, "decode": 0}
 
@@ -294,30 +371,47 @@ class TestScheduler:
 
 
 class TestBlockAllocator:
-    def test_alloc_free_cycle(self):
+    def test_admit_free_cycle(self):
         a = BlockAllocator(num_blocks=10, block=128)
-        a.allocate(1, 500)   # 4 blocks
-        a.allocate(2, 700)   # 6 blocks
+        a.admit(1, 500)   # 4 blocks
+        a.admit(2, 700)   # 6 blocks
         assert a.free_blocks == 0
-        assert not a.can_allocate(1)
+        assert not a.can_admit(1)
         a.free(1)
         assert a.free_blocks == 4
-        a.allocate(3, 512)
+        a.admit(3, 512)
         assert a.free_blocks == 0
+        assert a.conserves()
 
     def test_append_token_grows_at_boundary(self):
         a = BlockAllocator(num_blocks=4, block=128)
-        a.allocate(1, 128)
+        a.admit(1, 128, max_new_tokens=2)
         assert len(a.table(1)) == 1
-        a.append_token(1, 128)  # crossing into block 2
+        a.append_token(1)   # token 129 crosses into block 2
         assert len(a.table(1)) == 2
-        a.append_token(1, 129)  # no growth mid-block
+        a.append_token(1)   # token 130: no growth mid-block
+        assert len(a.table(1)) == 2
+        assert a.seq_tokens(1) == 130 and a.conserves()
+
+    def test_reservation_guards_decode_growth(self):
+        """Admission headroom counts reserved-but-unmapped blocks, so a
+        later arrival can never steal the blocks an active sequence's
+        generation is entitled to."""
+        a = BlockAllocator(num_blocks=3, block=128)
+        a.admit(1, 128, max_new_tokens=128)  # maps 1, reserves 2
+        assert a.free_blocks == 2            # physically free...
+        assert a.available_blocks == 1       # ...but one is spoken for
+        assert not a.can_admit(200)          # 2 blocks > 1 available
+        a.admit(2, 128)
+        with pytest.raises(MemoryError):
+            a.admit(3, 1)
+        a.append_token(1)                    # the reserved block maps fine
         assert len(a.table(1)) == 2
 
     def test_exhaustion_raises(self):
         a = BlockAllocator(num_blocks=2, block=128)
         with pytest.raises(MemoryError):
-            a.allocate(1, 1000)
+            a.admit(1, 1000)
 
 
 class TestSampler:
