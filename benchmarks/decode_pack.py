@@ -1,0 +1,236 @@
+"""Decode microbench — the perf series behind ``BENCH_decode.json``.
+
+Two measurements:
+
+1. ``packed_vs_padded`` (DESIGN.md §2.8, the load-balance tentpole):
+   ONE executor (the portable work-list scan — the execution model of the
+   Pallas decode grid, one (row, kv_head, kv_block) tile per step), TWO
+   item tables for the very same selections:
+
+   - PADDED: every (slot, head) padded to the max-budget width
+     (``core.worklist.padded_decode_items`` — what the step-invariant
+     baseline grid executes: ``B x Hkv x max_h b_h`` steps);
+   - PACKED: the cost-packed ragged list
+     (``core.worklist.pack_decode_items`` — total selected blocks rounded
+     to the pow2 compile bucket).
+
+   Because the executor and the arithmetic are identical (outputs are
+   bitwise-equal, asserted), the measured latency delta is PURELY the grid
+   length — wall-clock drops from ``max_h b_h`` to ``mean_h b_h`` scaling
+   under a skewed budget profile with mixed sequence lengths.  Acceptance:
+   >= 1.5x lower mean decode-attention latency.
+
+2. ``gather_vs_fused``: the PR-1 trajectory series (legacy dense-gather
+   decode vs fused budgeted flash-decode) with the zero-copy jaxpr audit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.attention.worklist_jnp import packed_decode_attention
+from repro.core.worklist import (
+    DEC_FIELDS,
+    extend_packed_items,
+    pack_decode_items,
+    padded_decode_items,
+    pow2_bucket,
+)
+from repro.kernels.flash_decode import flash_decode_reference
+from repro.kernels.ops import flash_decode
+from repro.kernels.ref import gather_decode_reference, gather_output_sizes
+
+BLOCK = 128
+
+
+def _time(f, *args, iters=10):
+    f(*args)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f(*args)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def _skewed_selection(nb_per_head, pos, nkv, nb_cap, rng):
+    """Engine-style selection (sink + most recent within budget) at each
+    slot's true length: ``[B, Hkv, nb_cap]`` int32, -1 trailing pad."""
+    B, Hkv = len(pos), len(nb_per_head)
+    ids = np.full((B, Hkv, nb_cap), -1, np.int32)
+    for b in range(B):
+        resident = min(nkv, (int(pos[b]) + 1 + BLOCK - 1) // BLOCK)
+        for h in range(Hkv):
+            n = max(1, min(int(nb_per_head[h]), resident))
+            recent = range(max(0, resident - max(1, n - 1)), resident)
+            sel = sorted(set(([0] if n > 1 else []) + list(recent)))[:n]
+            ids[b, h, :len(sel)] = sel
+    return ids
+
+
+def run_packed_vs_padded(quick: bool = False) -> dict:
+    B, Hkv, G, D = 8, 8, 4, 64
+    smax = 4096 if quick else 8192
+    iters = 4 if quick else 10
+    nkv = smax // BLOCK
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    # f32, deliberately: XLA CPU hoists a whole-cache bf16->f32 convert out
+    # of the item loop (~100ms fixed cost at this geometry) which swamps
+    # the grid-length signal this series measures; on TPU tiles convert
+    # per-step in VMEM so the hoist does not exist.  f32 scales linearly in
+    # grid steps (~25us/step here), isolating exactly the padded-vs-packed
+    # grid delta.
+    q = jax.random.normal(ks[0], (B, Hkv, G, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Hkv, smax, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Hkv, smax, D), jnp.float32)
+    rng = np.random.default_rng(0)
+
+    # skewed per-head budget profile (the paper's heterogeneity): one
+    # retrieval-ish head at the full context, a couple of mid heads, the
+    # rest at streaming floors — mean_h b_h << max_h b_h
+    nb_per_head = np.array([nkv, nkv // 2, nkv // 8, 4, 4, 4, 2, 2])[:Hkv]
+    nb_cap = int(nb_per_head.max())
+
+    # mixed sequence lengths across ticks (continuous batching): each
+    # variant is one tick's slot-length mix
+    pos_mixes = [
+        np.linspace(BLOCK, smax - 1, B).astype(np.int32),
+        np.full((B,), smax - 1, np.int32),
+        rng.integers(BLOCK, smax, size=B).astype(np.int32),
+    ]
+
+    fn = jax.jit(lambda qq, kk, vv, it, pp: packed_decode_attention(
+        qq, kk, vv, it, pp, block_kv=BLOCK))
+    ticks = []
+    for pos in pos_mixes:
+        ids = _skewed_selection(nb_per_head, pos, nkv, nb_cap, rng)
+        padded = padded_decode_items(ids)
+        wl = pack_decode_items(ids, num_shards=1, block=BLOCK)
+        bucket = pow2_bucket(wl.padded_length)
+        packed = extend_packed_items(wl.items, bucket).reshape(-1,
+                                                              DEC_FIELDS)
+        pj = jnp.asarray(pos)
+        # identical bits: the delta below is grid length, nothing else
+        o_pad = fn(q, kc, vc, jnp.asarray(padded), pj)
+        o_pk = fn(q, kc, vc, jnp.asarray(packed), pj)
+        assert np.array_equal(np.asarray(o_pad[0]), np.asarray(o_pk[0]))
+        ref = flash_decode_reference(q, kc, vc, jnp.asarray(ids), pj,
+                                     block_kv=BLOCK)
+        assert np.array_equal(np.asarray(ref[0]), np.asarray(o_pk[0]))
+        t_pad = _time(fn, q, kc, vc, jnp.asarray(padded), pj, iters=iters)
+        t_pk = _time(fn, q, kc, vc, jnp.asarray(packed), pj, iters=iters)
+        ticks.append({
+            "positions": pos.tolist(),
+            "padded_grid": int(len(padded)),
+            "packed_grid": int(len(packed)),
+            "real_items": int(wl.total_real_items),
+            "packed_padding_waste": wl.padding_waste,
+            "padded_padding_waste": 1.0 - wl.total_real_items / len(padded),
+            "padded_s": t_pad,
+            "packed_s": t_pk,
+            "speedup": t_pad / t_pk,
+        })
+    mean_pad = float(np.mean([t["padded_s"] for t in ticks]))
+    mean_pk = float(np.mean([t["packed_s"] for t in ticks]))
+    return {
+        "config": {"B": B, "Hkv": Hkv, "G": G, "D": D, "smax": smax,
+                   "block": BLOCK, "dtype": "float32",
+                   "nb_per_head": nb_per_head.tolist(),
+                   "iters": iters},
+        "ticks": ticks,
+        "mean_padded_s": mean_pad,
+        "mean_packed_s": mean_pk,
+        "mean_speedup": mean_pad / mean_pk,
+        "tokens_bitwise_identical": True,
+    }
+
+
+def run_gather_vs_fused(quick: bool = False) -> dict:
+    """Budget sweep: gather-based vs fused budgeted flash-decode (PR-1
+    series).  Quick mode only trims iterations — batch/head/context stay
+    at serving scale so the memory path, not dispatch overhead, is what
+    gets measured."""
+    B, Hkv, G, D = 8, 8, 4, 64
+    smax = 8192
+    iters = 10 if not quick else 4
+    H = Hkv * G
+    nkv = smax // BLOCK
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, 1, D), jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (B, Hkv, smax, D), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (B, Hkv, smax, D), jnp.bfloat16)
+    pos = jnp.full((B,), smax - 1, jnp.int32)
+    rng = np.random.default_rng(0)
+
+    budgets = [nb for nb in (4, 8, 16, 32) if nb <= nkv]
+    sweep = {}
+    for nb in budgets:
+        ids = np.full((B, Hkv, nb), -1, np.int32)
+        for b in range(B):
+            for h in range(Hkv):
+                rest = rng.choice(nkv - 1, nb - 1, replace=False) + 1
+                ids[b, h] = np.sort(np.append(rest, 0))   # sink + random
+        ids = jnp.asarray(ids)
+        g = jax.jit(lambda *a: (gather_decode_reference(*a, block_kv=BLOCK),))
+        f = jax.jit(lambda *a: (flash_decode(*a, block_kv=BLOCK),))
+        err = float(jnp.abs(
+            g(q, kc, vc, ids, pos)[0].astype(jnp.float32)
+            - f(q, kc, vc, ids, pos)[0].astype(jnp.float32)).max())
+        tg = _time(g, q, kc, vc, ids, pos, iters=iters)
+        tf = _time(f, q, kc, vc, ids, pos, iters=iters)
+
+        # jaxpr audit: the fused program must not materialize the dense
+        # [B, Hkv, nb*blk, D] buffer; the gather baseline does.
+        dense_elems = B * Hkv * nb * BLOCK * D
+        fused_g = max(gather_output_sizes(jax.make_jaxpr(
+            lambda *a: flash_decode(*a, block_kv=BLOCK))(
+                q, kc, vc, ids, pos).jaxpr), default=0)
+        base_g = max(gather_output_sizes(jax.make_jaxpr(
+            lambda *a: gather_decode_reference(*a, block_kv=BLOCK))(
+                q, kc, vc, ids, pos).jaxpr), default=0)
+        assert fused_g < dense_elems, (fused_g, dense_elems)
+        assert base_g >= dense_elems
+        sweep[nb] = {"gather_s": tg, "fused_s": tf, "speedup": tg / tf,
+                     "max_err": err,
+                     "fused_max_gather_elems": fused_g,
+                     "dense_buffer_elems": dense_elems}
+    geo = float(np.exp(np.mean([np.log(v["speedup"])
+                                for v in sweep.values()])))
+    return {"config": {"B": B, "Hkv": Hkv, "G": G, "D": D, "smax": smax,
+                       "block": BLOCK, "dtype": "bfloat16"},
+            "sweep": {str(k): v for k, v in sweep.items()},
+            "geomean_speedup": geo,
+            "dense_gather_free": True}
+
+
+def run(out_dir: str, quick: bool = False) -> list[tuple[str, float]]:
+    packed = run_packed_vs_padded(quick=quick)
+    fused = run_gather_vs_fused(quick=quick)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_decode.json"), "w") as fh:
+        json.dump({"packed_vs_padded": packed,
+                   "gather_vs_fused": fused}, fh, indent=1)
+
+    rows: list[tuple[str, float]] = [
+        ("packed_mean_speedup", packed["mean_speedup"]),
+        ("packed_mean_padded_s", packed["mean_padded_s"]),
+        ("packed_mean_packed_s", packed["mean_packed_s"]),
+        ("packed_tokens_bitwise", 1.0),
+        ("packed_grid_ratio",
+         float(np.mean([t["padded_grid"] / t["packed_grid"]
+                        for t in packed["ticks"]]))),
+        ("fused_geomean_speedup", fused["geomean_speedup"]),
+        ("fused_dense_gather_free", 1.0),
+    ]
+    for nb, v in fused["sweep"].items():
+        rows.append((f"decode_nb{nb}_speedup", v["speedup"]))
+    return rows
+
+
+if __name__ == "__main__":
+    for k, v in run(os.path.join(os.path.dirname(__file__), "..",
+                                 "artifacts", "bench")):
+        print(f"decode_pack,{k},{v:.6g}")

@@ -11,10 +11,8 @@ Three measurements:
    tile count -> seconds via the §Roofline model.  This is the CPU-only
    substitute for Fig. 9's wall-clock, and is exact w.r.t. tile counts.
 
-3. Decode hot path: the legacy dense-gather budgeted decode vs the fused
-   flash-decode across a budget sweep — wall-clock plus a jaxpr audit that
-   the fused program never materializes the ``[B, Hkv, nb*blk, D]`` gather
-   buffer.  Trajectory point lands in ``BENCH_decode.json``.
+The decode hot path (gather-vs-fused, packed-vs-padded grids) moved to
+``benchmarks/decode_pack.py``, which owns ``BENCH_decode.json``.
 """
 from __future__ import annotations
 
@@ -33,8 +31,6 @@ from repro.core.metrics import HBM_BW, PEAK_FLOPS_BF16
 from repro.core.partition import best_partition, naive_partition
 from repro.core.sparsity import synthetic_head_curves
 from repro.core.worklist import blocks_for_budget, build_worklist
-from repro.kernels.ops import flash_decode
-from repro.kernels.ref import gather_decode_reference, gather_output_sizes
 
 BLOCK = 128
 
@@ -89,77 +85,6 @@ def _time(f, *args, iters=10):
     for _ in range(iters):
         f(*args).block_until_ready()
     return (time.perf_counter() - t0) / iters
-
-
-def run_decode(out_dir: str, quick: bool = False) -> list[tuple[str, float]]:
-    """Budget sweep: gather-based vs fused budgeted flash-decode.
-
-    Quick mode only trims the iteration count — batch/head/context stay at
-    serving scale, because the fused path's per-tile overhead amortizes
-    only with real B*Hkv parallelism and long caches; shrinking them would
-    benchmark dispatch overhead instead of the memory path.
-    """
-    B, Hkv, G, D = 8, 8, 4, 64
-    smax = 8192
-    iters = 10 if not quick else 4
-    H = Hkv * G
-    nkv = smax // BLOCK
-    ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    q = jax.random.normal(ks[0], (B, H, 1, D), jnp.bfloat16)
-    kc = jax.random.normal(ks[1], (B, Hkv, smax, D), jnp.bfloat16)
-    vc = jax.random.normal(ks[2], (B, Hkv, smax, D), jnp.bfloat16)
-    pos = jnp.full((B,), smax - 1, jnp.int32)
-    rng = np.random.default_rng(0)
-
-    budgets = [nb for nb in (4, 8, 16, 32) if nb <= nkv]
-    rows: list[tuple[str, float]] = []
-    sweep = {}
-    for nb in budgets:
-        ids = np.full((B, Hkv, nb), -1, np.int32)
-        for b in range(B):
-            for h in range(Hkv):
-                rest = rng.choice(nkv - 1, nb - 1, replace=False) + 1
-                ids[b, h] = np.sort(np.append(rest, 0))   # sink + random
-        ids = jnp.asarray(ids)
-        g = jax.jit(lambda *a: gather_decode_reference(*a, block_kv=BLOCK))
-        f = jax.jit(lambda *a: flash_decode(*a, block_kv=BLOCK))
-        err = float(jnp.abs(
-            g(q, kc, vc, ids, pos).astype(jnp.float32)
-            - f(q, kc, vc, ids, pos).astype(jnp.float32)).max())
-        tg = _time(g, q, kc, vc, ids, pos, iters=iters)
-        tf = _time(f, q, kc, vc, ids, pos, iters=iters)
-
-        # jaxpr audit: the fused program must not materialize the dense
-        # [B, Hkv, nb*blk, D] buffer; the gather baseline does.
-        dense_elems = B * Hkv * nb * BLOCK * D
-        fused_g = max(gather_output_sizes(jax.make_jaxpr(
-            lambda *a: flash_decode(*a, block_kv=BLOCK))(
-                q, kc, vc, ids, pos).jaxpr), default=0)
-        base_g = max(gather_output_sizes(jax.make_jaxpr(
-            lambda *a: gather_decode_reference(*a, block_kv=BLOCK))(
-                q, kc, vc, ids, pos).jaxpr), default=0)
-        assert fused_g < dense_elems, (fused_g, dense_elems)
-        assert base_g >= dense_elems
-        sweep[nb] = {"gather_s": tg, "fused_s": tf, "speedup": tg / tf,
-                     "max_err": err,
-                     "fused_max_gather_elems": fused_g,
-                     "dense_buffer_elems": dense_elems}
-        rows.append((f"decode_nb{nb}_gather_s", tg))
-        rows.append((f"decode_nb{nb}_fused_s", tf))
-        rows.append((f"decode_nb{nb}_speedup", tg / tf))
-    geo = float(np.exp(np.mean([np.log(v["speedup"])
-                                for v in sweep.values()])))
-    rows.append(("decode_geomean_speedup", geo))
-    rows.append(("decode_dense_gather_free", 1.0))
-    os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "BENCH_decode.json"), "w") as fh:
-        json.dump({"config": {"B": B, "Hkv": Hkv, "G": G, "D": D,
-                              "smax": smax, "block": BLOCK,
-                              "dtype": "bfloat16"},
-                   "sweep": {str(k): v for k, v in sweep.items()},
-                   "geomean_speedup": geo,
-                   "dense_gather_free": True}, fh, indent=1)
-    return rows
 
 
 def run(out_dir: str, quick: bool = False) -> list[tuple[str, float]]:
@@ -236,5 +161,4 @@ def run(out_dir: str, quick: bool = False) -> list[tuple[str, float]]:
     with open(os.path.join(out_dir, "latency_attention.json"), "w") as f:
         json.dump({"derived_128k": derived, "measured": measured}, f,
                   indent=1)
-    rows.extend(run_decode(out_dir, quick=quick))
     return rows

@@ -22,13 +22,16 @@ SUITES = [
     ("load_balance", "paper Fig. 8"),
     ("accuracy_ruler", "paper Table 1"),
     ("latency_attention", "paper Fig. 9"),
+    ("decode_pack", "decode microbench: packed-vs-padded grids (§2.8)"),
     ("skyline", "paper Fig. 10"),
     ("lb_ablation", "paper Fig. 11"),
     ("serving", "chunked-prefill tick loop (TTFT/ITL)"),
 ]
 
-# fast subset exercising the serving hot paths (CI perf smoke)
-SMOKE = ("load_balance", "latency_attention", "serving")
+# fast subset exercising the serving hot paths (CI perf smoke); the decode
+# microbench refreshes BENCH_decode.json every PR so the packed-vs-padded
+# latency series has a per-commit trajectory
+SMOKE = ("load_balance", "latency_attention", "decode_pack", "serving")
 
 
 def main() -> int:

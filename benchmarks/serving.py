@@ -179,6 +179,10 @@ def run(out_dir: str, quick: bool = False):
     speedup = (results["monolithic"]["itl_p99_ms"]
                / results["chunked"]["itl_p99_ms"])
     capacity = _kv_capacity()
+    # decode bubble telemetry (DESIGN.md §2.8): per-tick padding waste and
+    # run imbalance accumulated by the engines over the whole run — the
+    # packed-grid win observed in the serving loop itself, not inferred
+    bubbles = {m: engines[m].decode_bubble_stats for m in modes}
     payload = {
         "config": {"long_len": long_len, "chunk_tokens": chunk,
                    "num_short": NUM_SHORT, "short_len": SHORT_LEN,
@@ -187,13 +191,20 @@ def run(out_dir: str, quick: bool = False):
         "tokens_identical": identical,
         "itl_p99_speedup": speedup,
         "kv_capacity": capacity,
+        "decode_bubbles": bubbles,
     }
     with open(os.path.join(out_dir, "BENCH_serving.json"), "w") as f:
         json.dump(payload, f, indent=2)
 
     rows = [("tokens_identical", float(identical)),
             ("itl_p99_speedup", speedup),
-            ("kv_capacity_min_ratio", capacity["min_ratio"])]
+            ("kv_capacity_min_ratio", capacity["min_ratio"]),
+            ("decode_padding_waste", bubbles["chunked"]["padding_waste"]),
+            ("decode_padded_path_waste",
+             bubbles["chunked"]["padded_path_waste"]),
+            ("decode_grid_vs_padded", bubbles["chunked"]["grid_vs_padded"]),
+            ("decode_mean_imbalance",
+             bubbles["chunked"]["mean_imbalance"])]
     for pt in capacity["points"]:
         rows.append((f"kv_capacity_paged_seqs_{pt['contiguous_seqs']}slots",
                      pt["paged_seqs"]))

@@ -25,6 +25,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.worklist import (
+    D_BATCH,
+    D_FIRST,
+    D_KVBLK,
+    D_KVHEAD,
+    D_LAST,
+    D_VALID,
     F_FIRST,
     F_HEAD,
     F_KVBLK,
@@ -240,3 +246,200 @@ def worklist_attention_paged(
 
     (out, _, _, _), _ = jax.lax.scan(step, (out0, acc0, m0, l0), items)
     return out[:, :sq, :].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cost-packed ragged decode executors (DESIGN.md §2.8)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "scale", "window"))
+def packed_decode_attention(
+    q: jnp.ndarray,          # [B, Hkv, G, D]  (GQA-grouped query rows)
+    k_cache: jnp.ndarray,    # [B, Hkv, Smax, D]
+    v_cache: jnp.ndarray,
+    items: jnp.ndarray,      # [L, DEC_FIELDS] int32 packed decode worklist
+    pos: jnp.ndarray,        # [B] int32 per-slot last position (inclusive)
+    *,
+    block_kv: int = 128,
+    scale: float | None = None,
+    window: int | None = None,
+):
+    """Execute a cost-packed decode worklist with one ``lax.scan``.
+
+    The portable twin of running ``kernels.flash_decode_kernel`` over a
+    packed item table: grid length == the PACKED list length (total real
+    items rounded to the compile bucket), not ``B x Hkv x max-budget``.
+    Per (row, kv head) run the block-update arithmetic replicates
+    :func:`repro.kernels.flash_decode.flash_decode_reference` op for op —
+    same tiles, same accumulation order — so the two paths produce
+    BITWISE-identical outputs (hence identical greedy tokens) on equal
+    selections.  Returns the same ``(out f32, m, l)`` partials contract.
+    """
+    B, hkv, G, dh = q.shape
+    smax = k_cache.shape[2]
+    scale_v = float(dh ** -0.5) if scale is None else float(scale)
+    pad_s = (-smax) % block_kv
+    kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    qc = q.astype(k_cache.dtype)
+    pos_i = jnp.asarray(pos, jnp.int32)
+
+    out0 = jnp.zeros((B, hkv, G, dh), jnp.float32)
+    m_out0 = jnp.full((B, hkv, G), NEG_INF, jnp.float32)
+    l_out0 = jnp.zeros((B, hkv, G), jnp.float32)
+    acc0 = jnp.zeros((G, dh), jnp.float32)
+    m0 = jnp.full((G, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((G, 1), jnp.float32)
+
+    def step(carry, it):
+        out, m_out, l_out, acc, m, l = carry
+        b, h, blk = it[D_BATCH], it[D_KVHEAD], it[D_KVBLK]
+        first = it[D_FIRST] == 1
+        last = it[D_LAST] == 1
+        ok = it[D_VALID] == 1
+
+        acc = jnp.where(first, jnp.zeros_like(acc), acc)
+        m = jnp.where(first, jnp.full_like(m, NEG_INF), m)
+        l = jnp.where(first, jnp.zeros_like(l), l)
+
+        qh = jax.lax.dynamic_slice(qc, (b, h, 0, 0), (1, 1, G, dh))[0, 0]
+        kt = jax.lax.dynamic_slice(
+            kp, (b, h, blk * block_kv, 0), (1, 1, block_kv, dh))[0, 0]
+        vt = jax.lax.dynamic_slice(
+            vp, (b, h, blk * block_kv, 0), (1, 1, block_kv, dh))[0, 0]
+        p = pos_i[b]
+        # block-update arithmetic == flash_decode_reference, verbatim
+        s = jax.lax.dot_general(
+            qh, kt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale_v   # [G, blk]
+        kpos = blk * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = (kpos <= p) & ok
+        if window is not None:
+            mask &= kpos > p - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        pr = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot_general(
+            pr.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc = jnp.where(ok, acc_new, acc)
+        m = jnp.where(ok, m_new, m)
+        l = jnp.where(ok, l_new, l)
+
+        # finalize on `last` alone (matching the Pallas kernel's
+        # @pl.when(last)): the PADDED table sets is_last on the run's final
+        # stride row even when that row is invalid padding; packed tables
+        # only carry last=1 on real items, so both layouts write correctly
+        write = last
+        norm = acc / jnp.maximum(l, 1e-30)
+        norm = jnp.where(l > 0.0, norm, 0.0)
+        cur = jax.lax.dynamic_slice(out, (b, h, 0, 0), (1, 1, G, dh))[0, 0]
+        out = jax.lax.dynamic_update_slice(
+            out, jnp.where(write, norm, cur)[None, None], (b, h, 0, 0))
+        cur_m = jax.lax.dynamic_slice(m_out, (b, h, 0), (1, 1, G))[0, 0]
+        m_out = jax.lax.dynamic_update_slice(
+            m_out, jnp.where(write, m[:, 0], cur_m)[None, None], (b, h, 0))
+        cur_l = jax.lax.dynamic_slice(l_out, (b, h, 0), (1, 1, G))[0, 0]
+        l_out = jax.lax.dynamic_update_slice(
+            l_out, jnp.where(write, l[:, 0], cur_l)[None, None], (b, h, 0))
+        return (out, m_out, l_out, acc, m, l), None
+
+    (out, m_out, l_out, _, _, _), _ = jax.lax.scan(
+        step, (out0, m_out0, l_out0, acc0, m0, l0), items)
+    return out, m_out, l_out
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "scale", "window"))
+def packed_decode_attention_paged(
+    q: jnp.ndarray,          # [B, Hkv, G, D]
+    k_pool: jnp.ndarray,     # [N, Hkv, block_kv, D]  device block pool
+    v_pool: jnp.ndarray,
+    items: jnp.ndarray,      # [L, DEC_FIELDS] int32, D_KVBLK LOGICAL
+    table: jnp.ndarray,      # [B, T] int32 logical -> pool block (-1)
+    pos: jnp.ndarray,        # [B] int32 per-slot last position (inclusive)
+    *,
+    block_kv: int = 128,
+    scale: float | None = None,
+    window: int | None = None,
+):
+    """Paged twin of :func:`packed_decode_attention`: tiles come from the
+    block POOL through the per-slot table; item kv blocks stay LOGICAL
+    (positions/masks derive from them), only the slice address is
+    indirected; unmapped entries are masked.  Per-run arithmetic replicates
+    ``flash_decode_paged_reference`` op for op (bitwise on equal
+    selections); same ``(out f32, m, l)`` returns.
+    """
+    B, hkv, G, dh = q.shape
+    assert k_pool.shape[2] == block_kv, "pool block size != block_kv"
+    scale_v = float(dh ** -0.5) if scale is None else float(scale)
+    tbl = jnp.asarray(table, jnp.int32)
+    qc = q.astype(k_pool.dtype)
+    pos_i = jnp.asarray(pos, jnp.int32)
+
+    out0 = jnp.zeros((B, hkv, G, dh), jnp.float32)
+    m_out0 = jnp.full((B, hkv, G), NEG_INF, jnp.float32)
+    l_out0 = jnp.zeros((B, hkv, G), jnp.float32)
+    acc0 = jnp.zeros((G, dh), jnp.float32)
+    m0 = jnp.full((G, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((G, 1), jnp.float32)
+
+    def step(carry, it):
+        out, m_out, l_out, acc, m, l = carry
+        b, h, blk = it[D_BATCH], it[D_KVHEAD], it[D_KVBLK]
+        first = it[D_FIRST] == 1
+        last = it[D_LAST] == 1
+        valid = it[D_VALID] == 1
+
+        acc = jnp.where(first, jnp.zeros_like(acc), acc)
+        m = jnp.where(first, jnp.full_like(m, NEG_INF), m)
+        l = jnp.where(first, jnp.zeros_like(l), l)
+
+        phys = tbl[b, blk]
+        ok = valid & (phys >= 0)
+        safe = jnp.maximum(phys, 0)
+        qh = jax.lax.dynamic_slice(qc, (b, h, 0, 0), (1, 1, G, dh))[0, 0]
+        kt = jax.lax.dynamic_slice(
+            k_pool, (safe, h, 0, 0), (1, 1, block_kv, dh))[0, 0]
+        vt = jax.lax.dynamic_slice(
+            v_pool, (safe, h, 0, 0), (1, 1, block_kv, dh))[0, 0]
+        p = pos_i[b]
+        s = jax.lax.dot_general(
+            qh, kt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale_v
+        kpos = blk * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = (kpos <= p) & ok
+        if window is not None:
+            mask &= kpos > p - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        pr = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot_general(
+            pr.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc = jnp.where(ok, acc_new, acc)
+        m = jnp.where(ok, m_new, m)
+        l = jnp.where(ok, l_new, l)
+
+        write = last  # kernel-parity: finalize on `last` alone (see above)
+        norm = acc / jnp.maximum(l, 1e-30)
+        norm = jnp.where(l > 0.0, norm, 0.0)
+        cur = jax.lax.dynamic_slice(out, (b, h, 0, 0), (1, 1, G, dh))[0, 0]
+        out = jax.lax.dynamic_update_slice(
+            out, jnp.where(write, norm, cur)[None, None], (b, h, 0, 0))
+        cur_m = jax.lax.dynamic_slice(m_out, (b, h, 0), (1, 1, G))[0, 0]
+        m_out = jax.lax.dynamic_update_slice(
+            m_out, jnp.where(write, m[:, 0], cur_m)[None, None], (b, h, 0))
+        cur_l = jax.lax.dynamic_slice(l_out, (b, h, 0), (1, 1, G))[0, 0]
+        l_out = jax.lax.dynamic_update_slice(
+            l_out, jnp.where(write, l[:, 0], cur_l)[None, None], (b, h, 0))
+        return (out, m_out, l_out, acc, m, l), None
+
+    (out, m_out, l_out, _, _, _), _ = jax.lax.scan(
+        step, (out0, m_out0, l_out0, acc0, m0, l0), items)
+    return out, m_out, l_out

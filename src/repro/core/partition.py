@@ -293,6 +293,23 @@ def dp_partition(weights: Sequence[int], num_devices: int,
     return Assignment(best_assign, loads, "dp-exact")
 
 
+def lpt_bound(weights: Sequence[int], num_devices: int) -> float:
+    """Upper bound on greedy list-scheduling makespan (Graham):
+
+        max_d L_d  <=  sum(w) / D  +  (1 - 1/D) * max(w)
+
+    Every partitioner in this module (LPT, KK, refinement, best) satisfies
+    it, so property tests use it as the contract the cost-packed decode
+    worklists must honor: no shard's grid exceeds its fair share by more
+    than one maximal run.
+    """
+    w = np.asarray(weights, dtype=np.int64)
+    if len(w) == 0:
+        return 0.0
+    D = num_devices
+    return float(w.sum()) / D + (1.0 - 1.0 / D) * float(w.max())
+
+
 # ---------------------------------------------------------------------------
 # Production entry point
 # ---------------------------------------------------------------------------

@@ -44,6 +44,27 @@ import numpy as np
 ITEM_FIELDS = 7
 F_HEAD, F_QBLK, F_KVBLK, F_FIRST, F_LAST, F_VALID, F_KVHEAD = range(ITEM_FIELDS)
 
+# Decode work items (DESIGN.md §2.8): one item = one (batch_row, kv_head,
+# kv_block) matvec tile.  The constants live here (host-side, numpy-only)
+# and the Pallas/jnp executors import them, so builders never depend on jax.
+DEC_FIELDS = 6
+D_BATCH, D_KVHEAD, D_KVBLK, D_FIRST, D_LAST, D_VALID = range(DEC_FIELDS)
+
+
+def pow2_bucket(n: int, lo: int = 8, hi: int | None = None) -> int:
+    """Smallest power of two >= ``n`` (floored at ``lo``, capped at ``hi``).
+
+    The decode item tables are padded to these buckets so mixed-length
+    continuous-batching ticks reuse O(log worst-case) compiled programs
+    instead of one per distinct item count — the same policy the engine's
+    prefill buckets use for prompt lengths.
+    """
+    b = max(1, int(lo))
+    n = max(int(n), 1)
+    while b < n:
+        b *= 2
+    return b if hi is None else min(b, max(int(hi), int(lo)))
+
 
 def blocks_for_budget(budgets: np.ndarray, block: int) -> np.ndarray:
     """Token budgets -> per-head kv-block counts (ceil)."""
@@ -350,6 +371,195 @@ def build_row_worklist(
     return WorkList(items=items, lengths=lengths,
                     num_q_blocks=num_q_blocks, num_kv_blocks=num_kv_blocks,
                     block=block)
+
+
+# ---------------------------------------------------------------------------
+# Cost-packed ragged decode worklists (DESIGN.md §2.8)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedDecodeWorkList:
+    """Per-shard cost-packed decode item lists for one attention layer.
+
+    items:   ``[D, L_pad, DEC_FIELDS]`` int32 — one (batch_row, kv_head,
+             kv_block) tile per row, runs of one (row, kv_head) contiguous
+             and in ascending kv_block order; padding rows replicate the
+             shard's last real item with first/last/valid = 0.
+    lengths: ``[D]`` true (unpadded) item counts per shard.
+    """
+
+    items: np.ndarray
+    lengths: np.ndarray
+    block: int
+
+    @property
+    def num_shards(self) -> int:
+        return self.items.shape[0]
+
+    @property
+    def padded_length(self) -> int:
+        return self.items.shape[1]
+
+    @property
+    def total_real_items(self) -> int:
+        return int(self.lengths.sum())
+
+    @property
+    def padded_total(self) -> int:
+        return self.padded_length * self.num_shards
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of grid steps that are padding — the decode-phase SPMD
+        bubble (same definition as :class:`WorkList.padding_waste`)."""
+        tot = self.padded_total
+        return 1.0 - self.total_real_items / tot if tot else 0.0
+
+    @property
+    def imbalance(self) -> float:
+        mean = float(self.lengths.mean())
+        return float(self.lengths.max() / mean) if mean > 0 else 1.0
+
+    def flat(self) -> np.ndarray:
+        """Shards concatenated ``[D * L_pad, DEC_FIELDS]`` — the single-host
+        execution order (runs stay contiguous; shard padding rows are inert
+        valid=0 replicas, exactly like in-shard padding)."""
+        return self.items.reshape(-1, DEC_FIELDS)
+
+
+def pack_decode_items(
+    block_ids: np.ndarray,
+    *,
+    num_shards: int = 1,
+    block: int = 128,
+    bucket: int | None = None,
+    pad_multiple: int = 8,
+    shard_of_kvhead: np.ndarray | None = None,
+    kvhead_local: bool = False,
+) -> PackedDecodeWorkList:
+    """Flatten per-slot decode selections into cost-packed ragged lists.
+
+    ``block_ids``: ``[B, Hkv, nb]`` int32 selected kv blocks per (batch
+    row, kv head), -1 padding TRAILING (the engine's per-slot selection
+    layout).  Each (row, head) with >= 1 selected block becomes one
+    contiguous run of items; runs are assigned to shards by
+    :func:`repro.core.partition.best_partition` over their true block
+    counts — so each shard's grid length is proportional to its share of
+    the total selected blocks, not ``Hkv x max-budget x worst-slot``.
+
+    ``shard_of_kvhead``: ``[Hkv]`` pins every head's runs to a fixed shard
+    (head-parallel islands, where the cache shard owning the head must
+    execute it); packing freedom then only removes padding.  ``None`` packs
+    freely across heads AND batch rows (single-device grids, replicated or
+    pool-sharded caches).  ``kvhead_local`` remaps item kv-head indices to
+    shard-local first-seen order (head-sharded caches — pair it with
+    ``shard_of_kvhead``); the default keeps them GLOBAL.  ``bucket`` fixes
+    the padded per-shard length (compile bucketing); it must be >= the
+    longest shard's run total.
+    """
+    from repro.core.partition import best_partition
+
+    ids = np.asarray(block_ids)
+    assert ids.ndim == 3, f"block_ids must be [B, Hkv, nb], got {ids.shape}"
+    B, hkv, nb = ids.shape
+    counts = (ids >= 0).sum(axis=-1)                      # [B, Hkv]
+    runs = [(b, h, int(counts[b, h]))
+            for b in range(B) for h in range(hkv) if counts[b, h] > 0]
+    weights = np.array([r[2] for r in runs], dtype=np.int64)
+    if shard_of_kvhead is None:
+        asg = best_partition(weights, num_shards).device_of
+    else:
+        shard_of_kvhead = np.asarray(shard_of_kvhead)
+        asg = np.array([int(shard_of_kvhead[h]) for _, h, _ in runs],
+                       dtype=np.int64)
+    per_shard: list[list[np.ndarray]] = [[] for _ in range(num_shards)]
+    kv_local_map: list[dict[int, int]] = [dict() for _ in range(num_shards)]
+    for (b, h, n), d in zip(runs, asg):
+        d = int(d)
+        if kvhead_local:
+            if h not in kv_local_map[d]:
+                kv_local_map[d][h] = len(kv_local_map[d])
+            h_idx = kv_local_map[d][h]
+        else:
+            h_idx = h
+        sel = np.sort(ids[b, h][ids[b, h] >= 0].astype(np.int64))
+        it = np.zeros((n, DEC_FIELDS), dtype=np.int32)
+        it[:, D_BATCH] = b
+        it[:, D_KVHEAD] = h_idx
+        it[:, D_KVBLK] = sel
+        it[0, D_FIRST] = 1
+        it[-1, D_LAST] = 1
+        it[:, D_VALID] = 1
+        per_shard[int(d)].append(it)
+    dev_items = [
+        np.concatenate(g, axis=0) if g else np.zeros((0, DEC_FIELDS),
+                                                     np.int32)
+        for g in per_shard
+    ]
+    lengths = np.array([len(x) for x in dev_items], dtype=np.int64)
+    L_pad = int(lengths.max()) if len(lengths) else 0
+    L_pad = max(pad_multiple, -(-L_pad // pad_multiple) * pad_multiple)
+    if bucket is not None:
+        assert bucket >= L_pad, (
+            f"bucket {bucket} < packed shard length {L_pad}")
+        L_pad = int(bucket)
+    items = np.zeros((num_shards, L_pad, DEC_FIELDS), dtype=np.int32)
+    for d, x in enumerate(dev_items):
+        items[d, : len(x)] = x
+        if len(x):
+            # padding replicates the last real item (valid=0): the Pallas
+            # out-tile index must not jump to an already-finalized tile.
+            pad_row = x[-1].copy()
+            pad_row[D_FIRST] = 0
+            pad_row[D_LAST] = 0
+            pad_row[D_VALID] = 0
+            items[d, len(x):] = pad_row
+    return PackedDecodeWorkList(items=items, lengths=lengths, block=block)
+
+
+def extend_packed_items(items: np.ndarray, width: int) -> np.ndarray:
+    """Pad per-shard item lists ``[D, L, DEC_FIELDS]`` out to ``[D, width,
+    DEC_FIELDS]`` with the replicate-last valid=0 convention (flags zeroed
+    whether the trailing row was a real item or already padding).  Used to
+    equalize per-layer packed lists onto one compile bucket."""
+    it = np.asarray(items)
+    D, L, _ = it.shape
+    assert width >= L, f"cannot shrink items from {L} to {width}"
+    if width == L:
+        return it
+    out = np.zeros((D, width, DEC_FIELDS), dtype=np.int32)
+    out[:, :L] = it
+    for d in range(D):
+        pad_row = it[d, -1].copy()
+        pad_row[D_FIRST] = 0
+        pad_row[D_LAST] = 0
+        pad_row[D_VALID] = 0
+        out[d, L:] = pad_row
+    return out
+
+
+def padded_decode_items(block_ids: np.ndarray) -> np.ndarray:
+    """Host twin of ``kernels.flash_decode.decode_items_from_ids``: the
+    PADDED fixed-stride item table ``[B*Hkv*nb, DEC_FIELDS]`` (row
+    ``(b, h, j)`` at index ``(b*Hkv + h)*nb + j``; -1 selections become
+    valid=0 rows but still occupy grid steps).  This is the baseline grid
+    the packed builder shrinks — benchmarks execute both through one
+    executor so the packed-vs-padded latency delta is purely grid length.
+    """
+    ids = np.asarray(block_ids)
+    B, hkv, nb = ids.shape
+    flat = ids.reshape(-1).astype(np.int64)
+    n = flat.shape[0]
+    j = np.arange(n) % nb
+    bh = np.arange(n) // nb
+    items = np.zeros((n, DEC_FIELDS), dtype=np.int32)
+    items[:, D_BATCH] = bh // hkv
+    items[:, D_KVHEAD] = bh % hkv
+    items[:, D_KVBLK] = np.maximum(flat, 0)
+    items[:, D_FIRST] = (j == 0)
+    items[:, D_LAST] = (j == nb - 1)
+    items[:, D_VALID] = (flat >= 0)
+    return items
 
 
 # ---------------------------------------------------------------------------

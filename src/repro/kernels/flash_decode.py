@@ -30,6 +30,17 @@ a different length): token ``kpos`` contributes iff ``kpos <= pos[slot]``.
 Because both the item table and ``pos`` are data (not trace constants),
 re-selecting blocks at block boundaries never recompiles.
 
+The item table may be either the PADDED fixed-stride layout
+(:func:`decode_items_from_ids` — grid ``B x Hkv x max-budget``, the
+step-invariant baseline) or a COST-PACKED ragged list
+(``core.worklist.pack_decode_items`` — grid = total selected blocks rounded
+to a pow2 compile bucket, DESIGN.md §2.8).  The kernel is agnostic: it
+executes whatever (first..last, valid) runs the table encodes, so the
+packed grid drops the ``max_h b_h`` padding for free.  Under a packed
+table, a (slot, kv head) with no run keeps an UNWRITTEN out tile — packed
+builders must cover every pair the caller reads (the engine's selections
+always include the newest block, so coverage is structural).
+
 The kernel emits flash-decoding partials ``(out, m, l)`` so a sequence-
 sharded cache can merge shard-local results with the standard
 ``exp(m - max m)`` rescale (``serving.sharded_attention``); single-shard
@@ -82,6 +93,9 @@ def decode_items_from_ids(block_ids: jnp.ndarray) -> jnp.ndarray:
     """``block_ids [B, Hkv, nb]`` (-1 pad, pads trailing) -> items
     ``[B*Hkv*nb, DEC_FIELDS]``.
 
+    This is the PADDED baseline grid (every head at the max-budget width;
+    ``core.worklist.padded_decode_items`` is the host/numpy twin, and
+    ``pack_decode_items`` builds the cost-packed ragged alternative).
     Fixed-stride layout: row ``(b, h, j)`` at index ``(b*Hkv + h)*nb + j``.
     ``is_first``/``is_last`` are set at ``j == 0`` / ``j == nb-1``
     UNCONDITIONALLY so every (slot, kv head) tile is initialized and

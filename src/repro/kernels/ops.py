@@ -10,6 +10,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.attention.worklist_jnp import (
+    packed_decode_attention as _packed_decode_ref,
+    packed_decode_attention_paged as _packed_decode_paged_ref,
+)
 from repro.kernels.flash_attn import flash_attention as _flash
 from repro.kernels.flash_decode import (
     decode_items_from_ids,
@@ -133,12 +137,82 @@ def flash_decode_paged(q, k_pool, v_pool, block_ids, table, pos, *,
     return out.astype(q.dtype)
 
 
+def flash_decode_packed(q, k_cache, v_cache, items, pos, *, block_kv=128,
+                        scale=None, window=None, partials=False,
+                        use_kernel=None, interpret=None):
+    """Cost-packed ragged flash-decode (DESIGN.md §2.8).
+
+    q ``[B, H, 1, D]`` (serving layout — GQA grouping happens here);
+    caches ``[B, Hkv, Smax, D]``; ``items [L, DEC_FIELDS]`` int32 packed
+    decode worklist (one (row, kv_head, kv_block) tile per row, runs
+    contiguous, replicate-last padding at valid=0); ``pos [B]`` per-slot
+    last position.  The grid/scan length is the PACKED item count — decode
+    cost scales with ``mean_h b_h`` instead of ``Hkv x max_h b_h x B``.
+    On TPU the Pallas kernel consumes the table directly; elsewhere the
+    bitwise jnp twin executes the same ragged grid.  Same returns/partials
+    contract as :func:`flash_decode`.
+    """
+    B, H, _, dh = q.shape
+    hkv = k_cache.shape[1]
+    G = H // hkv
+    qg = q.reshape(B, hkv, G, dh)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        if interpret is None:
+            interpret = not _on_tpu()
+        out, m, l = _flash_decode_kernel(
+            qg, k_cache, v_cache, jnp.asarray(items), jnp.asarray(pos),
+            block_kv=block_kv, scale=scale, window=window,
+            interpret=interpret)
+    else:
+        out, m, l = _packed_decode_ref(
+            qg, k_cache, v_cache, jnp.asarray(items), jnp.asarray(pos),
+            block_kv=block_kv, scale=scale, window=window)
+    out = out.reshape(B, H, 1, dh)
+    if partials:
+        return out, m, l
+    return out.astype(q.dtype)
+
+
+def flash_decode_packed_paged(q, k_pool, v_pool, items, table, pos, *,
+                              block_kv=128, scale=None, window=None,
+                              partials=False, use_kernel=None,
+                              interpret=None):
+    """Paged twin of :func:`flash_decode_packed`: the packed items' LOGICAL
+    kv blocks translate to pool blocks through ``table [B, T]`` (-1 =
+    unmapped, masked); same contract otherwise."""
+    B, H, _, dh = q.shape
+    hkv = k_pool.shape[1]
+    G = H // hkv
+    qg = q.reshape(B, hkv, G, dh)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        if interpret is None:
+            interpret = not _on_tpu()
+        out, m, l = _flash_decode_paged_kernel(
+            qg, k_pool, v_pool, jnp.asarray(items), jnp.asarray(table),
+            jnp.asarray(pos), block_kv=block_kv, scale=scale, window=window,
+            interpret=interpret)
+    else:
+        out, m, l = _packed_decode_paged_ref(
+            qg, k_pool, v_pool, jnp.asarray(items), jnp.asarray(table),
+            jnp.asarray(pos), block_kv=block_kv, scale=scale, window=window)
+    out = out.reshape(B, H, 1, dh)
+    if partials:
+        return out, m, l
+    return out.astype(q.dtype)
+
+
 __all__ = [
     "flash_attention",
     "sparse_prefill",
     "sparse_decode",
     "flash_decode",
     "flash_decode_paged",
+    "flash_decode_packed",
+    "flash_decode_packed_paged",
     "merge_partials",
     "DecodeWorkList",
     "build_decode_worklist",

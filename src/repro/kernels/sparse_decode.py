@@ -31,10 +31,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.core.worklist import (  # canonical home of the item encoding
+    DEC_FIELDS,
+    D_BATCH,
+    D_KVHEAD,
+    D_KVBLK,
+    D_FIRST,
+    D_LAST,
+    D_VALID,
+)
 
-DEC_FIELDS = 6
-D_BATCH, D_KVHEAD, D_KVBLK, D_FIRST, D_LAST, D_VALID = range(DEC_FIELDS)
+NEG_INF = -1e30
 
 
 # ---------------------------------------------------------------------------
@@ -50,6 +57,18 @@ class DecodeWorkList:
     @property
     def padded_length(self) -> int:
         return self.items.shape[-2]
+
+    @property
+    def padded_total(self) -> int:
+        d = self.items.shape[0] if self.items.ndim == 3 else 1
+        return self.padded_length * d
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of grid steps that are padding — the decode-phase SPMD
+        bubble the cost-packed builder minimizes."""
+        tot = self.padded_total
+        return 1.0 - int(self.lengths.sum()) / tot if tot else 0.0
 
     @property
     def imbalance(self) -> float:

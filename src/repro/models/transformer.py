@@ -410,7 +410,8 @@ def prefill(params, tokens, cfg: TransformerConfig, *,
 
 
 def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
-                block_ids=None, cache_len: int | jnp.ndarray | None = None,
+                block_ids=None, packed_items=None,
+                cache_len: int | jnp.ndarray | None = None,
                 active=None, attn_override=None):
     """One decode step.
 
@@ -422,14 +423,22 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
     (shared across slots) or ``[L, B, Hkv, nb]`` (per-slot, position-aware
     continuous batching) int32, -1 padded — S-HPLB budgeted decode.  The
     fused flash-decode streams ONLY those blocks from the cache (the
-    memory-roofline win; no dense gather buffer).  None = dense decode over
-    the full cache.  ``active``: optional [B] bool — slots marked False
-    (free, or mid-chunked-prefill under mixed ticks) keep their cache rows
-    UNTOUCHED; without it the batched step would clobber row ``pos`` (= 0
-    for padded slots) of every slot in the batch.  ``attn_override(l, q,
-    kc, vc) -> o [B, H, 1, Dh]`` replaces the attention compute (serving
-    engine's shard_map island).
+    memory-roofline win; no dense gather buffer).  ``packed_items``
+    (mutually exclusive): ``[L, Lb, DEC_FIELDS]`` cost-packed ragged decode
+    worklists per layer (DESIGN.md §2.8) — the same selections flattened to
+    one (row, kv_head, kv_block) tile per item, so the attention grid is
+    the true selected-block count, not ``B x Hkv x max-budget``.  None for
+    both = dense decode over the full cache.  ``active``: optional [B] bool
+    — slots marked False (free, or mid-chunked-prefill under mixed ticks)
+    keep their cache rows UNTOUCHED; without it the batched step would
+    clobber row ``pos`` (= 0 for padded slots) of every slot in the batch.
+    ``attn_override(l, q, kc, vc) -> o [B, H, 1, Dh]`` replaces the
+    attention compute (serving engine's shard_map island).
     """
+    assert block_ids is None or packed_items is None, \
+        "block_ids and packed_items are mutually exclusive"
+    packed = packed_items is not None
+    sel = packed_items if packed else block_ids
     B = token.shape[0]
     x = jnp.take(params["embed"], token[:, None], axis=0)  # [B, 1, d]
     pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
@@ -467,6 +476,12 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
         window = _window_of(cfg, l)
         if attn_override is not None:
             o = attn_override(l, q, kc, vc)
+        elif items_l is not None and packed:
+            # cost-packed ragged decode: the flat per-layer worklist drives
+            # the grid — total selected tiles, not B x Hkv x max-budget
+            o = kernel_ops.flash_decode_packed(
+                q, kc, vc, items_l, pos_arr, block_kv=cfg.block_kv,
+                window=window)
         elif items_l is not None:
             # fused budgeted flash-decode: stream only the selected blocks
             # from the cache in place (no [B, Hkv, nb*blk, Dh] gather).
@@ -489,7 +504,7 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
         return x, jnp.stack([kc, vc])
 
     if cfg.loop_mode == "scan":
-        if block_ids is None:
+        if sel is None:
             def body(x, scan_in):
                 lp, layer_cache = scan_in
                 x, new_c = layer(x, lp, layer_cache, 0, None)
@@ -501,11 +516,11 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
                 x, new_c = layer(x, lp, layer_cache, 0, items_l)
                 return x, new_c
             x, new_cache = jax.lax.scan(
-                body, x, (params["layers"], cache, jnp.asarray(block_ids)))
+                body, x, (params["layers"], cache, jnp.asarray(sel)))
     else:
         new_layers = []
         for l in range(cfg.num_layers):
-            items_l = None if block_ids is None else jnp.asarray(block_ids[l])
+            items_l = None if sel is None else jnp.asarray(sel[l])
             x, nc = layer(x, params["layers"][l], cache[l], l, items_l)
             new_layers.append(nc)
         new_cache = jnp.stack(new_layers)
@@ -742,7 +757,8 @@ def prefill_chunk_paged(params, pool, tokens, table, q_offset,
 
 def decode_step_paged(params, pool, token, pos, table,
                       cfg: TransformerConfig, *,
-                      block_ids=None, cache_len=None, active=None):
+                      block_ids=None, packed_items=None, cache_len=None,
+                      active=None):
     """One paged decode step (DESIGN.md §2.7).
 
     token [B] int32; pos scalar OR [B] int32; pool [L, 2, N, Hkv, block,
@@ -753,10 +769,16 @@ def decode_step_paged(params, pool, token, pos, table,
     the batched step never needs a read-modify-write mask.  ``block_ids``
     ([L, Hkv, nb] or [L, B, Hkv, nb], LOGICAL, -1 pad) select the blocks
     the budgeted flash-decode streams from the pool through the table;
-    None = dense decode over the resident prefix (a gathered contiguous
-    view — the contiguous baseline's math bit-for-bit).  Returns
-    (logits [B, V], new pool).
+    ``packed_items`` (mutually exclusive): ``[L, Lb, DEC_FIELDS]``
+    cost-packed ragged decode worklists per layer (DESIGN.md §2.8, kv
+    blocks LOGICAL).  None for both = dense decode over the resident
+    prefix (a gathered contiguous view — the contiguous baseline's math
+    bit-for-bit).  Returns (logits [B, V], new pool).
     """
+    assert block_ids is None or packed_items is None, \
+        "block_ids and packed_items are mutually exclusive"
+    packed = packed_items is not None
+    sel = packed_items if packed else block_ids
     B = token.shape[0]
     block = pool.shape[4]
     trash = pool.shape[2] - 1
@@ -800,7 +822,11 @@ def decode_step_paged(params, pool, token, pos, table,
         kc = write(layer_pool[0], k)
         vc = write(layer_pool[1], v)
         window = _window_of(cfg, l)
-        if items_l is not None:
+        if items_l is not None and packed:
+            o = kernel_ops.flash_decode_packed_paged(
+                q, kc, vc, items_l, tbl, pos_arr, block_kv=block,
+                window=window)
+        elif items_l is not None:
             ids_b = (jnp.broadcast_to(items_l[None], (B,) + items_l.shape)
                      if items_l.ndim == 2 else items_l)
             o = kernel_ops.flash_decode_paged(
@@ -822,7 +848,7 @@ def decode_step_paged(params, pool, token, pos, table,
         return x, jnp.stack([kc, vc])
 
     if cfg.loop_mode == "scan":
-        if block_ids is None:
+        if sel is None:
             def body(x, scan_in):
                 lp, layer_pool = scan_in
                 x, new_c = layer(x, lp, layer_pool, 0, None)
@@ -834,11 +860,11 @@ def decode_step_paged(params, pool, token, pos, table,
                 x, new_c = layer(x, lp, layer_pool, 0, items_l)
                 return x, new_c
             x, new_pool = jax.lax.scan(
-                body, x, (params["layers"], pool, jnp.asarray(block_ids)))
+                body, x, (params["layers"], pool, jnp.asarray(sel)))
     else:
         new_layers = []
         for l in range(cfg.num_layers):
-            items_l = None if block_ids is None else jnp.asarray(block_ids[l])
+            items_l = None if sel is None else jnp.asarray(sel[l])
             x, nc = layer(x, params["layers"][l], pool[l], l, items_l)
             new_layers.append(nc)
         new_pool = jnp.stack(new_layers)

@@ -7,5 +7,6 @@ from repro.serving.scheduler import ContinuousBatcher, Request
 from repro.serving.sharded_attention import (
     flash_decode_attention,
     flash_decode_attention_paged,
+    hplb_decode_attention_packed,
     hplb_prefill_attention,
 )

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import OrderedDict
 
 import numpy as np
 import jax
@@ -33,10 +34,14 @@ from repro.attention.policies import policy_by_name
 from repro.core.planner import HPLBPlan, make_plan, permute_attention_params
 from repro.core.sparsity import HeadSparsityProfile
 from repro.core.worklist import (
+    DEC_FIELDS,
     WorkList,
     blocks_for_budget,
     chunk_item_counts,
     chunk_items,
+    extend_packed_items,
+    pack_decode_items,
+    pow2_bucket,
     worklist_from_budgets,
 )
 from repro.models import transformer as tfm
@@ -81,6 +86,13 @@ class EngineConfig:
     # (byte-parity with the contiguous layout).  Smaller pools trade
     # worst-case capacity for HBM; admission guards via reservations.
     num_kv_blocks: int | None = None
+    # decode work layout (DESIGN.md §2.8): "packed" flattens each tick's
+    # per-slot selections into a cost-packed ragged worklist (grid length
+    # = total selected blocks rounded to a pow2 bucket — scales with
+    # mean_h b_h); "padded" pads every head's selection to the max-budget
+    # width (the step-invariant baseline; grid scales with max_h b_h).
+    # Both produce bitwise-identical greedy tokens.
+    decode_worklist: str = "packed"  # "packed" | "padded"
 
 
 class Engine:
@@ -148,6 +160,20 @@ class Engine:
         self._staging = None  # allocated on first chunked prefill
         self._merge_jit = None
         self._decode_jit = None
+        # cost-packed ragged decode (DESIGN.md §2.8): plans (packed item
+        # tables) are memoized by the tick's per-slot BLOCK-COUNT signature
+        # (selections depend only on block counts, so consecutive ticks hit
+        # until a slot crosses a boundary), LRU-bounded; jitted steps are
+        # keyed by the flat pow2 item bucket (O(log worst-case) compiles).
+        self._decode_packed_jit: dict[int, object] = {}
+        self._packed_plan_cache: OrderedDict = OrderedDict()
+        self._packed_plan_cap = 256
+        # per-tick decode bubble telemetry (padding_waste / imbalance of
+        # the executed grid vs the padded baseline) — see decode_bubble_stats
+        self.decode_stats = {"ticks": 0, "real_items": 0, "grid_items": 0,
+                             "padded_grid_items": 0, "imbalance_sum": 0.0,
+                             "plan_hits": 0, "plan_misses": 0,
+                             "plan_prefetches": 0, "last": {}}
         self._rng = jax.random.PRNGKey(0)
         # position-aware decode selection: ids depend only on the slot's
         # current BLOCK count, so they are recomputed exactly at block
@@ -200,9 +226,16 @@ class Engine:
         Single-host path: all shards' lists concatenated (head ids stay
         slot-local per device in the [D, L, 7] layout; for the 1-shard test
         engine D=1 so items address heads directly).
+
+        Keyed by the PREFILL BUCKET, not the raw length: every caller pads
+        its prompt to the bucket anyway, and raw-length keys would grow
+        this cache unboundedly under varied traffic (pow2 buckets bound it
+        at O(log max_seq_len) entries; "exact" bucketing keeps the old
+        one-entry-per-length behavior by definition).
         """
-        if seq_len in self._worklists_cache:
-            return self._worklists_cache[seq_len]
+        bucket = self._prefill_bucket(seq_len)
+        if bucket in self._worklists_cache:
+            return self._worklists_cache[bucket]
         assert self.plan is not None
         pol = policy_by_name(self.ecfg.policy)
         out = []
@@ -211,13 +244,13 @@ class Engine:
             wl: WorkList = worklist_from_budgets(
                 budgets,
                 num_devices=self.ecfg.num_model_shards,
-                seq_len=seq_len,
+                seq_len=bucket,
                 block=self.ecfg.block,
                 policy_fn=pol,
                 group_size=self.cfg.group_size,
             )
             out.append(wl)
-        self._worklists_cache[seq_len] = out
+        self._worklists_cache[bucket] = out
         return out
 
     def decode_block_ids(self, cache_len: int,
@@ -273,7 +306,133 @@ class Engine:
             got = self.decode_block_ids(nblocks * self.ecfg.block,
                                         nb_pad=self._nb_cap)
             self._decode_ids_by_nblocks[nblocks] = got
+            # the clamp above is the bound: one entry per possible resident
+            # block count, never more (host memory stays O(max_seq/block))
+            assert len(self._decode_ids_by_nblocks) <= (
+                self.ecfg.max_seq_len // self.ecfg.block), \
+                "memoized decode-id table exceeded max_seq_len // block"
         return got
+
+    # -- cost-packed ragged decode worklists (DESIGN.md §2.8) ---------------
+    def _nb_sig(self, pos_all: np.ndarray) -> tuple[int, ...]:
+        """Per-slot resident BLOCK COUNTS — the plan cache key.  Decode
+        selections are a pure function of block counts (budgets are fixed
+        per layer/head), so ticks between block boundaries share a plan."""
+        blk = self.ecfg.block
+        cap = self.ecfg.max_seq_len // blk
+        return tuple(
+            max(1, min(-(-(int(p) + 1) // blk), cap)) for p in pos_all)
+
+    def _packed_item_cap(self) -> int:
+        """Worst-case packed item count of one layer: every slot at the
+        max-budget selection width, rounded up to the packer's pad
+        multiple (pack_decode_items rounds shard lengths to 8, so an
+        unrounded cap could fall below a near-full tick's padded length
+        and make the bucket unable to hold it)."""
+        if self._nb_cap is None:
+            self._decode_ids_for_nblocks(1)  # establishes _nb_cap
+        cap = self.ecfg.num_slots * self.cfg.num_kv_heads * self._nb_cap
+        return -(-cap // 8) * 8
+
+    def _build_packed_plan(self, nb_sig: tuple[int, ...]):
+        """Pack one tick's decode work: per layer, flatten every slot's
+        position-aware selection into (row, kv_head, kv_block) items,
+        best-partition the (row, head) runs across model shards, and pad
+        all layers onto one pow2 item bucket.  Returns
+        ``(items [L, D*bucket, DEC_FIELDS] int32, stats)``."""
+        cfg, ecfg = self.cfg, self.ecfg
+        per_slot = [self._decode_ids_for_nblocks(nb) for nb in nb_sig]
+        bids = np.stack(per_slot, axis=1)       # [L, B, Hkv, nb_cap]
+        wls = [pack_decode_items(bids[l], num_shards=ecfg.num_model_shards,
+                                 block=ecfg.block)
+               for l in range(cfg.num_layers)]
+        bucket = pow2_bucket(max(wl.padded_length for wl in wls),
+                             lo=8, hi=self._packed_item_cap())
+        items = np.stack([
+            extend_packed_items(wl.items, bucket).reshape(-1, DEC_FIELDS)
+            for wl in wls])                     # [L, D*bucket, DEC_FIELDS]
+        real = sum(wl.total_real_items for wl in wls)
+        grid = cfg.num_layers * ecfg.num_model_shards * bucket
+        # the padded baseline's grid: every (slot, head) at the max-budget
+        # selection width, every layer — one grid step per table entry
+        padded_grid = int(bids.size)
+        stats = {
+            "bucket": bucket,
+            "real_items": real,
+            "grid_items": grid,
+            "padded_grid_items": padded_grid,
+            "padding_waste": 1.0 - real / grid if grid else 0.0,
+            "padded_path_waste": (1.0 - real / padded_grid
+                                  if padded_grid else 0.0),
+            "imbalance": float(np.mean([wl.imbalance for wl in wls])),
+        }
+        return items, stats
+
+    def _plan_for(self, nb_sig: tuple[int, ...], prefetch: bool = False):
+        """LRU-memoized packed plan for a tick signature."""
+        got = self._packed_plan_cache.get(nb_sig)
+        if got is None:
+            got = self._build_packed_plan(nb_sig)
+            self._packed_plan_cache[nb_sig] = got
+            if len(self._packed_plan_cache) > self._packed_plan_cap:
+                self._packed_plan_cache.popitem(last=False)
+            self.decode_stats["plan_prefetches" if prefetch
+                              else "plan_misses"] += 1
+        else:
+            self._packed_plan_cache.move_to_end(nb_sig)
+            if not prefetch:
+                self.decode_stats["plan_hits"] += 1
+        return got
+
+    def _prefetch_next_plan(self) -> None:
+        """Pipelined host planning: build the NEXT tick's packed worklist
+        while the CURRENT tick's device step runs (jax dispatch is async —
+        the block happens later, at sampling).  The scheduler's preview is
+        best-effort; a mismatched prediction just means the real signature
+        builds synchronously next tick (correctness is unaffected)."""
+        if self._batcher is None:
+            return
+        preview = self._batcher.preview_next_decode()
+        if not preview:
+            return
+        slots, positions = preview
+        pos_all = np.zeros((self.ecfg.num_slots,), np.int32)
+        pos_all[list(slots)] = positions
+        sig = self._nb_sig(pos_all)
+        if sig not in self._packed_plan_cache:
+            self._plan_for(sig, prefetch=True)
+
+    def _record_tick(self, stats: dict) -> None:
+        s = self.decode_stats
+        s["ticks"] += 1
+        s["real_items"] += stats["real_items"]
+        s["grid_items"] += stats["grid_items"]
+        s["padded_grid_items"] += stats["padded_grid_items"]
+        s["imbalance_sum"] += stats["imbalance"]
+        s["last"] = stats
+
+    @property
+    def decode_bubble_stats(self) -> dict:
+        """Aggregate decode-grid bubble telemetry: the fraction of executed
+        grid steps that were padding, the same quantity the PADDED baseline
+        would have paid, and their ratio (the packed win) — recorded by
+        ``benchmarks/serving.py`` so the load-balance gain is observable
+        per run, not inferred."""
+        s = self.decode_stats
+        grid, real, padded = (s["grid_items"], s["real_items"],
+                              s["padded_grid_items"])
+        return {
+            "ticks": s["ticks"],
+            "padding_waste": 1.0 - real / grid if grid else 0.0,
+            "padded_path_waste": 1.0 - real / padded if padded else 0.0,
+            "grid_vs_padded": grid / padded if padded else 1.0,
+            "mean_imbalance": (s["imbalance_sum"] / s["ticks"]
+                               if s["ticks"] else 1.0),
+            "plan_hits": s["plan_hits"],
+            "plan_misses": s["plan_misses"],
+            "plan_prefetches": s["plan_prefetches"],
+            "last_tick": s["last"],
+        }
 
     # -- paged-layout plumbing ----------------------------------------------
     @property
@@ -500,6 +659,28 @@ class Engine:
                                              donate_argnums=donate))
         return self._decode_jit
 
+    def _decode_packed_fn(self, flat_len: int):
+        """Jitted packed decode step for one item-bucket length.  The item
+        table is DATA ([L, flat_len, DEC_FIELDS]) so plan changes within a
+        bucket never recompile; distinct buckets compile once each
+        (O(log worst-case) total — the prefill-bucket policy applied to
+        grid lengths).  The cache is donated."""
+        fn = self._decode_packed_jit.get(flat_len)
+        if fn is None:
+            if self.paged:
+                def run(params, pool, token, pos, table, items, act):
+                    return tfm.decode_step_paged(
+                        params, pool, token, pos, table, self.cfg,
+                        packed_items=items, cache_len=pos + 1, active=act)
+            else:
+                def run(params, cache, token, pos, items, act):
+                    return tfm.decode_step(
+                        params, cache, token, pos, self.cfg,
+                        packed_items=items, cache_len=pos + 1, active=act)
+            fn = jax.jit(run, donate_argnums=(1,) if self._donate else ())
+            self._decode_packed_jit[flat_len] = fn
+        return fn
+
     # -- public API -----------------------------------------------------------
     def prefill_into_slot(self, tokens: np.ndarray, slot: int,
                           sampling: SamplingParams = SamplingParams()) -> int:
@@ -587,7 +768,6 @@ class Engine:
     def decode_slots(self, slots, tokens, positions,
                      sampling: SamplingParams = SamplingParams()):
         """Advance all slots one step; returns sampled tokens for `slots`."""
-        run = self._decode_fn()
         tok_all = np.zeros((self.ecfg.num_slots,), np.int32)
         pos_all = np.zeros((self.ecfg.num_slots,), np.int32)
         act_all = np.zeros((self.ecfg.num_slots,), bool)
@@ -603,9 +783,24 @@ class Engine:
             for s in slots:
                 table[s] = self._table_for_slot(s)
             extra = [jnp.asarray(table)]
-        if self.ecfg.attention == "sparse":
-            # per-slot position-aware selection, refreshed at block
-            # boundaries (ids are a function of the slot's block count)
+        packed = (self.ecfg.attention == "sparse"
+                  and self.ecfg.decode_worklist == "packed")
+        if packed:
+            # cost-packed ragged worklist: grid length is this tick's true
+            # selected-block count (bucketed), not B x Hkv x max-budget
+            items, stats = self._plan_for(self._nb_sig(pos_all))
+            run = self._decode_packed_fn(items.shape[1])
+            logits, cache = run(self.params, self.cache,
+                                jnp.asarray(tok_all),
+                                jnp.asarray(pos_all),
+                                *extra,
+                                jnp.asarray(items),
+                                jnp.asarray(act_all))
+            self._record_tick(stats)
+        elif self.ecfg.attention == "sparse":
+            # padded baseline: per-slot position-aware selection, refreshed
+            # at block boundaries (ids are a function of the block count)
+            run = self._decode_fn()
             blk = self.ecfg.block
             per_slot = [self._decode_ids_for_nblocks((int(p) + 1 + blk - 1)
                                                      // blk)
@@ -617,16 +812,40 @@ class Engine:
                                 *extra,
                                 jnp.asarray(bids),
                                 jnp.asarray(act_all))
+            self._record_tick(self._padded_tick_stats(bids))
         else:
+            run = self._decode_fn()
             logits, cache = run(self.params, self.cache,
                                 jnp.asarray(tok_all),
                                 jnp.asarray(pos_all),
                                 *extra,
                                 jnp.asarray(act_all))
         self._set_cache(cache)
+        if packed:
+            # the device step above is dispatched asynchronously; build the
+            # NEXT tick's plan now, before sampling forces a sync — host
+            # planning overlaps the in-flight device work
+            self._prefetch_next_plan()
         self._rng, sub = jax.random.split(self._rng)
         toks = sample(logits, sub, sampling)
         return np.asarray(toks)[list(slots)]
+
+    def _padded_tick_stats(self, bids: np.ndarray) -> dict:
+        """Bubble telemetry of a PADDED-path tick: real vs padded grid
+        steps, and the (slot, head) run imbalance the packing removes."""
+        real = int((bids >= 0).sum())
+        grid = int(bids.size)
+        counts = (bids >= 0).sum(axis=-1).astype(np.float64)  # [L, B, Hkv]
+        mean = counts.mean() if counts.size else 0.0
+        return {
+            "bucket": int(bids.shape[-1]),
+            "real_items": real,
+            "grid_items": grid,
+            "padded_grid_items": grid,
+            "padding_waste": 1.0 - real / grid if grid else 0.0,
+            "padded_path_waste": 1.0 - real / grid if grid else 0.0,
+            "imbalance": float(counts.max() / mean) if mean > 0 else 1.0,
+        }
 
     def make_batcher(self) -> ContinuousBatcher:
         """A ContinuousBatcher sized for this engine (chunked mixed ticks

@@ -150,6 +150,26 @@ class ContinuousBatcher:
     def num_free_slots(self) -> int:
         return len(self._slots_free)
 
+    def preview_next_decode(self):
+        """Best-effort ``(slots, positions)`` of the NEXT tick's decode
+        batch, exposed so the engine can overlap next-tick worklist
+        planning with the in-flight device step (DESIGN.md §2.8).
+
+        Called from inside this tick's ``decode_fn`` (lengths not yet
+        advanced): each active request decodes next at its current length.
+        The preview deliberately ignores completions this tick and a
+        prefill finishing into the batch — a wrong guess only means the
+        real signature is planned synchronously next tick; plans are pure
+        functions of block counts, so a stale prediction can never corrupt
+        state.  Returns None when nothing is decoding.
+        """
+        if not self.active:
+            return None
+        rids = sorted(self.active)
+        slots = [self._slot_of[r] for r in rids]
+        positions = [self.lengths[r] for r in rids]
+        return slots, positions
+
     # -- completion (ONE check for prefill-sampled and decode tokens) --------
     def _record_token(self, req: Request, token: int) -> bool:
         """Append a sampled token; True iff the request just completed."""

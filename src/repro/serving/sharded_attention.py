@@ -111,6 +111,48 @@ def hplb_prefill_attention_rows(mesh, *, block_q=128, block_kv=128):
     return attend
 
 
+def hplb_decode_attention_packed(mesh, *, block_kv=128):
+    """Head-parallel cost-packed decode island (DESIGN.md §2.8): each
+    model shard executes ITS OWN packed decode worklist against its head
+    shard of the slot cache — the decode twin of
+    :func:`hplb_prefill_attention`.
+
+    q ``[B, H, 1, D]`` sharded on heads over 'model'; kc/vc
+    ``[B, Hkv, Smax, D]`` sharded on kv heads; items
+    ``[n_model, L_pad, DEC_FIELDS]`` sharded on axis 0 — built by
+    ``core.worklist.pack_decode_items(..., shard_of_kvhead=...,
+    kvhead_local=True)`` so every item's kv head indexes the LOCAL cache
+    shard.  Lists are equalized to ``max_d L_d``, which the cost packing
+    minimizes; heads are disjoint across shards so no cross-shard merge is
+    needed.  ``pos [B]`` replicates.
+    """
+    ba = _batch_axes(mesh)
+    bspec = ba[0] if len(ba) == 1 else (ba if ba else None)
+
+    def attend(q, kc, vc, items, pos):
+        B = q.shape[0]
+        pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+
+        def island(q_l, kc_l, vc_l, items_l, pos_l):
+            # q_l [B_l, H_loc, 1, D]; kc_l [B_l, Hkv_loc, S, D];
+            # items_l [1, L_pad, DEC_FIELDS] — this shard's packed list
+            return ops.flash_decode_packed(
+                q_l, kc_l, vc_l, items_l[0], pos_l, block_kv=block_kv)
+
+        return shard_map(
+            island, mesh=mesh,
+            in_specs=(P(bspec, "model", None, None),
+                      P(bspec, "model", None, None),
+                      P(bspec, "model", None, None),
+                      P("model", None, None),
+                      P(bspec)),
+            out_specs=P(bspec, "model", None, None),
+            check_vma=False,
+        )(q, kc, vc, items, pos_b)
+
+    return attend
+
+
 def flash_decode_attention_paged(mesh, *, block_kv=128, seq_axes=("model",),
                                  batch_axes=None):
     """Paged twin of :func:`flash_decode_attention`: the device cache is a

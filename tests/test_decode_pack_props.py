@@ -1,0 +1,209 @@
+"""Property tests for the cost-packed ragged decode worklists
+(DESIGN.md §2.8, ``core.worklist.pack_decode_items``):
+
+- ITEM CONSERVATION: every (row, kv_head, kv_block) selected appears in
+  the packed lists exactly once, across all shards;
+- BALANCE: no shard's real-item load exceeds the greedy list-scheduling
+  (Graham/LPT) bound ``total/D + (1 - 1/D) * max_run``;
+- PADDING: rows past a shard's real items replicate its last real item
+  with first/last/valid = 0 (the Pallas out-tile safety convention), and
+  the padded length honors the requested bucket;
+- RUN STRUCTURE: items of one (row, head) are contiguous, ascending in
+  kv_block, and carry exactly one first and one last flag.
+
+Deterministic np.random streams run unconditionally; hypothesis adds
+adversarial shrinking where the dep is available (it is in CI).
+"""
+import numpy as np
+import pytest
+
+from repro.core.partition import lpt_bound
+from repro.core.worklist import (
+    DEC_FIELDS,
+    D_BATCH,
+    D_FIRST,
+    D_KVBLK,
+    D_KVHEAD,
+    D_LAST,
+    D_VALID,
+    extend_packed_items,
+    pack_decode_items,
+    padded_decode_items,
+    pow2_bucket,
+)
+
+
+def _random_ids(rng, B, Hkv, nkv, nb_cap, allow_empty=False):
+    """Engine-convention selections: sorted unique blocks, -1 trailing."""
+    ids = np.full((B, Hkv, nb_cap), -1, np.int32)
+    for b in range(B):
+        for h in range(Hkv):
+            lo = 0 if allow_empty else 1
+            n = int(rng.integers(lo, min(nkv, nb_cap) + 1))
+            if n:
+                ids[b, h, :n] = np.sort(
+                    rng.choice(nkv, size=n, replace=False))
+    return ids
+
+
+def _check_all_invariants(ids, wl, num_shards):
+    B, Hkv, _ = ids.shape
+    # --- item conservation -------------------------------------------------
+    selected = {(b, h, int(blk))
+                for b in range(B) for h in range(Hkv)
+                for blk in ids[b, h] if blk >= 0}
+    emitted = []
+    for d in range(num_shards):
+        real = wl.items[d][wl.items[d][:, D_VALID] == 1]
+        emitted.extend((int(r[D_BATCH]), int(r[D_KVHEAD]), int(r[D_KVBLK]))
+                       for r in real)
+    assert len(emitted) == len(set(emitted)), "duplicate items"
+    assert set(emitted) == selected, "selection not conserved"
+    assert wl.total_real_items == len(selected)
+
+    # --- shard balance <= LPT bound ---------------------------------------
+    run_weights = [(ids[b, h] >= 0).sum()
+                   for b in range(B) for h in range(Hkv)
+                   if (ids[b, h] >= 0).any()]
+    if run_weights:
+        assert wl.lengths.max() <= lpt_bound(run_weights, num_shards) + 1e-9
+
+    # --- padding + run structure ------------------------------------------
+    for d in range(num_shards):
+        lst = wl.items[d]
+        n = int(wl.lengths[d])
+        if n:
+            pad = lst[n:]
+            assert (pad[:, D_VALID] == 0).all()
+            assert (pad[:, D_FIRST] == 0).all()
+            assert (pad[:, D_LAST] == 0).all()
+            # replicate-last: same out-tile indices as the last real item
+            assert (pad[:, D_BATCH] == lst[n - 1, D_BATCH]).all()
+            assert (pad[:, D_KVHEAD] == lst[n - 1, D_KVHEAD]).all()
+        real = lst[:n]
+        # runs contiguous: key changes at most once per (b, h)
+        keys = [tuple(r) for r in real[:, [D_BATCH, D_KVHEAD]]]
+        seen, prev = set(), None
+        for k in keys:
+            if k != prev:
+                assert k not in seen, f"run for {k} split"
+                seen.add(k)
+                prev = k
+        # per-run: ascending blocks, exactly one first / one last
+        for k in seen:
+            sel = real[(real[:, D_BATCH] == k[0])
+                       & (real[:, D_KVHEAD] == k[1])]
+            assert (np.diff(sel[:, D_KVBLK]) > 0).all()
+            assert sel[0, D_FIRST] == 1 and sel[:, D_FIRST].sum() == 1
+            assert sel[-1, D_LAST] == 1 and sel[:, D_LAST].sum() == 1
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+def test_pack_invariants_random_streams(seed, num_shards):
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 9))
+    Hkv = int(rng.integers(1, 9))
+    nkv = int(rng.integers(2, 33))
+    nb_cap = int(rng.integers(1, nkv + 1))
+    ids = _random_ids(rng, B, Hkv, nkv, nb_cap, allow_empty=(seed % 2 == 0))
+    wl = pack_decode_items(ids, num_shards=num_shards)
+    _check_all_invariants(ids, wl, num_shards)
+
+
+def test_bucket_is_honored_and_pow2():
+    rng = np.random.default_rng(3)
+    ids = _random_ids(rng, 4, 4, 16, 8)
+    wl = pack_decode_items(ids)
+    bucket = pow2_bucket(wl.padded_length)
+    wl2 = pack_decode_items(ids, bucket=bucket)
+    assert wl2.padded_length == bucket
+    assert bucket & (bucket - 1) == 0
+    with pytest.raises(AssertionError):
+        pack_decode_items(ids, bucket=1)  # below the packed length
+
+
+def test_extend_packed_items_replicates_last():
+    rng = np.random.default_rng(4)
+    ids = _random_ids(rng, 2, 3, 8, 4)
+    wl = pack_decode_items(ids)
+    wider = extend_packed_items(wl.items, wl.padded_length + 16)
+    assert wider.shape[1] == wl.padded_length + 16
+    for d in range(wider.shape[0]):
+        pad = wider[d, wl.padded_length:]
+        assert (pad[:, D_VALID] == 0).all()
+        assert (pad[:, D_FIRST] == 0).all() and (pad[:, D_LAST] == 0).all()
+        assert (pad[:, D_BATCH] == wider[d, wl.padded_length - 1,
+                                         D_BATCH]).all()
+
+
+def test_padded_grid_vs_packed_grid():
+    """The padded table is the fixed-stride worst case; packing only ever
+    shrinks the grid, and both carry the same real items."""
+    rng = np.random.default_rng(5)
+    ids = _random_ids(rng, 6, 4, 32, 16)
+    padded = padded_decode_items(ids)
+    wl = pack_decode_items(ids)
+    assert padded.shape[0] == ids.size
+    assert (padded[:, D_VALID] == 1).sum() == wl.total_real_items
+    assert wl.total_real_items <= wl.padded_total <= padded.shape[0] + 8
+
+
+def test_shard_of_kvhead_pins_runs():
+    rng = np.random.default_rng(6)
+    Hkv, shards = 8, 4
+    ids = _random_ids(rng, 3, Hkv, 16, 8)
+    owner = np.arange(Hkv) // (Hkv // shards)
+    wl = pack_decode_items(ids, num_shards=shards, shard_of_kvhead=owner,
+                           kvhead_local=True)
+    per = Hkv // shards
+    for d in range(shards):
+        real = wl.items[d][wl.items[d][:, D_VALID] == 1]
+        # local head ids within the shard's slice
+        assert (real[:, D_KVHEAD] < per).all()
+    # conservation under the local remap: counts per (b, global h) survive
+    total = sum(int(l) for l in wl.lengths)
+    assert total == int((ids >= 0).sum())
+
+
+def test_pow2_bucket_properties():
+    assert pow2_bucket(0) == 8
+    assert pow2_bucket(1) == 8
+    assert pow2_bucket(8) == 8
+    assert pow2_bucket(9) == 16
+    assert pow2_bucket(1000) == 1024
+    assert pow2_bucket(1000, hi=512) == 512   # explicit cap wins
+    for n in range(1, 300):
+        b = pow2_bucket(n)
+        assert b >= n and b & (b - 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis twins (adversarial shrinking)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:        # pragma: no cover - CI installs hypothesis
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def test_pack_invariants_hypothesis(data):
+        B = data.draw(st.integers(1, 6), label="B")
+        Hkv = data.draw(st.integers(1, 6), label="Hkv")
+        nkv = data.draw(st.integers(1, 24), label="nkv")
+        nb_cap = data.draw(st.integers(1, nkv), label="nb_cap")
+        num_shards = data.draw(st.sampled_from([1, 2, 3, 4]), label="D")
+        ids = np.full((B, Hkv, nb_cap), -1, np.int32)
+        for b in range(B):
+            for h in range(Hkv):
+                n = data.draw(st.integers(0, nb_cap))
+                if n:
+                    sel = data.draw(st.lists(st.integers(0, nkv - 1),
+                                             min_size=n, max_size=n,
+                                             unique=True))
+                    ids[b, h, :n] = np.sort(np.asarray(sel, np.int32))
+        wl = pack_decode_items(ids, num_shards=num_shards)
+        _check_all_invariants(ids, wl, num_shards)

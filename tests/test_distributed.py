@@ -132,6 +132,45 @@ print("PAGED_DECODE_OK", err)
     assert "PAGED_DECODE_OK" in out
 
 
+def test_hplb_decode_packed_island_multidevice():
+    """Head-parallel COST-PACKED decode island (DESIGN.md §2.8): each of 4
+    model shards executes its own packed ragged worklist against its kv-head
+    shard of the cache; full-budget selections == dense decode reference."""
+    out = _run("""
+import warnings; warnings.filterwarnings("ignore")
+import numpy as np, jax, jax.numpy as jnp
+from repro.sharding.compat import set_mesh
+from repro.core.worklist import pack_decode_items, pow2_bucket, extend_packed_items
+from repro.serving.sharded_attention import hplb_decode_attention_packed
+from repro.attention import dense_attention
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+B, H, Hkv, Smax, D, BLK = 2, 8, 4, 512, 32, 128
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+q = jax.random.normal(ks[0], (B, H, 1, D))
+kc = jax.random.normal(ks[1], (B, Hkv, Smax, D))
+vc = jax.random.normal(ks[2], (B, Hkv, Smax, D))
+nblk = Smax // BLK
+ids = np.tile(np.arange(nblk, dtype=np.int32)[None, None], (B, Hkv, 1))
+# one kv head per model shard; packed lists pinned to the owner shard,
+# kv-head ids remapped shard-LOCAL for the sharded cache slices
+wl = pack_decode_items(ids, num_shards=4, block=BLK,
+                       shard_of_kvhead=np.arange(Hkv),
+                       kvhead_local=True,
+                       bucket=pow2_bucket(B * nblk))
+pos = np.array([500, 300], np.int32)
+attend = hplb_decode_attention_packed(mesh)
+with set_mesh(mesh):
+    o = jax.jit(lambda *a: attend(*a))(
+        q, kc, vc, jnp.asarray(wl.items), jnp.asarray(pos))
+mask = (jnp.arange(Smax)[None] <= pos[:, None])[:, None, None]
+r = dense_attention(q, kc, vc, mask=mask)
+err = float(jnp.abs(o - r).max())
+assert err < 2e-5, err
+print("PACKED_DECODE_OK", err, wl.lengths.tolist())
+""")
+    assert "PACKED_DECODE_OK" in out
+
+
 def test_gspmd_train_step_multidevice_matches_single():
     """jit train step under a (2 data, 4 model) mesh: loss identical to the
     single-device run (GSPMD is semantics-preserving)."""

@@ -10,8 +10,16 @@ import pytest
 
 from repro.attention.worklist_jnp import (
     causal_items,
+    packed_decode_attention,
+    packed_decode_attention_paged,
     worklist_attention,
     worklist_attention_paged,
+)
+from repro.core.worklist import (
+    pack_decode_items,
+    padded_decode_items,
+    pow2_bucket,
+    extend_packed_items,
 )
 from repro.kernels.flash_decode import (
     decode_items_from_ids,
@@ -288,6 +296,138 @@ class TestPagedParity:
                                          tbl[0], block_q=BLK, block_kv=BLK,
                                          q_offset=0, kv_len=S)
         assert np.array_equal(np.asarray(base), np.asarray(paged))
+
+
+class TestPackedExecutor:
+    """Cost-packed ragged decode worklists (DESIGN.md §2.8): the packed
+    executor must be BITWISE-identical to the padded reference — the grid
+    gets shorter, the arithmetic per (row, head) run does not change."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("window", [None, 192])
+    def test_packed_matches_padded_reference_bitwise(self, dtype, window):
+        B, Hkv, G, Smax, D = 3, 2, 4, 512, 64
+        q, kc, vc, ids, pos = _rand_case(B, Hkv, G, Smax, D, dtype, seed=51)
+        ro, rm, rl = flash_decode_reference(
+            q, kc, vc, jnp.asarray(ids), jnp.asarray(pos), block_kv=BLK,
+            window=window)
+        wl = pack_decode_items(ids, block=BLK)
+        po, pm, pl = packed_decode_attention(
+            q, kc, vc, jnp.asarray(wl.flat()), jnp.asarray(pos),
+            block_kv=BLK, window=window)
+        assert np.array_equal(np.asarray(ro), np.asarray(po))
+        assert np.array_equal(np.asarray(rm), np.asarray(pm))
+        assert np.array_equal(np.asarray(rl), np.asarray(pl))
+
+    def test_padded_table_through_packed_executor_bitwise(self):
+        """Grid equivalence: the SAME executor on the padded fixed-stride
+        table and on the packed ragged table produces identical bits — so
+        any measured latency delta between the two is purely grid length
+        (what benchmarks/decode_pack.py reports)."""
+        B, Hkv, G, Smax, D = 2, 3, 2, 384, 32
+        q, kc, vc, ids, pos = _rand_case(B, Hkv, G, Smax, D, jnp.float32,
+                                         seed=52)
+        padded = padded_decode_items(ids)
+        wl = pack_decode_items(ids, block=BLK)
+        packed = extend_packed_items(wl.items,
+                                     pow2_bucket(wl.padded_length))
+        a = packed_decode_attention(q, kc, vc, jnp.asarray(padded),
+                                    jnp.asarray(pos), block_kv=BLK)
+        b = packed_decode_attention(q, kc, vc,
+                                    jnp.asarray(packed.reshape(-1, 6)),
+                                    jnp.asarray(pos), block_kv=BLK)
+        for x, y in zip(a, b):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+        # the packed grid is never longer than the padded one
+        assert packed.shape[0] * packed.shape[1] <= len(padded) + 8
+
+    def test_packed_sharded_concat_matches_single_list(self):
+        """best_partition reorders runs across shards; runs stay
+        self-contained, so the concatenated multi-shard list still equals
+        the 1-shard (and padded-reference) bits."""
+        B, Hkv, G, Smax, D = 4, 4, 2, 512, 32
+        q, kc, vc, ids, pos = _rand_case(B, Hkv, G, Smax, D, jnp.float32,
+                                         seed=53)
+        ro, _, _ = flash_decode_reference(
+            q, kc, vc, jnp.asarray(ids), jnp.asarray(pos), block_kv=BLK)
+        for shards in (1, 2, 4):
+            wl = pack_decode_items(ids, num_shards=shards, block=BLK)
+            po, _, _ = packed_decode_attention(
+                q, kc, vc, jnp.asarray(wl.flat()), jnp.asarray(pos),
+                block_kv=BLK)
+            assert np.array_equal(np.asarray(ro), np.asarray(po)), shards
+
+    @pytest.mark.parametrize("window", [None, 192])
+    def test_packed_paged_matches_padded_paged_bitwise(self, window):
+        B, Hkv, G, Smax, D = 3, 2, 4, 512, 64
+        q, kc, vc, ids, pos = _rand_case(B, Hkv, G, Smax, D, jnp.float32,
+                                         seed=54)
+        kp, vp, tbl = _paginate(kc, vc, seed=55)
+        ro, rm, rl = flash_decode_paged_reference(
+            q, kp, vp, jnp.asarray(ids), tbl, jnp.asarray(pos),
+            block_kv=BLK, window=window)
+        wl = pack_decode_items(ids, block=BLK)
+        po, pm, pl = packed_decode_attention_paged(
+            q, kp, vp, jnp.asarray(wl.flat()), tbl, jnp.asarray(pos),
+            block_kv=BLK, window=window)
+        assert np.array_equal(np.asarray(ro), np.asarray(po))
+        assert np.array_equal(np.asarray(rm), np.asarray(pm))
+        assert np.array_equal(np.asarray(rl), np.asarray(pl))
+
+    def test_packed_kernel_matches_oracle(self):
+        """The Pallas kernel (interpret) consumes packed ragged tables
+        as-is — the grid shrinks, the math stays the oracle's."""
+        B, Hkv, G, Smax, D = 2, 2, 4, 384, 64
+        q, kc, vc, ids, pos = _rand_case(B, Hkv, G, Smax, D, jnp.float32,
+                                         seed=56)
+        ref = _dense_oracle(q, kc, vc, ids, pos)
+        wl = pack_decode_items(ids, block=BLK)
+        ko, _, _ = flash_decode_kernel(
+            q, kc, vc, jnp.asarray(wl.flat()), jnp.asarray(pos),
+            block_kv=BLK, interpret=True)
+        np.testing.assert_allclose(np.asarray(ko), ref, atol=2e-5,
+                                   rtol=2e-5)
+        kpp, vpp, tbl = _paginate(kc, vc, seed=57)
+        kpo, _, _ = flash_decode_paged_kernel(
+            q, kpp, vpp, jnp.asarray(wl.flat()), tbl, jnp.asarray(pos),
+            block_kv=BLK, interpret=True)
+        np.testing.assert_allclose(np.asarray(kpo), ref, atol=2e-5,
+                                   rtol=2e-5)
+
+
+class TestPackedGreedyParity:
+    """End-to-end: the engine's packed-ragged decode produces bitwise-
+    identical greedy tokens to the padded baseline across policy x layout
+    (the §2.8 acceptance matrix)."""
+
+    @pytest.mark.parametrize("layout", ["contiguous", "paged"])
+    @pytest.mark.parametrize("policy", ["dense", "sparse", "windowed"])
+    def test_packed_tokens_equal_padded(self, policy, layout):
+        from repro.core.sparsity import synthetic_head_curves
+        from repro.models.transformer import TransformerConfig, init_params
+        from repro.serving import Engine, EngineConfig, SamplingParams
+
+        cfg = TransformerConfig(
+            num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+            d_ff=128, vocab_size=256, layer_loop="unroll",
+            attn_pattern="GL" if policy == "windowed" else "G",
+            local_window=160)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        profile = synthetic_head_curves(cfg.num_layers, cfg.num_heads)
+        attention = "dense" if policy == "dense" else "sparse"
+        prompts = [np.random.default_rng(i).integers(0, 256, size=(n,))
+                   for i, n in enumerate((40, 77, 150))]
+        sp = SamplingParams(max_tokens=8)  # greedy
+        outs = {}
+        for mode in ("padded", "packed"):
+            eng = Engine(cfg, params,
+                         EngineConfig(attention=attention,
+                                      budget_per_head=128, max_seq_len=512,
+                                      num_slots=4, cache_layout=layout,
+                                      decode_worklist=mode),
+                         profile=profile if attention == "sparse" else None)
+            outs[mode] = [r.generated for r in eng.serve(prompts, sp)]
+        assert outs["packed"] == outs["padded"]
 
 
 class TestZeroCopy:

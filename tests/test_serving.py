@@ -289,6 +289,112 @@ def _fake_fns(first_token=1, decode_token=1):
     return prefill, decode, calls
 
 
+class TestPackedDecodePath:
+    """Engine-side contracts of the cost-packed ragged decode worklists
+    (DESIGN.md §2.8): bounded host caches, pow2 item buckets, plan reuse
+    across ticks, pipelined prefetch, and bubble telemetry."""
+
+    def _engine(self, params, profile, **kw):
+        base = dict(attention="sparse", budget_per_head=256,
+                    max_seq_len=512, num_slots=4)
+        base.update(kw)
+        return Engine(CFG, params, EngineConfig(**base), profile=profile)
+
+    def test_worklists_cache_keyed_by_bucket(self, params, profile):
+        """Raw seq_len keys grew unboundedly under varied traffic; bucket
+        keys cap the cache at the pow2 bucket set."""
+        eng = self._engine(params, profile)
+        for n in (10, 23, 40, 100, 129, 129, 200, 255):
+            eng.worklists_for(n)
+        assert set(eng._worklists_cache) <= {128, 256, 512}
+
+    def test_decode_ids_memo_is_bounded(self, params, profile):
+        eng = self._engine(params, profile)
+        cap = eng.ecfg.max_seq_len // eng.ecfg.block
+        for nb in list(range(1, 20)) + [500, 10_000]:
+            eng._decode_ids_for_nblocks(nb)
+        assert len(eng._decode_ids_by_nblocks) <= cap
+
+    def test_plan_cache_reused_between_boundaries_and_bounded(
+            self, params, profile):
+        eng = self._engine(params, profile)
+        done = eng.serve([np.arange(40) % 256],
+                         SamplingParams(max_tokens=12))
+        assert len(done[0].generated) == 12
+        s = eng.decode_stats
+        # selections change only at block boundaries: nearly every tick
+        # hits the memoized plan
+        assert s["plan_hits"] > 0
+        assert s["plan_misses"] + s["plan_prefetches"] <= 3
+        assert len(eng._packed_plan_cache) <= eng._packed_plan_cap
+
+    def test_item_buckets_are_pow2_and_few(self, params, profile):
+        eng = self._engine(params, profile)
+        prompts = [np.arange(n) % 256 for n in (30, 80, 150, 260)]
+        eng.serve(prompts, SamplingParams(max_tokens=6))
+        for flat_len in eng._decode_packed_jit:
+            per_shard = flat_len // eng.ecfg.num_model_shards
+            assert per_shard & (per_shard - 1) == 0, flat_len
+        assert len(eng._decode_packed_jit) <= 4
+
+    def test_bubble_stats_emitted(self, params, profile):
+        eng = self._engine(params, profile)
+        eng.serve([np.arange(60) % 256, np.arange(30) % 256],
+                  SamplingParams(max_tokens=8))
+        st = eng.decode_bubble_stats
+        assert st["ticks"] > 0
+        assert 0.0 <= st["padding_waste"] < 1.0
+        assert 0.0 <= st["padded_path_waste"] < 1.0
+        # the packed grid never exceeds the padded baseline's
+        assert st["grid_vs_padded"] <= 1.0 + 1e-9
+        assert st["mean_imbalance"] >= 1.0
+        assert st["last_tick"]["real_items"] > 0
+
+    def test_prefetch_plans_next_tick(self, params, profile):
+        """The engine's pipelined host planning builds the next tick's
+        worklist from the scheduler preview while the device step is in
+        flight — observable as prefetch builds at block boundaries."""
+        eng = self._engine(params, profile)
+        # 124-token prompt: decode crosses the 128 boundary on tick ~4, so
+        # the preview sees the new block count one tick early
+        eng.serve([np.arange(124) % 256], SamplingParams(max_tokens=10))
+        s = eng.decode_stats
+        assert s["plan_prefetches"] >= 1
+        # prefetched signatures must then HIT (the preview was correct)
+        assert s["plan_misses"] <= 1
+
+
+class TestSchedulerPreview:
+    def test_preview_matches_next_tick_positions(self):
+        prefill, decode, calls = _fake_fns()
+        b = ContinuousBatcher(num_slots=2, num_blocks=64, max_seq_len=256)
+        seen = []
+
+        def decode_with_preview(slots, toks, pos):
+            seen.append((tuple(slots), tuple(int(p) for p in pos),
+                         b.preview_next_decode()))
+            return decode(slots, toks, pos)
+
+        for i in range(2):
+            b.submit(Request(rid=i, prompt=np.arange(10),
+                             sampling=SamplingParams(max_tokens=4)))
+        b.run(prefill, decode_with_preview)
+        for i in range(len(seen) - 1):
+            _, _, preview = seen[i]
+            nxt_slots, nxt_pos, _ = seen[i + 1]
+            if preview is None:
+                continue
+            pslots, ppos = preview
+            # the preview predicts the next tick exactly whenever no
+            # completion/admission changed the batch in between
+            if tuple(pslots) == nxt_slots:
+                assert tuple(ppos)[:len(nxt_pos)] == nxt_pos
+
+    def test_preview_none_when_idle(self):
+        b = ContinuousBatcher(num_slots=2, num_blocks=64, max_seq_len=256)
+        assert b.preview_next_decode() is None
+
+
 class TestScheduler:
     def test_admission_respects_slots(self):
         prefill, decode, calls = _fake_fns()
