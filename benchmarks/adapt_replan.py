@@ -1,0 +1,185 @@
+"""Adaptive replanning benchmark: plan epochs under a workload shift
+(DESIGN.md §2.9).
+
+Scenario: the engine is planned on a MISMATCHED offline profile (head
+identities shuffled — the paper's stability assumption violated, as a
+calibration-set / workload shift would).  Short requests decode; mid-run a
+burst of longer prompts arrives (the shift).  Two engines serve the same
+schedule:
+
+- **frozen**   — the plan from ``Engine.__init__``, never revisited (the
+  pre-epoch architecture).  Telemetry runs so its realized recovery is
+  measured, but the plan cannot react.
+- **adaptive** — the same engine with a replan policy: the online
+  estimator accumulates Quest-bound recovery samples and the engine swaps
+  onto a re-derived plan epoch at a safe point shortly after the shift.
+
+Reported (and written to ``BENCH_adapt.json``): the realized-recovery
+trajectory (the online estimator's EMA before the shift, and at the end),
+mean decode-tick latency before/after the swap for both engines, and the
+adaptive engine's epoch/replan counters.  The acceptance bar: adaptive
+recovery at end-of-run >= frozen recovery, at <= ~parity decode latency
+(budget totals are conserved across a replan, so the grid work is the
+same — only its allocation moves).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import HeadSparsityProfile, synthetic_head_curves
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.scheduler import Request
+
+CFG = TransformerConfig(
+    name="adapt-bench", num_layers=2, d_model=128, num_heads=8,
+    num_kv_heads=4, d_ff=256, vocab_size=512, layer_loop="unroll",
+    dtype=jnp.float32)
+
+NUM_SHORT = 4
+SHIFT_TICK = 8          # the longer prompts arrive here
+
+
+def _mismatched_profile(seed=13):
+    """The offline prior with its head identities shuffled per layer:
+    marginally identical, per-head wrong — the drifted-workload stand-in."""
+    p = synthetic_head_curves(CFG.num_layers, CFG.num_heads)
+    prof = HeadSparsityProfile(p.curves.copy(), p.grid.copy(),
+                               p.num_samples, dict(p.meta))
+    rng = np.random.default_rng(seed)
+    for l in range(CFG.num_layers):
+        prof.curves[l] = prof.curves[l][rng.permutation(CFG.num_heads)]
+    return prof
+
+
+def _recovery_totals(eng: Engine):
+    """(sum of per-tick mean recovery, probe ticks) across all epochs."""
+    s, n = 0.0, 0
+    for es in eng._epoch_stats.values():
+        s += es["recovery_sum"]
+        n += es["recovery_ticks"]
+    return s, n
+
+
+def _drive(eng: Engine, shorts, longs, sp, replan: bool):
+    """Tick loop with the mid-run shift; returns per-phase decode-tick
+    latencies, the recovery trajectory, and the finished requests."""
+    batcher = eng.make_batcher()
+    pf, df = eng.step_fns(sp)
+    for i, p in enumerate(shorts):
+        batcher.submit(Request(rid=i, prompt=np.asarray(p, np.int32),
+                               sampling=sp))
+    decode_ms = {"pre": [], "post": []}
+    rec_at_shift = None
+    shift_totals = (0.0, 0)
+    done, ticks, shifted = [], 0, False
+
+    def timed_decode(slots, toks, pos):
+        t0 = time.monotonic()
+        out = df(slots, toks, pos)
+        decode_ms["post" if shifted else "pre"].append(
+            (time.monotonic() - t0) * 1e3)
+        return out
+
+    while batcher.busy or not shifted:
+        if ticks == SHIFT_TICK:
+            rec_at_shift = (eng.telemetry.realized_recovery()
+                            if eng.telemetry.total_samples else None)
+            shift_totals = _recovery_totals(eng)
+            for j, p in enumerate(longs):
+                batcher.submit(Request(
+                    rid=NUM_SHORT + j, prompt=np.asarray(p, np.int32),
+                    sampling=sp))
+            shifted = True
+        done.extend(batcher.tick(pf, timed_decode))
+        if replan:
+            eng._maybe_replan(batcher)
+        ticks += 1
+        if ticks > 100_000:
+            raise RuntimeError("adapt benchmark did not drain")
+    end_totals = _recovery_totals(eng)
+    post_ticks = end_totals[1] - shift_totals[1]
+    seen = eng.telemetry.count > 0
+    return {
+        # median is compile-spike robust: the first post-swap ticks pay
+        # the new epoch's one-time bucket compiles
+        "decode_ms_pre": float(np.median(decode_ms["pre"])),
+        "decode_ms_post": float(np.median(decode_ms["post"])),
+        "recovery_at_shift": rec_at_shift,
+        # post-shift window mean (epoch aggregates are per-epoch sums, so
+        # the delta isolates the ticks after the workload shift)
+        "recovery_post_shift": ((end_totals[0] - shift_totals[0])
+                                / post_ticks if post_ticks else None),
+        "recovery_end": eng.telemetry.realized_recovery(),
+        # min over observed heads — the max-min allocator's objective
+        "recovery_min_end": float(eng.telemetry.rec_ema[seen].min()),
+        "completed": len(done),
+        "epoch": eng.epoch,
+        "replans": eng.replans,
+        "bubbles": eng.decode_bubble_stats,
+    }
+
+
+def run(out_dir: str, quick: bool = False):
+    max_seq = 1024
+    short_len, long_len = 64, 384
+    n_long = 2 if quick else 3
+    sp = SamplingParams(max_tokens=24 if quick else 48)
+    rng = np.random.default_rng(0)
+    shorts = [rng.integers(0, CFG.vocab_size, size=(short_len,))
+              for _ in range(NUM_SHORT)]
+    longs = [rng.integers(0, CFG.vocab_size, size=(long_len,))
+             for _ in range(n_long)]
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    profile = _mismatched_profile()
+
+    def mk(replan: bool) -> Engine:
+        return Engine(CFG, params, EngineConfig(
+            attention="sparse", budget_per_head=256, max_seq_len=max_seq,
+            num_slots=NUM_SHORT + n_long, telemetry_every=2,
+            replan_every=SHIFT_TICK + 4 if replan else None),
+            profile=profile)
+
+    # warm both engines (compiles), then measure one clean run each
+    for replan in (False, True):
+        _drive(mk(replan), shorts, longs, sp, replan)
+    frozen = _drive(mk(False), shorts, longs, sp, False)
+    adaptive = _drive(mk(True), shorts, longs, sp, True)
+
+    gain = adaptive["recovery_post_shift"] - frozen["recovery_post_shift"]
+    min_gain = adaptive["recovery_min_end"] - frozen["recovery_min_end"]
+    lat_ratio = (adaptive["decode_ms_post"]
+                 / max(frozen["decode_ms_post"], 1e-9))
+    payload = {
+        "config": {"short_len": short_len, "long_len": long_len,
+                   "num_short": NUM_SHORT, "num_long": n_long,
+                   "max_seq_len": max_seq, "shift_tick": SHIFT_TICK,
+                   "quick": quick},
+        "frozen": frozen,
+        "adaptive": adaptive,
+        "recovery_gain_post_shift": gain,
+        "recovery_min_gain": min_gain,
+        "decode_ms_ratio_adaptive_vs_frozen": lat_ratio,
+    }
+    with open(os.path.join(out_dir, "BENCH_adapt.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+
+    return [
+        ("recovery_post_shift_frozen", frozen["recovery_post_shift"]),
+        ("recovery_post_shift_adaptive", adaptive["recovery_post_shift"]),
+        ("recovery_gain_post_shift", gain),
+        ("recovery_min_frozen", frozen["recovery_min_end"]),
+        ("recovery_min_adaptive", adaptive["recovery_min_end"]),
+        ("recovery_min_gain", min_gain),
+        ("decode_ms_post_frozen", frozen["decode_ms_post"]),
+        ("decode_ms_post_adaptive", adaptive["decode_ms_post"]),
+        ("decode_ms_ratio", lat_ratio),
+        ("replans", adaptive["replans"]),
+        ("epoch_final", adaptive["epoch"]),
+    ]

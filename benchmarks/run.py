@@ -26,12 +26,15 @@ SUITES = [
     ("skyline", "paper Fig. 10"),
     ("lb_ablation", "paper Fig. 11"),
     ("serving", "chunked-prefill tick loop (TTFT/ITL)"),
+    ("adapt_replan", "plan epochs: replanning under workload shift (§2.9)"),
 ]
 
 # fast subset exercising the serving hot paths (CI perf smoke); the decode
 # microbench refreshes BENCH_decode.json every PR so the packed-vs-padded
-# latency series has a per-commit trajectory
-SMOKE = ("load_balance", "latency_attention", "decode_pack", "serving")
+# latency series has a per-commit trajectory, and adapt_replan refreshes
+# BENCH_adapt.json so epoch-swap recovery/latency regress visibly too
+SMOKE = ("load_balance", "latency_attention", "decode_pack", "serving",
+         "adapt_replan")
 
 
 def main() -> int:

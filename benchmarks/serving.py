@@ -150,7 +150,8 @@ def run(out_dir: str, quick: bool = False):
             CFG, params,
             EngineConfig(attention="sparse", budget_per_head=256,
                          max_seq_len=max_seq, num_slots=NUM_SHORT + 1,
-                         prefill_mode=mode, prefill_chunk_tokens=chunk),
+                         prefill_mode=mode, prefill_chunk_tokens=chunk,
+                         telemetry_every=4),
             profile=profile)
         _drive(engines[mode], shorts, long, sp_short, sp_long)  # warm/compile
     # reps INTERLEAVE the two modes so a burst of machine contention (CI
@@ -179,9 +180,11 @@ def run(out_dir: str, quick: bool = False):
     speedup = (results["monolithic"]["itl_p99_ms"]
                / results["chunked"]["itl_p99_ms"])
     capacity = _kv_capacity()
-    # decode bubble telemetry (DESIGN.md §2.8): per-tick padding waste and
-    # run imbalance accumulated by the engines over the whole run — the
-    # packed-grid win observed in the serving loop itself, not inferred
+    # decode bubble telemetry (DESIGN.md §2.8) + plan-epoch aggregates
+    # (§2.9: per-epoch realized_recovery / drift from the online
+    # estimator) accumulated by the engines over the whole run — the
+    # packed-grid AND adaptivity signals observed in the serving loop
+    # itself, not inferred
     bubbles = {m: engines[m].decode_bubble_stats for m in modes}
     payload = {
         "config": {"long_len": long_len, "chunk_tokens": chunk,
@@ -204,7 +207,10 @@ def run(out_dir: str, quick: bool = False):
              bubbles["chunked"]["padded_path_waste"]),
             ("decode_grid_vs_padded", bubbles["chunked"]["grid_vs_padded"]),
             ("decode_mean_imbalance",
-             bubbles["chunked"]["mean_imbalance"])]
+             bubbles["chunked"]["mean_imbalance"]),
+            ("realized_recovery",
+             bubbles["chunked"]["realized_recovery"] or 0.0),
+            ("epoch", bubbles["chunked"]["epoch"])]
     for pt in capacity["points"]:
         rows.append((f"kv_capacity_paged_seqs_{pt['contiguous_seqs']}slots",
                      pt["paged_seqs"]))

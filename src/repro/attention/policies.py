@@ -131,13 +131,21 @@ def quest_block_scores(q: jnp.ndarray, k: jnp.ndarray, block: int):
     pad_q = (-sq) % block
     pad_k = (-skv) % block
     qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
-    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)),
-                 constant_values=0.0)
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
     nq = qp.shape[1] // block
     nkv = kp.shape[1] // block
     kb = kp.reshape(hkv, nkv, block, dh)
-    kmin = kb.min(axis=2)  # [Hkv, nkv, dh]
-    kmax = kb.max(axis=2)
+    # padded key rows must NOT enter the min/max summaries: a zero-padded
+    # trailing partial block would pull kmin/kmax toward 0 and skew that
+    # block's upper bound.  Mask pads to +/-inf for the reduction, then
+    # neutralize fully-padded blocks (no real keys) to 0.
+    kreal = (jnp.arange(nkv * block) < skv).reshape(nkv, block)
+    kmask = kreal[None, :, :, None]                      # [1, nkv, blk, 1]
+    kmin = jnp.where(kmask, kb, jnp.inf).min(axis=2)     # [Hkv, nkv, dh]
+    kmax = jnp.where(kmask, kb, -jnp.inf).max(axis=2)
+    has_real = kreal.any(axis=1)[None, :, None]          # [1, nkv, 1]
+    kmin = jnp.where(has_real, kmin, 0.0)
+    kmax = jnp.where(has_real, kmax, 0.0)
     kmin = jnp.repeat(kmin, n_rep, axis=0)  # [H, nkv, dh]
     kmax = jnp.repeat(kmax, n_rep, axis=0)
     qb = qp.reshape(hq, nq, block, dh).astype(jnp.float32)

@@ -130,6 +130,7 @@ def topp_allocation(
 def maxmin_allocation(
     profile, *, layer: int | None = None, total: int, seq_len: int,
     block: int = 128, floor: int = 128, max_iters: int = 100_000,
+    init_budgets: np.ndarray | None = None,
 ) -> AllocationResult:
     """The paper's iterative max-min budget shifting (§3.2, Fig. 7).
 
@@ -140,13 +141,29 @@ def maxmin_allocation(
     (i)  the transfer no longer yields benefit — the donor would become the
          new minimum (paper's dashed-line condition); or
     (ii) no donor can give without violating the ``floor``.
+
+    ``init_budgets`` warm-starts the transfer loop from an existing
+    allocation instead of the uniform split — the incremental replanning
+    path (DESIGN.md §2.9): when the live profile has drifted only mildly
+    from the one the previous epoch was planned on, the previous budgets
+    are near-optimal and the loop converges in a handful of transfers
+    instead of O(total/block).  The warm start is re-centered onto
+    ``total`` first, so a replan can also change the global budget.
     """
     curves, grid = _as_curves(profile, layer)
     H = curves.shape[0]
-    base = max(floor, int(round(total / H)))
-    budgets = _quantize(np.full(H, base), block, floor, seq_len)
-    # Re-center to respect the global total as closely as quantization allows.
-    budgets = _rebalance_total(budgets, total, block, floor, seq_len)
+    if init_budgets is not None:
+        assert len(init_budgets) == H, (
+            f"warm start has {len(init_budgets)} heads, curves {H}")
+        budgets = _quantize(np.asarray(init_budgets, np.float64),
+                            block, floor, seq_len)
+        budgets = _rebalance_total(budgets, total, block, floor, seq_len,
+                                   curves=curves, grid=grid)
+    else:
+        base = max(floor, int(round(total / H)))
+        budgets = _quantize(np.full(H, base), block, floor, seq_len)
+        # Re-center onto the global total as closely as quantization allows.
+        budgets = _rebalance_total(budgets, total, block, floor, seq_len)
 
     rec = _recovery_tokens(curves, grid, seq_len, budgets)
     iters = 0

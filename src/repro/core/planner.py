@@ -28,6 +28,14 @@ The output :class:`HPLBPlan` carries, per layer:
   - ``device_loads``: ``[D]`` block loads (for metrics / roofline),
 plus plan-level metadata.  ``apply_plan_to_params`` permutes a parameter
 pytree; ``plan_summary`` reports the imbalance and padded-grid savings.
+
+Plans are EPOCH-VERSIONED (DESIGN.md §2.9): the serving engine may swap a
+running engine onto a new plan at a safe tick boundary.  :func:`plan_delta`
+expresses the new epoch as a *composable permutation delta* over the old
+one — per layer, the slot-order shuffle that takes already-HPLB-permuted
+weights (and the resident KV cache's kv-head axis) from the old layout to
+the new — so the swap is a host-side re-permute through the very same
+:func:`permute_attention_params`, never a re-trace of jitted model code.
 """
 from __future__ import annotations
 
@@ -81,6 +89,7 @@ class HPLBPlan:
     mode: str                      # "kv_group" | "kv_replication"
     partitioner: str
     allocator: str
+    epoch: int = 0                 # plan-epoch version (DESIGN.md §2.9)
 
     @property
     def num_layers(self) -> int:
@@ -116,6 +125,7 @@ class HPLBPlan:
                 "mode": self.mode,
                 "partitioner": self.partitioner,
                 "allocator": self.allocator,
+                "epoch": self.epoch,
                 "layers": [
                     {
                         "perm": lp.perm.tolist(),
@@ -158,6 +168,7 @@ class HPLBPlan:
             mode=d["mode"],
             partitioner=d["partitioner"],
             allocator=d["allocator"],
+            epoch=int(d.get("epoch", 0)),
         )
 
 
@@ -250,6 +261,8 @@ def make_plan(
     allocator: str = "maxmin",
     partitioner: str = "best",
     layers: Sequence[int] | None = None,
+    prev_plan: "HPLBPlan | None" = None,
+    epoch: int = 0,
 ) -> HPLBPlan:
     """Build the full S-HPLB plan for a model.
 
@@ -274,6 +287,13 @@ def make_plan(
         "naive" (vanilla HP baseline).
     layers:
         subset of layers to plan (default: all).
+    prev_plan:
+        warm-start the allocator from this plan's budgets (incremental
+        replanning, DESIGN.md §2.9): when the profile drifted mildly the
+        transfer loop starts near its fixed point.  Geometry (H, Hkv, D,
+        block) must match.
+    epoch:
+        plan-epoch version stamped on the result.
     """
     H = profile.num_heads
     Hkv = num_kv_heads if num_kv_heads is not None else H
@@ -295,13 +315,22 @@ def make_plan(
             f"cannot shard H={H} (kv={Hkv}) over {num_devices} devices")
     del atoms_per_dev_ok
 
+    if prev_plan is not None:
+        assert (prev_plan.num_heads == H
+                and prev_plan.num_kv_heads == Hkv
+                and prev_plan.num_devices == num_devices
+                and prev_plan.block == block), \
+            "prev_plan geometry mismatch — cannot warm-start"
+
     total = int(total_budget_per_head) * H
     plans: list[LayerPlan] = []
     for l in layer_ids:
+        init = (prev_plan.budgets_by_original_head(l)
+                if prev_plan is not None else None)
         if allocator == "maxmin":
             alloc: AllocationResult = maxmin_allocation(
                 profile, layer=l, total=total, seq_len=seq_len,
-                block=block, floor=floor)
+                block=block, floor=floor, init_budgets=init)
         elif allocator == "uniform":
             alloc = uniform_allocation(
                 profile, layer=l, k=total_budget_per_head, seq_len=seq_len,
@@ -347,8 +376,91 @@ def make_plan(
     return HPLBPlan(
         layers=plans, num_devices=num_devices, num_heads=H,
         num_kv_heads=Hkv, block=block, seq_len=seq_len, mode=mode,
-        partitioner=partitioner, allocator=allocator,
+        partitioner=partitioner, allocator=allocator, epoch=epoch,
     )
+
+
+# ---------------------------------------------------------------------------
+# Plan epochs: composable deltas between plans (DESIGN.md §2.9)
+# ---------------------------------------------------------------------------
+
+def plans_equal(a: HPLBPlan, b: HPLBPlan) -> bool:
+    """Same placement AND budgets on every layer (epoch tags ignored) —
+    the replanner's no-op check."""
+    if len(a.layers) != len(b.layers):
+        return False
+    return all(
+        np.array_equal(la.perm, lb.perm)
+        and np.array_equal(la.kv_perm, lb.kv_perm)
+        and np.array_equal(la.budgets, lb.budgets)
+        for la, lb in zip(a.layers, b.layers))
+
+
+def plan_delta(old: HPLBPlan, new: HPLBPlan) -> "PlanDelta":
+    """The slot-order shuffle taking epoch ``old`` to epoch ``new``.
+
+    Weights permuted by ``old`` hold original head ``old.perm[s]`` in slot
+    ``s``; the new epoch wants ``new.perm[s]`` there.  The delta slot
+    permutation is therefore ``old.inv_perm[new.perm]`` (and likewise for
+    kv heads), satisfying the composition law
+
+        ``old.perm[delta.perm] == new.perm``.
+
+    Each per-layer delta is packaged as a :class:`LayerPlan` (carrying the
+    NEW epoch's slot-order budgets/loads), so applying an epoch swap is the
+    very same host-side :func:`permute_attention_params` call used at
+    engine init — jitted model code never changes.  The resident KV
+    cache's kv-head axis must be gathered by ``delta.kv_perm`` per layer
+    (in ``kv_replication`` mode kv heads are never permuted, so the cache
+    is untouched).
+    """
+    assert old.num_heads == new.num_heads, "head-count mismatch"
+    assert old.num_kv_heads == new.num_kv_heads, "kv-head-count mismatch"
+    assert old.mode == new.mode, (
+        f"cannot delta across modes ({old.mode} -> {new.mode})")
+    layers = []
+    identity = True
+    for lo, ln in zip(old.layers, new.layers):
+        d_perm = lo.inv_perm[ln.perm]
+        if old.mode == "kv_replication":
+            d_kv = np.arange(len(lo.kv_perm), dtype=np.int64)
+        else:
+            kv_inv = np.empty_like(lo.kv_perm)
+            kv_inv[lo.kv_perm] = np.arange(len(lo.kv_perm))
+            d_kv = kv_inv[ln.kv_perm]
+        identity = (identity
+                    and np.array_equal(d_perm, np.arange(len(d_perm)))
+                    and np.array_equal(d_kv, np.arange(len(d_kv))))
+        inv = np.empty_like(d_perm)
+        inv[d_perm] = np.arange(len(d_perm))
+        layers.append(LayerPlan(
+            perm=d_perm, inv_perm=inv, budgets=ln.budgets.copy(),
+            kv_perm=d_kv, device_loads=ln.device_loads.copy(),
+            assignment=ln.assignment))
+    return PlanDelta(layers=layers, from_epoch=old.epoch,
+                     to_epoch=new.epoch, identity=identity,
+                     mode=new.mode)
+
+
+@dataclasses.dataclass
+class PlanDelta:
+    """Composable epoch-to-epoch permutation delta (see :func:`plan_delta`).
+
+    ``layers[l].perm`` / ``.kv_perm`` are SLOT-ORDER shuffles over the
+    previous epoch's layout; ``identity`` is True when the swap moves no
+    head (budget-only replan — params and cache stay put).
+    """
+
+    layers: list[LayerPlan]
+    from_epoch: int
+    to_epoch: int
+    identity: bool
+    mode: str
+
+    def kv_perm_table(self) -> np.ndarray:
+        """``[L, Hkv]`` per-layer kv-slot shuffle — the gather indices for
+        re-permuting the resident KV cache's kv-head axis on-device."""
+        return np.stack([lp.kv_perm for lp in self.layers]).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -30,7 +30,18 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=16)
+    # adaptive replanning (plan epochs, DESIGN.md §2.9)
+    ap.add_argument("--telemetry-every", type=int, default=0,
+                    help="probe realized per-head recovery every N decode "
+                         "ticks (0 = telemetry off)")
+    ap.add_argument("--replan-every", type=int, default=None,
+                    help="force a plan-epoch replan every N decode ticks")
+    ap.add_argument("--drift-threshold", type=float, default=None,
+                    help="replan when online-vs-offline profile drift "
+                         "reaches this value (needs --telemetry-every)")
     args = ap.parse_args()
+    if args.drift_threshold is not None and args.telemetry_every <= 0:
+        ap.error("--drift-threshold needs --telemetry-every > 0")
 
     spec = ARCHS[args.arch]
     if spec.module not in ("transformer",):
@@ -46,7 +57,10 @@ def main():
         profile = synthetic_head_curves(cfg.num_layers, cfg.num_heads)
     eng = Engine(cfg, params, EngineConfig(
         attention=args.attention, budget_per_head=args.budget,
-        max_seq_len=args.max_seq, num_slots=args.slots), profile=profile)
+        max_seq_len=args.max_seq, num_slots=args.slots,
+        telemetry_every=args.telemetry_every,
+        replan_every=args.replan_every,
+        drift_threshold=args.drift_threshold), profile=profile)
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, min(cfg.vocab_size, 256),
@@ -64,6 +78,12 @@ def main():
         log.info("plan imbalance %.3f (naive %.3f), grid saving %.1f%%",
                  s["mean_imbalance_plan"], s["mean_imbalance_naive"],
                  100 * s["padded_grid_saving"])
+        bs = eng.decode_bubble_stats
+        if bs["realized_recovery"] is not None:
+            log.info("epoch %d after %d replan(s); realized recovery %.3f"
+                     "%s", eng.epoch, eng.replans, bs["realized_recovery"],
+                     (f", drift {bs['drift']['drift']:.3f}"
+                      if bs["drift"] else ""))
 
 
 if __name__ == "__main__":

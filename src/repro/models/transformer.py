@@ -870,3 +870,142 @@ def decode_step_paged(params, pool, token, pos, table,
         new_pool = jnp.stack(new_layers)
     logits = _logits(x, params, cfg)[:, 0]
     return logits, new_pool
+
+
+# ---------------------------------------------------------------------------
+# Plan-epoch support: online recovery telemetry + KV-cache re-permutation
+# (DESIGN.md §2.9)
+# ---------------------------------------------------------------------------
+
+def permute_cache_kv_heads(cache, kv_perm):
+    """Re-permute the kv-head axis of a resident KV cache for a plan-epoch
+    swap.
+
+    ``cache``: contiguous ``[L, 2, B, Hkv, Smax, Dh]`` or paged pool
+    ``[L, 2, N, Hkv, block, Dh]`` — any layout with kv heads on axis 3.
+    ``kv_perm [L, Hkv]``: per-layer delta shuffle from
+    :meth:`repro.core.planner.PlanDelta.kv_perm_table` (new slot ->
+    previous slot).  Weights permuted by the delta expect the cache's
+    kv-head slots shuffled the same way; this one gather is the entire
+    device-side cost of an epoch swap.
+    """
+    idx = jnp.asarray(kv_perm, jnp.int32)[:, None, None, :, None, None]
+    return jnp.take_along_axis(cache, idx, axis=3)
+
+
+def decode_telemetry(params, cache, token, pos, cfg: TransformerConfig, *,
+                     block_ids, cache_len, table=None):
+    """Quest-bound estimate of the recovery each head's selection realizes.
+
+    The in-graph half of the online sparsity telemetry (DESIGN.md §2.9):
+    re-runs one decode forward over the RESIDENT cache prefix (the current
+    token's K/V are not yet written — ``cache_len`` is the per-row resident
+    length, i.e. ``pos``) and per layer computes, from the same per-block
+    key min/max summaries Quest uses for selection
+    (:func:`repro.attention.policies.quest_block_scores`), the fraction of
+    estimated attention mass the plan's selected blocks capture:
+
+        ``rec[l, b, h] = sum_{blk in sel} w / sum_{blk causal} w``,
+        ``w = exp(ub - max ub) * resident_tokens(blk)``
+
+    plus the normalized budget actually spent, ``frac[l, b, h] =
+    selected resident tokens / cache_len``.  Hidden states propagate
+    through DENSE attention over the prefix (an estimator forward, not the
+    serving step: nothing is sampled and no cache is written), so the
+    probe is a separate un-donated jit the engine runs every
+    ``telemetry_every`` ticks.
+
+    ``cache``: contiguous ``[L, 2, B, Hkv, Smax, Dh]``, or the paged pool
+    with ``table [B, T]`` (logical -> pool block, -1 pad).  ``block_ids``:
+    ``[L, B, Hkv, nb]`` LOGICAL selections, -1 pad — exactly the engine's
+    position-aware decode tables.  Returns ``(rec, frac)`` both
+    ``[L, B, H]`` float32 (rows with ``cache_len == 0`` return garbage the
+    caller must mask — the engine filters to active slots).
+    """
+    B = token.shape[0]
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim_
+    n_rep = cfg.num_heads // hkv
+    paged = table is not None
+    blk = cache.shape[4] if paged else cfg.block_kv
+    x = jnp.take(params["embed"], token[:, None], axis=0)  # [B, 1, d]
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    if paged:
+        tbl = jnp.asarray(table, jnp.int32)
+        skv = tbl.shape[1] * blk
+    else:
+        skv = cache.shape[4]
+    nkvb = -(-skv // blk)
+    kpos = jnp.arange(nkvb * blk)
+    valid = kpos[None] < clen[:, None]                    # [B, Skv]
+    ntok = jnp.clip(clen[:, None] - jnp.arange(nkvb)[None] * blk,
+                    0, blk)                               # [B, nkvb]
+
+    layers = params["layers"]
+    stacked = not isinstance(layers, (list, tuple))
+
+    def layer_fn(x, lp, layer_cache, l, ids_l):
+        h = common.rmsnorm(x, lp["ln1"])
+        ap = lp["attn"]
+        q = common.split_heads(jnp.einsum("bsd,df->bsf", h, ap["wq"]),
+                               cfg.num_heads)
+        rope = lambda t, p: apply_rope(t, p[None], cfg.rope_theta)
+        q = jax.vmap(rope)(q, pos_arr)                    # [B, H, 1, Dh]
+        if paged:
+            view = lambda c: jnp.moveaxis(
+                jnp.take(c, jnp.maximum(tbl, 0), axis=0), 1, 2
+            ).reshape(B, hkv, skv, dh)
+            kc, vc = view(layer_cache[0]), view(layer_cache[1])
+        else:
+            # a contiguous cache's Smax need not be a block multiple: pad
+            # to the block grid (pads sit past every clen, so the valid
+            # mask — already sized nkvb*blk — excludes them everywhere)
+            pad = nkvb * blk - skv
+            padkv = lambda c: (jnp.pad(c, ((0, 0), (0, 0), (0, pad),
+                                           (0, 0))) if pad else c)
+            kc, vc = padkv(layer_cache[0]), padkv(layer_cache[1])
+        # -- per-block Quest summaries over the RESIDENT prefix ------------
+        kb = kc.reshape(B, hkv, nkvb, blk, dh)
+        vmask = valid.reshape(B, 1, nkvb, blk, 1)
+        kmin = jnp.where(vmask, kb, jnp.inf).min(axis=3)  # [B, Hkv, nkvb, d]
+        kmax = jnp.where(vmask, kb, -jnp.inf).max(axis=3)
+        has = vmask.any(axis=3)                           # [B, Hkv, nkvb, 1]
+        kmin = jnp.where(has, kmin, 0.0)
+        kmax = jnp.where(has, kmax, 0.0)
+        kmin = jnp.repeat(kmin, n_rep, axis=1)            # [B, H, nkvb, d]
+        kmax = jnp.repeat(kmax, n_rep, axis=1)
+        qf = q[:, :, 0, :].astype(jnp.float32) * (dh ** -0.5)
+        ub = (jnp.einsum("bhd,bhkd->bhk", jnp.maximum(qf, 0.0),
+                         kmax.astype(jnp.float32))
+              + jnp.einsum("bhd,bhkd->bhk", jnp.minimum(qf, 0.0),
+                           kmin.astype(jnp.float32)))     # [B, H, nkvb]
+        bvalid = has[:, :, :, 0]            # [B, 1, nkvb] (broadcasts to H)
+        ub = jnp.where(bvalid, ub, -jnp.inf)
+        m = jnp.exp(ub - jnp.max(ub, axis=-1, keepdims=True))
+        ntok_f = ntok[:, None].astype(jnp.float32)        # [B, 1, nkvb]
+        w = jnp.where(bvalid, m, 0.0) * ntok_f            # [B, H, nkvb]
+        # -- the plan's selection, as a block mask -------------------------
+        sel = (ids_l[..., None] == jnp.arange(nkvb)[None, None, None]
+               ).any(axis=2)                              # [B, Hkv, nkvb]
+        sel = jnp.repeat(sel, n_rep, axis=1) & bvalid     # [B, H, nkvb]
+        tot = jnp.maximum(w.sum(-1), 1e-30)
+        rec_l = jnp.where(sel, w, 0.0).sum(-1) / tot      # [B, H]
+        sel_tok = jnp.where(sel, ntok_f, 0.0).sum(-1)
+        frac_l = sel_tok / jnp.maximum(clen[:, None], 1)  # [B, H]
+        # -- propagate hidden state (dense estimator forward) --------------
+        o = _decode_attend(q, kc, vc, valid[:, None], cfg)
+        o = common.merge_heads(o)
+        x = x + jnp.einsum("bsf,fd->bsd", o, lp["attn"]["wo"])
+        h2 = common.rmsnorm(x, lp["ln2"])
+        x = x + _ffn(h2, lp, cfg)
+        return x, rec_l.astype(jnp.float32), frac_l.astype(jnp.float32)
+
+    recs, fracs = [], []
+    ids = jnp.asarray(block_ids, jnp.int32)
+    for l in range(cfg.num_layers):
+        lp = (jax.tree.map(lambda t: t[l], layers) if stacked
+              else layers[l])
+        x, rec_l, frac_l = layer_fn(x, lp, cache[l], l, ids[l])
+        recs.append(rec_l)
+        fracs.append(frac_l)
+    return jnp.stack(recs), jnp.stack(fracs)

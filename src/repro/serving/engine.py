@@ -16,6 +16,17 @@ Attention modes:
     "dense"  — full attention (the FlashAttention baseline of the paper);
     "sparse" — S-HPLB: adaptive budgets + balanced work-lists.
 
+The plan is EPOCH-VERSIONED (DESIGN.md §2.9), not an init-time constant:
+an :class:`~repro.core.sparsity.OnlineSparsityEstimator` accumulates
+Quest-bound estimates of each head's *realized* recovery on the decode hot
+path (``telemetry_every``), drift against the offline profile triggers —
+or ``replan_every`` forces — an in-flight replan at a scheduler safe
+point: budgets re-derive incrementally (warm-started max-min), the new
+placement is applied as a composable permutation delta to the params
+host-side plus ONE kv-head gather over the resident cache, and every
+memoized planning artifact is keyed by ``(epoch, ...)`` so the old epoch
+ages out of the bounded caches lazily while requests keep flowing.
+
 On a single host this runs real tokens end-to-end (examples/, tests/); under
 a production mesh the same engine code paths lower with shard_map islands
 (see ``launch.steps`` for the dry-run wiring).
@@ -31,8 +42,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.attention.policies import policy_by_name
-from repro.core.planner import HPLBPlan, make_plan, permute_attention_params
-from repro.core.sparsity import HeadSparsityProfile
+from repro.core.planner import (
+    HPLBPlan,
+    make_plan,
+    permute_attention_params,
+    plan_delta,
+    plans_equal,
+)
+from repro.core.sparsity import HeadSparsityProfile, OnlineSparsityEstimator
 from repro.core.worklist import (
     DEC_FIELDS,
     WorkList,
@@ -93,6 +110,22 @@ class EngineConfig:
     # width (the step-invariant baseline; grid scales with max_h b_h).
     # Both produce bitwise-identical greedy tokens.
     decode_worklist: str = "packed"  # "packed" | "padded"
+    # -- plan epochs (DESIGN.md §2.9) ------------------------------------
+    # online telemetry cadence: every N decode ticks one un-donated probe
+    # estimates each head's realized recovery (Quest block bounds) and
+    # folds it into the OnlineSparsityEstimator.  0 disables telemetry.
+    telemetry_every: int = 0
+    # replan policy: force a replan every N decode ticks, and/or replan
+    # when the online profile's drift vs the offline one reaches the
+    # threshold (drift needs telemetry_every > 0).  Both None = frozen
+    # plan (the pre-epoch behavior).  Swaps only happen at scheduler safe
+    # points (no prefill chunks straddling the epoch boundary).
+    replan_every: int | None = None
+    drift_threshold: float | None = None
+    # LRU caps on the compiled-step memos: epoch swaps retire old-epoch
+    # programs lazily (eviction), never eagerly (in-flight dispatch).
+    prefill_jit_cap: int = 16
+    chunk_jit_cap: int = 16
 
 
 class Engine:
@@ -103,6 +136,14 @@ class Engine:
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.plan: HPLBPlan | None = None
+        self.profile = profile          # offline profile
+        # the profile the LIVE plan was derived from — the drift
+        # reference (== the offline profile until the first replan; after
+        # a swap, drift is measured against the new plan's basis so a
+        # one-time shift cannot re-trigger forever)
+        self._plan_profile = profile
+        self.epoch = 0                  # live plan-epoch (DESIGN.md §2.9)
+        self.telemetry: OnlineSparsityEstimator | None = None
         if engine_cfg.attention == "sparse":
             assert profile is not None, "sparse mode needs a sparsity profile"
             self.plan = make_plan(
@@ -115,10 +156,16 @@ class Engine:
                 floor=engine_cfg.floor,
                 allocator=engine_cfg.allocator,
                 partitioner=engine_cfg.partitioner,
+                epoch=0,
             )
             params = self._permute_params(params)
+            self.telemetry = OnlineSparsityEstimator(
+                cfg.num_layers, cfg.num_heads)
         self.params = params
-        self._worklists_cache: dict[int, list] = {}
+        # every memoized planning artifact below is keyed by (epoch, ...):
+        # an epoch swap re-derives on demand and old-epoch entries either
+        # age out of the LRU memos or are purged (plain dicts)
+        self._worklists_cache: dict[tuple, list] = {}
         if engine_cfg.cache_layout == "paged":
             assert engine_cfg.max_seq_len % engine_cfg.block == 0, \
                 "paged layout needs max_seq_len % block == 0"
@@ -140,17 +187,21 @@ class Engine:
             self.cache = tfm.init_cache(cfg, engine_cfg.num_slots,
                                         engine_cfg.max_seq_len)
         self._batcher = None   # bound by make_batcher (paged table lookups)
-        self._prefill_jit = {}
+        # prefill compiled-step memos: LRU-bounded OrderedDicts (PR-4's
+        # packed-plan discipline) — monolithic prefill BAKES the epoch's
+        # work-lists into the program, so its key carries the epoch and an
+        # epoch swap must not leak stale compiled entries
+        self._prefill_jit: OrderedDict = OrderedDict()
         # chunked prefill: one compile per chunk bucket (pow2 from block up
         # to prefill_chunk_tokens); chunk work-lists enter as DATA padded to
-        # a per-bucket item cap, so chunk offsets never recompile.  Chunks
-        # accumulate into a single-sequence STAGING cache (the scheduler
-        # holds at most one partially-prefilled sequence) merged into the
-        # slot cache once at the final chunk — per-chunk cache traffic is
-        # O(staging), not O(all slots), and decode never sees a
-        # mid-prefill slot.
-        self._prefill_chunk_jit = {}
-        self._chunk_cap: dict[int, int] = {}
+        # a per-bucket item cap, so chunk offsets (and epochs) never
+        # recompile.  Chunks accumulate into a single-sequence STAGING cache
+        # (the scheduler holds at most one partially-prefilled sequence)
+        # merged into the slot cache once at the final chunk — per-chunk
+        # cache traffic is O(staging), not O(all slots), and decode never
+        # sees a mid-prefill slot.
+        self._prefill_chunk_jit: OrderedDict = OrderedDict()
+        self._chunk_cap: dict[tuple, int] = {}
         self._chunk_wl_cache: dict[tuple, np.ndarray] = {}
         if engine_cfg.prefill_mode == "chunked":
             # chunk geometry (offsets, buckets, work-list windows) counts
@@ -177,10 +228,19 @@ class Engine:
         self._rng = jax.random.PRNGKey(0)
         # position-aware decode selection: ids depend only on the slot's
         # current BLOCK count, so they are recomputed exactly at block
-        # boundaries and memoized per block count.  _nb_cap fixes the padded
-        # width so changing selections never change shapes (no recompiles).
-        self._decode_ids_by_nblocks: dict[int, np.ndarray] = {}
-        self._nb_cap: int | None = None
+        # boundaries and memoized per (epoch, block count).  _nb_cap fixes
+        # the padded width PER EPOCH so changing selections never change
+        # shapes within an epoch (no recompiles).
+        self._decode_ids_by_nblocks: dict[tuple, np.ndarray] = {}
+        self._nb_cap: dict[int, int] = {}
+        # plan-epoch machinery (DESIGN.md §2.9)
+        self._telemetry_jit: dict[int, object] = {}
+        self._kv_permute_jit = None
+        self._decode_ticks = 0
+        self._ticks_since_replan = 0
+        self._epoch_stats: dict[int, dict] = {0: self._fresh_epoch_stats()}
+        self._last_drift: dict | None = None
+        self.replans = 0
         # the slot cache is exclusively engine-owned and threaded through
         # every jitted step, so it is always donated: XLA CPU aliases
         # donated buffers since jax 0.4.x (measured ~200x on the in-place
@@ -189,10 +249,26 @@ class Engine:
         self._donate = True
 
     # -- offline artifacts -------------------------------------------------
-    def _permute_params(self, params):
-        """Apply the HPLB head permutation to the attention weights."""
+    def _fresh_epoch_stats(self) -> dict:
+        return {"ticks": 0, "telemetry_samples": 0,
+                "recovery_sum": 0.0, "recovery_ticks": 0, "drift": None}
+
+    def _permute_params(self, params, layer_plans=None,
+                        kv_replicated: bool | None = None):
+        """Apply a head permutation to the attention weights (host-side).
+
+        Default: the engine plan's full original->slot permutation (init
+        path).  ``layer_plans`` overrides with per-layer permutations —
+        epoch swaps pass the :class:`~repro.core.planner.PlanDelta` layers
+        here, re-permuting the ALREADY-permuted weights in place; the
+        jitted step functions never re-trace (same shapes, new buffers).
+        """
         cfg, plan = self.cfg, self.plan
         gsz = cfg.group_size
+        if layer_plans is None:
+            layer_plans = plan.layers
+        if kv_replicated is None:
+            kv_replicated = plan.mode == "kv_replication"
         layers = params["layers"]
         is_stacked = not isinstance(layers, (list, tuple))
 
@@ -202,7 +278,7 @@ class Engine:
                 np.asarray(ap["wq"]), np.asarray(ap["wk"]),
                 np.asarray(ap["wv"]), np.asarray(ap["wo"]),
                 layer_plan, cfg.head_dim_, gsz,
-                kv_replicated=(plan.mode == "kv_replication"))
+                kv_replicated=kv_replicated)
             new_ap = dict(ap, wq=jnp.asarray(wq), wk=jnp.asarray(wk),
                           wv=jnp.asarray(wv), wo=jnp.asarray(wo))
             return dict(lp, attn=new_ap)
@@ -212,11 +288,11 @@ class Engine:
             new = []
             for l in range(cfg.num_layers):
                 lp = jax.tree.map(lambda x: np.asarray(x[l]), stacked)
-                new.append(permute_layer(lp, plan.layers[l]))
+                new.append(permute_layer(lp, layer_plans[l]))
             layers_out = jax.tree.map(
                 lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *new)
         else:
-            layers_out = [permute_layer(lp, plan.layers[l])
+            layers_out = [permute_layer(lp, layer_plans[l])
                           for l, lp in enumerate(layers)]
         return dict(params, layers=layers_out)
 
@@ -227,15 +303,17 @@ class Engine:
         slot-local per device in the [D, L, 7] layout; for the 1-shard test
         engine D=1 so items address heads directly).
 
-        Keyed by the PREFILL BUCKET, not the raw length: every caller pads
-        its prompt to the bucket anyway, and raw-length keys would grow
-        this cache unboundedly under varied traffic (pow2 buckets bound it
-        at O(log max_seq_len) entries; "exact" bucketing keeps the old
-        one-entry-per-length behavior by definition).
+        Keyed by ``(epoch, PREFILL BUCKET)``, not the raw length: every
+        caller pads its prompt to the bucket anyway, and raw-length keys
+        would grow this cache unboundedly under varied traffic (pow2
+        buckets bound it at O(log max_seq_len) entries per epoch; "exact"
+        bucketing keeps the old one-entry-per-length behavior by
+        definition).  Epoch swaps purge dead-epoch entries.
         """
         bucket = self._prefill_bucket(seq_len)
-        if bucket in self._worklists_cache:
-            return self._worklists_cache[bucket]
+        key = (self.epoch, bucket)
+        if key in self._worklists_cache:
+            return self._worklists_cache[key]
         assert self.plan is not None
         pol = policy_by_name(self.ecfg.policy)
         out = []
@@ -250,7 +328,7 @@ class Engine:
                 group_size=self.cfg.group_size,
             )
             out.append(wl)
-        self._worklists_cache[bucket] = out
+        self._worklists_cache[key] = out
         return out
 
     def decode_block_ids(self, cache_len: int,
@@ -292,22 +370,32 @@ class Engine:
                 ids[l, h, :len(sel)] = sel
         return ids
 
+    def _nb_cap_for_epoch(self) -> int:
+        """Padded decode-selection width of the CURRENT epoch (a function
+        of the epoch's budgets — recomputed once per epoch)."""
+        cap = self._nb_cap.get(self.epoch)
+        if cap is None:
+            cap = self.decode_block_ids(self.ecfg.max_seq_len).shape[-1]
+            self._nb_cap[self.epoch] = cap
+        return cap
+
     def _decode_ids_for_nblocks(self, nblocks: int) -> np.ndarray:
         """Memoized position-aware selection for a slot holding ``nblocks``
         cache blocks — recomputed only when a slot crosses a block
-        boundary, padded to the engine-wide ``_nb_cap`` width."""
-        if self._nb_cap is None:
-            self._nb_cap = self.decode_block_ids(
-                self.ecfg.max_seq_len).shape[-1]
+        boundary (or the plan epoch changes), padded to the epoch's
+        ``_nb_cap`` width."""
+        cap_w = self._nb_cap_for_epoch()
         nblocks = max(1, min(nblocks,
                              self.ecfg.max_seq_len // self.ecfg.block))
-        got = self._decode_ids_by_nblocks.get(nblocks)
+        key = (self.epoch, nblocks)
+        got = self._decode_ids_by_nblocks.get(key)
         if got is None:
             got = self.decode_block_ids(nblocks * self.ecfg.block,
-                                        nb_pad=self._nb_cap)
-            self._decode_ids_by_nblocks[nblocks] = got
+                                        nb_pad=cap_w)
+            self._decode_ids_by_nblocks[key] = got
             # the clamp above is the bound: one entry per possible resident
-            # block count, never more (host memory stays O(max_seq/block))
+            # block count per LIVE epoch (dead epochs are purged at swap),
+            # so host memory stays O(max_seq/block)
             assert len(self._decode_ids_by_nblocks) <= (
                 self.ecfg.max_seq_len // self.ecfg.block), \
                 "memoized decode-id table exceeded max_seq_len // block"
@@ -325,13 +413,12 @@ class Engine:
 
     def _packed_item_cap(self) -> int:
         """Worst-case packed item count of one layer: every slot at the
-        max-budget selection width, rounded up to the packer's pad
+        epoch's max-budget selection width, rounded up to the packer's pad
         multiple (pack_decode_items rounds shard lengths to 8, so an
         unrounded cap could fall below a near-full tick's padded length
         and make the bucket unable to hold it)."""
-        if self._nb_cap is None:
-            self._decode_ids_for_nblocks(1)  # establishes _nb_cap
-        cap = self.ecfg.num_slots * self.cfg.num_kv_heads * self._nb_cap
+        cap = (self.ecfg.num_slots * self.cfg.num_kv_heads
+               * self._nb_cap_for_epoch())
         return -(-cap // 8) * 8
 
     def _build_packed_plan(self, nb_sig: tuple[int, ...]):
@@ -357,6 +444,7 @@ class Engine:
         # selection width, every layer — one grid step per table entry
         padded_grid = int(bids.size)
         stats = {
+            "epoch": self.epoch,
             "bucket": bucket,
             "real_items": real,
             "grid_items": grid,
@@ -369,17 +457,20 @@ class Engine:
         return items, stats
 
     def _plan_for(self, nb_sig: tuple[int, ...], prefetch: bool = False):
-        """LRU-memoized packed plan for a tick signature."""
-        got = self._packed_plan_cache.get(nb_sig)
+        """LRU-memoized packed plan for an ``(epoch, tick signature)`` —
+        the epoch key means a replan can never serve a stale epoch's
+        selections, while old-epoch plans age out of the LRU lazily."""
+        key = (self.epoch, nb_sig)
+        got = self._packed_plan_cache.get(key)
         if got is None:
             got = self._build_packed_plan(nb_sig)
-            self._packed_plan_cache[nb_sig] = got
+            self._packed_plan_cache[key] = got
             if len(self._packed_plan_cache) > self._packed_plan_cap:
                 self._packed_plan_cache.popitem(last=False)
             self.decode_stats["plan_prefetches" if prefetch
                               else "plan_misses"] += 1
         else:
-            self._packed_plan_cache.move_to_end(nb_sig)
+            self._packed_plan_cache.move_to_end(key)
             if not prefetch:
                 self.decode_stats["plan_hits"] += 1
         return got
@@ -399,7 +490,7 @@ class Engine:
         pos_all = np.zeros((self.ecfg.num_slots,), np.int32)
         pos_all[list(slots)] = positions
         sig = self._nb_sig(pos_all)
-        if sig not in self._packed_plan_cache:
+        if (self.epoch, sig) not in self._packed_plan_cache:
             self._plan_for(sig, prefetch=True)
 
     def _record_tick(self, stats: dict) -> None:
@@ -410,17 +501,30 @@ class Engine:
         s["padded_grid_items"] += stats["padded_grid_items"]
         s["imbalance_sum"] += stats["imbalance"]
         s["last"] = stats
+        self._epoch_stats[self.epoch]["ticks"] += 1
 
     @property
     def decode_bubble_stats(self) -> dict:
         """Aggregate decode-grid bubble telemetry: the fraction of executed
         grid steps that were padding, the same quantity the PADDED baseline
-        would have paid, and their ratio (the packed win) — recorded by
-        ``benchmarks/serving.py`` so the load-balance gain is observable
-        per run, not inferred."""
+        would have paid, and their ratio (the packed win) — plus the
+        plan-epoch aggregates (per-epoch realized recovery from the online
+        estimator and the latest drift reading) — recorded by
+        ``benchmarks/serving.py`` so the load-balance AND adaptivity gains
+        are observable per run, not inferred."""
         s = self.decode_stats
         grid, real, padded = (s["grid_items"], s["real_items"],
                               s["padded_grid_items"])
+        epochs = {}
+        for e, es in self._epoch_stats.items():
+            epochs[e] = {
+                "ticks": es["ticks"],
+                "telemetry_samples": es["telemetry_samples"],
+                "realized_recovery": (es["recovery_sum"]
+                                      / es["recovery_ticks"]
+                                      if es["recovery_ticks"] else None),
+                "drift": es["drift"],
+            }
         return {
             "ticks": s["ticks"],
             "padding_waste": 1.0 - real / grid if grid else 0.0,
@@ -432,7 +536,179 @@ class Engine:
             "plan_misses": s["plan_misses"],
             "plan_prefetches": s["plan_prefetches"],
             "last_tick": s["last"],
+            "epoch": self.epoch,
+            "replans": self.replans,
+            "realized_recovery": (self.telemetry.realized_recovery()
+                                  if self.telemetry is not None
+                                  and self.telemetry.total_samples else None),
+            "drift": self._last_drift[1] if self._last_drift else None,
+            "epochs": epochs,
         }
+
+    # -- plan epochs: telemetry, drift, replanning (DESIGN.md §2.9) ---------
+    def _telemetry_fn(self, nb_width: int):
+        """Un-donated jitted recovery probe, keyed by the selection-table
+        width (epoch-dependent shape; the tables themselves are data)."""
+        fn = self._telemetry_jit.get(nb_width)
+        if fn is None:
+            if self.paged:
+                def run(params, pool, token, pos, table, bids, clen):
+                    return tfm.decode_telemetry(
+                        params, pool, token, pos, self.cfg,
+                        block_ids=bids, cache_len=clen, table=table)
+            else:
+                def run(params, cache, token, pos, bids, clen):
+                    return tfm.decode_telemetry(
+                        params, cache, token, pos, self.cfg,
+                        block_ids=bids, cache_len=clen)
+            fn = jax.jit(run)  # reads the live cache: never donated
+            self._telemetry_jit[nb_width] = fn
+        return fn
+
+    def _dispatch_telemetry(self, slots, tok_all, pos_all, bids,
+                            table=None):
+        """Dispatch the recovery probe against the PRE-STEP resident cache
+        (before the donating decode step — stream order keeps the read
+        safe) and return the pending (rec, frac, rows); the caller folds
+        them in AFTER dispatching the decode step, so probe + step overlap
+        host planning exactly like the packed-plan prefetch."""
+        fn = self._telemetry_fn(bids.shape[-1])
+        args = (self.params, self.cache, jnp.asarray(tok_all),
+                jnp.asarray(pos_all))
+        if self.paged:
+            args += (jnp.asarray(table),)
+        rec, frac = fn(*args, jnp.asarray(bids), jnp.asarray(pos_all))
+        return rec, frac, list(slots)
+
+    def _fold_telemetry(self, pending) -> None:
+        rec, frac, rows = pending
+        rec = np.asarray(rec, np.float64)[:, rows, :]    # [L, B_act, H]
+        frac = np.asarray(frac, np.float64)[:, rows, :]
+        # the probe runs on HPLB-permuted params, so head h above is SLOT
+        # h (physical head perm[h]); the estimator, the drift reference
+        # profiles, and the replanner all live in ORIGINAL head order —
+        # scatter each layer back through the plan's perm so head
+        # identities survive any epoch's placement (and EMAs stay pinned
+        # to physical heads across swaps)
+        rec_o = np.empty_like(rec)
+        frac_o = np.empty_like(frac)
+        for l, lp in enumerate(self.plan.layers):
+            rec_o[l][:, lp.perm] = rec[l]
+            frac_o[l][:, lp.perm] = frac[l]
+        self.telemetry.update(rec_o, frac_o)
+        es = self._epoch_stats[self.epoch]
+        es["telemetry_samples"] += len(rows)
+        es["recovery_sum"] += float(rec.mean())
+        es["recovery_ticks"] += 1
+
+    def _maybe_replan(self, batcher=None) -> bool:
+        """Replan policy hook, called once per scheduler tick by
+        :meth:`serve` (external tick loops may call it themselves).
+        Swaps only at a safe point; returns True when an epoch swap
+        happened."""
+        ecfg = self.ecfg
+        if self.plan is None or (ecfg.replan_every is None
+                                 and ecfg.drift_threshold is None):
+            return False
+        batcher = batcher or self._batcher
+        if batcher is not None and not batcher.replan_safe:
+            return False
+        due = (ecfg.replan_every is not None
+               and self._ticks_since_replan >= ecfg.replan_every)
+        if (not due and ecfg.drift_threshold is not None
+                and self.telemetry.total_samples):
+            # drift only moves when new samples were folded: memoize by
+            # the sample count so non-probe ticks pay a dict lookup, not
+            # a full curve refit
+            n = (self.telemetry.total_samples, self.epoch)
+            if self._last_drift is None or self._last_drift[0] != n:
+                self._last_drift = (
+                    n, self.telemetry.drift_vs(self._plan_profile))
+            drift = self._last_drift[1]
+            self._epoch_stats[self.epoch]["drift"] = drift["drift"]
+            due = drift["drift"] >= ecfg.drift_threshold
+        if not due:
+            return False
+        return self.replan_now()
+
+    def replan_now(self, profile: HeadSparsityProfile | None = None, *,
+                   plan: HPLBPlan | None = None) -> bool:
+        """Re-derive budgets + head placement and swap the engine onto the
+        new plan epoch IN FLIGHT (DESIGN.md §2.9).
+
+        ``profile``: plan on this profile; default = the online
+        estimator's live curves, falling back to the offline profile for
+        unobserved heads.  The allocator warm-starts from the previous
+        epoch's budgets (incremental max-min).  ``plan`` bypasses planning
+        entirely and swaps onto an externally computed plan (a central
+        planner service, or a test forcing a specific placement) — its
+        geometry must match the engine's.  A no-op plan (same placement
+        and budgets) bumps nothing and returns False.
+        """
+        assert self.plan is not None, "replan needs a sparse engine"
+        self._ticks_since_replan = 0
+        if plan is not None:
+            new_plan = dataclasses.replace(plan, epoch=self.epoch + 1)
+        else:
+            if profile is None:
+                profile = self.telemetry.to_profile(fallback=self.profile)
+            ecfg = self.ecfg
+            new_plan = make_plan(
+                profile,
+                num_devices=ecfg.num_model_shards,
+                num_kv_heads=self.cfg.num_kv_heads,
+                seq_len=ecfg.max_seq_len,
+                total_budget_per_head=ecfg.budget_per_head,
+                block=ecfg.block, floor=ecfg.floor,
+                allocator=ecfg.allocator, partitioner=ecfg.partitioner,
+                prev_plan=self.plan, epoch=self.epoch + 1)
+        if plans_equal(self.plan, new_plan):
+            log.info("replan@tick %d: plan unchanged (epoch stays %d)",
+                     self._decode_ticks, self.epoch)
+            return False
+        self._apply_epoch(new_plan)
+        if profile is not None:
+            self._plan_profile = profile
+        return True
+
+    def _apply_epoch(self, new_plan: HPLBPlan) -> None:
+        """Swap to ``new_plan``: re-permute params host-side via the
+        composable delta, gather the resident cache's kv-head axis once
+        on-device, bump the epoch, and purge dead-epoch planning
+        artifacts.  Compiled steps are NOT dropped eagerly — the LRU memos
+        retire them lazily; jits whose plan inputs are data (chunk
+        prefill, decode) are epoch-invariant and keep serving."""
+        delta = plan_delta(self.plan, new_plan)
+        if not delta.identity:
+            self.params = self._permute_params(
+                self.params, layer_plans=delta.layers,
+                kv_replicated=(delta.mode == "kv_replication"))
+            kv_tbl = delta.kv_perm_table()
+            if not np.array_equal(
+                    kv_tbl, np.tile(np.arange(kv_tbl.shape[1], dtype=kv_tbl.dtype),
+                                    (kv_tbl.shape[0], 1))):
+                if self._kv_permute_jit is None:
+                    self._kv_permute_jit = jax.jit(
+                        tfm.permute_cache_kv_heads,
+                        donate_argnums=(0,) if self._donate else ())
+                self._set_cache(self._kv_permute_jit(
+                    self.cache, jnp.asarray(kv_tbl)))
+        old = self.epoch
+        self.plan = new_plan
+        self.epoch = new_plan.epoch
+        self.replans += 1
+        self._epoch_stats[self.epoch] = self._fresh_epoch_stats()
+        # purge the plain (unbounded) epoch-keyed dicts of dead epochs;
+        # LRU-bounded memos (prefill jits, packed plans) evict lazily
+        for d in (self._worklists_cache, self._chunk_cap,
+                  self._chunk_wl_cache, self._decode_ids_by_nblocks):
+            for k in [k for k in d if k[0] != self.epoch]:
+                del d[k]
+        self._nb_cap.pop(old, None)
+        log.info("plan epoch %d -> %d at tick %d (moved=%s, "
+                 "mean imbalance %.3f)", old, self.epoch,
+                 self._decode_ticks, not delta.identity,
+                 new_plan.mean_imbalance)
 
     # -- paged-layout plumbing ----------------------------------------------
     @property
@@ -453,6 +729,23 @@ class Engine:
         return self.kv.table_row(self._batcher.rid_of_slot(slot))
 
     # -- jitted steps --------------------------------------------------------
+    @staticmethod
+    def _lru_get(cache: OrderedDict, key, build, cap: int):
+        """OrderedDict LRU memo (the packed-plan cache's discipline,
+        applied to the compiled-step memos): hit moves to the MRU end,
+        miss builds and evicts the LRU entry past ``cap`` — so epoch swaps
+        retire old-epoch programs bounded-lazily instead of leaking one
+        compiled executable per (epoch, bucket) forever."""
+        got = cache.get(key)
+        if got is None:
+            got = build()
+            cache[key] = got
+            if len(cache) > cap:
+                cache.popitem(last=False)
+        else:
+            cache.move_to_end(key)
+        return got
+
     def _prefill_bucket(self, seq_len: int) -> int:
         """Compile bucket for a prompt length: next power of two (floored
         at one block, capped at max_seq_len), or the exact length."""
@@ -471,9 +764,12 @@ class Engine:
         instead of the old out-of-jit whole-cache copy, so the hot path
         never materializes a second [L, 2, slots, Hkv, Smax, Dh] buffer.
         ``slot`` and ``last_idx`` are traced scalars — one compile serves
-        every slot and every real length within the bucket.
+        every slot and every real length within the bucket.  The epoch's
+        work-lists are BAKED into the program (compile-time constants), so
+        the memo key carries the epoch and the LRU cap retires old-epoch
+        programs.
         """
-        if bucket not in self._prefill_jit:
+        def build():
             if self.ecfg.attention == "sparse":
                 wls = self.worklists_for(bucket)
                 items = [jnp.asarray(w.items.reshape(-1, w.items.shape[-1]))
@@ -491,9 +787,10 @@ class Engine:
                     (0, 0, slot, 0, 0, 0))
                 return logits, cache
 
-            self._prefill_jit[bucket] = jax.jit(
-                run, donate_argnums=(1,) if self._donate else ())
-        return self._prefill_jit[bucket]
+            return jax.jit(run, donate_argnums=(1,) if self._donate else ())
+
+        return self._lru_get(self._prefill_jit, (self.epoch, bucket),
+                             build, self.ecfg.prefill_jit_cap)
 
     def _prefill_paged_fn(self, bucket: int):
         """Paged monolithic prefill for one compile bucket: the sequence
@@ -501,8 +798,10 @@ class Engine:
         paged layout never materializes a max-length row) and lands in the
         pool with one block scatter through the table
         (``tfm.scatter_seq_cache_paged``).  The pool is donated; the table
-        is data, so one compile serves every block placement."""
-        if bucket not in self._prefill_jit:
+        is data, so one compile serves every block placement.  Work-lists
+        are compile-time constants — epoch-keyed + LRU like
+        :meth:`_prefill_fn`."""
+        def build():
             blk = self.ecfg.block
             bucket_pad = -(-bucket // blk) * blk
             if self.ecfg.attention == "sparse":
@@ -519,9 +818,10 @@ class Engine:
                 pool = tfm.scatter_seq_cache_paged(pool, seq_cache, table)
                 return logits, pool
 
-            self._prefill_jit[bucket] = jax.jit(
-                run, donate_argnums=(1,) if self._donate else ())
-        return self._prefill_jit[bucket]
+            return jax.jit(run, donate_argnums=(1,) if self._donate else ())
+
+        return self._lru_get(self._prefill_jit, (self.epoch, bucket),
+                             build, self.ecfg.prefill_jit_cap)
 
     def _chunk_bucket(self, chunk_len: int, q_offset: int) -> int:
         """Compile bucket for one prefill chunk: next power of two (floored
@@ -541,8 +841,9 @@ class Engine:
         """Fixed item-array width for a chunk of ``nqc`` q blocks: the max
         work-list items any nqc-block q-window can hold at max_seq_len
         (selection counts per q block depend only on the block index and
-        the head budget, so this bounds every prompt bucket)."""
-        got = self._chunk_cap.get(nqc)
+        the head budget, so this bounds every prompt bucket — per plan
+        epoch, since budgets move at a replan)."""
+        got = self._chunk_cap.get((self.epoch, nqc))
         if got is not None:
             return got
         wls = self.worklists_for(self._prefill_bucket(self.ecfg.max_seq_len))
@@ -554,7 +855,7 @@ class Engine:
                               mode="valid")
             cap = max(cap, int(win.max()))
         cap = -(-cap // 8) * 8  # friendly multiple
-        self._chunk_cap[nqc] = cap
+        self._chunk_cap[(self.epoch, nqc)] = cap
         return cap
 
     def _chunk_worklists(self, prompt_len: int, q_offset: int,
@@ -570,7 +871,7 @@ class Engine:
         pbucket = self._prefill_bucket(prompt_len)
         nqc = bucket // self.ecfg.block
         ob = q_offset // self.ecfg.block
-        key = (pbucket, ob, nqc)
+        key = (self.epoch, pbucket, ob, nqc)
         got = self._chunk_wl_cache.get(key)
         if got is None:
             cap = self._chunk_item_cap(nqc)
@@ -586,8 +887,10 @@ class Engine:
         The slot cache threads through and is donated (same zero-copy
         contract as monolithic prefill); ``slot`` / ``q_offset`` / ``kv_len``
         / ``last_idx`` are traced scalars and sparse work-lists enter as
-        data, so one compile serves every slot, offset, and selection."""
-        if bucket not in self._prefill_chunk_jit:
+        data, so one compile serves every slot, offset, selection — and
+        every plan EPOCH (no epoch in the key; the memo is LRU-bounded
+        anyway so bucket churn cannot leak compiled entries)."""
+        def build():
             sparse = self.ecfg.attention == "sparse"
             if self.paged:
                 # paged: no staging cache, no slot — the chunk scatters
@@ -621,10 +924,11 @@ class Engine:
                         last_index=last_idx)
 
             donate = (1,) if self._donate else ()
-            self._prefill_chunk_jit[bucket] = (
-                jax.jit(run, donate_argnums=donate) if sparse
-                else jax.jit(run_dense, donate_argnums=donate))
-        return self._prefill_chunk_jit[bucket]
+            return (jax.jit(run, donate_argnums=donate) if sparse
+                    else jax.jit(run_dense, donate_argnums=donate))
+
+        return self._lru_get(self._prefill_chunk_jit, bucket, build,
+                             self.ecfg.chunk_jit_cap)
 
     def _decode_fn(self):
         """Jitted decode step.  Sparse block ids enter as DATA ([L, B, Hkv,
@@ -774,7 +1078,10 @@ class Engine:
         tok_all[list(slots)] = tokens
         pos_all[list(slots)] = positions
         act_all[list(slots)] = True  # padded slots must not write KV
+        self._decode_ticks += 1
+        self._ticks_since_replan += 1
         extra = []
+        table = None
         if self.paged:
             # per-slot block tables (data): -1 rows for unbound slots
             # route their writes into the trash block
@@ -785,6 +1092,21 @@ class Engine:
             extra = [jnp.asarray(table)]
         packed = (self.ecfg.attention == "sparse"
                   and self.ecfg.decode_worklist == "packed")
+        probe = (self.ecfg.attention == "sparse"
+                 and self.ecfg.telemetry_every > 0
+                 and self._decode_ticks % self.ecfg.telemetry_every == 0)
+        pending_probe = None
+        if probe:
+            # online recovery telemetry (DESIGN.md §2.9): probe the
+            # PRE-STEP resident cache with this tick's selections — the
+            # probe is dispatched before the donating decode step, so
+            # stream order guarantees it reads the live buffer
+            blk = self.ecfg.block
+            per_slot = [self._decode_ids_for_nblocks(
+                (int(p) + 1 + blk - 1) // blk) for p in pos_all]
+            pending_probe = self._dispatch_telemetry(
+                slots, tok_all, pos_all, np.stack(per_slot, axis=1),
+                table=table)
         if packed:
             # cost-packed ragged worklist: grid length is this tick's true
             # selected-block count (bucketed), not B x Hkv x max-budget
@@ -826,6 +1148,8 @@ class Engine:
             # NEXT tick's plan now, before sampling forces a sync — host
             # planning overlaps the in-flight device work
             self._prefetch_next_plan()
+        if pending_probe is not None:
+            self._fold_telemetry(pending_probe)
         self._rng, sub = jax.random.split(self._rng)
         toks = sample(logits, sub, sampling)
         return np.asarray(toks)[list(slots)]
@@ -838,6 +1162,7 @@ class Engine:
         counts = (bids >= 0).sum(axis=-1).astype(np.float64)  # [L, B, Hkv]
         mean = counts.mean() if counts.size else 0.0
         return {
+            "epoch": self.epoch,
             "bucket": int(bids.shape[-1]),
             "real_items": real,
             "grid_items": grid,
@@ -893,11 +1218,17 @@ class Engine:
         completed requests carry their generated tokens; over-length
         requests come back with ``rejected=True`` and no tokens, so zipping
         results with inputs never misaligns.
+
+        When a replan policy is configured (``replan_every`` /
+        ``drift_threshold``) the loop checks it once per tick, at the
+        tick boundary — the scheduler's safe point gating lives inside
+        :meth:`_maybe_replan`.
         """
         batcher = self.make_batcher()
         for i, pr in enumerate(prompts):
             batcher.submit(Request(rid=i, prompt=np.asarray(pr, np.int32),
                                    sampling=sampling))
-        done = batcher.run(*self.step_fns(sampling))
+        done = batcher.run(*self.step_fns(sampling),
+                           on_tick=lambda: self._maybe_replan(batcher))
         log.info("served %d requests: %s", len(done), batcher.stats)
         return sorted(done, key=lambda r: r.rid)

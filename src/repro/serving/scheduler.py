@@ -150,6 +150,16 @@ class ContinuousBatcher:
     def num_free_slots(self) -> int:
         return len(self._slots_free)
 
+    @property
+    def replan_safe(self) -> bool:
+        """True at a plan-epoch swap safe point (DESIGN.md §2.9): no
+        prefill chunk sequence is mid-flight, so no prompt's chunks would
+        straddle two epochs (chunk work-lists are sliced from ONE epoch's
+        budgets; decode selections are re-derived per tick, so resident
+        decodes swap cleanly).  Between ticks this is the only condition —
+        the engine owns the device-side part of the swap."""
+        return self.prefilling is None
+
     def preview_next_decode(self):
         """Best-effort ``(slots, positions)`` of the NEXT tick's decode
         batch, exposed so the engine can overlap next-tick worklist
@@ -303,12 +313,17 @@ class ContinuousBatcher:
                 finished.append(req)
         return finished
 
-    def run(self, prefill_chunk_fn, decode_fn, max_ticks: int = 100_000):
+    def run(self, prefill_chunk_fn, decode_fn, max_ticks: int = 100_000,
+            on_tick: Callable[[], None] | None = None):
         """Drain all requests; returns finished requests (completed and
-        rejected) in finish order."""
+        rejected) in finish order.  ``on_tick`` runs after every tick —
+        the engine hooks its replan policy here (the tick boundary is the
+        plan-epoch swap point, DESIGN.md §2.9)."""
         done = []
         ticks = 0
         while self.busy and ticks < max_ticks:
             done.extend(self.tick(prefill_chunk_fn, decode_fn))
+            if on_tick is not None:
+                on_tick()
             ticks += 1
         return done

@@ -153,6 +153,45 @@ def hplb_decode_attention_packed(mesh, *, block_kv=128):
     return attend
 
 
+def hplb_repermute_kv_cache(mesh, *, axis="model"):
+    """Plan-epoch swap island (DESIGN.md §2.9): re-permute the kv-head
+    axis of a HEAD-SHARDED resident cache across model shards.
+
+    ``cache``: any 6-d layout with kv heads on axis 3 and that axis
+    sharded over ``axis`` — the contiguous slot cache
+    ``[L, 2, B, Hkv, Smax, Dh]`` or the paged pool
+    ``[L, 2, N, Hkv, block, Dh]``.  ``kv_perm [L, Hkv]`` is the GLOBAL
+    delta shuffle (new kv slot -> previous kv slot) from
+    :meth:`repro.core.planner.PlanDelta.kv_perm_table`; a replan may move
+    a kv head BETWEEN shards, so the island all-gathers the kv-head axis
+    and each shard takes its new heads (one collective per swap — epoch
+    swaps are rare; a production mesh would ppermute only the moved
+    heads).  Single-shard callers should use
+    ``models.transformer.permute_cache_kv_heads`` directly (no
+    collective).
+    """
+    def repermute(cache, kv_perm):
+        def island(c_l, perm_l):
+            # c_l [L, 2, *, Hkv_loc, *, Dh]; perm_l [L, Hkv] replicated
+            full = jax.lax.all_gather(c_l, axis, axis=3, tiled=True)
+            d = jax.lax.axis_index(axis)
+            hl = c_l.shape[3]
+            mine = jax.lax.dynamic_slice_in_dim(
+                jnp.asarray(perm_l, jnp.int32), d * hl, hl, axis=1)
+            idx = mine[:, None, None, :, None, None]
+            return jnp.take_along_axis(full, idx, axis=3)
+
+        return shard_map(
+            island, mesh=mesh,
+            in_specs=(P(None, None, None, axis, None, None),
+                      P(None, None)),
+            out_specs=P(None, None, None, axis, None, None),
+            check_vma=False,
+        )(cache, jnp.asarray(kv_perm, jnp.int32))
+
+    return repermute
+
+
 def flash_decode_attention_paged(mesh, *, block_kv=128, seq_axes=("model",),
                                  batch_axes=None):
     """Paged twin of :func:`flash_decode_attention`: the device cache is a

@@ -105,6 +105,28 @@ class TestPolicies:
         scores = quest_block_scores(q, jnp.asarray(k), 128)
         assert int(jnp.argmax(scores[0, -1, :4])) == 2
 
+    def test_quest_scores_partial_trailing_block(self):
+        """Regression: a non-block-multiple Skv used to zero-pad the
+        trailing partial block INTO the min/max summaries, corrupting its
+        upper bound.  Scores of every block must equal the ones computed
+        from the unpadded keys alone."""
+        H, D, block = 2, 64, 128
+        skv = 300                      # 2 full blocks + 44-key partial
+        rng = np.random.default_rng(1)
+        # keys strictly positive: zero-padding would drag kmin to 0 and,
+        # for negative q components, inflate the padded block's bound
+        k = rng.uniform(0.5, 1.5, size=(1, skv, D)).astype(np.float32)
+        q = rng.standard_normal((H, block, D)).astype(np.float32)
+        scores = np.asarray(quest_block_scores(jnp.asarray(q),
+                                               jnp.asarray(k), block))
+        # reference: per-block bound from the REAL keys only
+        for b in range(3):
+            kb = k[0, b * block:min((b + 1) * block, skv)]
+            kmin, kmax = kb.min(0), kb.max(0)
+            ref = (np.maximum(q, 0.0) @ kmax
+                   + np.minimum(q, 0.0) @ kmin).max(-1)   # [H]
+            np.testing.assert_allclose(scores[:, 0, b], ref, rtol=1e-5)
+
     def test_antidiagonal_scores_shape(self):
         q, k, _ = _bqkv(1, 4, 2, 512, 64)
         s = antidiagonal_block_scores(q[0], k[0], 128)

@@ -51,6 +51,41 @@ class TestMaxMin:
         a = maxmin_allocation(_prof(), layer=0, total=16 * 1000, seq_len=SEQ)
         assert (a.budgets % BLOCK == 0).all()
 
+    def test_warm_start_fixed_point(self):
+        """Incremental replanning (DESIGN.md §2.9): warm-starting from the
+        converged allocation on the SAME profile is a fixed point — zero
+        (or near-zero) transfers, identical budgets."""
+        total = 16 * 1024
+        a = maxmin_allocation(_prof(), layer=0, total=total, seq_len=SEQ)
+        b = maxmin_allocation(_prof(), layer=0, total=total, seq_len=SEQ,
+                              init_budgets=a.budgets)
+        np.testing.assert_array_equal(a.budgets, b.budgets)
+        assert b.iterations <= 2
+
+    def test_warm_start_converges_faster_under_mild_drift(self):
+        """A mildly jittered profile re-solves from the previous budgets
+        in (far) fewer transfers than from the uniform split, and reaches
+        at least the same min recovery."""
+        total = 16 * 1024
+        prof0 = synthetic_head_curves(1, 16, seed=0)
+        prof1 = synthetic_head_curves(1, 16, seed=1)  # jittered identities
+        a = maxmin_allocation(prof0, layer=0, total=total, seq_len=SEQ)
+        cold = maxmin_allocation(prof1, layer=0, total=total, seq_len=SEQ)
+        warm = maxmin_allocation(prof1, layer=0, total=total, seq_len=SEQ,
+                                 init_budgets=a.budgets)
+        assert warm.iterations <= cold.iterations
+        assert warm.min_recovery >= cold.min_recovery - 0.05
+        assert abs(warm.total - total) < BLOCK * 2
+
+    def test_warm_start_recenters_changed_total(self):
+        """The warm start is re-centered first, so a replan can also grow
+        or shrink the global budget."""
+        a = maxmin_allocation(_prof(), layer=0, total=16 * 1024,
+                              seq_len=SEQ)
+        grown = maxmin_allocation(_prof(), layer=0, total=16 * 2048,
+                                  seq_len=SEQ, init_budgets=a.budgets)
+        assert abs(grown.total - 16 * 2048) < BLOCK * 2
+
     @settings(max_examples=20, deadline=None)
     @given(seed=st.integers(0, 100), heads=st.sampled_from([4, 8, 9, 16]),
            k=st.sampled_from([256, 512, 2048]))

@@ -99,3 +99,93 @@ class TestWeightPermutation:
         perm = attn_out(*map(jnp.asarray, (wq2, wk2, wv2, wo2)))
         np.testing.assert_allclose(np.asarray(base), np.asarray(perm),
                                    atol=1e-4)
+
+
+class TestPlanDelta:
+    """Composable plan-epoch deltas (DESIGN.md §2.9)."""
+
+    def _two_plans(self, seed=5, **kw):
+        old = _plan(**kw)
+        prof = synthetic_head_curves(old.num_layers, old.num_heads)
+        rng = np.random.default_rng(seed)
+        for l in range(prof.num_layers):
+            prof.curves[l] = prof.curves[l][
+                rng.permutation(prof.num_heads)]
+        new = make_plan(prof, num_devices=old.num_devices,
+                        num_kv_heads=old.num_kv_heads,
+                        seq_len=old.seq_len, total_budget_per_head=1024,
+                        prev_plan=old, epoch=old.epoch + 1)
+        return old, new
+
+    def test_composition_law(self):
+        from repro.core.planner import plan_delta
+        old, new = self._two_plans()
+        delta = plan_delta(old, new)
+        assert delta.to_epoch == old.epoch + 1
+        for lo, ln, ld in zip(old.layers, new.layers, delta.layers):
+            np.testing.assert_array_equal(lo.perm[ld.perm], ln.perm)
+            np.testing.assert_array_equal(lo.kv_perm[ld.kv_perm],
+                                          ln.kv_perm)
+            np.testing.assert_array_equal(ld.budgets, ln.budgets)
+
+    def test_delta_repermute_equals_direct(self):
+        """Applying the delta to ALREADY-permuted weights lands exactly
+        where permuting the original weights by the new plan would."""
+        from repro.core.planner import plan_delta
+        H, Hkv, Dh, d = 16, 4, 8, 32
+        old, new = self._two_plans(H=H, Hkv=Hkv)
+        delta = plan_delta(old, new)
+        rng = np.random.default_rng(0)
+        wq = rng.standard_normal((d, H * Dh))
+        wk = rng.standard_normal((d, Hkv * Dh))
+        wv = rng.standard_normal((d, Hkv * Dh))
+        wo = rng.standard_normal((H * Dh, d))
+        gsz = H // Hkv
+        w_old = permute_attention_params(wq, wk, wv, wo, old.layers[0],
+                                         Dh, gsz)
+        via_delta = permute_attention_params(*w_old, delta.layers[0],
+                                             Dh, gsz)
+        direct = permute_attention_params(wq, wk, wv, wo, new.layers[0],
+                                          Dh, gsz)
+        for a, b in zip(via_delta, direct):
+            np.testing.assert_array_equal(a, b)
+
+    def test_identity_delta_detected(self):
+        from repro.core.planner import plan_delta
+        old = _plan()
+        import dataclasses
+        new = dataclasses.replace(old, epoch=old.epoch + 1)
+        delta = plan_delta(old, new)
+        assert delta.identity
+        for ld in delta.layers:
+            np.testing.assert_array_equal(ld.perm,
+                                          np.arange(len(ld.perm)))
+
+    def test_plans_equal_ignores_epoch(self):
+        from repro.core.planner import plans_equal
+        import dataclasses
+        old = _plan()
+        assert plans_equal(old, dataclasses.replace(old, epoch=7))
+        _, new = self._two_plans()
+        assert not plans_equal(old, new)
+
+    def test_kv_perm_table_shape(self):
+        from repro.core.planner import plan_delta
+        old, new = self._two_plans()
+        tbl = plan_delta(old, new).kv_perm_table()
+        assert tbl.shape == (old.num_layers, old.num_kv_heads)
+        for row in tbl:
+            np.testing.assert_array_equal(np.sort(row),
+                                          np.arange(old.num_kv_heads))
+
+    def test_warm_start_matches_geometry_and_converges(self):
+        """Incremental replanning: warm-started maxmin on an UNCHANGED
+        profile reproduces the same budgets in (near) zero transfers."""
+        prof = synthetic_head_curves(2, 16)
+        a = make_plan(prof, num_devices=4, num_kv_heads=4, seq_len=8192,
+                      total_budget_per_head=1024)
+        b = make_plan(prof, num_devices=4, num_kv_heads=4, seq_len=8192,
+                      total_budget_per_head=1024, prev_plan=a, epoch=1)
+        from repro.core.planner import plans_equal
+        assert plans_equal(a, b)
+        assert b.epoch == 1

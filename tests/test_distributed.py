@@ -260,3 +260,30 @@ assert err < 2e-2, err
 print("MOE_OK", err)
 """)
     assert "MOE_OK" in out
+
+
+def test_hplb_repermute_kv_cache_island():
+    """Plan-epoch swap on a HEAD-SHARDED cache: the all-gather + local
+    take island must equal the single-host kv-head gather for a delta
+    that MOVES kv heads across model shards."""
+    out = _run("""
+import warnings; warnings.filterwarnings("ignore")
+import numpy as np, jax, jax.numpy as jnp
+from repro.sharding.compat import set_mesh
+from repro.serving.sharded_attention import hplb_repermute_kv_cache
+from repro.models.transformer import permute_cache_kv_heads
+mesh = jax.make_mesh((8,), ("model",))
+L, B, Hkv, S, D = 2, 2, 8, 64, 16
+cache = jax.random.normal(jax.random.PRNGKey(0), (L, 2, B, Hkv, S, D))
+rng = np.random.default_rng(3)
+# per-layer shuffles that move heads BETWEEN shards (1 head per shard)
+kv_perm = np.stack([rng.permutation(Hkv) for _ in range(L)])
+rep = hplb_repermute_kv_cache(mesh)
+with set_mesh(mesh):
+    got = jax.jit(lambda c, p: rep(c, p))(cache, jnp.asarray(kv_perm))
+want = permute_cache_kv_heads(cache, kv_perm)
+err = float(jnp.abs(got - want).max())
+assert err == 0.0, err
+print("REPERM_OK")
+""")
+    assert "REPERM_OK" in out

@@ -170,10 +170,10 @@ class TestEngineHotPath:
                      profile=profile)
         eng.serve([np.arange(250) % 256], SamplingParams(max_tokens=12))
         # crossed the 256-token boundary mid-generation: ids for both block
-        # counts were materialized, at the capped width
-        assert {2, 3} <= set(eng._decode_ids_by_nblocks)
+        # counts were materialized (under epoch 0), at the capped width
+        assert {(0, 2), (0, 3)} <= set(eng._decode_ids_by_nblocks)
         widths = {a.shape[-1] for a in eng._decode_ids_by_nblocks.values()}
-        assert widths == {eng._nb_cap}
+        assert widths == {eng._nb_cap[0]}
 
     def test_decode_newest_block_at_floor_budget(self, params, profile):
         """Regression: at the minimum budget (floor == block -> exactly one
@@ -306,7 +306,7 @@ class TestPackedDecodePath:
         eng = self._engine(params, profile)
         for n in (10, 23, 40, 100, 129, 129, 200, 255):
             eng.worklists_for(n)
-        assert set(eng._worklists_cache) <= {128, 256, 512}
+        assert set(eng._worklists_cache) <= {(0, 128), (0, 256), (0, 512)}
 
     def test_decode_ids_memo_is_bounded(self, params, profile):
         eng = self._engine(params, profile)
