@@ -1,0 +1,287 @@
+"""Overload benchmark: graceful degradation under bursty open-loop
+arrivals (DESIGN.md §2.10).
+
+Unlike the closed-loop serving benchmark (a fixed batch drained to
+completion), this drives an OPEN-LOOP Poisson arrival process at a
+multiple of the engine's calibrated service rate — requests keep arriving
+whether or not the engine kept up, which is what an overload actually is.
+
+Scenario: a three-class mix (interactive short prompts, standard medium,
+batch long-context) at ``OVERLOAD_X`` times the sustainable rate, against
+a deliberately small KV block pool, driven through two configurations of
+the SAME engine geometry:
+
+- baseline: ``admission="fifo"``, no preemption — arrival order wins, a
+  long batch prompt at the queue head blocks everything behind it and a
+  full pool turns arrivals away regardless of class;
+- graceful: ``admission="slo"`` + preemption — interactive arrivals admit
+  first, the cost-model gate defers batch work that would break a higher
+  class's ITL, decoding batch victims swap their KV blocks to the pinned
+  host tier and resume bitwise-identically, and only requests that
+  out-wait their class deadline are shed.
+
+Per class it records submitted/completed/rejected, TTFT percentiles,
+mean ITL, time-to-rejection, SLO attainment (scored against ALL submitted
+requests — rejected and unfinished count as missed), plus preemption /
+swap-volume / swap-bandwidth counters, into ``BENCH_overload.json``.
+SLO targets are scaled from the calibrated per-tick latency so the same
+benchmark is meaningful on fast and slow CI machines.
+
+The headline metric: high-priority (interactive) SLO attainment under the
+graceful config must beat the FIFO baseline, with request conservation
+(``completed + rejected == submitted``) holding for both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.metrics import slo_attainment
+from repro.core.sparsity import synthetic_head_curves
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.scheduler import PriorityClass, Request
+
+CFG = TransformerConfig(
+    name="overload-bench", num_layers=2, d_model=128, num_heads=8,
+    num_kv_heads=4, d_ff=256, vocab_size=512, layer_loop="unroll",
+    dtype=jnp.float32)
+
+BLOCK = 64
+MAX_SEQ = 512
+NUM_SLOTS = 6
+POOL_BLOCKS = 16          # small on purpose: ~2 batch tenants fill it
+OVERLOAD_X = 3.0          # arrival rate / calibrated service rate
+
+# per-class workload shape: (prompt_len_range, max_tokens, mix_weight).
+# batch carries enough decode tokens that victims are regularly caught
+# mid-decode (exercising swap-to-host); mid-prefill victims are discarded
+MIX = {
+    "interactive": ((24, 64), 12, 0.4),
+    "standard": ((96, 160), 16, 0.4),
+    "batch": ((288, 448), 48, 0.2),
+}
+
+
+def _mk_engine(params, profile, admission, preemption):
+    return Engine(CFG, params, EngineConfig(
+        attention="sparse", budget_per_head=256, block=BLOCK, floor=BLOCK,
+        max_seq_len=MAX_SEQ, num_slots=NUM_SLOTS,
+        prefill_mode="chunked", prefill_chunk_tokens=128,
+        num_kv_blocks=POOL_BLOCKS,
+        admission=admission, preemption=preemption), profile=profile)
+
+
+def _workload(n, rng):
+    """n (priority, prompt, max_tokens) triples in randomized order."""
+    names = list(MIX)
+    probs = np.array([MIX[c][2] for c in names])
+    out = []
+    for i in range(n):
+        c = names[int(rng.choice(len(names), p=probs / probs.sum()))]
+        (lo, hi), mt, _ = MIX[c]
+        out.append((c, rng.integers(0, CFG.vocab_size,
+                                    size=(int(rng.integers(lo, hi)),)), mt))
+    return out
+
+
+def _classes(tick_s):
+    """SLO targets scaled to the calibrated tick latency: reachable when
+    healthy, violated when queued behind a class-blind backlog."""
+    itl = max(2.5 * tick_s, 1e-3)
+    ttft = max(6.0 * tick_s, 5e-3)
+    return (
+        PriorityClass("interactive", 0, ttft_target_s=ttft,
+                      itl_target_s=itl, weight=4),
+        PriorityClass("standard", 1, ttft_target_s=6 * ttft,
+                      itl_target_s=3 * itl, weight=2),
+        PriorityClass("batch", 2, ttft_target_s=40 * ttft,
+                      itl_target_s=10 * itl, weight=1),
+    )
+
+
+def _calibrate(eng, work, sp, classes=None):
+    """Closed-loop drain of a workload slice: sustainable request rate
+    and per-tick latency (also warms the compile caches).  ``classes``
+    (if given) are made shed-proof — a warm-up queue wait must not
+    reject work before the timed open-loop run."""
+    if classes is not None:
+        classes = tuple(dataclasses.replace(c, reject_after_s=1e9)
+                        for c in classes)
+    b = eng.make_batcher(classes=classes)
+    pf, df = eng.step_fns(sp)
+    for i, (c, prompt, mt) in enumerate(work):
+        b.submit(Request(rid=i, prompt=np.asarray(prompt, np.int32),
+                         sampling=SamplingParams(max_tokens=mt),
+                         priority=c))
+    t0 = time.monotonic()
+    ticks = 0
+    while b.busy:
+        b.tick(pf, df)
+        ticks += 1
+    dt = time.monotonic() - t0
+    return len(work) / dt, dt / max(ticks, 1)
+
+
+def _drive_open_loop(eng, classes, work, arrivals, sp, max_wall_s):
+    """Submit request i at wall time ``arrivals[i]`` regardless of engine
+    state (open loop), tick until drained."""
+    b = eng.make_batcher(classes=classes)
+    pf, df = eng.step_fns(sp)
+    reqs = [Request(rid=i, prompt=np.asarray(p, np.int32),
+                    sampling=SamplingParams(max_tokens=mt), priority=c)
+            for i, (c, p, mt) in enumerate(work)]
+    t0 = time.monotonic()
+    done, i = [], 0
+    while i < len(reqs) or b.busy:
+        now = time.monotonic() - t0
+        if now > max_wall_s:
+            raise RuntimeError(f"overload run exceeded {max_wall_s}s wall")
+        while i < len(reqs) and arrivals[i] <= now:
+            b.submit(reqs[i])
+            i += 1
+        if not b.busy:
+            time.sleep(min(arrivals[i] - now, 0.005))
+            continue
+        done.extend(b.tick(pf, df))
+    return done, b, time.monotonic() - t0
+
+
+def _per_class(done, b, eng, classes, wall_s):
+    by_class = {c.name: [r for r in done if r.priority == c.name]
+                for c in classes}
+    out = {}
+    for pc in classes:
+        rs = by_class[pc.name]
+        comp = [r for r in rs if not r.rejected]
+        rej = [r for r in rs if r.rejected]
+        ttfts = [r.ttft for r in comp]
+        att = slo_attainment(
+            ttfts, [r.itl for r in comp],
+            ttft_target_s=pc.ttft_target_s, itl_target_s=pc.itl_target_s,
+            num_submitted=len(rs))
+        itl_all = np.concatenate([np.asarray(r.itl) for r in comp
+                                  if r.itl] or [np.zeros(0)])
+        csr = b.stats.per_class.get(pc.name, {})
+        out[pc.name] = {
+            "submitted": len(rs),
+            "completed": len(comp),
+            "rejected": len(rej),
+            "slo_attainment": att["attainment"],
+            "ttft_p50_ms": (float(np.percentile(ttfts, 50)) * 1e3
+                            if ttfts else None),
+            "ttft_p99_ms": (float(np.percentile(ttfts, 99)) * 1e3
+                            if ttfts else None),
+            "itl_mean_ms": (float(itl_all.mean()) * 1e3
+                            if itl_all.size else None),
+            "time_to_rejection_ms": (
+                float(np.mean([r.queue_delay for r in rej])) * 1e3
+                if rej else None),
+            "preempted": csr.get("preempted", 0),
+            "resumed": csr.get("resumed", 0),
+            "swapped_out_blocks": csr.get("swapped_out_blocks", 0),
+        }
+    sw = eng.swap_stats
+    out["_totals"] = {
+        "wall_s": wall_s,
+        "preempted": b.stats.preempted,
+        "resumed": b.stats.resumed,
+        "deferred": b.stats.deferred,
+        "swapped_out_blocks": sw["blocks_out"],
+        "swapped_in_blocks": sw["blocks_in"],
+        "swap_bytes_out": sw["bytes_out"],
+        "swap_bw_mbps": sw["bytes_out"] / wall_s / 1e6 if wall_s else 0.0,
+        "epoch_remaps": sw["epoch_remaps"],
+    }
+    return out
+
+
+def run(out_dir: str, quick: bool = False):
+    n = 30 if quick else 70
+    rng = np.random.default_rng(7)
+    work = _workload(n, rng)
+    sp = SamplingParams()   # greedy step closures; per-request max_tokens
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    profile = synthetic_head_curves(CFG.num_layers, CFG.num_heads)
+
+    # calibrate the sustainable rate on the baseline geometry: first pass
+    # absorbs JIT compiles, second (warm) pass measures the true service
+    # rate — otherwise compile time deflates the rate and 3x of it is not
+    # actually an overload
+    cal_eng = _mk_engine(params, profile, "fifo", False)
+    _calibrate(cal_eng, work[:max(8, n // 4)], sp)
+    rate, tick_s = _calibrate(cal_eng, work[:max(8, n // 4)], sp)
+    classes = _classes(tick_s)
+    lam = OVERLOAD_X * rate
+    arrivals = np.cumsum(rng.exponential(1.0 / lam, size=n))
+    max_wall = max(120.0, 10 * n / rate)
+
+    configs = {
+        "baseline_fifo": ("fifo", False),
+        "graceful_slo_preempt": ("slo", True),
+    }
+    results = {}
+    for name, (admission, preemption) in configs.items():
+        eng = _mk_engine(params, profile, admission, preemption)
+        # warm this engine's compile caches closed-loop (not timed)
+        _calibrate(eng, work[:max(8, n // 4)], sp, classes=classes)
+        done, b, wall = _drive_open_loop(eng, classes, work, arrivals, sp,
+                                         max_wall)
+        assert len(done) == n, "open-loop run lost requests"
+        assert b.stats.completed + b.stats.rejected == n, \
+            "conservation violated: completed + rejected != submitted"
+        assert b.alloc.conserves() and b.alloc.free_blocks == \
+            b.alloc.num_blocks, "pool not restored after drain"
+        results[name] = _per_class(done, b, eng, classes, wall)
+
+    hi_base = results["baseline_fifo"]["interactive"]["slo_attainment"]
+    hi_grace = results["graceful_slo_preempt"]["interactive"][
+        "slo_attainment"]
+    payload = {
+        "config": {
+            "num_requests": n, "overload_x": OVERLOAD_X,
+            "pool_blocks": POOL_BLOCKS, "block": BLOCK,
+            "num_slots": NUM_SLOTS, "max_seq_len": MAX_SEQ,
+            "calibrated_rate_rps": rate, "calibrated_tick_s": tick_s,
+            "quick": quick,
+            "mix": {c: {"prompt_len": list(MIX[c][0]),
+                        "max_tokens": MIX[c][1], "weight": MIX[c][2]}
+                    for c in MIX},
+            "classes": [{"name": c.name, "level": c.level,
+                         "ttft_target_s": c.ttft_target_s,
+                         "itl_target_s": c.itl_target_s,
+                         "weight": c.weight} for c in classes],
+        },
+        "configs": results,
+        "hi_priority_attainment_baseline": hi_base,
+        "hi_priority_attainment_graceful": hi_grace,
+        "hi_priority_attainment_delta": hi_grace - hi_base,
+    }
+    with open(os.path.join(out_dir, "BENCH_overload.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+
+    rows = [
+        ("hi_attainment_baseline", hi_base),
+        ("hi_attainment_graceful", hi_grace),
+        ("hi_attainment_delta", hi_grace - hi_base),
+        ("preemptions", results["graceful_slo_preempt"]["_totals"]
+         ["preempted"]),
+        ("resumed", results["graceful_slo_preempt"]["_totals"]["resumed"]),
+        ("swap_blocks_out", results["graceful_slo_preempt"]["_totals"]
+         ["swapped_out_blocks"]),
+        ("swap_bw_mbps", results["graceful_slo_preempt"]["_totals"]
+         ["swap_bw_mbps"]),
+    ]
+    for cfg_name, per in results.items():
+        for cname in MIX:
+            rows.append((f"{cname}_attainment_{cfg_name}",
+                         per[cname]["slo_attainment"]))
+            rows.append((f"{cname}_rejected_{cfg_name}",
+                         per[cname]["rejected"]))
+    return rows

@@ -27,14 +27,18 @@ SUITES = [
     ("lb_ablation", "paper Fig. 11"),
     ("serving", "chunked-prefill tick loop (TTFT/ITL)"),
     ("adapt_replan", "plan epochs: replanning under workload shift (§2.9)"),
+    ("overload", "open-loop Poisson overload: per-class SLO attainment, "
+                 "preemption + KV swap-to-host (§2.10)"),
 ]
 
 # fast subset exercising the serving hot paths (CI perf smoke); the decode
 # microbench refreshes BENCH_decode.json every PR so the packed-vs-padded
-# latency series has a per-commit trajectory, and adapt_replan refreshes
-# BENCH_adapt.json so epoch-swap recovery/latency regress visibly too
+# latency series has a per-commit trajectory, adapt_replan refreshes
+# BENCH_adapt.json so epoch-swap recovery/latency regress visibly, and
+# overload refreshes BENCH_overload.json (short burst profile) so graceful
+# degradation (per-class attainment under preemption) regresses visibly too
 SMOKE = ("load_balance", "latency_attention", "decode_pack", "serving",
-         "adapt_replan")
+         "adapt_replan", "overload")
 
 
 def main() -> int:

@@ -98,3 +98,38 @@ def model_flops_infer(n_params: int, n_tokens: int) -> float:
 
 def mfu(model_flops: float, step_time_s: float, num_chips: int) -> float:
     return model_flops / (step_time_s * num_chips * PEAK_FLOPS_BF16)
+
+
+def slo_attainment(ttfts, itls, *, ttft_target_s: float,
+                   itl_target_s: float, num_submitted: int | None = None,
+                   itl_quantile: float = 0.99) -> dict:
+    """Per-class SLO attainment for the overload benchmark (DESIGN.md
+    §2.10): a request ATTAINS its SLO when its TTFT meets the class
+    target and its per-request p-``itl_quantile`` inter-token latency
+    meets the ITL target.
+
+    ``ttfts``: one TTFT per COMPLETED request; ``itls``: the matching
+    per-request ITL sample lists (empty list = single-token request, ITL
+    vacuously met).  ``num_submitted`` scores attainment against every
+    submitted request (rejected/unfinished count as missed) — the honest
+    overload denominator; None scores completed requests only.
+    """
+    ttfts = list(ttfts)
+    itls = list(itls)
+    assert len(ttfts) == len(itls), "one ITL list per completed request"
+    ok = 0
+    for ttft, samples in zip(ttfts, itls):
+        if ttft is None or ttft > ttft_target_s:
+            continue
+        if samples and float(np.quantile(
+                np.asarray(samples, np.float64),
+                itl_quantile)) > itl_target_s:
+            continue
+        ok += 1
+    denom = num_submitted if num_submitted is not None else len(ttfts)
+    return {
+        "attained": ok,
+        "completed": len(ttfts),
+        "denominator": denom,
+        "attainment": ok / denom if denom else 1.0,
+    }

@@ -39,6 +39,21 @@ def main():
     ap.add_argument("--drift-threshold", type=float, default=None,
                     help="replan when online-vs-offline profile drift "
                          "reaches this value (needs --telemetry-every)")
+    # overload robustness (DESIGN.md §2.10)
+    ap.add_argument("--admission", default="fifo", choices=["fifo", "slo"],
+                    help="admission policy: class-blind arrival order "
+                         "(fifo) or SLO-aware class scheduling with "
+                         "cost-model deferral and deadline shedding (slo)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="allow preempting strictly-lower-priority decodes "
+                         "(KV blocks swap to a pinned-host tier; resume is "
+                         "bitwise-identical)")
+    ap.add_argument("--host-blocks", type=int, default=None,
+                    help="host swap-tier capacity in KV blocks "
+                         "(default: unbounded)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="device KV pool size in blocks (default: "
+                         "slots * max_seq / block)")
     args = ap.parse_args()
     if args.drift_threshold is not None and args.telemetry_every <= 0:
         ap.error("--drift-threshold needs --telemetry-every > 0")
@@ -58,20 +73,32 @@ def main():
     eng = Engine(cfg, params, EngineConfig(
         attention=args.attention, budget_per_head=args.budget,
         max_seq_len=args.max_seq, num_slots=args.slots,
+        num_kv_blocks=args.kv_blocks,
         telemetry_every=args.telemetry_every,
         replan_every=args.replan_every,
-        drift_threshold=args.drift_threshold), profile=profile)
+        drift_threshold=args.drift_threshold,
+        admission=args.admission, preemption=args.preemption,
+        host_swap_blocks=args.host_blocks), profile=profile)
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, min(cfg.vocab_size, 256),
                             size=(int(rng.integers(32, 128)),))
                for _ in range(args.requests)]
+    classes = ("interactive", "standard", "batch")
+    priorities = [classes[i % len(classes)] for i in range(len(prompts))]
     t0 = time.time()
-    done = eng.serve(prompts, SamplingParams(max_tokens=args.max_tokens))
+    done = eng.serve(prompts, SamplingParams(max_tokens=args.max_tokens),
+                     priorities=priorities)
     dt = time.time() - t0
     n_tok = sum(len(r.generated) for r in done)
     log.info("served %d requests, %d tokens in %.1fs (%.1f tok/s)",
              len(done), n_tok, dt, n_tok / dt)
+    bs = eng.decode_bubble_stats
+    if bs["swap"]["swapped_out"] or args.preemption:
+        log.info("preemption: %d swapped out / %d back in (%d blocks, "
+                 "%.1f KiB to host)", bs["swap"]["swapped_out"],
+                 bs["swap"]["swapped_in"], bs["swap"]["blocks_out"],
+                 bs["swap"]["bytes_out"] / 1024)
     if eng.plan is not None:
         from repro.core.planner import plan_summary
         s = plan_summary(eng.plan)

@@ -3,7 +3,13 @@ KV cache, continuous batching, sampling."""
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.kv_cache import BlockAllocator, PagedKVCache, SlotCache
 from repro.serving.sampler import SamplingParams, sample
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import (
+    DEFAULT_CLASSES,
+    ContinuousBatcher,
+    PriorityClass,
+    Request,
+    SchedulerStats,
+)
 from repro.serving.sharded_attention import (
     flash_decode_attention,
     flash_decode_attention_paged,

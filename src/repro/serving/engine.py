@@ -126,6 +126,17 @@ class EngineConfig:
     # programs lazily (eviction), never eagerly (in-flight dispatch).
     prefill_jit_cap: int = 16
     chunk_jit_cap: int = 16
+    # -- overload robustness (DESIGN.md §2.10) ----------------------------
+    # admission policy: "fifo" (class-blind arrival order — the baseline)
+    # or "slo" (class-level order + cost-model deferral + deadline shed).
+    admission: str = "fifo"
+    # allow preemption of strictly-lower-priority work when a request
+    # cannot be placed: decoding victims swap their mapped KV blocks to a
+    # pinned-host tier and resume later bitwise-identically; mid-prefill
+    # victims are discarded back to their queue head.
+    preemption: bool = False
+    # host swap-tier capacity in blocks (None = unbounded).
+    host_swap_blocks: int | None = None
 
 
 class Engine:
@@ -175,7 +186,8 @@ class Engine:
             self.kv = PagedKVCache(
                 lambda n: tfm.init_paged_cache(cfg, n, engine_cfg.block),
                 num_blocks=nblocks, block=engine_cfg.block,
-                table_width=engine_cfg.max_seq_len // engine_cfg.block)
+                table_width=engine_cfg.max_seq_len // engine_cfg.block,
+                host_blocks=engine_cfg.host_swap_blocks)
             # self.cache is the LIVE pool threaded through the jitted
             # steps (donated); self.kv keeps the allocator/tables and is
             # re-pointed at the new buffer after every step
@@ -236,6 +248,21 @@ class Engine:
         # plan-epoch machinery (DESIGN.md §2.9)
         self._telemetry_jit: dict[int, object] = {}
         self._kv_permute_jit = None
+        # preemption swap-to-host tier (DESIGN.md §2.10): host copies of
+        # swapped-out sequences' KV blocks, keyed by rid.  _kv_arrange
+        # tracks the CUMULATIVE kv-head arrangement of the resident cache
+        # across plan epochs (arrange[l, h] = original kv head living in
+        # slot h) so a host copy taken under one epoch can be re-arranged
+        # EXACTLY ONCE at swap-in, however many epoch swaps passed.
+        self._host_swaps: dict[int, dict] = {}
+        self._swap_gather_jit: dict[tuple, object] = {}
+        self._swap_scatter_jit: dict[tuple, object] = {}
+        self._kv_arrange = np.tile(np.arange(cfg.num_kv_heads),
+                                   (cfg.num_layers, 1))
+        self.swap_stats = {"swapped_out": 0, "swapped_in": 0,
+                           "blocks_out": 0, "blocks_in": 0,
+                           "bytes_out": 0, "bytes_in": 0,
+                           "epoch_remaps": 0}
         self._decode_ticks = 0
         self._ticks_since_replan = 0
         self._epoch_stats: dict[int, dict] = {0: self._fresh_epoch_stats()}
@@ -543,6 +570,12 @@ class Engine:
                                   and self.telemetry.total_samples else None),
             "drift": self._last_drift[1] if self._last_drift else None,
             "epochs": epochs,
+            # overload robustness (DESIGN.md §2.10): host-tier swap volume
+            # and the scheduler's per-class admission/preemption counters
+            "swap": dict(self.swap_stats),
+            "per_class": ({k: dict(v) for k, v in
+                           self._batcher.stats.per_class.items()}
+                          if self._batcher is not None else {}),
         }
 
     # -- plan epochs: telemetry, drift, replanning (DESIGN.md §2.9) ---------
@@ -693,6 +726,12 @@ class Engine:
                         donate_argnums=(0,) if self._donate else ())
                 self._set_cache(self._kv_permute_jit(
                     self.cache, jnp.asarray(kv_tbl)))
+                # fold the gather into the cumulative arrangement: slot h
+                # now holds what slot kv_tbl[l, h] held — swapped-out host
+                # copies are NOT touched here; swap-in re-arranges them
+                # against this record exactly once (DESIGN.md §2.10)
+                self._kv_arrange = np.take_along_axis(
+                    self._kv_arrange, np.asarray(kv_tbl), axis=1)
         old = self.epoch
         self.plan = new_plan
         self.epoch = new_plan.epoch
@@ -727,6 +766,126 @@ class Engine:
         assert self._batcher is not None, \
             "paged engine steps need a batcher (make_batcher binds it)"
         return self.kv.table_row(self._batcher.rid_of_slot(slot))
+
+    # -- preemption: KV block swap to pinned host (DESIGN.md §2.10) ----------
+    # A preempted decode's mapped blocks are gathered to host in one
+    # donated jit (the pool buffer passes through aliased — no copy of the
+    # pool itself), the allocator migrates the accounting, and the ids are
+    # immediately reusable.  Swap-in scatters the host copy into FRESHLY
+    # mapped blocks (ids differ; identity is the block table, not the id).
+    # Jits are keyed by the pow2 block bucket (ids pad with the trash
+    # block / token-padding is junk beyond the resident length), so swap
+    # compiles O(log table_width) programs total.
+
+    def _swap_bucket(self, nblk: int) -> int:
+        return pow2_bucket(nblk, lo=1,
+                           hi=self.ecfg.max_seq_len // self.ecfg.block)
+
+    def _swap_gather_fn(self, key):
+        fn = self._swap_gather_jit.get(key)
+        if fn is None:
+            kind, width = key
+            if kind == "paged":
+                def run(pool, ids):
+                    return pool, jnp.take(pool, ids, axis=2)
+            else:
+                L, _, _, Hkv, _, Dh = self.cache.shape
+                def run(cache, slot):
+                    seq = jax.lax.dynamic_slice(
+                        cache, (0, 0, slot, 0, 0, 0),
+                        (L, 2, 1, Hkv, width, Dh))
+                    return cache, seq
+            fn = jax.jit(run, donate_argnums=(0,) if self._donate else ())
+            self._swap_gather_jit[key] = fn
+        return fn
+
+    def _swap_scatter_fn(self, key):
+        fn = self._swap_scatter_jit.get(key)
+        if fn is None:
+            kind = key[0]
+            if kind == "paged":
+                def run(pool, blocks, ids):
+                    return pool.at[:, :, ids].set(
+                        blocks.astype(pool.dtype))
+            else:
+                def run(cache, seq, slot):
+                    return jax.lax.dynamic_update_slice(
+                        cache, seq.astype(cache.dtype),
+                        (0, 0, slot, 0, 0, 0))
+            fn = jax.jit(run, donate_argnums=(0,) if self._donate else ())
+            self._swap_scatter_jit[key] = fn
+        return fn
+
+    def _swap_out_seq(self, rid: int, slot: int, resident: int) -> None:
+        """Batcher swap-out hook: copy the sequence's resident KV state to
+        host BEFORE the allocator recycles its blocks.  Paged: gather its
+        mapped pool blocks; contiguous: slice its slot rows (the tokens
+        past ``resident`` ride along as junk — decode masks by length)."""
+        nblk = self.kv.alloc.blocks_needed(resident) if self.paged \
+            else -(-resident // self.ecfg.block)
+        bucket = self._swap_bucket(nblk)
+        if self.paged:
+            ids = self.kv.alloc.table(rid)
+            assert len(ids) == nblk
+            row = np.full((bucket,), self.kv.trash_block, np.int32)
+            row[:nblk] = ids
+            pool, blocks = self._swap_gather_fn(("paged", bucket))(
+                self.cache, jnp.asarray(row))
+            self._set_cache(pool)
+            data = np.array(jax.device_get(blocks)[:, :, :nblk])
+        else:
+            width = bucket * self.ecfg.block
+            cache, seq = self._swap_gather_fn(("slot", width))(
+                self.cache, slot)
+            self._set_cache(cache)
+            data = np.asarray(jax.device_get(seq))
+        self._host_swaps[rid] = {"data": data, "tokens": resident,
+                                 "arrange": self._kv_arrange.copy()}
+        st = self.swap_stats
+        st["swapped_out"] += 1
+        st["blocks_out"] += nblk
+        st["bytes_out"] += data.nbytes
+
+    def _swap_in_seq(self, rid: int, slot: int, resident: int) -> None:
+        """Batcher swap-in hook: restore the host copy into the freshly
+        mapped blocks (paged) or the newly claimed slot (contiguous).  If
+        plan epochs re-permuted the resident cache's kv-head axis while
+        the sequence was out, the host copy is re-arranged here — exactly
+        once, against the cumulative arrangement, no matter how many
+        epoch swaps passed (the §2.9 cache gather composed them)."""
+        rec = self._host_swaps.pop(rid)
+        assert rec["tokens"] == resident, \
+            f"swap-in length mismatch: {rec['tokens']} != {resident}"
+        data = rec["data"]
+        if not np.array_equal(rec["arrange"], self._kv_arrange):
+            # rel[l, h] = where (in the host copy) the kv head now wanted
+            # at slot h was stored when the copy was taken
+            inv = np.argsort(rec["arrange"], axis=1)
+            rel = np.take_along_axis(inv, self._kv_arrange, axis=1)
+            data = np.take_along_axis(
+                data, rel[:, None, None, :, None, None], axis=3)
+            self.swap_stats["epoch_remaps"] += 1
+        if self.paged:
+            ids = self.kv.alloc.table(rid)   # fresh ids from alloc.swap_in
+            nblk = len(ids)
+            bucket = self._swap_bucket(nblk)
+            row = np.full((bucket,), self.kv.trash_block, np.int32)
+            row[:nblk] = ids
+            L, two, _, Hkv, blk, Dh = data.shape
+            buf = np.zeros((L, two, bucket, Hkv, blk, Dh), data.dtype)
+            buf[:, :, :nblk] = data
+            pool = self._swap_scatter_fn(("paged", bucket))(
+                self.cache, jnp.asarray(buf), jnp.asarray(row))
+            self._set_cache(pool)
+        else:
+            nblk = -(-resident // self.ecfg.block)
+            cache = self._swap_scatter_fn(("slot",))(
+                self.cache, jnp.asarray(data), slot)
+            self._set_cache(cache)
+        st = self.swap_stats
+        st["swapped_in"] += 1
+        st["blocks_in"] += nblk
+        st["bytes_in"] += data.nbytes
 
     # -- jitted steps --------------------------------------------------------
     @staticmethod
@@ -1172,15 +1331,18 @@ class Engine:
             "imbalance": float(counts.max() / mean) if mean > 0 else 1.0,
         }
 
-    def make_batcher(self) -> ContinuousBatcher:
+    def make_batcher(self, classes=None) -> ContinuousBatcher:
         """A ContinuousBatcher sized for this engine (chunked mixed ticks
         when ``prefill_mode == "chunked"``, else monolithic).
 
         Paged layout: the batcher SHARES the PagedKVCache's allocator, so
         admission control and the device pool count the very same blocks
         — a request is admitted when its blocks fit, and ``num_slots``
-        only bounds the decode batch width.
+        only bounds the decode batch width.  ``classes`` overrides the
+        :data:`~repro.serving.scheduler.DEFAULT_CLASSES` table (the
+        overload benchmark scales SLO targets to the measured tick time).
         """
+        from repro.serving.scheduler import DEFAULT_CLASSES
         chunked = self.ecfg.prefill_mode == "chunked"
         nblocks = (self.kv.num_blocks if self.paged
                    else self.ecfg.num_slots
@@ -1191,7 +1353,13 @@ class Engine:
             max_seq_len=self.ecfg.max_seq_len,
             block=self.ecfg.block,
             token_budget=self.ecfg.prefill_chunk_tokens if chunked else None,
-            allocator=self.kv.alloc if self.paged else None)
+            allocator=self.kv.alloc if self.paged else None,
+            classes=classes if classes is not None else DEFAULT_CLASSES,
+            admission=self.ecfg.admission,
+            preemption=self.ecfg.preemption,
+            host_blocks=self.ecfg.host_swap_blocks,
+            swap_out_fn=self._swap_out_seq if self.ecfg.preemption else None,
+            swap_in_fn=self._swap_in_seq if self.ecfg.preemption else None)
         self._batcher = b
         return b
 
@@ -1211,13 +1379,15 @@ class Engine:
         return prefill_chunk, decode
 
     def serve(self, prompts: list[np.ndarray],
-              sampling: SamplingParams = SamplingParams()) -> list[Request]:
+              sampling: SamplingParams = SamplingParams(),
+              priorities: list[str] | None = None) -> list[Request]:
         """Continuous-batching serve of a list of prompts.
 
         Returns ONE Request per submitted prompt, in rid (= input) order:
         completed requests carry their generated tokens; over-length
         requests come back with ``rejected=True`` and no tokens, so zipping
-        results with inputs never misaligns.
+        results with inputs never misaligns.  ``priorities`` optionally
+        names each prompt's :class:`PriorityClass` (default "standard").
 
         When a replan policy is configured (``replan_every`` /
         ``drift_threshold``) the loop checks it once per tick, at the
@@ -1226,8 +1396,9 @@ class Engine:
         """
         batcher = self.make_batcher()
         for i, pr in enumerate(prompts):
-            batcher.submit(Request(rid=i, prompt=np.asarray(pr, np.int32),
-                                   sampling=sampling))
+            batcher.submit(Request(
+                rid=i, prompt=np.asarray(pr, np.int32), sampling=sampling,
+                priority=priorities[i] if priorities else "standard"))
         done = batcher.run(*self.step_fns(sampling),
                            on_tick=lambda: self._maybe_replan(batcher))
         log.info("served %d requests: %s", len(done), batcher.stats)

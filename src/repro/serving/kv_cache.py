@@ -13,6 +13,16 @@ Three layers:
   ``allocated_blocks == sum(ceil(len/block))`` over live sequences at
   every scheduler tick.
 
+  Overload preemption (DESIGN.md §2.10) adds a pinned-host swap tier:
+  :meth:`swap_out` releases a sequence's device blocks AND its unmapped
+  reservation back to the pool and moves the token accounting to the host
+  tier; :meth:`swap_in` re-admits it later with a fresh reservation and
+  freshly mapped device blocks (ids generally differ — the device copy is
+  restored by the engine's scatter, not by identity).  A sequence is never
+  accounted in both tiers at once, and the conservation invariant extends
+  to the host tier (``host_allocated_blocks == sum(ceil(len/block))`` over
+  swapped sequences).
+
 - :class:`PagedKVCache` — the paged device cache: a block pool
   ``[L, 2, num_blocks+1, Hkv, block, Dh]`` (the last block is the TRASH
   block — writes of inactive decode rows land there) addressed through
@@ -37,12 +47,15 @@ import jax.numpy as jnp
 class BlockAllocator:
     num_blocks: int
     block: int = 128
+    host_blocks: int | None = None   # swap-tier capacity (None = unbounded)
 
     def __post_init__(self):
         self._free: list[int] = list(range(self.num_blocks))
         self._tables: dict[int, list[int]] = {}
         self._lens: dict[int, int] = {}       # cache-resident tokens
         self._reserved: dict[int, int] = {}   # worst-case blocks per seq
+        self._host_lens: dict[int, int] = {}  # swapped-out resident tokens
+        self._host_nblk: dict[int, int] = {}  # host blocks held per seq
 
     # -- accounting views ---------------------------------------------------
     @property
@@ -74,14 +87,104 @@ class BlockAllocator:
         """Cache-resident tokens accounted to ``seq_id``."""
         return self._lens.get(seq_id, 0)
 
+    def reserved_blocks(self, seq_id: int) -> int:
+        """Total worst-case blocks (mapped + unmapped) held by ``seq_id`` —
+        what :meth:`swap_out` or :meth:`free` would give back."""
+        return self._reserved.get(seq_id, 0)
+
     @property
     def live_seqs(self) -> tuple[int, ...]:
         return tuple(self._lens)
 
+    # -- host swap tier -----------------------------------------------------
+    @property
+    def swapped_seqs(self) -> tuple[int, ...]:
+        return tuple(self._host_lens)
+
+    @property
+    def host_allocated_blocks(self) -> int:
+        return sum(self._host_nblk.values())
+
+    @property
+    def host_free_blocks(self) -> int | None:
+        """Remaining swap-tier capacity (None = unbounded)."""
+        if self.host_blocks is None:
+            return None
+        return self.host_blocks - self.host_allocated_blocks
+
+    def host_tokens(self, seq_id: int) -> int:
+        """Resident tokens held on the host tier for ``seq_id``."""
+        return self._host_lens.get(seq_id, 0)
+
+    def can_swap_out(self, seq_id: int) -> bool:
+        if seq_id not in self._lens:
+            return False
+        if self.host_blocks is None:
+            return True
+        need = self.blocks_needed(self._lens[seq_id])
+        return self.host_allocated_blocks + need <= self.host_blocks
+
+    def swap_out(self, seq_id: int) -> int:
+        """Move ``seq_id`` from the device tier to the host tier: its
+        mapped blocks return to the free pool, its unmapped reservation is
+        dropped, and the token accounting migrates.  Returns the number of
+        device blocks released (= host blocks now held).  The caller must
+        copy the block payloads to host BEFORE calling this — the ids are
+        reusable the moment this returns."""
+        if seq_id in self._host_lens:
+            raise ValueError(f"seq {seq_id} already swapped out")
+        if not self.can_swap_out(seq_id):
+            raise MemoryError(
+                f"host swap tier exhausted: seq {seq_id} needs "
+                f"{self.blocks_needed(self._lens.get(seq_id, 0))}, "
+                f"free {self.host_free_blocks}")
+        table = self._tables.pop(seq_id)
+        self._free.extend(table)
+        self._host_lens[seq_id] = self._lens.pop(seq_id)
+        self._host_nblk[seq_id] = len(table)
+        self._reserved.pop(seq_id)
+        return len(table)
+
+    def can_swap_in(self, seq_id: int, max_new_tokens: int = 0) -> bool:
+        if seq_id not in self._host_lens:
+            return False
+        total = self.blocks_needed(self._host_lens[seq_id] + max_new_tokens)
+        return total <= self.available_blocks
+
+    def swap_in(self, seq_id: int, max_new_tokens: int = 0) -> list[int]:
+        """Re-admit ``seq_id`` from the host tier: take a fresh worst-case
+        reservation (resident + remaining new tokens) and map device blocks
+        for the resident tokens.  Returns the NEW block ids — the engine
+        scatters the host copy into them."""
+        if seq_id not in self._host_lens:
+            raise ValueError(f"seq {seq_id} not swapped out")
+        resident = self._host_lens[seq_id]
+        total = self.blocks_needed(resident + max_new_tokens)
+        if total > self.available_blocks:
+            raise MemoryError(
+                f"KV pool exhausted: swap-in needs {total}, "
+                f"available {self.available_blocks}")
+        self._reserved[seq_id] = total
+        self._tables[seq_id] = []
+        self._lens[seq_id] = 0
+        self._grow(seq_id, self.blocks_needed(resident))
+        self._lens[seq_id] = resident
+        del self._host_lens[seq_id]
+        del self._host_nblk[seq_id]
+        return list(self._tables[seq_id])
+
     def conserves(self) -> bool:
-        """The invariant the scheduler must uphold at every tick."""
-        return self.allocated_blocks == sum(
+        """The invariant the scheduler must uphold at every tick, extended
+        over both tiers: device blocks match live lengths, host blocks
+        match swapped lengths, and no sequence is accounted twice."""
+        device_ok = self.allocated_blocks == sum(
             self.blocks_needed(n) for n in self._lens.values())
+        host_ok = all(self._host_nblk[s] == self.blocks_needed(n)
+                      for s, n in self._host_lens.items())
+        no_dual = not (set(self._lens) & set(self._host_lens))
+        capped = (self.host_blocks is None
+                  or self.host_allocated_blocks <= self.host_blocks)
+        return device_ok and host_ok and no_dual and capped
 
     # -- lifecycle ----------------------------------------------------------
     def can_admit(self, num_tokens: int) -> bool:
@@ -139,9 +242,12 @@ class BlockAllocator:
         return self._tables.get(seq_id, [])
 
     def free(self, seq_id: int) -> None:
+        """Release everything ``seq_id`` holds, on whichever tier."""
         self._free.extend(self._tables.pop(seq_id, []))
         self._lens.pop(seq_id, None)
         self._reserved.pop(seq_id, None)
+        self._host_lens.pop(seq_id, None)
+        self._host_nblk.pop(seq_id, None)
 
 
 class PagedKVCache:
@@ -159,9 +265,10 @@ class PagedKVCache:
     """
 
     def __init__(self, make_pool_fn, *, num_blocks: int, block: int,
-                 table_width: int):
+                 table_width: int, host_blocks: int | None = None):
         self.pool = make_pool_fn(num_blocks + 1)
-        self.alloc = BlockAllocator(num_blocks, block)
+        self.alloc = BlockAllocator(num_blocks, block,
+                                    host_blocks=host_blocks)
         self.block = block
         self.trash_block = num_blocks
         self.table_width = table_width

@@ -192,6 +192,59 @@ def hplb_repermute_kv_cache(mesh, *, axis="model"):
     return repermute
 
 
+def hplb_swap_gather_kv_blocks(mesh, *, axis="model"):
+    """Preemption swap-out island (DESIGN.md §2.10): gather a preempted
+    sequence's mapped pool blocks off a HEAD-SHARDED cache, shard-LOCAL.
+
+    ``pool [L, 2, N, Hkv, block, Dh]`` has its kv-head axis sharded over
+    ``axis``; ``ids [nblk]`` (pool-global block ids, trash-padded) are
+    replicated.  Each shard slices ITS OWN kv-head rows of the selected
+    blocks — no collective, unlike the epoch re-permute above — so the
+    host copy comes back still laid out in the CURRENT epoch's kv-head
+    arrangement.  That is exactly why a plan-epoch re-permute between
+    swap-out and swap-in must re-arrange the host copy once at swap-in
+    (the engine tracks the cumulative arrangement; the resident cache's
+    §2.9 gather never touches host copies).  The pool passes through
+    donated/aliased so the jitted caller keeps the buffer chain.
+    """
+    def gather(pool, ids):
+        def island(p_l, ids_l):
+            # p_l [L, 2, N, Hkv_loc, block, Dh]: local take, no collective
+            return p_l, jnp.take(p_l, ids_l, axis=2)
+
+        return shard_map(
+            island, mesh=mesh,
+            in_specs=(P(None, None, None, axis, None, None), P(None)),
+            out_specs=(P(None, None, None, axis, None, None),
+                       P(None, None, None, axis, None, None)),
+            check_vma=False,
+        )(pool, jnp.asarray(ids, jnp.int32))
+
+    return gather
+
+
+def hplb_swap_scatter_kv_blocks(mesh, *, axis="model"):
+    """Preemption swap-in island: scatter a host copy back into freshly
+    mapped pool blocks, shard-local (each shard writes its own kv-head
+    slice; trash-padded ids absorb the bucket padding).  The host copy
+    must already be in the CURRENT epoch's kv-head arrangement — the
+    engine re-arranges stale copies host-side before dispatch."""
+    def scatter(pool, blocks, ids):
+        def island(p_l, b_l, ids_l):
+            return p_l.at[:, :, ids_l].set(b_l.astype(p_l.dtype))
+
+        return shard_map(
+            island, mesh=mesh,
+            in_specs=(P(None, None, None, axis, None, None),
+                      P(None, None, None, axis, None, None),
+                      P(None)),
+            out_specs=P(None, None, None, axis, None, None),
+            check_vma=False,
+        )(pool, blocks, jnp.asarray(ids, jnp.int32))
+
+    return scatter
+
+
 def flash_decode_attention_paged(mesh, *, block_kv=128, seq_axes=("model",),
                                  batch_axes=None):
     """Paged twin of :func:`flash_decode_attention`: the device cache is a

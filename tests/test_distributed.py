@@ -132,6 +132,44 @@ print("PAGED_DECODE_OK", err)
     assert "PAGED_DECODE_OK" in out
 
 
+def test_swap_gather_scatter_islands_shard_local():
+    """Preemption swap islands on a HEAD-SHARDED pool over 4 model shards
+    (DESIGN.md §2.10): gather pulls a sequence's blocks off every shard's
+    own kv-head slice with NO collective, scatter restores them into fresh
+    block ids, and the round trip is bitwise exact."""
+    out = _run("""
+import warnings; warnings.filterwarnings("ignore")
+import numpy as np, jax, jax.numpy as jnp
+from repro.sharding.compat import set_mesh
+from repro.serving.sharded_attention import (
+    hplb_swap_gather_kv_blocks, hplb_swap_scatter_kv_blocks)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+L, N, Hkv, BLK, D = 2, 9, 4, 16, 8      # N = 8 usable + 1 trash block
+rng = np.random.default_rng(0)
+pool0 = rng.normal(size=(L, 2, N, Hkv, BLK, D)).astype(np.float32)
+ids = np.array([5, 2, 7, 8], np.int32)   # trash-padded (8) swap bucket
+gather = hplb_swap_gather_kv_blocks(mesh)
+scatter = hplb_swap_scatter_kv_blocks(mesh)
+with set_mesh(mesh):
+    pool, blocks = jax.jit(gather)(jnp.asarray(pool0), ids)
+    blocks = np.asarray(jax.device_get(blocks))
+    # gather == plain take on the unsharded pool, all kv heads present
+    assert np.array_equal(blocks, pool0[:, :, ids]), "gather mismatch"
+    # no collective in the lowered gather HLO: the island is shard-local
+    hlo = jax.jit(gather).lower(jnp.asarray(pool0), ids).compile()
+    txt = hlo.as_text()
+    assert "all-gather" not in txt and "all-to-all" not in txt, \
+        "swap gather must not communicate"
+    # swap-in to DIFFERENT fresh blocks: scatter then re-gather round-trips
+    new_ids = np.array([0, 3, 1, 8], np.int32)
+    pool2 = jax.jit(scatter)(pool, jnp.asarray(blocks), new_ids)
+    back = np.asarray(jax.device_get(pool2))[:, :, new_ids[:3]]
+    assert np.array_equal(back, pool0[:, :, ids[:3]]), "scatter mismatch"
+print("SWAP_ISLANDS_OK")
+""")
+    assert "SWAP_ISLANDS_OK" in out
+
+
 def test_hplb_decode_packed_island_multidevice():
     """Head-parallel COST-PACKED decode island (DESIGN.md §2.8): each of 4
     model shards executes its own packed ragged worklist against its kv-head

@@ -70,6 +70,123 @@ def test_random_interleaved_streams_deterministic(seed):
     assert a.allocated_blocks == 0 and a.conserves()
 
 
+@pytest.mark.parametrize("seed", range(20))
+@pytest.mark.parametrize("host_blocks", [None, 6])
+def test_random_swap_interleavings_deterministic(seed, host_blocks):
+    """np.random twin of the two-tier hypothesis swap property:
+    interleaved admit/append/swap_out/swap_in/free across device + host
+    tiers keeps both conservations, never dual-accounts a sequence, and
+    draining empties both tiers (DESIGN.md §2.10)."""
+    rng = np.random.default_rng(seed)
+    num_blocks = int(rng.integers(2, 17))
+    block = int(rng.choice([16, 128]))
+    a = BlockAllocator(num_blocks, block, host_blocks=host_blocks)
+    live: dict[int, int] = {}
+    swapped: dict[int, int] = {}
+    next_seq = 0
+    for _ in range(int(rng.integers(1, 60))):
+        ops = ["admit"]
+        if live:
+            ops += ["append", "free", "swap_out"]
+        if swapped:
+            ops += ["swap_in", "free_swapped"]
+        op = rng.choice(ops)
+        if op == "admit":
+            prompt = int(rng.integers(1, num_blocks * block + 1))
+            max_new = int(rng.integers(0, 2 * block + 1))
+            if a.can_admit(prompt + max_new):
+                a.admit(next_seq, prompt, max_new)
+                live[next_seq] = max(0, max_new - 1)
+            next_seq += 1
+        elif op == "append":
+            sid = int(rng.choice(sorted(live)))
+            if live[sid] > 0:
+                a.append_token(sid)
+                live[sid] -= 1
+        elif op == "swap_out":
+            sid = int(rng.choice(sorted(live)))
+            if a.can_swap_out(sid):
+                resident = a.seq_tokens(sid)
+                assert a.swap_out(sid) == a.blocks_needed(resident)
+                assert a.host_tokens(sid) == resident
+                swapped[sid] = live.pop(sid)
+            else:
+                assert host_blocks is not None
+                with pytest.raises(MemoryError):
+                    a.swap_out(sid)
+        elif op == "swap_in":
+            sid = int(rng.choice(sorted(swapped)))
+            max_new = swapped[sid] + 1
+            if a.can_swap_in(sid, max_new):
+                resident = a.host_tokens(sid)
+                ids = a.swap_in(sid, max_new)
+                assert len(ids) == a.blocks_needed(resident)
+                assert a.seq_tokens(sid) == resident
+                live[sid] = swapped.pop(sid)
+        elif op == "free_swapped":
+            sid = int(rng.choice(sorted(swapped)))
+            a.free(sid)
+            del swapped[sid]
+        else:
+            sid = int(rng.choice(sorted(live)))
+            a.free(sid)
+            del live[sid]
+        _check_no_double_assignment(a)
+        assert not (set(a.live_seqs) & set(a.swapped_seqs))
+        assert a.conserves()
+        assert a.available_blocks >= 0
+    # swapped-in sequences must still be able to decode to their budget
+    for sid in list(live):
+        while live[sid] > 0:
+            a.append_token(sid)
+            live[sid] -= 1
+        a.free(sid)
+    for sid in list(swapped):
+        a.free(sid)
+    assert a.free_blocks == a.num_blocks
+    assert a.allocated_blocks == 0 and a.host_allocated_blocks == 0
+    assert a.conserves()
+
+
+def test_swap_roundtrip_accounting_exact():
+    """One explicit round trip: swap_out releases exactly the mapped
+    blocks AND the unmapped reservation headroom; swap_in re-reserves the
+    worst case for the remaining tokens with fresh ids."""
+    a = BlockAllocator(num_blocks=8, block=4, host_blocks=4)
+    first = a.admit(1, 10, max_new_tokens=6)   # 3 mapped, 4 reserved
+    assert len(first) == 3 and a.reserved_blocks(1) == 4
+    assert a.available_blocks == 4
+    released = a.swap_out(1)
+    assert released == 3 and a.host_tokens(1) == 10
+    assert a.available_blocks == 8             # reservation fully returned
+    assert a.host_free_blocks == 1
+    with pytest.raises(ValueError):
+        a.swap_out(1)                          # already on the host tier
+    ids = a.swap_in(1, max_new_tokens=6)
+    assert len(ids) == 3 and a.seq_tokens(1) == 10
+    assert a.reserved_blocks(1) == 4 and a.host_allocated_blocks == 0
+    for _ in range(6):
+        a.append_token(1)                      # the re-reservation holds
+    assert a.seq_tokens(1) == 16
+    a.free(1)
+    assert a.free_blocks == 8 and a.conserves()
+
+
+def test_host_capacity_refuses_swap_out():
+    a = BlockAllocator(num_blocks=8, block=4, host_blocks=2)
+    a.admit(1, 12)                             # 3 blocks > host capacity 2
+    a.admit(2, 8)                              # 2 blocks == host capacity
+    assert not a.can_swap_out(1)
+    with pytest.raises(MemoryError):
+        a.swap_out(1)
+    assert a.can_swap_out(2)
+    a.swap_out(2)
+    assert not a.can_swap_out(1)               # tier now full
+    a.free(1)
+    a.free(2)                                  # free() clears the host tier
+    assert a.host_allocated_blocks == 0 and a.free_blocks == 8
+
+
 def test_freed_blocks_are_reused():
     """Blocks released by a completed sequence physically serve later
     sequences (the paged capacity story: one pool, many tenants)."""

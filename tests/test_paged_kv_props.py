@@ -23,6 +23,10 @@ def _check_no_double_assignment(a: BlockAllocator):
     free = set(a._free)
     assert not (free & set(assigned)), "block both free and assigned"
     assert len(free) + len(assigned) == a.num_blocks, "blocks leaked"
+    # two-tier exclusivity: no sequence accounted on both tiers at once
+    assert not (set(a.live_seqs) & set(a.swapped_seqs)), "dual-tier seq"
+    if a.host_blocks is not None:
+        assert a.host_allocated_blocks <= a.host_blocks, "host overcommit"
 
 
 def _mk_pool(total_blocks):
@@ -73,6 +77,85 @@ def test_interleaved_streams_never_double_assign(data):
     assert a.free_blocks == a.num_blocks
     assert a.available_blocks == a.num_blocks
     assert a.allocated_blocks == 0 and a.conserves()
+
+
+@pytest.mark.timeout(120)
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_swap_interleavings_preserve_two_tier_conservation(data):
+    """Random admit/append/swap_out/swap_in/free interleavings across the
+    device AND host tiers (DESIGN.md §2.10): every block is free or owned
+    by exactly one sequence on exactly one tier, host capacity is never
+    overcommitted, a swapped-in sequence can still decode to its original
+    budget, and draining empties both tiers."""
+    num_blocks = data.draw(st.integers(2, 16), label="num_blocks")
+    block = data.draw(st.sampled_from([16, 128]), label="block")
+    host_blocks = data.draw(st.one_of(st.none(), st.integers(0, 12)),
+                            label="host_blocks")
+    a = BlockAllocator(num_blocks, block, host_blocks=host_blocks)
+    live: dict[int, int] = {}      # seq -> decode appends still allowed
+    swapped: dict[int, int] = {}   # same, while resident on the host tier
+    next_seq = 0
+    for _ in range(data.draw(st.integers(1, 50), label="n_ops")):
+        ops = ["admit"]
+        if live:
+            ops += ["append", "free", "swap_out"]
+        if swapped:
+            ops += ["swap_in", "free_swapped"]
+        op = data.draw(st.sampled_from(ops))
+        if op == "admit":
+            prompt = data.draw(st.integers(1, num_blocks * block))
+            max_new = data.draw(st.integers(0, 2 * block))
+            if a.can_admit(prompt + max_new):
+                a.admit(next_seq, prompt, max_new)
+                live[next_seq] = max(0, max_new - 1)
+            next_seq += 1
+        elif op == "append":
+            sid = data.draw(st.sampled_from(sorted(live)))
+            if live[sid] > 0:
+                a.append_token(sid)
+                live[sid] -= 1
+        elif op == "swap_out":
+            sid = data.draw(st.sampled_from(sorted(live)))
+            if a.can_swap_out(sid):
+                resident = a.seq_tokens(sid)
+                released = a.swap_out(sid)
+                assert released == a.blocks_needed(resident)
+                assert a.host_tokens(sid) == resident
+                swapped[sid] = live.pop(sid)
+            else:
+                assert host_blocks is not None, \
+                    "unbounded host tier refused a swap"
+                with pytest.raises(MemoryError):
+                    a.swap_out(sid)
+        elif op == "swap_in":
+            sid = data.draw(st.sampled_from(sorted(swapped)))
+            resident = a.host_tokens(sid)
+            max_new = swapped[sid] + 1
+            if a.can_swap_in(sid, max_new):
+                ids = a.swap_in(sid, max_new)
+                assert len(ids) == a.blocks_needed(resident)
+                assert a.seq_tokens(sid) == resident
+                live[sid] = swapped.pop(sid)
+            else:
+                with pytest.raises(MemoryError):
+                    a.swap_in(sid, max_new)
+        elif op == "free_swapped":
+            sid = data.draw(st.sampled_from(sorted(swapped)))
+            a.free(sid)
+            del swapped[sid]
+        else:
+            sid = data.draw(st.sampled_from(sorted(live)))
+            a.free(sid)
+            del live[sid]
+        _check_no_double_assignment(a)
+        assert a.conserves()
+        assert a.available_blocks >= 0
+    for sid in list(live) + list(swapped):
+        a.free(sid)
+    assert a.free_blocks == a.num_blocks
+    assert a.allocated_blocks == 0 and a.host_allocated_blocks == 0
+    assert a.swapped_seqs == () and a.conserves()
 
 
 @settings(max_examples=30, deadline=None)

@@ -19,7 +19,11 @@ import numpy as np
 import pytest
 
 from repro.serving.sampler import SamplingParams
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import (
+    DEFAULT_CLASSES,
+    ContinuousBatcher,
+    Request,
+)
 
 
 class FakeEngine:
@@ -134,6 +138,131 @@ def test_stream_invariants(seed, token_budget):
             assert r.generated.count(sp.stop_token) == 1
         assert len(r.token_times) == len(r.generated)
         assert r.ttft is not None and r.ttft >= 0
+
+
+class PreemptAwareFake(FakeEngine):
+    """FakeEngine whose slot-ownership check tolerates preemption: a
+    resumed request re-enters decode on a FRESH slot with no prefill call,
+    so ownership transfers at the first decode tick after a preemption."""
+
+    def decode(self, slots, toks, pos):
+        for s in slots:
+            rid = self._rid_of_slot(s)
+            if rid is not None and self.b.active[rid].preemptions > 0:
+                self.owner[s] = rid
+        return super().decode(slots, toks, pos)
+
+
+def _overload_stream(seed: int):
+    """Random class-tagged request streams through every overload
+    machinery combination: fifo/slo admission, preemption with an
+    accounting-only swap tier (hooks None), tight pools + host caps."""
+    rng = np.random.default_rng(seed)
+    num_slots = int(rng.integers(1, 4))
+    max_seq_len, block = 512, 128
+    # sometimes strictly tighter than slots * seq worst case
+    num_blocks = int(rng.integers(num_slots + 1, num_slots * 4 + 1))
+    host_blocks = [None, 0, 4][int(rng.integers(0, 3))]
+    b = ContinuousBatcher(
+        num_slots=num_slots, num_blocks=num_blocks,
+        max_seq_len=max_seq_len, block=block,
+        token_budget=[None, 128, 256][int(rng.integers(0, 3))],
+        admission=["fifo", "slo"][int(rng.integers(0, 2))],
+        preemption=True, host_blocks=host_blocks)
+    eng = PreemptAwareFake(b, rng, stop_token=5)
+    names = [c.name for c in DEFAULT_CLASSES]
+    n = int(rng.integers(4, 18))
+    reqs = []
+    for i in range(n):
+        length = (int(rng.integers(max_seq_len, max_seq_len * 2))
+                  if rng.random() < 1 / 8
+                  else int(rng.integers(1, 400)))
+        reqs.append(Request(
+            rid=i, prompt=np.arange(length) % 256,
+            sampling=SamplingParams(max_tokens=int(rng.integers(1, 8))),
+            priority=names[int(rng.integers(0, len(names)))]))
+    done = []
+    cut = int(rng.integers(0, n + 1))
+    for r in reqs[:cut]:
+        b.submit(r)
+    for _ in range(int(rng.integers(0, 6))):
+        done.extend(b.tick(eng.prefill, eng.decode))
+    for r in reqs[cut:]:
+        b.submit(r)
+    done.extend(b.run(eng.prefill, eng.decode))
+    return b, eng, reqs, done
+
+
+@pytest.mark.timeout(300)
+@pytest.mark.parametrize("seed", range(25))
+def test_overload_stream_invariants(seed):
+    """Conservation and teardown invariants survive random preemption /
+    swap / resume / shed interleavings (DESIGN.md §2.10)."""
+    b, eng, reqs, done = _overload_stream(seed)
+    assert eng.violations == []
+    assert not b.busy
+    assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
+    assert b.stats.completed + b.stats.rejected == len(reqs)
+    # per-class conservation: class counters partition the totals
+    per = b.stats.per_class
+    assert sum(c["submitted"] for c in per.values()) == len(reqs)
+    for key in ("completed", "rejected", "preempted", "resumed"):
+        assert sum(c[key] for c in per.values()) == getattr(b.stats, key)
+    for name, c in per.items():
+        assert c["completed"] + c["rejected"] == c["submitted"]
+        assert c["swapped_in_blocks"] == c["swapped_out_blocks"], name
+    # both tiers fully drained, no sequence left swapped or reserved
+    assert b.alloc.conserves()
+    assert b.alloc.free_blocks == b.alloc.num_blocks
+    assert b.alloc.host_allocated_blocks == 0
+    assert b.alloc.swapped_seqs == () and b._slot_of == {}
+    assert b.num_preempted == 0
+    for r in done:
+        assert r.done
+        if r.rejected:
+            assert r.generated == []
+            assert r.reject_reason in ("over_length", "over_capacity",
+                                       "slo_timeout")
+            assert r.queue_delay is not None and r.queue_delay >= 0
+        else:
+            assert 1 <= len(r.generated) <= r.sampling.max_tokens
+            assert len(r.token_times) == len(r.generated)
+
+
+def test_sampling_default_is_not_shared():
+    """Regression: Request() used to share ONE SamplingParams instance as
+    a dataclass default across every request, so any aliased mutation (or
+    a future non-frozen field) leaked between requests.  default_factory
+    must hand every request its own instance."""
+    a = Request(rid=0, prompt=np.arange(4))
+    c = Request(rid=1, prompt=np.arange(4))
+    assert a.sampling is not c.sampling
+    assert a.sampling == c.sampling       # equal values, distinct objects
+    assert Request(rid=2, prompt=np.arange(4)).sampling is not a.sampling
+
+
+def test_rejected_request_stamps_queue_delay():
+    """Rejected requests carry t_submit/t_done so time-to-rejection is
+    measurable per class (satellite of §2.10)."""
+    b = ContinuousBatcher(num_slots=1, num_blocks=4, max_seq_len=256,
+                          block=128)
+    rng = np.random.default_rng(0)
+    eng = FakeEngine(b, rng)
+    r = Request(rid=0, prompt=np.arange(400),
+                sampling=SamplingParams(max_tokens=4))
+    b.submit(r)
+    done = b.run(eng.prefill, eng.decode)
+    assert done == [r] and r.rejected
+    assert r.reject_reason == "over_length"
+    assert r.t_submit is not None and r.t_done is not None
+    assert r.queue_delay is not None and r.queue_delay >= 0
+
+
+def test_unknown_priority_class_rejected_at_submit():
+    b = ContinuousBatcher(num_slots=1, num_blocks=4, max_seq_len=256,
+                          block=128)
+    with pytest.raises(KeyError):
+        b.submit(Request(rid=0, prompt=np.arange(8), priority="platinum"))
 
 
 @pytest.mark.parametrize("token_budget", [None, 256])
