@@ -29,6 +29,8 @@ SUITES = [
     ("adapt_replan", "plan epochs: replanning under workload shift (§2.9)"),
     ("overload", "open-loop Poisson overload: per-class SLO attainment, "
                  "preemption + KV swap-to-host (§2.10)"),
+    ("seqpar", "sequence-parallel long-context decode: striped 2D path "
+               "latency + per-axis imbalance vs 1D (§2.11)"),
 ]
 
 # fast subset exercising the serving hot paths (CI perf smoke); the decode
@@ -36,9 +38,11 @@ SUITES = [
 # latency series has a per-commit trajectory, adapt_replan refreshes
 # BENCH_adapt.json so epoch-swap recovery/latency regress visibly, and
 # overload refreshes BENCH_overload.json (short burst profile) so graceful
-# degradation (per-class attainment under preemption) regresses visibly too
+# degradation (per-class attainment under preemption) regresses visibly too,
+# and seqpar refreshes BENCH_seqpar.json so the striped 2D decode path's
+# merge overhead and per-axis imbalance regress visibly (§2.11)
 SMOKE = ("load_balance", "latency_attention", "decode_pack", "serving",
-         "adapt_replan", "overload")
+         "adapt_replan", "overload", "seqpar")
 
 
 def main() -> int:

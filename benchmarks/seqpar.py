@@ -1,0 +1,185 @@
+"""Sequence-parallel long-context decode — the series behind
+``BENCH_seqpar.json`` (DESIGN.md §2.11).
+
+At 32k-128k resident tokens (quick: 8k-16k) the single-pool 1D
+head-parallel decode path is compared against the striped 2D path this
+repo serves long contexts with: the pool's physical blocks are owned in
+contiguous stripes by ``S`` virtual seq shards, the 2D packer splits every
+(slot, head) run into per-stripe sub-runs, and one flash-decoding merge
+combines the per-stripe partials.  Both paths execute the SAME selections
+through the same packed executor, so the measured delta is the striping
+machinery itself (per-stripe pass dispatch + the merge combine), not
+different math — outputs are asserted to match.
+
+Reported per resident-token scale:
+
+- ``t_1d`` / ``t_2d``: mean decode-attention latency, 1D vs striped at
+  each seq factor (single-host emulation: stripe passes run sequentially,
+  so this bounds the merge + dispatch overhead a real ``seq`` mesh axis
+  amortizes in parallel);
+- per-axis imbalance: the 2D packer's max-cell, model-marginal and
+  stripe-marginal imbalance vs the 1D packer's makespan imbalance on the
+  same skewed-budget tick.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.worklist import (
+    DEC_FIELDS,
+    extend_packed_items,
+    pack_decode_items,
+    pack_decode_items_2d,
+    pow2_bucket,
+)
+from repro.kernels import ops
+from repro.kernels.flash_decode import merge_partials
+
+BLOCK = 128
+B, HKV, G, D = 4, 8, 4, 64
+DM = 4                       # model shards for the imbalance comparison
+
+
+def _time(f, *args, iters=5):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f(*args).block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def _skewed_selection(nkv_resident, rng):
+    """Skewed per-head budgets (the paper's heterogeneity) against each
+    slot's resident blocks: ``[B, Hkv, nb_cap]`` int32, -1 pad."""
+    nb_per_head = np.minimum(
+        np.array([nkv_resident, nkv_resident // 2, 16, 8, 4, 4, 2, 2]),
+        nkv_resident)[:HKV]
+    nb_cap = int(nb_per_head.max())
+    ids = np.full((B, HKV, nb_cap), -1, np.int32)
+    for b in range(B):
+        for h in range(HKV):
+            n = max(1, int(nb_per_head[h]))
+            recent = range(max(0, nkv_resident - max(1, n - 1)),
+                           nkv_resident)
+            sel = sorted(set(([0] if n > 1 else []) + list(recent)))[:n]
+            ids[b, h, :len(sel)] = sel
+    return ids
+
+
+def _flat_1d(wl, bucket):
+    return extend_packed_items(wl.items, bucket).reshape(-1, DEC_FIELDS)
+
+
+def _flat_2d(wl, bucket, S):
+    ext = extend_packed_items(
+        wl.items.reshape(S, wl.padded_length, DEC_FIELDS), bucket)
+    return ext.reshape(S, bucket, DEC_FIELDS)
+
+
+def run_scale(resident_tokens: int, seq_factors, rng, iters) -> dict:
+    # ``resident_tokens`` is the POOL total: B slots of equal length
+    nkv = resident_tokens // (B * BLOCK)   # per-slot resident blocks
+    N = B * nkv                            # pool blocks (fully resident)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    # f32 (see decode_pack): avoids the XLA CPU whole-pool convert hoist
+    # that would swamp the grid-length signal on the reference path
+    q = jax.random.normal(ks[0], (B, HKV * G, 1, D), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (N, HKV, BLOCK, D), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (N, HKV, BLOCK, D), jnp.float32)
+    # interleaved physical placement: logical block j of slot b lands on
+    # physical id j*B + b, so every stripe owns a share of every slot
+    table = (np.arange(nkv, dtype=np.int32)[None] * B
+             + np.arange(B, dtype=np.int32)[:, None])
+    pos = np.full((B,), nkv * BLOCK - 1, np.int32)
+    ids = _skewed_selection(nkv, rng)
+
+    wl1 = pack_decode_items(ids, num_shards=1, block=BLOCK)
+    bucket = pow2_bucket(wl1.padded_length)
+    items1 = jnp.asarray(_flat_1d(wl1, bucket))
+    tbl_j, pos_j = jnp.asarray(table), jnp.asarray(pos)
+
+    f1 = jax.jit(lambda it: ops.flash_decode_packed_paged(
+        q, k_pool, v_pool, it, tbl_j, pos_j, block_kv=BLOCK))
+    o1 = f1(items1)
+    t1 = _time(f1, items1, iters=iters)
+
+    row = {"resident_tokens": resident_tokens, "pool_blocks": int(N),
+           "grid_1d": int(items1.shape[0]), "t_1d_s": t1,
+           "imbalance_1d": float(pack_decode_items(
+               ids, num_shards=DM, block=BLOCK).imbalance),
+           "striped": {}}
+    for S in seq_factors:
+        stripe_size = N // S
+        stripe_of = np.where(table >= 0, table // stripe_size,
+                             -1).astype(np.int32)
+        wl2 = pack_decode_items_2d(ids, stripe_of, num_stripes=S,
+                                   num_shards=1, block=BLOCK)
+        b2 = pow2_bucket(wl2.padded_length)
+        items2 = jnp.asarray(_flat_2d(wl2, b2, S))
+
+        def striped(it, S=S):
+            parts = [ops.flash_decode_packed_paged(
+                q, k_pool, v_pool, it[s], tbl_j, pos_j,
+                block_kv=BLOCK, partials=True) for s in range(S)]
+            outs = jnp.stack([p[0].reshape(B, HKV, G, D) for p in parts])
+            return merge_partials(outs,
+                                  jnp.stack([p[1] for p in parts]),
+                                  jnp.stack([p[2] for p in parts]))
+        f2 = jax.jit(striped)
+        o2 = f2(items2).reshape(B, HKV * G, 1, D)
+        err = float(jnp.abs(o2 - o1.astype(jnp.float32)).max())
+        assert err < 1e-5, (S, err)
+        t2 = _time(f2, items2, iters=iters)
+        wl2d = pack_decode_items_2d(ids, stripe_of, num_stripes=S,
+                                    num_shards=DM, block=BLOCK)
+        row["striped"][str(S)] = {
+            "grid_2d": int(S * items2.shape[1]),
+            "t_2d_s": t2,
+            "overhead_vs_1d": t2 / t1,
+            "max_err": err,
+            "imbalance_max_cell": float(wl2d.imbalance),
+            "imbalance_model": float(wl2d.model_imbalance),
+            "imbalance_stripe": float(wl2d.stripe_imbalance),
+        }
+    return row
+
+
+def run(out_dir: str, quick: bool = False) -> list[tuple[str, float]]:
+    rng = np.random.default_rng(0)
+    scales = ((8192, 16384) if quick else (32768, 65536, 131072))
+    seq_factors = (2, 4)
+    iters = 3 if quick else 5
+    rows_json = [run_scale(r, seq_factors, rng, iters) for r in scales]
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_seqpar.json"), "w") as fh:
+        json.dump({
+            "config": {"B": B, "Hkv": HKV, "G": G, "D": D, "block": BLOCK,
+                       "model_shards": DM, "dtype": "float32",
+                       "seq_factors": list(seq_factors), "iters": iters,
+                       "quick": quick},
+            "scales": rows_json,
+        }, fh, indent=1)
+
+    rows: list[tuple[str, float]] = []
+    for r in rows_json:
+        tag = f"{r['resident_tokens'] // 1024}k"
+        rows.append((f"t1d_{tag}_s", r["t_1d_s"]))
+        rows.append((f"imb1d_{tag}", r["imbalance_1d"]))
+        for S, v in r["striped"].items():
+            rows.append((f"t2d_{tag}_S{S}_s", v["t_2d_s"]))
+            rows.append((f"overhead_{tag}_S{S}", v["overhead_vs_1d"]))
+            rows.append((f"imb_model_{tag}_S{S}", v["imbalance_model"]))
+            rows.append((f"imb_stripe_{tag}_S{S}", v["imbalance_stripe"]))
+    return rows
+
+
+if __name__ == "__main__":
+    for k, v in run(os.path.join(os.path.dirname(__file__), "..",
+                                 "artifacts", "bench"), quick=True):
+        print(f"seqpar,{k},{v:.6g}")

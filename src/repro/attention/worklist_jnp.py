@@ -322,8 +322,10 @@ def packed_decode_attention(
         pr = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m - m_new)
         l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
+        # f32 p.V dot (see flash_decode_reference): keeps the striped-merge
+        # path bit-compatible with single-pass math
         acc_new = acc * alpha + jax.lax.dot_general(
-            pr.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
+            pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         acc = jnp.where(ok, acc_new, acc)
         m = jnp.where(ok, m_new, m)
@@ -419,8 +421,10 @@ def packed_decode_attention_paged(
         pr = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m - m_new)
         l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
+        # f32 p.V dot (see flash_decode_reference): keeps the striped-merge
+        # path bit-compatible with single-pass math
         acc_new = acc * alpha + jax.lax.dot_general(
-            pr.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
+            pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         acc = jnp.where(ok, acc_new, acc)
         m = jnp.where(ok, m_new, m)

@@ -307,7 +307,7 @@ def flash_decode_reference(
                 kh, (safe * block_kv, 0), (block_kv, dh))
             vt = jax.lax.dynamic_slice(
                 vh, (safe * block_kv, 0), (block_kv, dh))
-            # mixed-precision dots (f32 accumulate) WITHOUT an explicit
+            # mixed-precision QK dot (f32 accumulate) WITHOUT an explicit
             # tile convert: a convert-of-slice is loop-invariant-hoistable
             # into a full-cache f32 copy, which would silently reintroduce
             # the memory traffic this path exists to avoid.
@@ -324,8 +324,13 @@ def flash_decode_reference(
             pr = jnp.where(mask, jnp.exp(s - m_new), 0.0)
             alpha = jnp.exp(m - m_new)
             l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
+            # the p.V dot stays f32 like the Pallas kernel: quantizing
+            # ``pr`` to the cache dtype would put it on a grid that depends
+            # on the RUNNING max, which differs between a single pass and
+            # per-stripe partial passes — the striped merge (§2.11) would
+            # then diverge from the 1D path by ~cache-dtype eps, not ulps
             acc_new = acc * alpha + jax.lax.dot_general(
-                pr.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
+                pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
             acc = jnp.where(ok, acc_new, acc)
             m = jnp.where(ok, m_new, m)
@@ -559,8 +564,10 @@ def flash_decode_paged_reference(
                 pr = jnp.where(mask, jnp.exp(s - m_new), 0.0)
                 alpha = jnp.exp(m - m_new)
                 l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
+                # f32 p.V dot (see flash_decode_reference): keeps the
+                # striped-merge path bit-compatible with single-pass math
                 acc_new = acc * alpha + jax.lax.dot_general(
-                    pr.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
+                    pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
                     preferred_element_type=jnp.float32)
                 acc = jnp.where(ok, acc_new, acc)
                 m = jnp.where(ok, m_new, m)
@@ -589,14 +596,32 @@ def merge_partials(outs, ms, ls):
     """Flash-decoding combine of per-shard partials along a leading axis.
 
     ``outs [S, ..., D]`` shard-normalized outputs, ``ms``/``ls [S, ...]``.
-    Returns the exact global softmax output (used by tests; the shard_map
-    island does the same algebra with psum/pmax collectives).
+    Returns the exact global softmax output (used by tests and the
+    sequence-striped decode path; the shard_map island does the same
+    algebra with psum/pmax collectives).
+
+    A fully-masked shard — ``m == NEG_INF`` (or ``-inf``), ``l == 0``, the
+    identity the executors emit when a shard's stripe holds none of a
+    row's blocks — must merge as the EXACT identity: its weight is forced
+    to zero (a ``-inf`` max would otherwise turn ``exp(m - gm)`` into
+    ``exp(nan)``), the max is taken over contributing shards only, and a
+    row with exactly one contributing shard returns that shard's output
+    bitwise (no ``x * l / l`` renormalization ulp).  All shards masked
+    returns zeros, never ``0/0`` NaN.
     """
-    gm = jnp.max(ms, axis=0)
-    w = jnp.exp(ms - gm[None]) * ls
-    num = jnp.sum(outs.astype(jnp.float32) * w[..., None], axis=0)
+    outs32 = outs.astype(jnp.float32)
+    real = ls > 0.0                                    # [S, ...]
+    nreal = real.sum(axis=0)                           # [...]
+    gm = jnp.max(jnp.where(real, ms, NEG_INF), axis=0)
+    w = jnp.where(real, jnp.exp(ms - gm[None]) * ls, 0.0)
+    num = jnp.sum(outs32 * w[..., None], axis=0)
     den = jnp.maximum(jnp.sum(w, axis=0), 1e-30)
-    return (num / den[..., None]).astype(outs.dtype)
+    merged = num / den[..., None]
+    # <= 1 contributing shard: bypass the renormalization entirely —
+    # sum-of-masked picks the single real shard's output exactly (or 0)
+    single = jnp.sum(jnp.where(real[..., None], outs32, 0.0), axis=0)
+    out = jnp.where((nreal <= 1)[..., None], single, merged)
+    return out.astype(outs.dtype)
 
 
 __all__ = [

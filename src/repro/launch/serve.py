@@ -54,9 +54,17 @@ def main():
     ap.add_argument("--kv-blocks", type=int, default=None,
                     help="device KV pool size in blocks (default: "
                          "slots * max_seq / block)")
+    # sequence-parallel long context (DESIGN.md §2.11)
+    ap.add_argument("--seq-shards", type=int, default=1,
+                    help="stripe the paged KV pool across N seq shards "
+                         "(2D head x sequence layout; 1 = head-parallel "
+                         "only). Greedy outputs are identical at any "
+                         "value.")
     args = ap.parse_args()
     if args.drift_threshold is not None and args.telemetry_every <= 0:
         ap.error("--drift-threshold needs --telemetry-every > 0")
+    if args.seq_shards < 1:
+        ap.error("--seq-shards must be >= 1")
 
     spec = ARCHS[args.arch]
     if spec.module not in ("transformer",):
@@ -78,7 +86,8 @@ def main():
         replan_every=args.replan_every,
         drift_threshold=args.drift_threshold,
         admission=args.admission, preemption=args.preemption,
-        host_swap_blocks=args.host_blocks), profile=profile)
+        host_swap_blocks=args.host_blocks,
+        seq_shards=args.seq_shards), profile=profile)
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, min(cfg.vocab_size, 256),
@@ -94,6 +103,10 @@ def main():
     log.info("served %d requests, %d tokens in %.1fs (%.1f tok/s)",
              len(done), n_tok, dt, n_tok / dt)
     bs = eng.decode_bubble_stats
+    if args.seq_shards > 1:
+        log.info("2D decode: head imbalance %.3f, stripe imbalance %.3f, "
+                 "%d seq-merge collectives", bs["mean_head_imbalance"],
+                 bs["mean_stripe_imbalance"], bs["merge_collectives"])
     if bs["swap"]["swapped_out"] or args.preemption:
         log.info("preemption: %d swapped out / %d back in (%d blocks, "
                  "%.1f KiB to host)", bs["swap"]["swapped_out"],

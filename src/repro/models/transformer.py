@@ -755,10 +755,27 @@ def prefill_chunk_paged(params, pool, tokens, table, q_offset,
     return logits, new_pool
 
 
+def _merge_stripe_partials(parts, B, hkv, dh, dtype):
+    """Combine per-stripe flash-decode partials (DESIGN.md §2.11).
+
+    ``parts``: list of ``(out [B, H, 1, dh] f32, m [B, Hkv, G],
+    l [B, Hkv, G])`` — one per virtual seq stripe.  Stacks them on a
+    leading stripe axis and applies the exact flash-decoding
+    ``(out, m, l)`` merge; fully-masked stripes (``l == 0``) drop out of
+    the combine identically (no 0/0).  Returns ``[B, H, 1, dh]``.
+    """
+    outs = jnp.stack([o.reshape(B, hkv, -1, dh) for o, _, _ in parts])
+    ms = jnp.stack([m for _, m, _ in parts])
+    ls = jnp.stack([l for _, _, l in parts])
+    merged = kernel_ops.merge_partials(outs, ms, ls)   # [B, Hkv, G, dh]
+    return merged.reshape(B, -1, 1, dh).astype(dtype)
+
+
 def decode_step_paged(params, pool, token, pos, table,
                       cfg: TransformerConfig, *,
                       block_ids=None, packed_items=None, cache_len=None,
-                      active=None):
+                      active=None, seq_stripes: int = 1,
+                      stripe_size: int | None = None):
     """One paged decode step (DESIGN.md §2.7).
 
     token [B] int32; pos scalar OR [B] int32; pool [L, 2, N, Hkv, block,
@@ -774,9 +791,24 @@ def decode_step_paged(params, pool, token, pos, table,
     blocks LOGICAL).  None for both = dense decode over the resident
     prefix (a gathered contiguous view — the contiguous baseline's math
     bit-for-bit).  Returns (logits [B, V], new pool).
+
+    Sequence striping (DESIGN.md §2.11): ``seq_stripes > 1`` emulates the
+    2D head x sequence mesh on one device — the pool's usable blocks are
+    owned in contiguous ``stripe_size`` ranges by ``seq_stripes`` virtual
+    seq shards, attention runs one partial pass per stripe over only that
+    stripe's blocks, and partials combine via the flash-decoding
+    ``(out, m, l)`` merge (``kernels.flash_decode.merge_partials``) —
+    exactly the algebra the ``flash_decode_attention_2d`` island performs
+    with one psum/pmax collective along ``seq``.  ``packed_items`` then
+    carries per-stripe lists ``[L, S, Lb, DEC_FIELDS]``; ``block_ids``
+    and dense mode restrict each pass via a stripe-masked table.  The KV
+    write is stripe-oblivious (the table routes it to the owning block).
     """
     assert block_ids is None or packed_items is None, \
         "block_ids and packed_items are mutually exclusive"
+    if seq_stripes > 1:
+        assert stripe_size is not None, \
+            "striped decode needs the allocator's stripe_size"
     packed = packed_items is not None
     sel = packed_items if packed else block_ids
     B = token.shape[0]
@@ -822,16 +854,51 @@ def decode_step_paged(params, pool, token, pos, table,
         kc = write(layer_pool[0], k)
         vc = write(layer_pool[1], v)
         window = _window_of(cfg, l)
+
+        def stripe_table(s):
+            # entries another stripe owns become -1 (masked): each block
+            # is computed by exactly the stripe that physically holds it
+            mine = (tbl >= 0) & (tbl // stripe_size == s)
+            return jnp.where(mine, tbl, -1)
+
         if items_l is not None and packed:
-            o = kernel_ops.flash_decode_packed_paged(
-                q, kc, vc, items_l, tbl, pos_arr, block_kv=block,
-                window=window)
+            if seq_stripes > 1:
+                # items_l [S, Lb, F]: one partial pass per stripe (the
+                # per-stripe split already routes every run's sub-runs to
+                # their owning stripes), then the flash-decoding merge —
+                # the single-device twin of the island's psum over 'seq'
+                parts = [kernel_ops.flash_decode_packed_paged(
+                    q, kc, vc, items_l[s], tbl, pos_arr, block_kv=block,
+                    window=window, partials=True)
+                    for s in range(seq_stripes)]
+                o = _merge_stripe_partials(parts, B, hkv, dh, q.dtype)
+            else:
+                o = kernel_ops.flash_decode_packed_paged(
+                    q, kc, vc, items_l, tbl, pos_arr, block_kv=block,
+                    window=window)
         elif items_l is not None:
             ids_b = (jnp.broadcast_to(items_l[None], (B,) + items_l.shape)
                      if items_l.ndim == 2 else items_l)
-            o = kernel_ops.flash_decode_paged(
-                q, kc, vc, ids_b, tbl, pos_arr, block_kv=block,
-                window=window)
+            if seq_stripes > 1:
+                parts = [kernel_ops.flash_decode_paged(
+                    q, kc, vc, ids_b, stripe_table(s), pos_arr,
+                    block_kv=block, window=window, partials=True)
+                    for s in range(seq_stripes)]
+                o = _merge_stripe_partials(parts, B, hkv, dh, q.dtype)
+            else:
+                o = kernel_ops.flash_decode_paged(
+                    q, kc, vc, ids_b, tbl, pos_arr, block_kv=block,
+                    window=window)
+        elif seq_stripes > 1:
+            # dense under striping: every resident logical block selected,
+            # each stripe streams only its own via the masked table
+            ids_all = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
+                                       (B, hkv, T))
+            parts = [kernel_ops.flash_decode_paged(
+                q, kc, vc, ids_all, stripe_table(s), pos_arr,
+                block_kv=block, window=window, partials=True)
+                for s in range(seq_stripes)]
+            o = _merge_stripe_partials(parts, B, hkv, dh, q.dtype)
         else:
             view = lambda c: jnp.moveaxis(
                 jnp.take(c, jnp.maximum(tbl, 0), axis=0), 1, 2

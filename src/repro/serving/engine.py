@@ -58,6 +58,7 @@ from repro.core.worklist import (
     chunk_items,
     extend_packed_items,
     pack_decode_items,
+    pack_decode_items_2d,
     pow2_bucket,
     worklist_from_budgets,
 )
@@ -137,6 +138,13 @@ class EngineConfig:
     preemption: bool = False
     # host swap-tier capacity in blocks (None = unbounded).
     host_swap_blocks: int | None = None
+    # -- sequence-parallel long context (DESIGN.md §2.11) -----------------
+    # number of seq-axis stripes the paged pool is split into: each stripe
+    # owns a contiguous block-id range, decode runs one partial attention
+    # pass per stripe and merges (out, m, l) — the single-host emulation of
+    # the 2D (model x seq) mesh's per-device islands.  1 = the 1D head-
+    # parallel path, bitwise-unchanged.  Requires cache_layout="paged".
+    seq_shards: int = 1
 
 
 class Engine:
@@ -177,17 +185,27 @@ class Engine:
         # an epoch swap re-derives on demand and old-epoch entries either
         # age out of the LRU memos or are purged (plain dicts)
         self._worklists_cache: dict[tuple, list] = {}
+        if engine_cfg.seq_shards > 1:
+            assert engine_cfg.cache_layout == "paged", \
+                "seq_shards > 1 needs cache_layout='paged' (stripes own " \
+                "contiguous ranges of the block pool)"
         if engine_cfg.cache_layout == "paged":
             assert engine_cfg.max_seq_len % engine_cfg.block == 0, \
                 "paged layout needs max_seq_len % block == 0"
             nblocks = (engine_cfg.num_kv_blocks
                        or engine_cfg.num_slots
                        * (engine_cfg.max_seq_len // engine_cfg.block))
+            # stripes must tile the pool exactly: round the usable block
+            # count UP to a seq_shards multiple (never down — capacity is
+            # an admission guarantee)
+            ss = engine_cfg.seq_shards
+            nblocks = -(-nblocks // ss) * ss
             self.kv = PagedKVCache(
                 lambda n: tfm.init_paged_cache(cfg, n, engine_cfg.block),
                 num_blocks=nblocks, block=engine_cfg.block,
                 table_width=engine_cfg.max_seq_len // engine_cfg.block,
-                host_blocks=engine_cfg.host_swap_blocks)
+                host_blocks=engine_cfg.host_swap_blocks,
+                stripes=engine_cfg.seq_shards)
             # self.cache is the LIVE pool threaded through the jitted
             # steps (donated); self.kv keeps the allocator/tables and is
             # re-pointed at the new buffer after every step
@@ -235,6 +253,8 @@ class Engine:
         # the executed grid vs the padded baseline) — see decode_bubble_stats
         self.decode_stats = {"ticks": 0, "real_items": 0, "grid_items": 0,
                              "padded_grid_items": 0, "imbalance_sum": 0.0,
+                             "head_imb_sum": 0.0, "stripe_imb_sum": 0.0,
+                             "merge_collectives": 0,
                              "plan_hits": 0, "plan_misses": 0,
                              "plan_prefetches": 0, "last": {}}
         self._rng = jax.random.PRNGKey(0)
@@ -483,14 +503,84 @@ class Engine:
         }
         return items, stats
 
-    def _plan_for(self, nb_sig: tuple[int, ...], prefetch: bool = False):
+    def _stripe_of_table(self, table: np.ndarray) -> np.ndarray:
+        """[B, T] owning seq stripe of each LOGICAL block position (-1 for
+        unmapped) — stripe membership is a property of the PHYSICAL id."""
+        ss = self.kv.stripe_size
+        t = np.asarray(table)
+        return np.where(t >= 0, t // ss, -1).astype(np.int32)
+
+    def _build_packed_plan_2d(self, nb_sig: tuple[int, ...],
+                              stripe_of: np.ndarray):
+        """2D twin of :meth:`_build_packed_plan` (DESIGN.md §2.11): each
+        (slot, head) run splits into per-stripe sub-runs (stripe fixed by
+        block placement), ``best_partition_2d`` picks model shards to
+        minimize the max (shard, stripe) CELL, and every cell pads onto
+        one pow2 bucket.  Returns ``(items [L, S, Dm*bucket, DEC_FIELDS]
+        int32, stats)`` — axis 1 is the stripe axis ``decode_step_paged``
+        loops over (one partial pass per stripe, merged)."""
+        cfg, ecfg = self.cfg, self.ecfg
+        S, Dm = ecfg.seq_shards, ecfg.num_model_shards
+        per_slot = [self._decode_ids_for_nblocks(nb) for nb in nb_sig]
+        bids = np.stack(per_slot, axis=1)       # [L, B, Hkv, nb_cap]
+        wls = [pack_decode_items_2d(bids[l], stripe_of, num_stripes=S,
+                                    num_shards=Dm, block=ecfg.block)
+               for l in range(cfg.num_layers)]
+        bucket = pow2_bucket(max(wl.padded_length for wl in wls),
+                             lo=8, hi=self._packed_item_cap())
+
+        def flat(wl):
+            # [Dm, S, Lp, F] -> per-cell pad to bucket -> [S, Dm*bucket, F]
+            # (stripe-major: the executor's pass s consumes its Dm shards'
+            # items as one flat single-host list)
+            ext = extend_packed_items(
+                wl.items.reshape(Dm * S, wl.padded_length, DEC_FIELDS),
+                bucket)
+            return np.swapaxes(
+                ext.reshape(Dm, S, bucket, DEC_FIELDS), 0, 1
+            ).reshape(S, Dm * bucket, DEC_FIELDS)
+
+        items = np.stack([flat(wl) for wl in wls])
+        real = sum(wl.total_real_items for wl in wls)
+        grid = cfg.num_layers * Dm * S * bucket
+        padded_grid = int(bids.size)
+        stats = {
+            "epoch": self.epoch,
+            "bucket": bucket,
+            "real_items": real,
+            "grid_items": grid,
+            "padded_grid_items": padded_grid,
+            "padding_waste": 1.0 - real / grid if grid else 0.0,
+            "padded_path_waste": (1.0 - real / padded_grid
+                                  if padded_grid else 0.0),
+            "imbalance": float(np.mean([wl.imbalance for wl in wls])),
+            "model_imbalance": float(np.mean(
+                [wl.model_imbalance for wl in wls])),
+            "stripe_imbalance": float(np.mean(
+                [wl.stripe_imbalance for wl in wls])),
+        }
+        return items, stats
+
+    def _plan_key(self, nb_sig: tuple[int, ...],
+                  stripe_of: np.ndarray | None) -> tuple:
+        """Plan-cache key: (epoch, block counts[, stripe placement]) — the
+        stripe signature makes a plan valid only for the exact physical
+        placement it was packed against (swap/preempt cycles remap ids)."""
+        if stripe_of is None:
+            return (self.epoch, nb_sig)
+        return (self.epoch, nb_sig, tuple(map(tuple, stripe_of.tolist())))
+
+    def _plan_for(self, nb_sig: tuple[int, ...],
+                  stripe_of: np.ndarray | None = None,
+                  prefetch: bool = False):
         """LRU-memoized packed plan for an ``(epoch, tick signature)`` —
         the epoch key means a replan can never serve a stale epoch's
         selections, while old-epoch plans age out of the LRU lazily."""
-        key = (self.epoch, nb_sig)
+        key = self._plan_key(nb_sig, stripe_of)
         got = self._packed_plan_cache.get(key)
         if got is None:
-            got = self._build_packed_plan(nb_sig)
+            got = (self._build_packed_plan(nb_sig) if stripe_of is None
+                   else self._build_packed_plan_2d(nb_sig, stripe_of))
             self._packed_plan_cache[key] = got
             if len(self._packed_plan_cache) > self._packed_plan_cap:
                 self._packed_plan_cache.popitem(last=False)
@@ -517,8 +607,18 @@ class Engine:
         pos_all = np.zeros((self.ecfg.num_slots,), np.int32)
         pos_all[list(slots)] = positions
         sig = self._nb_sig(pos_all)
-        if (self.epoch, sig) not in self._packed_plan_cache:
-            self._plan_for(sig, prefetch=True)
+        stripe_of = None
+        if self.paged and self.ecfg.seq_shards > 1:
+            # best-effort: if a slot maps a NEW block before the next tick
+            # the stripe signature shifts and this plan simply goes unused
+            # (the key carries the placement — never a wrong plan)
+            table = np.full((self.ecfg.num_slots, self.kv.table_width), -1,
+                            np.int32)
+            for s in slots:
+                table[s] = self._table_for_slot(s)
+            stripe_of = self._stripe_of_table(table)
+        if self._plan_key(sig, stripe_of) not in self._packed_plan_cache:
+            self._plan_for(sig, stripe_of, prefetch=True)
 
     def _record_tick(self, stats: dict) -> None:
         s = self.decode_stats
@@ -527,6 +627,11 @@ class Engine:
         s["grid_items"] += stats["grid_items"]
         s["padded_grid_items"] += stats["padded_grid_items"]
         s["imbalance_sum"] += stats["imbalance"]
+        # per-axis decomposition (§2.11): a 1D tick's whole imbalance is
+        # head-axis by definition; striped ticks record both marginals
+        s["head_imb_sum"] += stats.get("model_imbalance",
+                                       stats["imbalance"])
+        s["stripe_imb_sum"] += stats.get("stripe_imbalance", 1.0)
         s["last"] = stats
         self._epoch_stats[self.epoch]["ticks"] += 1
 
@@ -559,6 +664,15 @@ class Engine:
             "grid_vs_padded": grid / padded if padded else 1.0,
             "mean_imbalance": (s["imbalance_sum"] / s["ticks"]
                                if s["ticks"] else 1.0),
+            # sequence-parallel long context (DESIGN.md §2.11): per-axis
+            # imbalance marginals + the seq-merge collective count — makes
+            # "which axis is the bottleneck" observable per run
+            "seq_shards": self.ecfg.seq_shards,
+            "mean_head_imbalance": (s["head_imb_sum"] / s["ticks"]
+                                    if s["ticks"] else 1.0),
+            "mean_stripe_imbalance": (s["stripe_imb_sum"] / s["ticks"]
+                                      if s["ticks"] else 1.0),
+            "merge_collectives": s["merge_collectives"],
             "plan_hits": s["plan_hits"],
             "plan_misses": s["plan_misses"],
             "plan_prefetches": s["plan_prefetches"],
@@ -1096,15 +1210,20 @@ class Engine:
         if self._decode_jit is None:
             sparse = self.ecfg.attention == "sparse"
             if self.paged:
+                S = self.ecfg.seq_shards
+                ss = self.kv.stripe_size if S > 1 else None
+
                 def run(params, pool, token, pos, table, bids, act):
                     return tfm.decode_step_paged(
                         params, pool, token, pos, table, self.cfg,
-                        block_ids=bids, cache_len=pos + 1, active=act)
+                        block_ids=bids, cache_len=pos + 1, active=act,
+                        seq_stripes=S, stripe_size=ss)
 
                 def run_dense(params, pool, token, pos, table, act):
                     return tfm.decode_step_paged(
                         params, pool, token, pos, table, self.cfg,
-                        block_ids=None, cache_len=pos + 1, active=act)
+                        block_ids=None, cache_len=pos + 1, active=act,
+                        seq_stripes=S, stripe_size=ss)
             else:
                 def run(params, cache, token, pos, bids, act):
                     return tfm.decode_step(
@@ -1122,19 +1241,25 @@ class Engine:
                                              donate_argnums=donate))
         return self._decode_jit
 
-    def _decode_packed_fn(self, flat_len: int):
+    def _decode_packed_fn(self, flat_len):
         """Jitted packed decode step for one item-bucket length.  The item
-        table is DATA ([L, flat_len, DEC_FIELDS]) so plan changes within a
-        bucket never recompile; distinct buckets compile once each
-        (O(log worst-case) total — the prefill-bucket policy applied to
-        grid lengths).  The cache is donated."""
+        table is DATA ([L, flat_len, DEC_FIELDS], or [L, S, flat_len,
+        DEC_FIELDS] under striping — the key is then the (S, flat_len)
+        shape pair) so plan changes within a bucket never recompile;
+        distinct buckets compile once each (O(log worst-case) total — the
+        prefill-bucket policy applied to grid lengths).  The cache is
+        donated."""
         fn = self._decode_packed_jit.get(flat_len)
         if fn is None:
             if self.paged:
+                S = self.ecfg.seq_shards
+                ss = self.kv.stripe_size if S > 1 else None
+
                 def run(params, pool, token, pos, table, items, act):
                     return tfm.decode_step_paged(
                         params, pool, token, pos, table, self.cfg,
-                        packed_items=items, cache_len=pos + 1, active=act)
+                        packed_items=items, cache_len=pos + 1, active=act,
+                        seq_stripes=S, stripe_size=ss)
             else:
                 def run(params, cache, token, pos, items, act):
                     return tfm.decode_step(
@@ -1266,11 +1391,14 @@ class Engine:
             pending_probe = self._dispatch_telemetry(
                 slots, tok_all, pos_all, np.stack(per_slot, axis=1),
                 table=table)
+        striped = self.paged and self.ecfg.seq_shards > 1
         if packed:
             # cost-packed ragged worklist: grid length is this tick's true
             # selected-block count (bucketed), not B x Hkv x max-budget
-            items, stats = self._plan_for(self._nb_sig(pos_all))
-            run = self._decode_packed_fn(items.shape[1])
+            stripe_of = self._stripe_of_table(table) if striped else None
+            items, stats = self._plan_for(self._nb_sig(pos_all), stripe_of)
+            run = self._decode_packed_fn(
+                items.shape[1:3] if striped else items.shape[1])
             logits, cache = run(self.params, self.cache,
                                 jnp.asarray(tok_all),
                                 jnp.asarray(pos_all),
@@ -1302,6 +1430,10 @@ class Engine:
                                 *extra,
                                 jnp.asarray(act_all))
         self._set_cache(cache)
+        if striped:
+            # one flash-decoding (out, m, l) combine per layer — on the 2D
+            # mesh this is the single collective along the seq axis
+            self.decode_stats["merge_collectives"] += self.cfg.num_layers
         if packed:
             # the device step above is dispatched asynchronously; build the
             # NEXT tick's plan now, before sampling forces a sync — host

@@ -48,24 +48,69 @@ class BlockAllocator:
     num_blocks: int
     block: int = 128
     host_blocks: int | None = None   # swap-tier capacity (None = unbounded)
+    # sequence-parallel striping (DESIGN.md §2.11): the pool is split into
+    # ``stripes`` contiguous id ranges, stripe s owning blocks
+    # ``[s * stripe_size, (s+1) * stripe_size)``.  Each stripe maps to one
+    # `seq`-axis shard of the device pool, so block id -> owning device is
+    # a pure function of the id (``stripe_of``) and reserve/map/free/swap
+    # all route to the owning stripe's free list.  stripes == 1 is the
+    # pre-§2.11 single-pool behavior exactly.
+    stripes: int = 1
 
     def __post_init__(self):
-        self._free: list[int] = list(range(self.num_blocks))
+        if self.stripes < 1:
+            raise ValueError(f"stripes must be >= 1, got {self.stripes}")
+        if self.num_blocks % self.stripes:
+            raise ValueError(
+                f"num_blocks {self.num_blocks} not divisible by "
+                f"stripes {self.stripes} — stripe-owned pools need equal "
+                f"contiguous id ranges per seq shard")
+        self.stripe_size = self.num_blocks // self.stripes
+        # per-stripe free lists; stripe s owns [s*size, (s+1)*size)
+        self._free: list[list[int]] = [
+            list(range(s * self.stripe_size, (s + 1) * self.stripe_size))
+            for s in range(self.stripes)]
         self._tables: dict[int, list[int]] = {}
         self._lens: dict[int, int] = {}       # cache-resident tokens
         self._reserved: dict[int, int] = {}   # worst-case blocks per seq
         self._host_lens: dict[int, int] = {}  # swapped-out resident tokens
         self._host_nblk: dict[int, int] = {}  # host blocks held per seq
 
+    # -- stripe views -------------------------------------------------------
+    def stripe_of(self, block_id: int) -> int:
+        """Owning stripe (= seq-axis shard) of a pool block id."""
+        return int(block_id) // self.stripe_size
+
+    def free_blocks_per_stripe(self) -> list[int]:
+        return [len(f) for f in self._free]
+
+    def free_ids(self) -> list[int]:
+        """All currently-free block ids, every stripe (test/introspection
+        view — allocation always routes through the per-stripe lists)."""
+        return [b for f in self._free for b in f]
+
+    def stripe_counts(self, seq_id: int) -> list[int]:
+        """Mapped blocks of ``seq_id`` per stripe — the engine's stripe
+        signature input (and the per-axis balance telemetry)."""
+        counts = [0] * self.stripes
+        for b in self._tables.get(seq_id, ()):
+            counts[self.stripe_of(b)] += 1
+        return counts
+
+    def _return_blocks(self, ids) -> None:
+        """Route freed blocks back to their owning stripes' free lists."""
+        for b in ids:
+            self._free[self.stripe_of(b)].append(b)
+
     # -- accounting views ---------------------------------------------------
     @property
     def free_blocks(self) -> int:
-        """Physically unmapped blocks."""
-        return len(self._free)
+        """Physically unmapped blocks (all stripes)."""
+        return sum(len(f) for f in self._free)
 
     @property
     def allocated_blocks(self) -> int:
-        return self.num_blocks - len(self._free)
+        return self.num_blocks - self.free_blocks
 
     @property
     def reserved_unmapped(self) -> int:
@@ -78,7 +123,7 @@ class BlockAllocator:
         """Admission headroom: free minus outstanding reservations.  Using
         this (not ``free_blocks``) for admission guarantees decode growth
         can never exhaust the pool mid-generation."""
-        return len(self._free) - self.reserved_unmapped
+        return self.free_blocks - self.reserved_unmapped
 
     def blocks_needed(self, num_tokens: int) -> int:
         return -(-num_tokens // self.block)
@@ -139,7 +184,7 @@ class BlockAllocator:
                 f"{self.blocks_needed(self._lens.get(seq_id, 0))}, "
                 f"free {self.host_free_blocks}")
         table = self._tables.pop(seq_id)
-        self._free.extend(table)
+        self._return_blocks(table)
         self._host_lens[seq_id] = self._lens.pop(seq_id)
         self._host_nblk[seq_id] = len(table)
         self._reserved.pop(seq_id)
@@ -176,9 +221,23 @@ class BlockAllocator:
     def conserves(self) -> bool:
         """The invariant the scheduler must uphold at every tick, extended
         over both tiers: device blocks match live lengths, host blocks
-        match swapped lengths, and no sequence is accounted twice."""
+        match swapped lengths, no sequence is accounted twice — and, under
+        striping, PER STRIPE: each stripe's mapped count equals the live
+        tables' blocks falling in its id range, with every id owned by
+        exactly one stripe (no cross-stripe leakage through free/swap)."""
         device_ok = self.allocated_blocks == sum(
             self.blocks_needed(n) for n in self._lens.values())
+        # per-stripe conservation: free + mapped == stripe_size, and every
+        # free-listed id actually belongs to the stripe holding it
+        mapped = [0] * self.stripes
+        for t in self._tables.values():
+            for b in t:
+                mapped[self.stripe_of(b)] += 1
+        stripes_ok = all(
+            len(self._free[s]) + mapped[s] == self.stripe_size
+            and all(self.stripe_of(b) == s for b in self._free[s])
+            for s in range(self.stripes))
+        device_ok = device_ok and stripes_ok
         host_ok = all(self._host_nblk[s] == self.blocks_needed(n)
                       for s, n in self._host_lens.items())
         no_dual = not (set(self._lens) & set(self._host_lens))
@@ -214,15 +273,26 @@ class BlockAllocator:
         return list(self._tables[seq_id])
 
     def _grow(self, seq_id: int, n_new: int) -> None:
-        if n_new > len(self._free):
+        if n_new > self.free_blocks:
             raise MemoryError(
-                f"KV pool exhausted: need {n_new}, free {len(self._free)}")
+                f"KV pool exhausted: need {n_new}, free {self.free_blocks}")
         table = self._tables[seq_id]
         if len(table) + n_new > self._reserved[seq_id]:
             raise MemoryError(
                 f"seq {seq_id} grows past its reservation "
                 f"({len(table)}+{n_new} > {self._reserved[seq_id]})")
-        table.extend(self._free.pop() for _ in range(n_new))
+        for _ in range(n_new):
+            # route each new block to the stripe with the most headroom
+            # (deterministic: ties break to the lowest stripe index), so a
+            # long sequence's blocks spread across the seq shards and the
+            # per-stripe decode load stays balanced — the placement half of
+            # the 2D packer's job (DESIGN.md §2.11).  stripes == 1 reduces
+            # to the old single-free-list pop.
+            s = max(range(self.stripes), key=lambda i: (len(self._free[i]),
+                                                        -i))
+            if not self._free[s]:
+                raise MemoryError("KV pool exhausted: all stripes empty")
+            table.append(self._free[s].pop())
 
     def append_token(self, seq_id: int) -> None:
         """Account one more cache-resident token; map a fresh block exactly
@@ -243,7 +313,7 @@ class BlockAllocator:
 
     def free(self, seq_id: int) -> None:
         """Release everything ``seq_id`` holds, on whichever tier."""
-        self._free.extend(self._tables.pop(seq_id, []))
+        self._return_blocks(self._tables.pop(seq_id, []))
         self._lens.pop(seq_id, None)
         self._reserved.pop(seq_id, None)
         self._host_lens.pop(seq_id, None)
@@ -265,13 +335,17 @@ class PagedKVCache:
     """
 
     def __init__(self, make_pool_fn, *, num_blocks: int, block: int,
-                 table_width: int, host_blocks: int | None = None):
+                 table_width: int, host_blocks: int | None = None,
+                 stripes: int = 1):
         self.pool = make_pool_fn(num_blocks + 1)
         self.alloc = BlockAllocator(num_blocks, block,
-                                    host_blocks=host_blocks)
+                                    host_blocks=host_blocks,
+                                    stripes=stripes)
         self.block = block
         self.trash_block = num_blocks
         self.table_width = table_width
+        self.stripes = stripes
+        self.stripe_size = self.alloc.stripe_size
 
     @property
     def num_blocks(self) -> int:

@@ -314,6 +314,75 @@ def flash_decode_attention_paged(mesh, *, block_kv=128, seq_axes=("model",),
     return attend
 
 
+def flash_decode_attention_2d(mesh, *, block_kv=128, model_axis="model",
+                              seq_axis="seq", batch_axes=None):
+    """2D head x sequence decode island (DESIGN.md §2.11).
+
+    The paged pool ``[N, Hkv, block, D]`` is sharded BOTH ways: kv heads
+    over ``model_axis`` (the HPLB axis) and pool blocks over ``seq_axis``
+    (contiguous stripes of ``N_loc = N // n_seq`` ids — exactly the
+    stripe-aware allocator's ownership ranges).  Each device ``(d, s)``
+    computes flash-decode partials for ITS kv-head shard over ITS stripe's
+    blocks: the GLOBAL per-slot table ``[B, T]`` is remapped stripe-local
+    inside the island (foreign/unmapped entries become -1, masked), so
+    selections stay LOGICAL and shard with their kv heads over
+    ``model_axis``.  Partials merge with ONE psum/pmax flash-decoding
+    combine along ``seq_axis`` ONLY — heads are disjoint along
+    ``model_axis``, so no collective ever crosses it.  A stripe holding
+    none of a row's blocks contributes ``l = 0`` weights and drops out of
+    the merge exactly (``NEG_INF`` is finite — no 0/0).
+    """
+    if batch_axes is None:
+        batch_axes = tuple(a for a in _batch_axes(mesh)
+                           if a not in (model_axis, seq_axis))
+    ba = tuple(batch_axes)
+    bspec = ba[0] if len(ba) == 1 else (ba if ba else None)
+
+    def attend(q, k_pool, v_pool, ids, table, pos):
+        B, H, _, dh = q.shape
+        n_pool = k_pool.shape[0]
+        n_seq = mesh.shape[seq_axis]
+        n_loc = n_pool // n_seq
+        pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+
+        def island(q_l, kp_l, vp_l, ids_l, tbl_l, pos_l):
+            # q_l [B_l, H_loc, 1, D]; kp_l [N_loc, Hkv_loc, blk, D];
+            # ids_l [B_l, Hkv_loc, nb] LOGICAL; tbl_l [B_l, T] GLOBAL
+            sidx = jax.lax.axis_index(seq_axis)
+            lo = sidx * n_loc
+            local = tbl_l - lo
+            ok = (tbl_l >= 0) & (local >= 0) & (local < n_loc)
+            tbl_local = jnp.where(ok, local, -1)
+            Bl, Hl = q_l.shape[0], q_l.shape[1]
+            hkv_l = kp_l.shape[1]
+            G = Hl // hkv_l
+            out, m, l = ops.flash_decode_paged(
+                q_l, kp_l, vp_l, ids_l, tbl_local, pos_l,
+                block_kv=block_kv, partials=True)
+            gm = jax.lax.pmax(m, seq_axis)                # [B,hkv_l,G]
+            w = jnp.exp(m - gm) * l
+            den = jax.lax.psum(w, seq_axis)
+            num = jax.lax.psum(
+                out.astype(jnp.float32).reshape(Bl, hkv_l, G, dh)
+                * w[..., None], seq_axis)
+            o = num / jnp.maximum(den, 1e-30)[..., None]
+            return o.reshape(Bl, Hl, 1, dh).astype(q_l.dtype)
+
+        return shard_map(
+            island, mesh=mesh,
+            in_specs=(P(bspec, model_axis, None, None),
+                      P(seq_axis, model_axis, None, None),
+                      P(seq_axis, model_axis, None, None),
+                      P(bspec, model_axis, None),
+                      P(bspec, None),
+                      P(bspec)),
+            out_specs=P(bspec, model_axis, None, None),
+            check_vma=False,
+        )(q, k_pool, v_pool, ids, table, pos_b)
+
+    return attend
+
+
 def flash_decode_attention(mesh, *, block_kv=128, seq_axes=("model",),
                            batch_axes=None):
     """Build the shard_map budgeted flash-decode: (q, kc, vc, ids, pos) -> o.

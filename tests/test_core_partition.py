@@ -6,14 +6,22 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import (
     best_partition,
+    best_partition_2d,
     dp_partition,
     kk_partition,
+    lpt_bound_2d,
     lpt_partition,
     naive_partition,
     refine_partition,
 )
 
 weights_strategy = st.lists(st.integers(1, 50), min_size=4, max_size=10)
+# [N, S] weight VECTORS: per-item per-stripe block counts (zeros allowed —
+# a run may own no blocks on a stripe)
+weights2d_strategy = st.integers(1, 4).flatmap(
+    lambda s: st.lists(
+        st.lists(st.integers(0, 30), min_size=s, max_size=s),
+        min_size=4, max_size=12))
 
 
 class TestInvariants:
@@ -76,3 +84,56 @@ class TestPaperScenario:
     def test_dp_exact_small(self):
         assert dp_partition([5, 4, 3, 3, 3], 2).makespan == 9
         assert dp_partition([10, 9, 8, 7, 6, 5], 3).makespan == 15
+
+
+class Test2DPartition:
+    """2D (model x seq) packer invariants (DESIGN.md §2.11): items carry a
+    weight VECTOR over stripes, the partitioner places each item on ONE
+    model shard, and cell (d, s) accumulates the stripe-s weights of shard
+    d's items."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(w=weights2d_strategy, d=st.integers(1, 4))
+    def test_conservation(self, w, d):
+        W = np.asarray(w)
+        a = best_partition_2d(W, d)
+        assert len(a.device_of) == W.shape[0]
+        assert ((a.device_of >= 0) & (a.device_of < d)).all()
+        # loads[d, s] == sum of stripe-s weights of items on shard d, and
+        # nothing is lost: total load equals total weight per stripe
+        loads = np.zeros((d, W.shape[1]), np.int64)
+        for i, dev in enumerate(a.device_of):
+            loads[dev] += W[i]
+        np.testing.assert_array_equal(loads, a.loads)
+        np.testing.assert_array_equal(loads.sum(axis=0), W.sum(axis=0))
+
+    @settings(max_examples=60, deadline=None)
+    @given(w=weights2d_strategy, d=st.integers(1, 4))
+    def test_max_cell_bounded_by_row_lpt_bound(self, w, d):
+        """The 2D contract: max cell <= the 1D Graham/LPT bound on the
+        item TOTALS (a cell's load never exceeds its row total, and the
+        accepted assignment never worsens the LPT seed's makespan)."""
+        W = np.asarray(w)
+        a = best_partition_2d(W, d)
+        assert a.makespan <= lpt_bound_2d(W, d) + 1e-9
+
+    @settings(max_examples=60, deadline=None)
+    @given(w=weights_strategy, d=st.integers(1, 4))
+    def test_seq1_degenerates_to_1d(self, w, d):
+        """At S == 1 the 2D packer IS the 1D packer: identical device_of,
+        identical makespan — the striped path's plan at seq_shards=1
+        cannot differ from the head-parallel plan."""
+        W = np.asarray(w)[:, None]
+        a2 = best_partition_2d(W, d)
+        a1 = best_partition(list(w), d)
+        np.testing.assert_array_equal(a2.device_of, a1.device_of)
+        assert a2.makespan == a1.makespan
+
+    @settings(max_examples=40, deadline=None)
+    @given(w=weights2d_strategy, d=st.integers(2, 4))
+    def test_marginals_consistent(self, w, d):
+        W = np.asarray(w)
+        a = best_partition_2d(W, d)
+        np.testing.assert_array_equal(a.model_loads, a.loads.sum(axis=1))
+        np.testing.assert_array_equal(a.stripe_loads, a.loads.sum(axis=0))
+        assert a.imbalance >= 1.0 or a.loads.sum() == 0

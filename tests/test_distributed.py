@@ -209,6 +209,59 @@ print("PACKED_DECODE_OK", err, wl.lengths.tolist())
     assert "PACKED_DECODE_OK" in out
 
 
+def test_flash_decode_2d_island_multidevice():
+    """2D head x sequence decode island (DESIGN.md §2.11): pool blocks
+    striped over ``seq``, kv heads over ``model``, one flash-decoding
+    psum merge along ``seq`` only.  Full-selection striped decode == dense
+    reference at model=2 x seq in {2, 4}; a slot whose blocks all live on
+    ONE stripe leaves every other stripe fully masked (l = 0) and must
+    still merge to finite, exact outputs."""
+    out = _run("""
+import warnings; warnings.filterwarnings("ignore")
+import numpy as np, jax, jax.numpy as jnp
+from repro.sharding.compat import set_mesh
+from repro.launch.mesh import make_host_mesh_2d
+from repro.serving.sharded_attention import flash_decode_attention_2d
+from repro.attention import dense_attention
+for n_seq in (2, 4):
+    mesh = make_host_mesh_2d(model=2, seq=n_seq, num_kv_heads=4)
+    B, H, Hkv, Smax, D, BLK = 2, 8, 4, 1024, 32, 128
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, 1, D))
+    kc = jax.random.normal(ks[1], (B, Hkv, Smax, D))
+    vc = jax.random.normal(ks[2], (B, Hkv, Smax, D))
+    T = Smax // BLK
+    N = B * T            # 16 pool blocks, N_loc = N // n_seq per stripe
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(N).reshape(B, T).astype(np.int32)
+    if n_seq == 2:
+        # slot 1 maps ONLY stripe-0-owned physical ids [0, N//2): stripe 1
+        # is fully masked for it — the l=0 dropout case (and vice versa)
+        perm[1] = rng.permutation(N // 2)
+        perm[0] = N // 2 + rng.permutation(N // 2)
+    k_pool = np.zeros((N, Hkv, BLK, D), np.float32)
+    v_pool = np.zeros((N, Hkv, BLK, D), np.float32)
+    for b in range(B):
+        for j in range(T):
+            k_pool[perm[b, j]] = np.asarray(kc)[b, :, j*BLK:(j+1)*BLK]
+            v_pool[perm[b, j]] = np.asarray(vc)[b, :, j*BLK:(j+1)*BLK]
+    ids = np.tile(np.arange(T, dtype=np.int32)[None, None], (B, Hkv, 1))
+    pos = np.array([900, 700], np.int32)
+    attend = flash_decode_attention_2d(mesh)
+    with set_mesh(mesh):
+        o = jax.jit(lambda *a: attend(*a))(
+            q, jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(ids),
+            jnp.asarray(perm), jnp.asarray(pos))
+    assert bool(jnp.isfinite(o).all()), "non-finite striped merge"
+    mask = (jnp.arange(Smax)[None] <= pos[:, None])[:, None, None]
+    r = dense_attention(q, kc, vc, mask=mask)
+    err = float(jnp.abs(o - r).max())
+    assert err < 2e-5, (n_seq, err)
+    print("SEQPAR_2D_OK", n_seq, err)
+""")
+    assert out.count("SEQPAR_2D_OK") == 2
+
+
 def test_gspmd_train_step_multidevice_matches_single():
     """jit train step under a (2 data, 4 model) mesh: loss identical to the
     single-device run (GSPMD is semantics-preserving)."""

@@ -277,6 +277,36 @@ class TestPagedParity:
         np.testing.assert_allclose(np.asarray(merged), ref,
                                    atol=2e-5, rtol=2e-5)
 
+    def test_stripe_holding_no_blocks_merges_exact(self):
+        """Regression (§2.11): a stripe that holds NONE of any row's
+        blocks emits (m = NEG_INF, l = 0) partials; the merge must return
+        the contributing stripe's output BITWISE — no exp(nan), no
+        x*l/l renormalization ulp, no 0/0."""
+        B, Hkv, G, Smax, D = 2, 2, 2, 256, 32
+        q, kc, vc, ids, pos = _rand_case(B, Hkv, G, Smax, D, jnp.float32,
+                                         seed=77)
+        kp, vp, tbl = _paginate(kc, vc, seed=78, extra_blocks=0)
+        N, pad = kp.shape[0], 4
+        zeros = jnp.zeros((pad,) + kp.shape[1:], kp.dtype)
+        kp2, vp2 = (jnp.concatenate([p, zeros]) for p in (kp, vp))
+        # stripe 0 = [0, N) holds every mapped block; stripe 1 = [N, N+4)
+        # holds none — its local table is all -1
+        full = flash_decode_paged_reference(
+            q, kp2, vp2, jnp.asarray(ids), tbl, jnp.asarray(pos),
+            block_kv=BLK)
+        o0, m0, l0 = flash_decode_paged_reference(
+            q, kp2[:N], vp2[:N], jnp.asarray(ids), tbl, jnp.asarray(pos),
+            block_kv=BLK)
+        empty = jnp.full(tbl.shape, -1, jnp.int32)
+        o1, m1, l1 = flash_decode_paged_reference(
+            q, kp2[N:], vp2[N:], jnp.asarray(ids), empty,
+            jnp.asarray(pos), block_kv=BLK)
+        assert np.all(np.asarray(l1) == 0.0)
+        merged = merge_partials(jnp.stack([o0, o1]), jnp.stack([m0, m1]),
+                                jnp.stack([l0, l1]))
+        assert np.isfinite(np.asarray(merged)).all()
+        assert np.array_equal(np.asarray(merged), np.asarray(full[0]))
+
     def test_worklist_paged_matches_contiguous_bitwise(self):
         """Chunked-prefill executor: the paged work-list twin reproduces
         the contiguous one bit-for-bit (same tiles, same order) through a
@@ -484,3 +514,45 @@ class TestShardMerge:
                                 jnp.stack(ls))
         np.testing.assert_allclose(np.asarray(merged), ref,
                                    atol=2e-5, rtol=2e-5)
+
+    def _real_partial(self, seed, shape=(2, 3, 4), D=8):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        out = jax.random.normal(ks[0], shape + (D,), jnp.float32)
+        m = jax.random.normal(ks[1], shape, jnp.float32)
+        l = jax.random.uniform(ks[2], shape, jnp.float32,
+                               minval=0.5, maxval=2.0)
+        return out, m, l
+
+    @pytest.mark.parametrize("neg", [-1e30, -np.inf])
+    def test_single_real_shard_is_bitwise_identity(self, neg):
+        """One real shard + one fully-masked shard: the merge returns the
+        real shard's output BITWISE (regression: the x*l/l renorm
+        perturbed it by ulps; a true -inf max produced exp(nan))."""
+        out, m, l = self._real_partial(0)
+        merged = merge_partials(
+            jnp.stack([out, jnp.zeros_like(out)]),
+            jnp.stack([m, jnp.full_like(m, neg)]),
+            jnp.stack([l, jnp.zeros_like(l)]))
+        assert np.array_equal(np.asarray(merged), np.asarray(out))
+
+    @pytest.mark.parametrize("neg", [-1e30, -np.inf])
+    def test_all_shards_masked_is_finite_zero(self, neg):
+        out, m, l = self._real_partial(1)
+        z = jnp.zeros_like
+        merged = merge_partials(
+            jnp.stack([z(out), z(out)]),
+            jnp.stack([jnp.full_like(m, neg)] * 2),
+            jnp.stack([z(l), z(l)]))
+        got = np.asarray(merged)
+        assert np.isfinite(got).all() and np.all(got == 0.0)
+
+    def test_masked_shard_drops_out_of_multi_merge(self):
+        """With >= 2 contributing shards, adding a fully-masked shard
+        changes nothing — bitwise."""
+        a = self._real_partial(2)
+        b = self._real_partial(3)
+        two = merge_partials(*[jnp.stack(x) for x in zip(a, b)])
+        masked = (jnp.zeros_like(a[0]), jnp.full_like(a[1], -jnp.inf),
+                  jnp.zeros_like(a[2]))
+        three = merge_partials(*[jnp.stack(x) for x in zip(a, b, masked)])
+        assert np.array_equal(np.asarray(two), np.asarray(three))

@@ -23,7 +23,7 @@ from repro.serving.scheduler import ContinuousBatcher, Request
 def _check_no_double_assignment(a: BlockAllocator):
     assigned = [b for s in a.live_seqs for b in a.table(s)]
     assert len(assigned) == len(set(assigned)), "block double-assigned"
-    free = set(a._free)
+    free = set(a.free_ids())
     assert not (free & set(assigned)), "block both free and assigned"
     assert len(free) + len(assigned) == a.num_blocks, "blocks leaked"
 
@@ -316,3 +316,97 @@ def test_paged_cache_trash_block_and_tables():
     assert kv.alloc.free_blocks == 6
 
 
+
+
+# ---------------------------------------------------------------------------
+# Stripe-owned pools (DESIGN.md §2.11)
+# ---------------------------------------------------------------------------
+
+def test_stripe_validation():
+    with pytest.raises(ValueError):
+        BlockAllocator(10, 4, stripes=3)     # 10 % 3 != 0
+    with pytest.raises(ValueError):
+        BlockAllocator(8, 4, stripes=0)
+    a = BlockAllocator(12, 4, stripes=3)
+    assert a.stripe_size == 4
+    assert [a.stripe_of(b) for b in (0, 3, 4, 11)] == [0, 0, 1, 2]
+    assert a.free_blocks_per_stripe() == [4, 4, 4]
+
+
+def test_stripe_growth_routes_to_most_free():
+    """_grow picks the most-free stripe per block (ties -> lowest index),
+    so one sequence's blocks SPREAD across stripes — the §2.11 layout."""
+    a = BlockAllocator(12, 4, stripes=3)
+    a.admit(0, 6 * 4)                        # 6 blocks over 3 stripes
+    assert a.stripe_counts(0) == [2, 2, 2]
+    assert a.conserves()
+
+
+@pytest.mark.parametrize("seed", range(10))
+@pytest.mark.parametrize("stripes", [2, 3])
+def test_striped_random_streams_conserve(seed, stripes):
+    """The §2.7 stream property under striping: interleaved
+    admit/append/free/swap keeps PER-STRIPE conservation (free + mapped
+    == stripe_size, ids never leak across stripes)."""
+    rng = np.random.default_rng(seed)
+    num_blocks = stripes * int(rng.integers(2, 9))
+    block = 16
+    a = BlockAllocator(num_blocks, block, host_blocks=None, stripes=stripes)
+    live: dict[int, int] = {}
+    swapped: set[int] = set()
+    next_seq = 0
+    for _ in range(int(rng.integers(10, 60))):
+        ops = ["admit"] + (["append", "free", "swap_out"] if live else []) \
+            + (["swap_in"] if swapped else [])
+        op = rng.choice(ops)
+        if op == "admit":
+            prompt = int(rng.integers(1, num_blocks * block + 1))
+            max_new = int(rng.integers(0, 2 * block + 1))
+            if a.can_admit(prompt + max_new):
+                a.admit(next_seq, prompt, max_new)
+                live[next_seq] = max(0, max_new - 1)
+                next_seq += 1
+        elif op == "append":
+            sid = int(rng.choice(sorted(live)))
+            if live[sid] > 0:
+                a.append_token(sid)
+                live[sid] -= 1
+        elif op == "free":
+            sid = int(rng.choice(sorted(live)))
+            a.free(sid)
+            del live[sid]
+        elif op == "swap_out":
+            sid = int(rng.choice(sorted(live)))
+            if a.can_swap_out(sid):
+                a.swap_out(sid)
+                swapped.add(sid)
+                del live[sid]
+        else:
+            sid = int(rng.choice(sorted(swapped)))
+            if a.can_swap_in(sid):
+                ids = a.swap_in(sid)
+                # fresh ids all owned by their id-range stripes
+                assert all(0 <= a.stripe_of(b) < stripes for b in ids)
+                swapped.remove(sid)
+                live[sid] = 0
+        assert a.conserves()
+        per = a.free_blocks_per_stripe()
+        assert sum(per) == a.free_blocks
+        assert all(0 <= f <= a.stripe_size for f in per)
+    for sid in list(live):
+        a.free(sid)
+    for sid in list(swapped):
+        a.swap_in(sid)
+        a.free(sid)
+    assert a.free_blocks == num_blocks and a.conserves()
+    assert a.free_blocks_per_stripe() == [a.stripe_size] * stripes
+
+
+def test_paged_cache_striped_pool():
+    kv = PagedKVCache(_mk_pool, num_blocks=6, block=4, table_width=3,
+                      stripes=2)
+    assert kv.stripes == 2 and kv.stripe_size == 3
+    assert kv.trash_block == 6               # trash sits OUTSIDE all stripes
+    kv.alloc.admit(0, 9)                     # 3 blocks -> spread [2, 1]
+    assert sorted(kv.alloc.stripe_counts(0)) == [1, 2]
+    assert kv.alloc.conserves()

@@ -20,7 +20,7 @@ from repro.serving.kv_cache import BlockAllocator, PagedKVCache
 def _check_no_double_assignment(a: BlockAllocator):
     assigned = [b for s in a.live_seqs for b in a.table(s)]
     assert len(assigned) == len(set(assigned)), "block double-assigned"
-    free = set(a._free)
+    free = set(a.free_ids())
     assert not (free & set(assigned)), "block both free and assigned"
     assert len(free) + len(assigned) == a.num_blocks, "blocks leaked"
     # two-tier exclusivity: no sequence accounted on both tiers at once
