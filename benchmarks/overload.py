@@ -202,6 +202,50 @@ def _per_class(done, b, eng, classes, wall_s):
     return out
 
 
+def _quant_swap_probe(params, profile):
+    """Quantized swap bandwidth (§2.12 satellite): preempt/swap the SAME
+    tight workload at the baseline pool dtype and at int8.  Swap payloads
+    move the quantized codes + their per-(block, kv-head) scales, so host
+    bytes per swapped block drop ~4x against this benchmark's f32 pool
+    (~2x against a bf16 pool) — the resume stays bitwise-faithful to the
+    quantized pool state either way."""
+    sp = SamplingParams(max_tokens=16)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, CFG.vocab_size, size=(n,))
+               for n in (100, 90, 80)]
+    out = {}
+    for kvd in ("bf16", "int8"):
+        eng = Engine(CFG, params, EngineConfig(
+            attention="sparse", budget_per_head=256, block=BLOCK,
+            floor=BLOCK, max_seq_len=MAX_SEQ, num_slots=4,
+            prefill_mode="monolithic", cache_layout="paged",
+            num_kv_blocks=5, admission="fifo", preemption=True,
+            kv_dtype=kvd), profile=profile)
+        b = eng.make_batcher()
+        pf, df = eng.step_fns(sp)
+        for i, p in enumerate(prompts[:2]):
+            b.submit(Request(rid=i, prompt=np.asarray(p, np.int32),
+                             sampling=sp, priority="batch"))
+        ticks = 0
+        while ticks < 4 and b.busy:
+            b.tick(pf, df)
+            ticks += 1
+        b.submit(Request(rid=2, prompt=np.asarray(prompts[2], np.int32),
+                         sampling=sp, priority="interactive"))
+        while b.busy:
+            b.tick(pf, df)
+        sw = eng.swap_stats
+        assert sw["blocks_out"] > 0, "probe geometry never forced a swap"
+        out[kvd] = {
+            "blocks_out": sw["blocks_out"],
+            "bytes_out": sw["bytes_out"],
+            "bytes_per_block": sw["bytes_out"] / sw["blocks_out"],
+        }
+    out["bytes_per_block_ratio"] = (
+        out["bf16"]["bytes_per_block"] / out["int8"]["bytes_per_block"])
+    return out
+
+
 def run(out_dir: str, quick: bool = False):
     n = 30 if quick else 70
     rng = np.random.default_rng(7)
@@ -240,6 +284,8 @@ def run(out_dir: str, quick: bool = False):
             b.alloc.num_blocks, "pool not restored after drain"
         results[name] = _per_class(done, b, eng, classes, wall)
 
+    quant_swap = _quant_swap_probe(params, profile)
+
     hi_base = results["baseline_fifo"]["interactive"]["slo_attainment"]
     hi_grace = results["graceful_slo_preempt"]["interactive"][
         "slo_attainment"]
@@ -259,6 +305,7 @@ def run(out_dir: str, quick: bool = False):
                          "weight": c.weight} for c in classes],
         },
         "configs": results,
+        "quantized_swap": quant_swap,
         "hi_priority_attainment_baseline": hi_base,
         "hi_priority_attainment_graceful": hi_grace,
         "hi_priority_attainment_delta": hi_grace - hi_base,
@@ -277,6 +324,9 @@ def run(out_dir: str, quick: bool = False):
          ["swapped_out_blocks"]),
         ("swap_bw_mbps", results["graceful_slo_preempt"]["_totals"]
          ["swap_bw_mbps"]),
+        ("quant_swap_bytes_per_block_int8",
+         quant_swap["int8"]["bytes_per_block"]),
+        ("quant_swap_bytes_ratio", quant_swap["bytes_per_block_ratio"]),
     ]
     for cfg_name, per in results.items():
         for cname in MIX:

@@ -1,0 +1,255 @@
+"""Quantized KV-cache benchmark (DESIGN.md §2.12) — ``BENCH_quant.json``.
+
+Three measurements, one per §2.12 acceptance claim:
+
+1. ``capacity_at_equal_bytes`` — byte-true resident-token capacity of the
+   paged block pool.  ``PagedKVCache.pool_bytes()`` counts codes AND the
+   per-(block, kv-head) scales, so the ratio is what HBM actually holds:
+   at int8/fp8 a block costs ``block*Dh + 4`` bytes per (K|V, kv-head)
+   instead of ``2*block*Dh`` — ~2x blocks (>= 1.8x tokens) at equal bytes
+   (fp8 matches int8 in size; its win over int8 is dynamic range).
+   Acceptance: >= 1.8x resident tokens at equal cache bytes.
+
+2. ``decode_latency`` — packed-worklist decode attention at the SAME
+   selections and grid, full-precision pool vs dequant-fused int8 codes +
+   scales.  The executor and grid are identical; the delta is cache bytes
+   streamed.  The full-precision baseline is f32 (not bf16), for the same
+   reason as ``benchmarks/decode_pack``: XLA CPU hoists a whole-cache
+   bf16->f32 convert out of the item loop, which swamps (and flatters) the
+   comparison; f32 streams linearly, isolating the bytes effect the way a
+   TPU's VMEM-resident tiles would.  Acceptance: int8 mean latency below
+   the full-precision baseline on the packed path.
+
+3. ``recovery_delta`` — end-to-end engine runs (paged + packed, online
+   telemetry on): realized per-head recovery at int8 vs bf16 must agree
+   within noise.  Greedy-token agreement vs the bf16 run is reported as
+   an informational fraction — with random surrogate weights the logits
+   sit near ties, so quantization flips some argmaxes; the load-bearing
+   parity claims (int8 identical ACROSS layouts/paths, bf16 identical to
+   pre-§2.12) live in ``tests/test_quant_kv.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.sparsity import synthetic_head_curves
+from repro.core.worklist import (
+    DEC_FIELDS,
+    extend_packed_items,
+    pack_decode_items,
+    pow2_bucket,
+)
+from repro.kernels import ops
+from repro.models import transformer as tfm
+from repro.models.transformer import TransformerConfig
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.kv_cache import PagedKVCache
+
+BLOCK = 128
+
+
+# ---------------------------------------------------------------------------
+# 1. capacity at equal bytes
+# ---------------------------------------------------------------------------
+
+def run_capacity(quick: bool = False) -> dict:
+    cfg = TransformerConfig(
+        name="quant-capacity", num_layers=2, d_model=128, num_heads=8,
+        num_kv_heads=4, d_ff=256, vocab_size=512, layer_loop="unroll")
+    nblocks = 32 if quick else 64
+
+    def mk(kv_dtype):
+        return PagedKVCache(
+            lambda n: tfm.init_paged_cache(
+                cfg, n, BLOCK, dtype=quant.kv_cache_dtype(kv_dtype)),
+            num_blocks=nblocks, block=BLOCK, table_width=nblocks,
+            make_scales_fn=((lambda n: tfm.init_paged_scales(cfg, n))
+                            if quant.is_quantized(kv_dtype) else None))
+
+    out = {"num_blocks": nblocks, "block": BLOCK}
+    base_bytes = mk("bf16").pool_bytes()
+    out["bf16"] = {"pool_bytes": base_bytes,
+                   "bytes_per_block": base_bytes / (nblocks + 1),
+                   "resident_tokens_at_equal_bytes": nblocks * BLOCK}
+    for kvd in ("int8", "fp8"):
+        b = mk(kvd).pool_bytes()
+        per_block = b / (nblocks + 1)
+        # blocks (and tokens) an equal-byte pool holds at this dtype
+        fit = int(base_bytes // per_block) - 1       # minus the trash block
+        out[kvd] = {
+            "pool_bytes": b,
+            "bytes_per_block": per_block,
+            "resident_tokens_at_equal_bytes": fit * BLOCK,
+            "capacity_ratio": (fit * BLOCK) / (nblocks * BLOCK),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 2. packed decode latency, dequant-fused vs full precision
+# ---------------------------------------------------------------------------
+
+def _time(f, *args, iters=10):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f(*args).block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run_decode_latency(quick: bool = False) -> dict:
+    B, Hkv, G, D = 8, 8, 4, 64
+    smax = 4096 if quick else 8192
+    iters = 4 if quick else 10
+    H = Hkv * G
+    nkv = smax // BLOCK
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, 1, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Hkv, smax, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Hkv, smax, D), jnp.float32)
+    rng = np.random.default_rng(0)
+
+    # skewed per-head budgets (the paper's heterogeneity), mixed lengths
+    nb_per_head = np.array([nkv, nkv // 2, nkv // 8, 4, 4, 4, 2, 2])[:Hkv]
+    nb_cap = int(nb_per_head.max())
+    pos_mixes = [
+        np.linspace(BLOCK, smax - 1, B).astype(np.int32),
+        np.full((B,), smax - 1, np.int32),
+        rng.integers(BLOCK, smax, size=B).astype(np.int32),
+    ]
+
+    def quantize(c, kvd):
+        codes, sc = quant.quantize_tiles(
+            c.reshape(B, Hkv, nkv, BLOCK, D), kvd)
+        return codes.reshape(B, Hkv, smax, D), sc
+
+    kq, ksc = quantize(kc, "int8")
+    vq, vsc = quantize(vc, "int8")
+
+    f_full = jax.jit(lambda qq, kk, vv, it, pp: ops.flash_decode_packed(
+        qq, kk, vv, it, pp, block_kv=BLOCK))
+    f_q = jax.jit(
+        lambda qq, kk, vv, it, pp, s1, s2: ops.flash_decode_packed(
+            qq, kk, vv, it, pp, block_kv=BLOCK, k_scales=s1, v_scales=s2))
+
+    ticks = []
+    for pos in pos_mixes:
+        ids = np.full((B, Hkv, nb_cap), -1, np.int32)
+        for b in range(B):
+            res = min(nkv, (int(pos[b]) + 1 + BLOCK - 1) // BLOCK)
+            for h in range(Hkv):
+                n = max(1, min(int(nb_per_head[h]), res))
+                recent = range(max(0, res - max(1, n - 1)), res)
+                sel = sorted(set(([0] if n > 1 else []) + list(recent)))[:n]
+                ids[b, h, :len(sel)] = sel
+        wl = pack_decode_items(ids, num_shards=1, block=BLOCK)
+        items = jnp.asarray(extend_packed_items(
+            wl.items, pow2_bucket(wl.padded_length)).reshape(-1, DEC_FIELDS))
+        pj = jnp.asarray(pos)
+        o_f = f_full(q, kc, vc, items, pj)
+        o_q = f_q(q, kq, vq, items, pj, ksc, vsc)
+        err = float(jnp.abs(o_f.astype(jnp.float32)
+                            - o_q.astype(jnp.float32)).max())
+        t_f = _time(f_full, q, kc, vc, items, pj, iters=iters)
+        t_q = _time(f_q, q, kq, vq, items, pj, ksc, vsc, iters=iters)
+        ticks.append({"positions": pos.tolist(), "full_s": t_f,
+                      "int8_s": t_q, "speedup": t_f / t_q,
+                      "max_abs_err": err})
+    mean_f = float(np.mean([t["full_s"] for t in ticks]))
+    mean_q = float(np.mean([t["int8_s"] for t in ticks]))
+    return {
+        "config": {"B": B, "Hkv": Hkv, "G": G, "D": D, "smax": smax,
+                   "block": BLOCK, "baseline_dtype": "float32",
+                   "nb_per_head": nb_per_head.tolist(), "iters": iters},
+        "ticks": ticks,
+        "mean_full_s": mean_f,
+        "mean_int8_s": mean_q,
+        "mean_speedup": mean_f / mean_q,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3. end-to-end recovery + greedy agreement
+# ---------------------------------------------------------------------------
+
+def run_recovery(quick: bool = False) -> dict:
+    cfg = TransformerConfig(
+        name="quant-recovery", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=256, layer_loop="unroll",
+        block_kv=32)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    prof = synthetic_head_curves(cfg.num_layers, cfg.num_heads)
+    rng = np.random.default_rng(0)
+    n_req = 3 if quick else 5
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=(int(rng.integers(48, 160)),))
+               for _ in range(n_req)]
+    sp = SamplingParams(max_tokens=8 if quick else 16)
+
+    def serve(kvd):
+        eng = Engine(cfg, params, EngineConfig(
+            attention="sparse", budget_per_head=128, max_seq_len=512,
+            num_slots=4, block=32, floor=32, cache_layout="paged",
+            decode_worklist="packed", prefill_mode="monolithic",
+            telemetry_every=2, kv_dtype=kvd), profile=prof)
+        done = eng.serve(prompts, sp)
+        toks = {r.rid: list(r.generated) for r in done}
+        rec = eng.decode_bubble_stats.get("realized_recovery")
+        return toks, (float(rec) if rec is not None else None)
+
+    base_toks, base_rec = serve("bf16")
+    out = {"bf16": {"realized_recovery": base_rec}}
+    for kvd in ("int8", "fp8"):
+        toks, rec = serve(kvd)
+        n_tok = sum(len(v) for v in base_toks.values())
+        n_same = sum(
+            sum(a == b for a, b in zip(base_toks[r], toks[r]))
+            for r in base_toks)
+        out[kvd] = {
+            "realized_recovery": rec,
+            "recovery_delta": (rec - base_rec
+                               if None not in (rec, base_rec) else None),
+            "greedy_token_agreement": n_same / n_tok if n_tok else 1.0,
+        }
+    return out
+
+
+def run(out_dir: str, quick: bool = False) -> list[tuple[str, float]]:
+    capacity = run_capacity(quick=quick)
+    latency = run_decode_latency(quick=quick)
+    recovery = run_recovery(quick=quick)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_quant.json"), "w") as fh:
+        json.dump({"capacity_at_equal_bytes": capacity,
+                   "decode_latency": latency,
+                   "recovery_delta": recovery}, fh, indent=1)
+
+    rows: list[tuple[str, float]] = [
+        ("int8_capacity_ratio", capacity["int8"]["capacity_ratio"]),
+        ("fp8_capacity_ratio", capacity["fp8"]["capacity_ratio"]),
+        ("packed_full_s", latency["mean_full_s"]),
+        ("packed_int8_s", latency["mean_int8_s"]),
+        ("packed_int8_speedup", latency["mean_speedup"]),
+        ("int8_token_agreement",
+         recovery["int8"]["greedy_token_agreement"]),
+        ("fp8_token_agreement",
+         recovery["fp8"]["greedy_token_agreement"]),
+    ]
+    for kvd in ("int8", "fp8"):
+        d = recovery[kvd]["recovery_delta"]
+        if d is not None:
+            rows.append((f"{kvd}_recovery_delta", d))
+    return rows
+
+
+if __name__ == "__main__":
+    for k, v in run(os.path.join(os.path.dirname(__file__), "..",
+                                 "artifacts", "bench")):
+        print(f"quant_kv,{k},{v:.6g}")

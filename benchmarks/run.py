@@ -31,6 +31,8 @@ SUITES = [
                  "preemption + KV swap-to-host (§2.10)"),
     ("seqpar", "sequence-parallel long-context decode: striped 2D path "
                "latency + per-axis imbalance vs 1D (§2.11)"),
+    ("quant_kv", "quantized KV pool: capacity at equal bytes, dequant-"
+                 "fused packed decode latency, recovery delta (§2.12)"),
 ]
 
 # fast subset exercising the serving hot paths (CI perf smoke); the decode
@@ -40,9 +42,11 @@ SUITES = [
 # overload refreshes BENCH_overload.json (short burst profile) so graceful
 # degradation (per-class attainment under preemption) regresses visibly too,
 # and seqpar refreshes BENCH_seqpar.json so the striped 2D decode path's
-# merge overhead and per-axis imbalance regress visibly (§2.11)
+# merge overhead and per-axis imbalance regress visibly (§2.11), and
+# quant_kv refreshes BENCH_quant.json so the quantized pool's capacity /
+# dequant-fused decode latency / recovery delta regress visibly (§2.12)
 SMOKE = ("load_balance", "latency_attention", "decode_pack", "serving",
-         "adapt_replan", "overload", "seqpar")
+         "adapt_replan", "overload", "seqpar", "quant_kv")
 
 
 def main() -> int:

@@ -118,12 +118,18 @@ def _strided_impl(head: int, nb: int, nq: int, nkv: int,
 # Dynamic score estimators (jnp, in-graph, cheap)
 # ---------------------------------------------------------------------------
 
-def quest_block_scores(q: jnp.ndarray, k: jnp.ndarray, block: int):
+def quest_block_scores(q: jnp.ndarray, k: jnp.ndarray, block: int,
+                       k_scales: jnp.ndarray | None = None):
     """Quest-style block upper-bound scores.
 
     q: [H, Sq, Dh]; k: [Hkv, Skv, Dh] -> scores [H, nq, nkv] (f32).
     Per kv block: elementwise min/max over keys; score of (q, blk) =
     sum_d max(q_d * min_d, q_d * max_d), maxed over queries in the q block.
+
+    With a quantized cache (§2.12) pass ``k_scales [Hkv, Skv/block]`` —
+    the min/max summaries are computed on DEQUANTIZED key values (scale
+    is per-block positive, so min/max commute with it) keeping the upper
+    bound sound w.r.t. the values attention actually sees.
     """
     hq, sq, dh = q.shape
     hkv, skv, _ = k.shape
@@ -135,6 +141,14 @@ def quest_block_scores(q: jnp.ndarray, k: jnp.ndarray, block: int):
     nq = qp.shape[1] // block
     nkv = kp.shape[1] // block
     kb = kp.reshape(hkv, nkv, block, dh)
+    if k_scales is not None:
+        pad_b = nkv - k_scales.shape[1]
+        ks = jnp.pad(k_scales.astype(jnp.float32), ((0, 0), (0, pad_b)),
+                     constant_values=1.0)
+        # per-block scale > 0: dequantize BEFORE the min/max reductions —
+        # one [Hkv, nkv] broadcast multiply, not a full-cache copy (the
+        # reshaped kb view is consumed by the reduction immediately)
+        kb = kb.astype(jnp.float32) * ks[:, :, None, None]
     # padded key rows must NOT enter the min/max summaries: a zero-padded
     # trailing partial block would pull kmin/kmax toward 0 and skew that
     # block's upper bound.  Mask pads to +/-inf for the reduction, then

@@ -166,6 +166,8 @@ def worklist_attention_paged(
     scale: float | None = None,
     q_offset: jnp.ndarray | int | None = None,
     kv_len: jnp.ndarray | int | None = None,
+    k_scales: jnp.ndarray | None = None,   # [N, Hkv] f32, PHYSICAL index
+    v_scales: jnp.ndarray | None = None,
 ):
     """Paged twin of :func:`worklist_attention` (DESIGN.md §2.7): the K/V
     tiles come from a device block POOL through the sequence's block table
@@ -176,16 +178,23 @@ def worklist_attention_paged(
     contiguous executor on equal cache contents.  ``kv_len`` masks
     positions past the resident prefix, which also guarantees every
     contributing logical block is mapped; unmapped (-1) entries are
-    clamped to pool block 0 and masked out.
+    clamped to pool block 0 and masked out.  With a quantized pool
+    (§2.12) pass ``k_scales``/``v_scales [N, Hkv]`` f32 — the chunked
+    prefill's reads of PAST resident blocks dequantize post-dot, same as
+    the decode executors.
     """
     hq, sq, dh = q.shape
     assert k_pool.shape[2] == block_kv, "pool block size != block_kv"
     scale_v = (dh ** -0.5) if scale is None else scale
+    quantized = k_scales is not None
     pad_q = (-sq) % block_q
     qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0))).astype(jnp.float32)
     sqp = qp.shape[1]
     tbl = table.astype(jnp.int32)
     klim_default = tbl.shape[0] * block_kv
+    if quantized:
+        ksf = k_scales.astype(jnp.float32)
+        vsf = v_scales.astype(jnp.float32)
 
     out0 = jnp.zeros((hq, sqp, dh), jnp.float32)
     acc0 = jnp.zeros((block_q, dh), jnp.float32)
@@ -210,12 +219,19 @@ def worklist_attention_paged(
         qt = jax.lax.dynamic_slice(
             qp, (head, qblk * block_q, 0), (1, block_q, dh))[0]
         kt = jax.lax.dynamic_slice(
-            k_pool, (safe, kvh, 0, 0),
-            (1, 1, block_kv, dh))[0, 0].astype(jnp.float32)
+            k_pool, (safe, kvh, 0, 0), (1, 1, block_kv, dh))[0, 0]
         vt = jax.lax.dynamic_slice(
-            v_pool, (safe, kvh, 0, 0),
-            (1, 1, block_kv, dh))[0, 0].astype(jnp.float32)
-        s = (qt @ kt.T) * scale_v
+            v_pool, (safe, kvh, 0, 0), (1, 1, block_kv, dh))[0, 0]
+        if not quantized:
+            kt = kt.astype(jnp.float32)
+            vt = vt.astype(jnp.float32)
+        # mixed f32 x codes dot on the quantized path; the raw code tile
+        # feeds the dot (no convert to hoist), scale applied to the logits
+        s = jax.lax.dot_general(
+            qt, kt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale_v
+        if quantized:
+            s = s * ksf[safe, kvh]
         qpos = qblk * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         kpos = kvblk * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         qpos_g = qpos if q_offset is None else qpos + q_offset
@@ -228,7 +244,12 @@ def worklist_attention_paged(
         p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m - m_new)
         l_new = l * alpha + p.sum(axis=-1, keepdims=True)
-        acc_new = acc * alpha + p @ vt
+        pv = jax.lax.dot_general(
+            p, vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if quantized:
+            pv = pv * vsf[safe, kvh]
+        acc_new = acc * alpha + pv
         # no-op the accumulator update on invalid (padding) items
         acc = jnp.where(valid, acc_new, acc)
         l = jnp.where(valid, l_new, l)
@@ -263,6 +284,8 @@ def packed_decode_attention(
     block_kv: int = 128,
     scale: float | None = None,
     window: int | None = None,
+    k_scales: jnp.ndarray | None = None,   # [B, Hkv, Smax/block_kv] f32
+    v_scales: jnp.ndarray | None = None,
 ):
     """Execute a cost-packed decode worklist with one ``lax.scan``.
 
@@ -274,14 +297,23 @@ def packed_decode_attention(
     same tiles, same accumulation order — so the two paths produce
     BITWISE-identical outputs (hence identical greedy tokens) on equal
     selections.  Returns the same ``(out f32, m, l)`` partials contract.
+    ``k_scales``/``v_scales`` enable the quantized-cache path (§2.12):
+    per-(slot, kv-head, block) dequant scales applied AFTER the dots.
     """
     B, hkv, G, dh = q.shape
     smax = k_cache.shape[2]
     scale_v = float(dh ** -0.5) if scale is None else float(scale)
+    quantized = k_scales is not None
     pad_s = (-smax) % block_kv
     kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
     vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
-    qc = q.astype(k_cache.dtype)
+    if quantized:
+        pad_b = (smax + pad_s) // block_kv - k_scales.shape[2]
+        ksp = jnp.pad(k_scales.astype(jnp.float32),
+                      ((0, 0), (0, 0), (0, pad_b)))
+        vsp = jnp.pad(v_scales.astype(jnp.float32),
+                      ((0, 0), (0, 0), (0, pad_b)))
+    qc = q.astype(jnp.float32 if quantized else k_cache.dtype)
     pos_i = jnp.asarray(pos, jnp.int32)
 
     out0 = jnp.zeros((B, hkv, G, dh), jnp.float32)
@@ -312,6 +344,8 @@ def packed_decode_attention(
         s = jax.lax.dot_general(
             qh, kt, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale_v   # [G, blk]
+        if quantized:
+            s = s * ksp[b, h, blk]
         kpos = blk * block_kv + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
         mask = (kpos <= p) & ok
@@ -324,9 +358,16 @@ def packed_decode_attention(
         l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
         # f32 p.V dot (see flash_decode_reference): keeps the striped-merge
         # path bit-compatible with single-pass math
-        acc_new = acc * alpha + jax.lax.dot_general(
-            pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        if quantized:
+            # mixed f32 x codes dot, post-dot V dequant — no vt convert
+            pv = jax.lax.dot_general(
+                pr, vt, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32) * vsp[b, h, blk]
+        else:
+            pv = jax.lax.dot_general(
+                pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        acc_new = acc * alpha + pv
         acc = jnp.where(ok, acc_new, acc)
         m = jnp.where(ok, m_new, m)
         l = jnp.where(ok, l_new, l)
@@ -366,19 +407,27 @@ def packed_decode_attention_paged(
     block_kv: int = 128,
     scale: float | None = None,
     window: int | None = None,
+    k_scales: jnp.ndarray | None = None,   # [N, Hkv] f32, PHYSICAL index
+    v_scales: jnp.ndarray | None = None,
 ):
     """Paged twin of :func:`packed_decode_attention`: tiles come from the
     block POOL through the per-slot table; item kv blocks stay LOGICAL
     (positions/masks derive from them), only the slice address is
     indirected; unmapped entries are masked.  Per-run arithmetic replicates
     ``flash_decode_paged_reference`` op for op (bitwise on equal
-    selections); same ``(out f32, m, l)`` returns.
+    selections); same ``(out f32, m, l)`` returns.  ``k_scales``/
+    ``v_scales [N, Hkv]`` f32 (physical-block-indexed) enable the
+    quantized-pool path (§2.12): post-dot dequant, no f32 pool copy.
     """
     B, hkv, G, dh = q.shape
     assert k_pool.shape[2] == block_kv, "pool block size != block_kv"
     scale_v = float(dh ** -0.5) if scale is None else float(scale)
+    quantized = k_scales is not None
     tbl = jnp.asarray(table, jnp.int32)
-    qc = q.astype(k_pool.dtype)
+    if quantized:
+        ksf = k_scales.astype(jnp.float32)
+        vsf = v_scales.astype(jnp.float32)
+    qc = q.astype(jnp.float32 if quantized else k_pool.dtype)
     pos_i = jnp.asarray(pos, jnp.int32)
 
     out0 = jnp.zeros((B, hkv, G, dh), jnp.float32)
@@ -411,6 +460,8 @@ def packed_decode_attention_paged(
         s = jax.lax.dot_general(
             qh, kt, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale_v
+        if quantized:
+            s = s * ksf[safe, h]
         kpos = blk * block_kv + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
         mask = (kpos <= p) & ok
@@ -423,9 +474,15 @@ def packed_decode_attention_paged(
         l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
         # f32 p.V dot (see flash_decode_reference): keeps the striped-merge
         # path bit-compatible with single-pass math
-        acc_new = acc * alpha + jax.lax.dot_general(
-            pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        if quantized:
+            pv = jax.lax.dot_general(
+                pr, vt, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32) * vsf[safe, h]
+        else:
+            pv = jax.lax.dot_general(
+                pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        acc_new = acc * alpha + pv
         acc = jnp.where(ok, acc_new, acc)
         m = jnp.where(ok, m_new, m)
         l = jnp.where(ok, l_new, l)

@@ -436,6 +436,7 @@ def pack_decode_items(
     pad_multiple: int = 8,
     shard_of_kvhead: np.ndarray | None = None,
     kvhead_local: bool = False,
+    bytes_per_block: float | None = None,
 ) -> PackedDecodeWorkList:
     """Flatten per-slot decode selections into cost-packed ragged lists.
 
@@ -456,6 +457,12 @@ def pack_decode_items(
     ``shard_of_kvhead``); the default keeps them GLOBAL.  ``bucket`` fixes
     the padded per-shard length (compile bucketing); it must be >= the
     longest shard's run total.
+
+    ``bytes_per_block`` (§2.12 byte-true packing): the pool's REAL HBM
+    bytes streamed per selected kv block (K+V codes plus amortized
+    per-block scales, see ``repro.core.quant.kv_dtype_bytes``).  Weights
+    become bytes instead of block counts, so the partition balances what
+    the memory system actually pays.
     """
     from repro.core.partition import best_partition
 
@@ -466,6 +473,13 @@ def pack_decode_items(
     runs = [(b, h, int(counts[b, h]))
             for b in range(B) for h in range(hkv) if counts[b, h] > 0]
     weights = np.array([r[2] for r in runs], dtype=np.int64)
+    if bytes_per_block is not None:
+        # byte-true weights (§2.12): scale selected-block counts by the
+        # pool's real per-block HBM footprint (K+V codes + amortized
+        # per-block scales).  Uniform dtype => positive scaling, so the
+        # partition is unchanged; the weights read in bytes.
+        weights = np.maximum(
+            1, np.round(weights * float(bytes_per_block))).astype(np.int64)
     if shard_of_kvhead is None:
         asg = best_partition(weights, num_shards).device_of
     else:
@@ -601,6 +615,7 @@ def pack_decode_items_2d(
     pad_multiple: int = 8,
     shard_of_kvhead: np.ndarray | None = None,
     kvhead_local: bool = False,
+    bytes_per_block: float | None = None,
 ) -> PackedDecodeWorkList2D:
     """2D (model x seq) twin of :func:`pack_decode_items`.
 
@@ -641,6 +656,10 @@ def pack_decode_items_2d(
     W = np.array([[len(p) for p in per_stripe]
                   for _, _, per_stripe in runs],
                  dtype=np.int64).reshape(len(runs), num_stripes)
+    if bytes_per_block is not None:
+        # byte-true cell weights (§2.12) — see pack_decode_items
+        W = np.maximum((W > 0).astype(np.int64),
+                       np.round(W * float(bytes_per_block)).astype(np.int64))
     if shard_of_kvhead is None:
         asg = best_partition_2d(W, num_shards).device_of
     else:

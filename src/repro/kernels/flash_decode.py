@@ -62,6 +62,20 @@ indirected, so the budget allocator's ids flow unchanged down to the grid:
   (``table[slot, logical_blk]``), streaming pool blocks in place;
 - :func:`flash_decode_paged_reference` — the jnp twin: ``lax.scan`` over
   the logical list, ``dynamic_slice`` at the table-translated pool index.
+
+QUANTIZED pool (DESIGN.md §2.12): every executor takes optional
+``k_scales`` / ``v_scales`` — one f32 scale per (block, kv-head) tile
+(contiguous: ``[B, Hkv, Smax/block]``; paged: ``[N, Hkv]``, indexed by
+PHYSICAL block).  Dequantization happens INSIDE the kernel, after the
+dots: ``(q·k_codes) * s == q·(k_codes*s)`` up to f32 rounding because the
+dequant is linear, so the int8/fp8 tiles stream HBM->VMEM as-is and no
+f32 copy of the pool ever exists.  The jnp references feed the code
+tiles to mixed-dtype ``lax.dot_general`` (f32 x int8/fp8, f32
+accumulate) — deliberately no tile convert, which XLA could hoist into a
+full-pool dequantized copy.  ``k_scales=None`` (the default) leaves the
+pre-§2.12 bf16/f32 paths bitwise-untouched.  Scales ride to the Pallas
+kernels as additional BlockSpec'd operands: one (1, 1)-scale tile per
+grid step, table-indirected exactly like its K/V block.
 """
 from __future__ import annotations
 
@@ -128,13 +142,17 @@ def decode_items_from_ids(block_ids: jnp.ndarray) -> jnp.ndarray:
 def _flash_decode_kernel(
     items_ref, pos_ref,          # SMEM (scalar prefetch)
     q_ref, k_ref, v_ref,         # VMEM tiles via index maps
-    o_ref, m_out_ref, l_out_ref,  # VMEM out tiles
-    acc_ref, m_ref, l_ref,       # VMEM scratch
-    *,
+    *rest,                       # [ks_ref, vs_ref,] outs, scratch
     scale: float,
     block_kv: int,
     window: int | None,
+    quantized: bool = False,
 ):
+    if quantized:
+        (ks_ref, vs_ref, o_ref, m_out_ref, l_out_ref,
+         acc_ref, m_ref, l_ref) = rest
+    else:
+        o_ref, m_out_ref, l_out_ref, acc_ref, m_ref, l_ref = rest
     i = pl.program_id(0)
     valid = items_ref[i, D_VALID] == 1
     first = items_ref[i, D_FIRST] == 1
@@ -156,6 +174,10 @@ def _flash_decode_kernel(
         s = jax.lax.dot_general(
             qt, kt, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # [G, block_kv]
+        if quantized:
+            # post-dot dequant: the codes->values scale is linear, so it
+            # commutes with the dot; the int8/fp8 tile streamed as-is
+            s = s * ks_ref[0, 0, 0]
         kpos = kvblk * block_kv + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
         mask = kpos <= pos
@@ -167,9 +189,12 @@ def _flash_decode_kernel(
         p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        pv = jax.lax.dot_general(
             p, vt, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+        if quantized:
+            pv = pv * vs_ref[0, 0, 0]
+        acc_ref[...] = acc_ref[...] * alpha + pv
         m_ref[...] = m_new
 
     @pl.when(last)
@@ -197,6 +222,8 @@ def flash_decode_kernel(
     scale: float | None = None,
     window: int | None = None,
     interpret: bool = False,
+    k_scales: jnp.ndarray | None = None,   # [B, Hkv, Smax/block_kv] f32
+    v_scales: jnp.ndarray | None = None,
 ):
     """Execute a decode work-list against the slot cache in place.
 
@@ -209,6 +236,7 @@ def flash_decode_kernel(
     B, hkv, G, dh = q.shape
     smax = k_cache.shape[2]
     scale_v = float(dh ** -0.5) if scale is None else float(scale)
+    quantized = k_scales is not None
 
     pad_g = (-G) % 8        # sublane alignment
     dh_pad = (-dh) % 128    # lane alignment
@@ -221,32 +249,41 @@ def flash_decode_kernel(
 
     kernel = functools.partial(
         _flash_decode_kernel, scale=scale_v, block_kv=block_kv,
-        window=window)
+        window=window, quantized=quantized)
+
+    def bh_index(i, it, p):
+        return (it[i, D_BATCH], it[i, D_KVHEAD], 0, 0)
+
+    def tile_index(i, it, p):
+        return (it[i, D_BATCH], it[i, D_KVHEAD], it[i, D_KVBLK], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, Gp, dp), bh_index),
+        pl.BlockSpec((1, 1, block_kv, dp), tile_index),
+        pl.BlockSpec((1, 1, block_kv, dp), tile_index),
+    ]
+    operands = [qp, kp, vp]
+    if quantized:
+        # one f32 scale per (slot, kv-head, block): same index map as the
+        # K/V tile it dequantizes, one (1, 1, 1) element per grid step
+        nbs = (smax + pad_s) // block_kv
+        def scale_index(i, it, p):
+            return (it[i, D_BATCH], it[i, D_KVHEAD], it[i, D_KVBLK])
+        for s_arr in (k_scales, v_scales):
+            pad_b = nbs - s_arr.shape[2]
+            in_specs.append(pl.BlockSpec((1, 1, 1), scale_index))
+            operands.append(jnp.pad(
+                s_arr.astype(jnp.float32),
+                ((0, 0), (0, 0), (0, pad_b))))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(L,),
-        in_specs=[
-            pl.BlockSpec((1, 1, Gp, dp),
-                         lambda i, it, p: (it[i, D_BATCH],
-                                           it[i, D_KVHEAD], 0, 0)),
-            pl.BlockSpec((1, 1, block_kv, dp),
-                         lambda i, it, p: (it[i, D_BATCH], it[i, D_KVHEAD],
-                                           it[i, D_KVBLK], 0)),
-            pl.BlockSpec((1, 1, block_kv, dp),
-                         lambda i, it, p: (it[i, D_BATCH], it[i, D_KVHEAD],
-                                           it[i, D_KVBLK], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, 1, Gp, dp),
-                         lambda i, it, p: (it[i, D_BATCH],
-                                           it[i, D_KVHEAD], 0, 0)),
-            pl.BlockSpec((1, 1, Gp, 128),
-                         lambda i, it, p: (it[i, D_BATCH],
-                                           it[i, D_KVHEAD], 0, 0)),
-            pl.BlockSpec((1, 1, Gp, 128),
-                         lambda i, it, p: (it[i, D_BATCH],
-                                           it[i, D_KVHEAD], 0, 0)),
+            pl.BlockSpec((1, 1, Gp, dp), bh_index),
+            pl.BlockSpec((1, 1, Gp, 128), bh_index),
+            pl.BlockSpec((1, 1, Gp, 128), bh_index),
         ],
         scratch_shapes=[
             pltpu.VMEM((Gp, dp), jnp.float32),
@@ -264,7 +301,7 @@ def flash_decode_kernel(
             jax.ShapeDtypeStruct((B, hkv, Gp, 128), jnp.float32),
         ],
         interpret=interpret,
-    )(items, pos.astype(jnp.int32), qp, kp, vp)
+    )(items, pos.astype(jnp.int32), *operands)
     return (out[:, :, :G, :dh], m[:, :, :G, 0], l[:, :, :G, 0])
 
 
@@ -284,6 +321,8 @@ def flash_decode_reference(
     block_kv: int = 128,
     scale: float | None = None,
     window: int | None = None,
+    k_scales: jnp.ndarray | None = None,   # [B, Hkv, Smax/block_kv] f32
+    v_scales: jnp.ndarray | None = None,
 ):
     """jnp twin of :func:`flash_decode_kernel` — identical contract and
     returns, zero-copy access pattern (``lax.scan`` over the block list
@@ -292,12 +331,20 @@ def flash_decode_reference(
     B, hkv, G, dh = q.shape
     smax = k_cache.shape[2]
     scale_v = float(dh ** -0.5) if scale is None else float(scale)
+    quantized = k_scales is not None
     pad_s = (-smax) % block_kv
     kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
     vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    if quantized:
+        pad_b = (smax + pad_s) // block_kv - k_scales.shape[2]
+        ksp = jnp.pad(k_scales.astype(jnp.float32),
+                      ((0, 0), (0, 0), (0, pad_b)))
+        vsp = jnp.pad(v_scales.astype(jnp.float32),
+                      ((0, 0), (0, 0), (0, pad_b)))
 
-    def one_head(qh, kh, vh, ids, p):
-        # qh [G, D]; kh/vh [Smax_pad, D]; ids [nb]; p scalar
+    def one_head(qh, kh, vh, ids, p, ksh=None, vsh=None):
+        # qh [G, D]; kh/vh [Smax_pad, D]; ids [nb]; p scalar;
+        # ksh/vsh [Smax_pad/block_kv] f32 per-block dequant scales
 
         def step(carry, blk_id):
             acc, m, l = carry
@@ -310,10 +357,15 @@ def flash_decode_reference(
             # mixed-precision QK dot (f32 accumulate) WITHOUT an explicit
             # tile convert: a convert-of-slice is loop-invariant-hoistable
             # into a full-cache f32 copy, which would silently reintroduce
-            # the memory traffic this path exists to avoid.
+            # the memory traffic this path exists to avoid.  The same
+            # holds for the quantized path: the int8/fp8 tile feeds the
+            # dot raw and the scale multiplies the LOGITS after (linear
+            # dequant commutes with the dot).
             s = jax.lax.dot_general(
                 qh, kt, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32) * scale_v  # [G, blk]
+            if quantized:
+                s = s * ksh[safe]
             kpos = safe * block_kv + jax.lax.broadcasted_iota(
                 jnp.int32, s.shape, 1)
             mask = (kpos <= p) & ok
@@ -329,9 +381,16 @@ def flash_decode_reference(
             # on the RUNNING max, which differs between a single pass and
             # per-stripe partial passes — the striped merge (§2.11) would
             # then diverge from the 1D path by ~cache-dtype eps, not ulps
-            acc_new = acc * alpha + jax.lax.dot_general(
-                pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
+            if quantized:
+                # mixed f32 x codes dot, post-dot V dequant — no vt convert
+                pv = jax.lax.dot_general(
+                    pr, vt, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32) * vsh[safe]
+            else:
+                pv = jax.lax.dot_general(
+                    pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            acc_new = acc * alpha + pv
             acc = jnp.where(ok, acc_new, acc)
             m = jnp.where(ok, m_new, m)
             l = jnp.where(ok, l_new, l)
@@ -350,10 +409,16 @@ def flash_decode_reference(
         return out, m[:, 0], l[:, 0]
 
     # vmap over kv heads then slots
-    per_head = jax.vmap(one_head, in_axes=(0, 0, 0, 0, None))
-    out, m, l = jax.vmap(per_head)(q.astype(k_cache.dtype), kp, vp,
-                                   block_ids.astype(jnp.int32),
-                                   pos.astype(jnp.int32))
+    if quantized:
+        per_head = jax.vmap(one_head, in_axes=(0, 0, 0, 0, None, 0, 0))
+        out, m, l = jax.vmap(per_head)(q.astype(jnp.float32), kp, vp,
+                                       block_ids.astype(jnp.int32),
+                                       pos.astype(jnp.int32), ksp, vsp)
+    else:
+        per_head = jax.vmap(one_head, in_axes=(0, 0, 0, 0, None))
+        out, m, l = jax.vmap(per_head)(q.astype(k_cache.dtype), kp, vp,
+                                       block_ids.astype(jnp.int32),
+                                       pos.astype(jnp.int32))
     return out, m, l
 
 
@@ -364,18 +429,22 @@ def flash_decode_reference(
 def _flash_decode_paged_kernel(
     items_ref, tbl_ref, pos_ref,   # SMEM (scalar prefetch)
     q_ref, k_ref, v_ref,           # VMEM tiles via index maps
-    o_ref, m_out_ref, l_out_ref,   # VMEM out tiles
-    acc_ref, m_ref, l_ref,         # VMEM scratch
-    *,
+    *rest,                         # [ks_ref, vs_ref,] outs, scratch
     scale: float,
     block_kv: int,
     window: int | None,
+    quantized: bool = False,
 ):
     """Same online-softmax body as :func:`_flash_decode_kernel`, but the
     K/V tiles arrive from the block POOL via the table-indirected index
     maps, and an item is additionally invalid when its table entry is
     unmapped (``table[slot, logical] < 0`` — e.g. a shard that does not own
     the block under a block-sharded pool)."""
+    if quantized:
+        (ks_ref, vs_ref, o_ref, m_out_ref, l_out_ref,
+         acc_ref, m_ref, l_ref) = rest
+    else:
+        o_ref, m_out_ref, l_out_ref, acc_ref, m_ref, l_ref = rest
     i = pl.program_id(0)
     kvblk = items_ref[i, D_KVBLK]
     slot = items_ref[i, D_BATCH]
@@ -399,6 +468,10 @@ def _flash_decode_paged_kernel(
         s = jax.lax.dot_general(
             qt, kt, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # [G, block_kv]
+        if quantized:
+            # post-dot dequant: per-(physical block, kv head) scale tile,
+            # table-indirected exactly like the K tile it belongs to
+            s = s * ks_ref[0, 0]
         # positions come from the LOGICAL block id — the physical pool
         # index carries no position information
         kpos = kvblk * block_kv + jax.lax.broadcasted_iota(
@@ -412,9 +485,12 @@ def _flash_decode_paged_kernel(
         p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        pv = jax.lax.dot_general(
             p, vt, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+        if quantized:
+            pv = pv * vs_ref[0, 0]
+        acc_ref[...] = acc_ref[...] * alpha + pv
         m_ref[...] = m_new
 
     @pl.when(last)
@@ -443,6 +519,8 @@ def flash_decode_paged_kernel(
     scale: float | None = None,
     window: int | None = None,
     interpret: bool = False,
+    k_scales: jnp.ndarray | None = None,   # [N, Hkv] f32, PHYSICAL index
+    v_scales: jnp.ndarray | None = None,
 ):
     """Paged twin of :func:`flash_decode_kernel`: one (slot, kv_head,
     logical_block) matvec tile per grid step, the K/V BlockSpec index maps
@@ -452,6 +530,7 @@ def flash_decode_paged_kernel(
     B, hkv, G, dh = q.shape
     assert k_pool.shape[2] == block_kv, "pool block size != block_kv"
     scale_v = float(dh ** -0.5) if scale is None else float(scale)
+    quantized = k_scales is not None
 
     pad_g = (-G) % 8        # sublane alignment
     dh_pad = (-dh) % 128    # lane alignment
@@ -463,7 +542,10 @@ def flash_decode_paged_kernel(
 
     kernel = functools.partial(
         _flash_decode_paged_kernel, scale=scale_v, block_kv=block_kv,
-        window=window)
+        window=window, quantized=quantized)
+
+    def bh_index(i, it, tb, p):
+        return (it[i, D_BATCH], it[i, D_KVHEAD], 0, 0)
 
     def kv_index(i, it, tb, p):
         # clamp unmapped (-1) entries to pool block 0: the item is masked
@@ -471,26 +553,30 @@ def flash_decode_paged_kernel(
         return (jnp.maximum(tb[it[i, D_BATCH], it[i, D_KVBLK]], 0),
                 it[i, D_KVHEAD], 0, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, Gp, dp), bh_index),
+        pl.BlockSpec((1, 1, block_kv, dp), kv_index),
+        pl.BlockSpec((1, 1, block_kv, dp), kv_index),
+    ]
+    operands = [qp, kp, vp]
+    if quantized:
+        # per-(physical block, kv head) scales, same table indirection as
+        # the K/V pool tiles — one (1, 1) f32 element per grid step
+        def scale_index(i, it, tb, p):
+            return (jnp.maximum(tb[it[i, D_BATCH], it[i, D_KVBLK]], 0),
+                    it[i, D_KVHEAD])
+        for s_arr in (k_scales, v_scales):
+            in_specs.append(pl.BlockSpec((1, 1), scale_index))
+            operands.append(s_arr.astype(jnp.float32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(L,),
-        in_specs=[
-            pl.BlockSpec((1, 1, Gp, dp),
-                         lambda i, it, tb, p: (it[i, D_BATCH],
-                                               it[i, D_KVHEAD], 0, 0)),
-            pl.BlockSpec((1, 1, block_kv, dp), kv_index),
-            pl.BlockSpec((1, 1, block_kv, dp), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, 1, Gp, dp),
-                         lambda i, it, tb, p: (it[i, D_BATCH],
-                                               it[i, D_KVHEAD], 0, 0)),
-            pl.BlockSpec((1, 1, Gp, 128),
-                         lambda i, it, tb, p: (it[i, D_BATCH],
-                                               it[i, D_KVHEAD], 0, 0)),
-            pl.BlockSpec((1, 1, Gp, 128),
-                         lambda i, it, tb, p: (it[i, D_BATCH],
-                                               it[i, D_KVHEAD], 0, 0)),
+            pl.BlockSpec((1, 1, Gp, dp), bh_index),
+            pl.BlockSpec((1, 1, Gp, 128), bh_index),
+            pl.BlockSpec((1, 1, Gp, 128), bh_index),
         ],
         scratch_shapes=[
             pltpu.VMEM((Gp, dp), jnp.float32),
@@ -507,7 +593,7 @@ def flash_decode_paged_kernel(
             jax.ShapeDtypeStruct((B, hkv, Gp, 128), jnp.float32),
         ],
         interpret=interpret,
-    )(items, table.astype(jnp.int32), pos.astype(jnp.int32), qp, kp, vp)
+    )(items, table.astype(jnp.int32), pos.astype(jnp.int32), *operands)
     return (out[:, :, :G, :dh], m[:, :, :G, 0], l[:, :, :G, 0])
 
 
@@ -524,6 +610,8 @@ def flash_decode_paged_reference(
     block_kv: int = 128,
     scale: float | None = None,
     window: int | None = None,
+    k_scales: jnp.ndarray | None = None,   # [N, Hkv] f32, PHYSICAL index
+    v_scales: jnp.ndarray | None = None,
 ):
     """jnp twin of :func:`flash_decode_paged_kernel` — identical contract
     and returns.  ``lax.scan`` over the logical block list with a per-block
@@ -534,7 +622,11 @@ def flash_decode_paged_reference(
     B, hkv, G, dh = q.shape
     assert k_pool.shape[2] == block_kv, "pool block size != block_kv"
     scale_v = float(dh ** -0.5) if scale is None else float(scale)
+    quantized = k_scales is not None
     tbl = table.astype(jnp.int32)
+    if quantized:
+        ksf = k_scales.astype(jnp.float32)
+        vsf = v_scales.astype(jnp.float32)
 
     def one_slot(qb, ids_b, tbl_b, p):
         # qb [Hkv, G, D]; ids_b [Hkv, nb]; tbl_b [T]; p scalar
@@ -554,6 +646,10 @@ def flash_decode_paged_reference(
                 s = jax.lax.dot_general(
                     qh, kt, (((1,), (1,)), ((), ())),
                     preferred_element_type=jnp.float32) * scale_v
+                if quantized:
+                    # post-dot dequant at the PHYSICAL scale entry — the
+                    # codes tile streamed raw, no convert to hoist
+                    s = s * ksf[safe, h_idx]
                 kpos = safe_logical * block_kv + jax.lax.broadcasted_iota(
                     jnp.int32, s.shape, 1)
                 mask = (kpos <= p) & ok
@@ -566,9 +662,16 @@ def flash_decode_paged_reference(
                 l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
                 # f32 p.V dot (see flash_decode_reference): keeps the
                 # striped-merge path bit-compatible with single-pass math
-                acc_new = acc * alpha + jax.lax.dot_general(
-                    pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.float32)
+                if quantized:
+                    pv = jax.lax.dot_general(
+                        pr, vt, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32
+                    ) * vsf[safe, h_idx]
+                else:
+                    pv = jax.lax.dot_general(
+                        pr, vt.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                acc_new = acc * alpha + pv
                 acc = jnp.where(ok, acc_new, acc)
                 m = jnp.where(ok, m_new, m)
                 l = jnp.where(ok, l_new, l)
@@ -586,7 +689,8 @@ def flash_decode_paged_reference(
         return jax.vmap(one_head)(qb, ids_b,
                                   jnp.arange(hkv, dtype=jnp.int32))
 
-    out, m, l = jax.vmap(one_slot)(q.astype(k_pool.dtype),
+    q_in = q.astype(jnp.float32) if quantized else q.astype(k_pool.dtype)
+    out, m, l = jax.vmap(one_slot)(q_in,
                                    block_ids.astype(jnp.int32), tbl,
                                    pos.astype(jnp.int32))
     return out, m, l

@@ -63,12 +63,15 @@ def sparse_decode(q, k_cache, v_cache, items, *, cache_len, block_kv=128,
 
 def flash_decode(q, k_cache, v_cache, block_ids, pos, *, block_kv=128,
                  scale=None, window=None, partials=False, use_kernel=None,
-                 interpret=None):
+                 interpret=None, k_scales=None, v_scales=None):
     """Fused budgeted flash-decode: stream only the selected KV blocks.
 
     q ``[B, H, 1, D]`` (serving layout — GQA grouping happens here);
     caches ``[B, Hkv, Smax, D]``; ``block_ids [B, Hkv, nb]`` int32 selected
     cache blocks (-1 pad, trailing); ``pos [B]`` per-slot last position.
+    With a quantized cache (DESIGN.md §2.12) pass ``k_scales``/``v_scales``
+    ``[B, Hkv, Smax/block_kv]`` f32 — dequantization fuses into the
+    executor (post-dot rescale), no f32 cache copy is ever materialized.
 
     ``partials=True`` returns ``(out [B,H,1,D], m, l [B,Hkv,G])`` for the
     flash-decoding cross-shard merge; otherwise just ``out``.  On TPU the
@@ -88,11 +91,12 @@ def flash_decode(q, k_cache, v_cache, block_ids, pos, *, block_kv=128,
         out, m, l = _flash_decode_kernel(
             qg, k_cache, v_cache, items, jnp.asarray(pos),
             block_kv=block_kv, scale=scale, window=window,
-            interpret=interpret)
+            interpret=interpret, k_scales=k_scales, v_scales=v_scales)
     else:
         out, m, l = _flash_decode_ref(
             qg, k_cache, v_cache, jnp.asarray(block_ids), jnp.asarray(pos),
-            block_kv=block_kv, scale=scale, window=window)
+            block_kv=block_kv, scale=scale, window=window,
+            k_scales=k_scales, v_scales=v_scales)
     out = out.reshape(B, H, 1, dh)
     if partials:
         return out, m, l        # out is f32 — merge-able without requantizing
@@ -101,17 +105,20 @@ def flash_decode(q, k_cache, v_cache, block_ids, pos, *, block_kv=128,
 
 def flash_decode_paged(q, k_pool, v_pool, block_ids, table, pos, *,
                        block_kv=128, scale=None, window=None, partials=False,
-                       use_kernel=None, interpret=None):
+                       use_kernel=None, interpret=None, k_scales=None,
+                       v_scales=None):
     """Paged fused flash-decode: stream selected blocks from the pool.
 
     q ``[B, H, 1, D]`` (serving layout — GQA grouping happens here);
     pools ``[N, Hkv, block_kv, D]``; ``block_ids [B, Hkv, nb]`` int32
     LOGICAL selected blocks (-1 pad, trailing); ``table [B, T]`` int32
     logical -> pool-global translation (-1 = unmapped, masked); ``pos [B]``
-    per-slot last position.  Same returns/partials contract as
-    :func:`flash_decode`; on TPU the scalar-prefetch table-indirection
-    kernel runs, elsewhere the jnp reference with the identical zero-copy
-    access pattern.
+    per-slot last position.  With a quantized pool pass ``k_scales``/
+    ``v_scales`` ``[N, Hkv]`` f32 (PHYSICAL block index — the scale travels
+    with its pool block through the same table indirection).  Same
+    returns/partials contract as :func:`flash_decode`; on TPU the
+    scalar-prefetch table-indirection kernel runs, elsewhere the jnp
+    reference with the identical zero-copy access pattern.
     """
     B, H, _, dh = q.shape
     hkv = k_pool.shape[1]
@@ -126,11 +133,12 @@ def flash_decode_paged(q, k_pool, v_pool, block_ids, table, pos, *,
         out, m, l = _flash_decode_paged_kernel(
             qg, k_pool, v_pool, items, jnp.asarray(table), jnp.asarray(pos),
             block_kv=block_kv, scale=scale, window=window,
-            interpret=interpret)
+            interpret=interpret, k_scales=k_scales, v_scales=v_scales)
     else:
         out, m, l = _flash_decode_paged_ref(
             qg, k_pool, v_pool, jnp.asarray(block_ids), jnp.asarray(table),
-            jnp.asarray(pos), block_kv=block_kv, scale=scale, window=window)
+            jnp.asarray(pos), block_kv=block_kv, scale=scale, window=window,
+            k_scales=k_scales, v_scales=v_scales)
     out = out.reshape(B, H, 1, dh)
     if partials:
         return out, m, l        # out is f32 — merge-able without requantizing
@@ -139,7 +147,8 @@ def flash_decode_paged(q, k_pool, v_pool, block_ids, table, pos, *,
 
 def flash_decode_packed(q, k_cache, v_cache, items, pos, *, block_kv=128,
                         scale=None, window=None, partials=False,
-                        use_kernel=None, interpret=None):
+                        use_kernel=None, interpret=None, k_scales=None,
+                        v_scales=None):
     """Cost-packed ragged flash-decode (DESIGN.md §2.8).
 
     q ``[B, H, 1, D]`` (serving layout — GQA grouping happens here);
@@ -164,11 +173,12 @@ def flash_decode_packed(q, k_cache, v_cache, items, pos, *, block_kv=128,
         out, m, l = _flash_decode_kernel(
             qg, k_cache, v_cache, jnp.asarray(items), jnp.asarray(pos),
             block_kv=block_kv, scale=scale, window=window,
-            interpret=interpret)
+            interpret=interpret, k_scales=k_scales, v_scales=v_scales)
     else:
         out, m, l = _packed_decode_ref(
             qg, k_cache, v_cache, jnp.asarray(items), jnp.asarray(pos),
-            block_kv=block_kv, scale=scale, window=window)
+            block_kv=block_kv, scale=scale, window=window,
+            k_scales=k_scales, v_scales=v_scales)
     out = out.reshape(B, H, 1, dh)
     if partials:
         return out, m, l
@@ -178,7 +188,7 @@ def flash_decode_packed(q, k_cache, v_cache, items, pos, *, block_kv=128,
 def flash_decode_packed_paged(q, k_pool, v_pool, items, table, pos, *,
                               block_kv=128, scale=None, window=None,
                               partials=False, use_kernel=None,
-                              interpret=None):
+                              interpret=None, k_scales=None, v_scales=None):
     """Paged twin of :func:`flash_decode_packed`: the packed items' LOGICAL
     kv blocks translate to pool blocks through ``table [B, T]`` (-1 =
     unmapped, masked); same contract otherwise."""
@@ -194,11 +204,12 @@ def flash_decode_packed_paged(q, k_pool, v_pool, items, table, pos, *,
         out, m, l = _flash_decode_paged_kernel(
             qg, k_pool, v_pool, jnp.asarray(items), jnp.asarray(table),
             jnp.asarray(pos), block_kv=block_kv, scale=scale, window=window,
-            interpret=interpret)
+            interpret=interpret, k_scales=k_scales, v_scales=v_scales)
     else:
         out, m, l = _packed_decode_paged_ref(
             qg, k_pool, v_pool, jnp.asarray(items), jnp.asarray(table),
-            jnp.asarray(pos), block_kv=block_kv, scale=scale, window=window)
+            jnp.asarray(pos), block_kv=block_kv, scale=scale, window=window,
+            k_scales=k_scales, v_scales=v_scales)
     out = out.reshape(B, H, 1, dh)
     if partials:
         return out, m, l

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import ArchSpec
 from repro.configs.shapes import ShapeSpec
+from repro.core import quant
 from repro.core.metrics import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
 from repro.core.planner import make_plan
 from repro.core.sparsity import synthetic_head_curves
@@ -36,6 +37,20 @@ from repro.core.sparsity import synthetic_head_curves
 BLOCK = 128
 BF16 = 2
 F32 = 4
+
+
+def _cache_bytes_per_elem(kv_dtype, cfg, cache_dtype_bytes: float) -> float:
+    """Effective KV bytes/element for the cost model (§2.12 byte-true).
+
+    ``kv_dtype`` (when given) wins over the legacy ``cache_dtype_bytes``
+    float: it includes the per-(block, kv-head) scale amortized over the
+    block's elements, so int8 costs slightly more than 1.0 byte/elem and
+    the packer balances what HBM actually streams.
+    """
+    if kv_dtype is None:
+        return cache_dtype_bytes
+    return quant.kv_dtype_bytes(kv_dtype, block=BLOCK,
+                                head_dim=cfg.head_dim_)
 
 
 @dataclasses.dataclass
@@ -289,7 +304,8 @@ def train_cost(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
 
 def prefill_cost(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
                  *, sparse: bool = True, allocator: str = "maxmin",
-                 partitioner: str = "best") -> CellCost:
+                 partitioner: str = "best",
+                 kv_dtype: str | None = None) -> CellCost:
     mi = _mesh_info(multi_pod)
     B, S = shape.global_batch, shape.seq_len
     tokens = B * S
@@ -304,6 +320,10 @@ def prefill_cost(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
         lin = (_tfm_linear_flops_per_token(cfg)
                + _tfm_logits_flops_per_token(cfg) / S) * tokens
         dh = cfg.head_dim_
+        kv_bytes = _cache_bytes_per_elem(kv_dtype, cfg, BF16)
+        if kv_dtype is not None:
+            breakdown["kv_dtype"] = kv_dtype
+            breakdown["cache_dtype_bytes"] = kv_bytes
         if sparse and spec.hplb != "none":
             padded_tiles, real_tiles = _sparse_prefill_tiles(
                 spec.arch_id, S, mi["model"], padded=True,
@@ -312,7 +332,7 @@ def prefill_cost(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
             breakdown["attn_tiles_padded"] = padded_tiles
             breakdown["attn_tiles_real"] = real_tiles
             breakdown["padding_waste"] = 1.0 - real_tiles / padded_tiles
-            kv_stream = padded_tiles * B * (2 * BLOCK * dh * BF16)
+            kv_stream = padded_tiles * B * (2 * BLOCK * dh * kv_bytes)
         else:
             tiles = sum(
                 (_window_tiles(-(-S // BLOCK), cfg.local_window)
@@ -321,10 +341,10 @@ def prefill_cost(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
                 for l in range(cfg.num_layers)) * cfg.num_heads
             attn = tiles * _tile_flops(dh) * B
             breakdown["attn_tiles_padded"] = tiles
-            kv_stream = tiles * B * (2 * BLOCK * dh * BF16)
+            kv_stream = tiles * B * (2 * BLOCK * dh * kv_bytes)
         flops = lin + attn
         kv_write = (cfg.num_layers * 2 * tokens
-                    * cfg.num_kv_heads * dh * BF16)
+                    * cfg.num_kv_heads * dh * kv_bytes)
         hbm = (n_params * BF16 + tokens * cfg.d_model * BF16 * 8
                * cfg.num_layers * 0.1 + kv_write + kv_stream)
     elif mod == "mamba2":
@@ -373,7 +393,8 @@ def prefill_cost(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
 
 def decode_cost(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
                 *, sparse: bool = True,
-                cache_dtype_bytes: float = BF16) -> CellCost:
+                cache_dtype_bytes: float = BF16,
+                kv_dtype: str | None = None) -> CellCost:
     mi = _mesh_info(multi_pod)
     B, S = shape.global_batch, shape.seq_len
     mod = spec.module
@@ -385,6 +406,11 @@ def decode_cost(spec: ArchSpec, shape: ShapeSpec, multi_pod: bool,
 
     if mod in ("transformer", "llava"):
         dh = cfg.head_dim_
+        cache_dtype_bytes = _cache_bytes_per_elem(
+            kv_dtype, cfg, cache_dtype_bytes)
+        breakdown["cache_dtype_bytes"] = cache_dtype_bytes
+        if kv_dtype is not None:
+            breakdown["kv_dtype"] = kv_dtype
         lin = (_tfm_linear_flops_per_token(cfg)
                + _tfm_logits_flops_per_token(cfg)) * B
         cache_bytes = (cfg.num_layers * 2 * B * cfg.num_kv_heads * S

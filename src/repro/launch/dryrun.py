@@ -33,7 +33,6 @@ import traceback
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import ARCHS, SHAPES, cells  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -121,15 +120,16 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             "compress": {"compress_grads": True},  # int8 grad all-reduce
             "remat_none": {"remat": "none"},
             "microbatch4": {"microbatches": 4},
-            "f8cache": {"cache_dtype": "f8"},      # fp8 KV cache decode
+            # quantized KV pool (§2.12): the REAL engine-path kv_dtype —
+            # int8/fp8 codes + per-(block, kv-head) scales threaded through
+            # decode_step and the shard_map flash-decode island
+            "f8cache": {"kv_dtype": "fp8"},
+            "int8cache": {"kv_dtype": "int8"},
             "rows": {"force_rows": True},          # (head, q_blk) row balance
             "moe_cf1": {"moe_cf": 1.0},            # MoE capacity 1.0
             "moe_int8": {"moe_int8_dispatch": True},  # int8 MoE all-to-all
         }
-        kw = dict(VARIANTS[variant])
-        if kw.pop("cache_dtype", None) == "f8":
-            kw["cache_dtype"] = jnp.float8_e4m3fn
-        built = build_step(spec, shape, mesh, **kw)
+        built = build_step(spec, shape, mesh, **VARIANTS[variant])
         rec["meta"] = {k: v for k, v in built.meta.items()
                        if isinstance(v, (int, float, str, bool, list))}
 
@@ -153,6 +153,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             if hasattr(mem, k)
         }
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: [dict]
+            cost = cost[0] if cost else {}
         if cost:
             rec["cost"] = {k: float(v) for k, v in cost.items()
                            if isinstance(v, (int, float))

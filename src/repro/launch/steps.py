@@ -30,6 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchSpec
 from repro.configs.inputs import input_specs
 from repro.configs.shapes import ShapeSpec
+from repro.core import quant
 from repro.core.planner import make_plan
 from repro.core.sparsity import synthetic_head_curves
 from repro.core.worklist import worklist_from_budgets
@@ -387,7 +388,8 @@ def _decode_block_ids_sharded(plan, cfg, cache_len: int, n_shards: int):
 
 def build_decode_step(spec: ArchSpec, shape: ShapeSpec, mesh,
                       *, sparse: bool = True,
-                      cache_dtype=None) -> BuiltStep:
+                      cache_dtype=None,
+                      kv_dtype: str | None = None) -> BuiltStep:
     B, S = shape.global_batch, shape.seq_len
     params_a = _abstract_params(spec)
     pspec = sh.param_specs(params_a, mesh)
@@ -439,9 +441,29 @@ def build_decode_step(spec: ArchSpec, shape: ShapeSpec, mesh,
         from repro.models import transformer as tfm
         cfg = spec.full if spec.module == "transformer" \
             else spec.full.backbone
-        cache_a = jax.eval_shape(
+        qz = kv_dtype is not None and quant.is_quantized(kv_dtype)
+        if kv_dtype is not None:
+            # real engine-path dtype selection (§2.12): the pool stores
+            # int8/fp8 codes; the legacy raw ``cache_dtype`` kwarg is
+            # retained for bf16-family experiments only
+            cache_dtype = quant.kv_cache_dtype(kv_dtype,
+                                               default=cache_dtype)
+        pool_a = jax.eval_shape(
             lambda: tfm.init_cache(cfg, B, S, dtype=cache_dtype))
-        cache_spec = sh.cache_specs(cache_a, mesh)
+        cache_spec = sh.cache_specs(pool_a, mesh)
+        if qz:
+            assert cfg.block_kv == BLOCK, \
+                "quantized decode step needs cfg.block_kv == plan BLOCK " \
+                "(one scale tile per plan block)"
+            assert S % BLOCK == 0, "quantized cache needs S % block == 0"
+            scales_a = jax.eval_shape(
+                lambda: tfm.init_cache_scales(cfg, B, S, BLOCK))
+            # scales [L, 2, B, Hkv, S/blk] travel with the cache: same
+            # batch / kv-head / seq-block sharding, no head-dim entry
+            scales_spec = P(*(tuple(cache_spec)[:5]))
+            cache_a = (pool_a, scales_a)
+        else:
+            cache_a = pool_a
         # seq-shard axes: whatever cache_specs put on the seq dim
         seq_entry = cache_spec[4]
         if seq_entry is None:
@@ -464,34 +486,62 @@ def build_decode_step(spec: ArchSpec, shape: ShapeSpec, mesh,
                 mesh, block_kv=BLOCK, seq_axes=seq_axes,
                 batch_axes=batch_axes)
 
-            def fn(params, cache, token, ids):
-                pos = S - 1
-                return tfm.decode_step(
-                    params, cache, token, pos, cfg,
-                    attn_override=lambda l, q, kc, vc: attend_by_layer(
-                        q, kc, vc, ids[l], pos))
+            if qz:
+                def fn(params, cache, token, ids):
+                    pos = S - 1
+                    pool, scales = cache
+                    logits, pool, scales = tfm.decode_step(
+                        params, pool, token, pos, cfg,
+                        scales=scales, kv_dtype=kv_dtype,
+                        attn_override=lambda l, q, kc, vc, ks, vs:
+                            attend_by_layer(q, kc, vc, ids[l], pos,
+                                            ks, vs))
+                    return logits, (pool, scales)
+            else:
+                def fn(params, cache, token, ids):
+                    pos = S - 1
+                    return tfm.decode_step(
+                        params, cache, token, pos, cfg,
+                        attn_override=lambda l, q, kc, vc: attend_by_layer(
+                            q, kc, vc, ids[l], pos))
             abstract = {"params": params_a, "cache": cache_a,
                         "token": data_a["token"],
                         "ids": jax.ShapeDtypeStruct(ids.shape, jnp.int32)}
             sspec = seq_axes[0] if len(seq_axes) == 1 else seq_axes
+            cache_sh = (NamedSharding(mesh, cache_spec) if not qz else
+                        (NamedSharding(mesh, cache_spec),
+                         NamedSharding(mesh, scales_spec)))
             in_sh = {"params": _named(mesh, pspec),
-                     "cache": NamedSharding(mesh, cache_spec),
+                     "cache": cache_sh,
                      "token": NamedSharding(mesh, sh.batch_specs(
                          data_a, mesh)["token"]),
                      "ids": NamedSharding(mesh, P(None, sspec))}
             meta = {"kind": "decode", "sparse": True,
                     "seq_axes": list(seq_axes),
-                    "nb_loc": int(ids.shape[-1])}
+                    "nb_loc": int(ids.shape[-1]),
+                    "kv_dtype": kv_dtype or "bf16"}
         else:
-            def fn(params, cache, token):
-                return tfm.decode_step(params, cache, token, S - 1, cfg)
+            if qz:
+                def fn(params, cache, token):
+                    pool, scales = cache
+                    logits, pool, scales = tfm.decode_step(
+                        params, pool, token, S - 1, cfg,
+                        scales=scales, kv_dtype=kv_dtype)
+                    return logits, (pool, scales)
+            else:
+                def fn(params, cache, token):
+                    return tfm.decode_step(params, cache, token, S - 1, cfg)
             abstract = {"params": params_a, "cache": cache_a,
                         "token": data_a["token"]}
+            cache_sh = (NamedSharding(mesh, cache_spec) if not qz else
+                        (NamedSharding(mesh, cache_spec),
+                         NamedSharding(mesh, scales_spec)))
             in_sh = {"params": _named(mesh, pspec),
-                     "cache": NamedSharding(mesh, cache_spec),
+                     "cache": cache_sh,
                      "token": NamedSharding(mesh, sh.batch_specs(
                          data_a, mesh)["token"])}
-            meta = {"kind": "decode", "sparse": False}
+            meta = {"kind": "decode", "sparse": False,
+                    "kv_dtype": kv_dtype or "bf16"}
 
     return BuiltStep(
         name=f"{spec.arch_id}:{shape.name}:decode",

@@ -34,6 +34,7 @@ from repro.attention.worklist_jnp import (
 )
 from repro.attention.dense import attention_maps, decode_attention_ref
 from repro.attention.rope import apply_rope
+from repro.core import quant
 from repro.kernels import ops as kernel_ops
 from repro.models import common
 from repro.models.moe import MoEConfig, moe_ffn, moe_init
@@ -311,7 +312,27 @@ def init_paged_cache(cfg: TransformerConfig, num_blocks: int, block: int,
          cfg.head_dim_), dtype)
 
 
-def scatter_seq_cache_paged(pool, seq_cache, table):
+def init_paged_scales(cfg: TransformerConfig, num_blocks: int):
+    """Dequant scales for a quantized paged pool: ``[L, 2, N, Hkv]`` f32,
+    one per (K|V, physical block, kv head) tile (DESIGN.md §2.12).  Init
+    is 1.0 — the neutral scale ``quantize_tiles`` assigns all-zero tiles,
+    so unwritten blocks dequantize to the zeros they hold."""
+    return jnp.ones((cfg.num_layers, 2, num_blocks, cfg.num_kv_heads),
+                    jnp.float32)
+
+
+def init_cache_scales(cfg: TransformerConfig, batch: int, max_len: int,
+                      block: int):
+    """Dequant scales for a quantized contiguous cache:
+    ``[L, 2, B, Hkv, Smax/block]`` f32 (``max_len`` a block multiple)."""
+    assert max_len % block == 0, "quantized contiguous cache needs " \
+        "max_len % block == 0 (scales are per block tile)"
+    return jnp.ones((cfg.num_layers, 2, batch, cfg.num_kv_heads,
+                     max_len // block), jnp.float32)
+
+
+def scatter_seq_cache_paged(pool, seq_cache, table, *, scales=None,
+                            kv_dtype: str = "bf16"):
     """Land a whole prefilled sequence cache in the pool (monolithic
     prefill's paged merge — the block-scatter twin of the contiguous
     ``dynamic_update_slice`` slot insert).
@@ -321,6 +342,12 @@ def scatter_seq_cache_paged(pool, seq_cache, table):
     mapped prefix (bucket padding) scatter into the trash block (the
     pool's last physical block) — the paged analogue of the stale padded
     rows the contiguous layout masks by position.
+
+    Quantized pool (DESIGN.md §2.12): pass ``scales [L, 2, N, Hkv]`` and
+    the storage ``kv_dtype`` — each block tile quantizes AT SCATTER TIME
+    (the full-precision sequence cache is a prefill temporary, never
+    resident) and its scale scatters through the same ``gids``, so scale
+    and block can never separate.  Returns ``(pool, scales)`` then.
     """
     L, _, _, hkv, S, dh = seq_cache.shape
     block = pool.shape[4]
@@ -330,7 +357,11 @@ def scatter_seq_cache_paged(pool, seq_cache, table):
         seq_cache[:, :, 0].reshape(L, 2, hkv, nblk, block, dh), 3, 2)
     tbl = jnp.asarray(table, jnp.int32)[:nblk]
     gids = jnp.where(tbl >= 0, tbl, trash)
-    return pool.at[:, :, gids].set(blocks.astype(pool.dtype))
+    if scales is None:
+        return pool.at[:, :, gids].set(blocks.astype(pool.dtype))
+    codes, s = quant.quantize_pool_blocks(blocks, kv_dtype)
+    return (pool.at[:, :, gids].set(codes),
+            scales.at[:, :, gids].set(s))
 
 
 def prefill(params, tokens, cfg: TransformerConfig, *,
@@ -412,7 +443,8 @@ def prefill(params, tokens, cfg: TransformerConfig, *,
 def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
                 block_ids=None, packed_items=None,
                 cache_len: int | jnp.ndarray | None = None,
-                active=None, attn_override=None):
+                active=None, attn_override=None,
+                scales=None, kv_dtype: str = "bf16"):
     """One decode step.
 
     token [B] int32; pos scalar OR [B] int32 (current position per
@@ -433,20 +465,35 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
     keep their cache rows UNTOUCHED; without it the batched step would
     clobber row ``pos`` (= 0 for padded slots) of every slot in the batch.
     ``attn_override(l, q, kc, vc) -> o [B, H, 1, Dh]`` replaces the
-    attention compute (serving engine's shard_map island).
+    attention compute (serving engine's shard_map island; with a quantized
+    cache it receives two extra args ``(ks, vs) [B, Hkv, Smax/block_kv]``).
+
+    Quantized cache (DESIGN.md §2.12): pass ``scales [L, 2, B, Hkv,
+    Smax/block_kv]`` f32 and the storage ``kv_dtype``.  The token append
+    becomes a gather -> :func:`repro.core.quant.insert_token_requant` ->
+    scatter on the row's CURRENT block tile, the flash executors fold the
+    scales into their post-dot rescale, and the return grows to
+    ``(logits, cache, scales)``.  ``scales=None`` (default) leaves every
+    code path — and its compiled program — bitwise identical to pre-§2.12.
     """
     assert block_ids is None or packed_items is None, \
         "block_ids and packed_items are mutually exclusive"
     packed = packed_items is not None
     sel = packed_items if packed else block_ids
+    qz = scales is not None
     B = token.shape[0]
     x = jnp.take(params["embed"], token[:, None], axis=0)  # [B, 1, d]
     pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     smax = cache.shape[4]
+    blkq = cfg.block_kv
+    if qz:
+        assert smax % blkq == 0, "quantized contiguous cache needs " \
+            "Smax % block_kv == 0 (per-block scale tiles)"
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim_
     clen = pos_arr + 1 if cache_len is None else jnp.broadcast_to(
         jnp.asarray(cache_len), (B,))
 
-    def layer(x, lp, layer_cache, l, items_l):
+    def layer(x, lp, layer_cache, layer_scales, l, items_l):
         h = common.rmsnorm(x, lp["ln1"])
         ap = lp["attn"]
         q = common.split_heads(jnp.einsum("bsd,df->bsf", h, ap["wq"]),
@@ -458,30 +505,64 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
         rope = lambda t, p: apply_rope(t, p[None], cfg.rope_theta)
         q = jax.vmap(rope)(q, pos_arr)
         k = jax.vmap(rope)(k, pos_arr)
-        if active is None:
-            upd = lambda c, kn, p: jax.lax.dynamic_update_slice(
-                c, kn.astype(c.dtype), (0, p, 0))
-            kc = jax.vmap(upd)(layer_cache[0], k, pos_arr)
-            vc = jax.vmap(upd)(layer_cache[1], v, pos_arr)
+        if not qz:
+            ks = vs = None
+            if active is None:
+                upd = lambda c, kn, p: jax.lax.dynamic_update_slice(
+                    c, kn.astype(c.dtype), (0, p, 0))
+                kc = jax.vmap(upd)(layer_cache[0], k, pos_arr)
+                vc = jax.vmap(upd)(layer_cache[1], v, pos_arr)
+            else:
+                # inactive slots write their CURRENT row back (a no-op
+                # update): the batched step must never mutate a freed or
+                # mid-prefill slot
+                def upd(c, kn, p, a):
+                    cur = jax.lax.dynamic_slice(c, (0, p, 0), kn.shape)
+                    kn = jnp.where(a, kn.astype(c.dtype), cur)
+                    return jax.lax.dynamic_update_slice(c, kn, (0, p, 0))
+                act = jnp.asarray(active)
+                kc = jax.vmap(upd)(layer_cache[0], k, pos_arr, act)
+                vc = jax.vmap(upd)(layer_cache[1], v, pos_arr, act)
         else:
-            # inactive slots write their CURRENT row back (a no-op update):
-            # the batched step must never mutate a freed or mid-prefill slot
-            def upd(c, kn, p, a):
-                cur = jax.lax.dynamic_slice(c, (0, p, 0), kn.shape)
-                kn = jnp.where(a, kn.astype(c.dtype), cur)
-                return jax.lax.dynamic_update_slice(c, kn, (0, p, 0))
-            act = jnp.asarray(active)
-            kc = jax.vmap(upd)(layer_cache[0], k, pos_arr, act)
-            vc = jax.vmap(upd)(layer_cache[1], v, pos_arr, act)
+            # quantized append: gather the row's CURRENT block tile + its
+            # scale, requantize with the new token in place
+            # (repro.core.quant.insert_token_requant), scatter both back.
+            # Inactive rows keep tile and scale via the where — the
+            # contiguous layout has no trash block to route junk into.
+            act = (jnp.ones((B,), bool) if active is None
+                   else jnp.asarray(active))
+            blk_i = pos_arr // blkq                             # [B]
+            offs = pos_arr % blkq
+            rows = jnp.arange(B)[:, None]
+            heads = jnp.arange(hkv)[None, :]
+
+            def rmw(c, sc, tok):
+                cur = jax.vmap(
+                    lambda cr, bi: jax.lax.dynamic_slice(
+                        cr, (0, bi * blkq, 0), (hkv, blkq, dh)))(c, blk_i)
+                cur_s = jnp.take_along_axis(
+                    sc, blk_i[:, None, None], axis=2)[:, :, 0]  # [B, Hkv]
+                new_c, new_s = quant.insert_token_requant(
+                    cur, cur_s, tok[:, :, 0, :], offs, kv_dtype)
+                new_c = jnp.where(act[:, None, None, None], new_c, cur)
+                new_s = jnp.where(act[:, None], new_s, cur_s)
+                c = jax.vmap(
+                    lambda cr, nc, bi: jax.lax.dynamic_update_slice(
+                        cr, nc, (0, bi * blkq, 0)))(c, new_c, blk_i)
+                return c, sc.at[rows, heads, blk_i[:, None]].set(new_s)
+
+            kc, ks = rmw(layer_cache[0], layer_scales[0], k)
+            vc, vs = rmw(layer_cache[1], layer_scales[1], v)
         window = _window_of(cfg, l)
         if attn_override is not None:
-            o = attn_override(l, q, kc, vc)
+            o = (attn_override(l, q, kc, vc, ks, vs) if qz
+                 else attn_override(l, q, kc, vc))
         elif items_l is not None and packed:
             # cost-packed ragged decode: the flat per-layer worklist drives
             # the grid — total selected tiles, not B x Hkv x max-budget
             o = kernel_ops.flash_decode_packed(
                 q, kc, vc, items_l, pos_arr, block_kv=cfg.block_kv,
-                window=window)
+                window=window, k_scales=ks, v_scales=vs)
         elif items_l is not None:
             # fused budgeted flash-decode: stream only the selected blocks
             # from the cache in place (no [B, Hkv, nb*blk, Dh] gather).
@@ -490,41 +571,60 @@ def decode_step(params, cache, token, pos, cfg: TransformerConfig, *,
                      if items_l.ndim == 2 else items_l)
             o = kernel_ops.flash_decode(
                 q, kc, vc, ids_b, pos_arr, block_kv=cfg.block_kv,
-                window=window)
+                window=window, k_scales=ks, v_scales=vs)
         else:
             kpos = jnp.arange(smax)
             valid = kpos[None] < clen[:, None]      # [B, Smax]
             if window is not None:
                 valid = valid & (kpos[None] > (pos_arr[:, None] - window))
-            o = _decode_attend(q, kc, vc, valid[:, None], cfg)
+            if qz:
+                deq = lambda c, s: (
+                    c.reshape(B, hkv, -1, blkq, dh).astype(jnp.float32)
+                    * s[..., None, None]).reshape(B, hkv, smax, dh)
+                o = _decode_attend(q, deq(kc, ks), deq(vc, vs),
+                                   valid[:, None], cfg)
+            else:
+                o = _decode_attend(q, kc, vc, valid[:, None], cfg)
         o = common.merge_heads(o)
         x = x + jnp.einsum("bsf,fd->bsd", o, lp["attn"]["wo"])
         h2 = common.rmsnorm(x, lp["ln2"])
         x = x + _ffn(h2, lp, cfg)
+        if qz:
+            return x, jnp.stack([kc, vc]), jnp.stack([ks, vs])
         return x, jnp.stack([kc, vc])
 
     if cfg.loop_mode == "scan":
-        if sel is None:
-            def body(x, scan_in):
-                lp, layer_cache = scan_in
-                x, new_c = layer(x, lp, layer_cache, 0, None)
-                return x, new_c
-            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
-        else:
-            def body(x, scan_in):
-                lp, layer_cache, items_l = scan_in
-                x, new_c = layer(x, lp, layer_cache, 0, items_l)
-                return x, new_c
-            x, new_cache = jax.lax.scan(
-                body, x, (params["layers"], cache, jnp.asarray(sel)))
+        xs = [params["layers"], cache]
+        if qz:
+            xs.append(scales)
+        if sel is not None:
+            xs.append(jnp.asarray(sel))
+
+        def body(x, scan_in):
+            it = iter(scan_in)
+            lp, layer_cache = next(it), next(it)
+            layer_scales = next(it) if qz else None
+            items_l = next(it) if sel is not None else None
+            out = layer(x, lp, layer_cache, layer_scales, 0, items_l)
+            return out[0], out[1:]
+        x, ys = jax.lax.scan(body, x, tuple(xs))
+        new_cache = ys[0]
+        new_scales = ys[1] if qz else None
     else:
-        new_layers = []
+        new_layers, new_scale_layers = [], []
         for l in range(cfg.num_layers):
             items_l = None if sel is None else jnp.asarray(sel[l])
-            x, nc = layer(x, params["layers"][l], cache[l], l, items_l)
-            new_layers.append(nc)
+            out = layer(x, params["layers"][l], cache[l],
+                        scales[l] if qz else None, l, items_l)
+            x = out[0]
+            new_layers.append(out[1])
+            if qz:
+                new_scale_layers.append(out[2])
         new_cache = jnp.stack(new_layers)
+        new_scales = jnp.stack(new_scale_layers) if qz else None
     logits = _logits(x, params, cfg)[:, 0]
+    if qz:
+        return logits, new_cache, new_scales
     return logits, new_cache
 
 
@@ -654,7 +754,8 @@ def prefill_chunk(params, cache, tokens, slot, q_offset,
 
 def prefill_chunk_paged(params, pool, tokens, table, q_offset,
                         cfg: TransformerConfig, *,
-                        kv_len=None, sparse_items=None, last_index=None):
+                        kv_len=None, sparse_items=None, last_index=None,
+                        scales=None, kv_dtype: str = "bf16"):
     """Paged partial prefill (DESIGN.md §2.7): the chunk's K/V lands
     directly in the sequence's pool blocks (a block SCATTER at the
     table-translated indices — no staging cache, no final merge), and the
@@ -671,12 +772,20 @@ def prefill_chunk_paged(params, pool, tokens, table, q_offset,
     dense chunks gather the table's blocks into a contiguous [Smax] view —
     O(one sequence), exactly the staging traffic of the contiguous path.
     Returns (logits [1, V] at chunk-local ``last_index``, new pool).
+
+    Quantized pool (DESIGN.md §2.12): pass ``scales [L, 2, N, Hkv]`` f32 +
+    the storage ``kv_dtype`` — the chunk's block tiles quantize at scatter
+    time (scales scatter through the same ``gids``), sparse chunks fold
+    the scales into ``worklist_attention_paged``'s post-dot rescale, dense
+    chunks dequantize their gathered per-sequence view.  Returns
+    ``(logits, pool, scales)`` then.
     """
     B, C = tokens.shape
     block = pool.shape[4]
     trash = pool.shape[2] - 1
     hkv, dh = cfg.num_kv_heads, cfg.head_dim_
     assert C % block == 0, "chunk bucket must span whole cache blocks"
+    qz = scales is not None
     nblk = C // block
     q_offset = jnp.asarray(q_offset, jnp.int32)
     kv_len = (q_offset + C if kv_len is None
@@ -688,7 +797,7 @@ def prefill_chunk_paged(params, pool, tokens, table, q_offset,
     x = jnp.take(params["embed"], tokens, axis=0)
     x = constrain(x, "batch", None, None)
 
-    def layer(x, lp, layer_pool, l, items_l):
+    def layer(x, lp, layer_pool, layer_scales, l, items_l):
         h = common.rmsnorm(x, lp["ln1"])
         q, k, v = _qkv(h, lp["attn"], cfg, positions)
         q = constrain(q, "batch", "model", None, None)
@@ -697,61 +806,96 @@ def prefill_chunk_paged(params, pool, tokens, table, q_offset,
         gids = jnp.where(gsl >= 0, gsl, trash)
         as_blocks = lambda t: jnp.moveaxis(
             t[0].reshape(hkv, nblk, block, dh), 1, 0)
-        kc = layer_pool[0].at[gids].set(
-            as_blocks(k).astype(layer_pool.dtype))
-        vc = layer_pool[1].at[gids].set(
-            as_blocks(v).astype(layer_pool.dtype))
+        if not qz:
+            ks = vs = None
+            kc = layer_pool[0].at[gids].set(
+                as_blocks(k).astype(layer_pool.dtype))
+            vc = layer_pool[1].at[gids].set(
+                as_blocks(v).astype(layer_pool.dtype))
+        else:
+            kcodes, ksc = quant.quantize_pool_blocks(as_blocks(k), kv_dtype)
+            vcodes, vsc = quant.quantize_pool_blocks(as_blocks(v), kv_dtype)
+            kc = layer_pool[0].at[gids].set(kcodes)
+            vc = layer_pool[1].at[gids].set(vcodes)
+            ks = layer_scales[0].at[gids].set(ksc)
+            vs = layer_scales[1].at[gids].set(vsc)
         window = _window_of(cfg, l)
         if items_l is not None:
             o = worklist_attention_paged(
                 q[0], kc, vc, items_l, tbl,
                 block_q=cfg.block_q, block_kv=block,
-                q_offset=q_offset, kv_len=kv_len)[None]
+                q_offset=q_offset, kv_len=kv_len,
+                k_scales=ks, v_scales=vs)[None]
         else:
-            view = lambda c: jnp.moveaxis(
-                jnp.take(c, jnp.maximum(tbl, 0), axis=0), 0, 1
-            ).reshape(hkv, T * block, dh)
+            if qz:
+                # dequantized per-sequence view: gather codes AND scales
+                # through the table, one broadcast multiply (O(sequence) —
+                # the same staging traffic the dense chunk already pays)
+                view = lambda c, s: (
+                    jnp.moveaxis(jnp.take(c, jnp.maximum(tbl, 0), axis=0),
+                                 0, 1).astype(jnp.float32)
+                    * jnp.moveaxis(jnp.take(s, jnp.maximum(tbl, 0), axis=0),
+                                   0, 1)[:, :, None, None]
+                ).reshape(hkv, T * block, dh)
+                kview, vview = view(kc, ks), view(vc, vs)
+            else:
+                view = lambda c: jnp.moveaxis(
+                    jnp.take(c, jnp.maximum(tbl, 0), axis=0), 0, 1
+                ).reshape(hkv, T * block, dh)
+                kview, vview = view(kc), view(vc)
             kpos = jnp.arange(T * block)
             valid = ((kpos[None, :] <= positions[:, None])
                      & (kpos[None, :] < kv_len))          # [C, T*block]
             if window is not None:
                 valid = valid & (kpos[None, :] > positions[:, None] - window)
-            o = _chunk_attend(q, view(kc)[None], view(vc)[None],
+            o = _chunk_attend(q, kview[None], vview[None],
                               valid[None, None], cfg)
         o = common.merge_heads(o)
         x = x + jnp.einsum("bsf,fd->bsd", o, lp["attn"]["wo"])
         h2 = common.rmsnorm(x, lp["ln2"])
         x = x + _ffn(h2, lp, cfg)
+        if qz:
+            return x, jnp.stack([kc, vc]), jnp.stack([ks, vs])
         return x, jnp.stack([kc, vc])
 
     if cfg.loop_mode == "scan":
-        if sparse_items is None:
-            def body(x, scan_in):
-                lp, layer_pool = scan_in
-                x, new_c = layer(x, lp, layer_pool, 0, None)
-                return x, new_c
-            x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
-        else:
-            def body(x, scan_in):
-                lp, layer_pool, items_l = scan_in
-                x, new_c = layer(x, lp, layer_pool, 0, items_l)
-                return x, new_c
-            x, new_pool = jax.lax.scan(
-                body, x, (params["layers"], pool, jnp.asarray(sparse_items)))
+        xs = [params["layers"], pool]
+        if qz:
+            xs.append(scales)
+        if sparse_items is not None:
+            xs.append(jnp.asarray(sparse_items))
+
+        def body(x, scan_in):
+            it = iter(scan_in)
+            lp, layer_pool = next(it), next(it)
+            layer_scales = next(it) if qz else None
+            items_l = next(it) if sparse_items is not None else None
+            out = layer(x, lp, layer_pool, layer_scales, 0, items_l)
+            return out[0], out[1:]
+        x, ys = jax.lax.scan(body, x, tuple(xs))
+        new_pool = ys[0]
+        new_scales = ys[1] if qz else None
     else:
-        new_layers = []
+        new_layers, new_scale_layers = [], []
         for l in range(cfg.num_layers):
             items_l = (None if sparse_items is None
                        else jnp.asarray(sparse_items[l]))
-            x, nc = layer(x, params["layers"][l], pool[l], l, items_l)
-            new_layers.append(nc)
+            out = layer(x, params["layers"][l], pool[l],
+                        scales[l] if qz else None, l, items_l)
+            x = out[0]
+            new_layers.append(out[1])
+            if qz:
+                new_scale_layers.append(out[2])
         new_pool = jnp.stack(new_layers)
+        new_scales = jnp.stack(new_scale_layers) if qz else None
     if last_index is None:
         x_last = x[:, -1:, :]
     else:
         x_last = jax.lax.dynamic_slice_in_dim(
             x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
     logits = _logits(x_last, params, cfg)[:, 0]
+    if qz:
+        return logits, new_pool, new_scales
     return logits, new_pool
 
 
@@ -775,7 +919,8 @@ def decode_step_paged(params, pool, token, pos, table,
                       cfg: TransformerConfig, *,
                       block_ids=None, packed_items=None, cache_len=None,
                       active=None, seq_stripes: int = 1,
-                      stripe_size: int | None = None):
+                      stripe_size: int | None = None,
+                      scales=None, kv_dtype: str = "bf16"):
     """One paged decode step (DESIGN.md §2.7).
 
     token [B] int32; pos scalar OR [B] int32; pool [L, 2, N, Hkv, block,
@@ -803,6 +948,15 @@ def decode_step_paged(params, pool, token, pos, table,
     carries per-stripe lists ``[L, S, Lb, DEC_FIELDS]``; ``block_ids``
     and dense mode restrict each pass via a stripe-masked table.  The KV
     write is stripe-oblivious (the table routes it to the owning block).
+
+    Quantized pool (DESIGN.md §2.12): pass ``scales [L, 2, N, Hkv]`` f32
+    and the storage ``kv_dtype``.  The single-block token write becomes a
+    gather -> :func:`repro.core.quant.insert_token_requant` -> full-block
+    scatter (inactive/unmapped rows still collapse onto the trash block —
+    its codes AND scale are junk by the same contract), the flash
+    executors take the PHYSICAL-indexed scales next to the pool, and the
+    return grows to ``(logits, pool, scales)``.  ``scales=None`` keeps
+    every path bitwise pre-§2.12.
     """
     assert block_ids is None or packed_items is None, \
         "block_ids and packed_items are mutually exclusive"
@@ -811,6 +965,7 @@ def decode_step_paged(params, pool, token, pos, table,
             "striped decode needs the allocator's stripe_size"
     packed = packed_items is not None
     sel = packed_items if packed else block_ids
+    qz = scales is not None
     B = token.shape[0]
     block = pool.shape[4]
     trash = pool.shape[2] - 1
@@ -824,7 +979,7 @@ def decode_step_paged(params, pool, token, pos, table,
     act = (jnp.ones((B,), bool) if active is None
            else jnp.asarray(active))
 
-    def layer(x, lp, layer_pool, l, items_l):
+    def layer(x, lp, layer_pool, layer_scales, l, items_l):
         h = common.rmsnorm(x, lp["ln1"])
         ap = lp["attn"]
         q = common.split_heads(jnp.einsum("bsd,df->bsf", h, ap["wq"]),
@@ -847,12 +1002,31 @@ def decode_step_paged(params, pool, token, pos, table,
         offs = pos_arr % block                                 # [B]
         heads = jnp.arange(hkv)
 
-        def write(c, new):
-            return c.at[gids[:, None], heads[None, :],
-                        offs[:, None]].set(new[:, :, 0, :].astype(c.dtype))
+        if not qz:
+            ks = vs = None
 
-        kc = write(layer_pool[0], k)
-        vc = write(layer_pool[1], v)
+            def write(c, new):
+                return c.at[gids[:, None], heads[None, :],
+                            offs[:, None]].set(
+                    new[:, :, 0, :].astype(c.dtype))
+
+            kc = write(layer_pool[0], k)
+            vc = write(layer_pool[1], v)
+        else:
+            # quantized append: gather each row's current block tile +
+            # scale, requantize with the new token, scatter the FULL tile
+            # back (same B-blocks-per-layer traffic class as the gathers
+            # the attention itself performs; inactive rows hit the trash
+            # block, whose codes/scale are junk by contract)
+            def rmw(c, sc, tok):
+                cur = jnp.take(c, gids, axis=0)          # [B, Hkv, blk, Dh]
+                cur_s = jnp.take(sc, gids, axis=0)       # [B, Hkv]
+                new_c, new_s = quant.insert_token_requant(
+                    cur, cur_s, tok[:, :, 0, :], offs, kv_dtype)
+                return c.at[gids].set(new_c), sc.at[gids].set(new_s)
+
+            kc, ks = rmw(layer_pool[0], layer_scales[0], k)
+            vc, vs = rmw(layer_pool[1], layer_scales[1], v)
         window = _window_of(cfg, l)
 
         def stripe_table(s):
@@ -869,26 +1043,27 @@ def decode_step_paged(params, pool, token, pos, table,
                 # the single-device twin of the island's psum over 'seq'
                 parts = [kernel_ops.flash_decode_packed_paged(
                     q, kc, vc, items_l[s], tbl, pos_arr, block_kv=block,
-                    window=window, partials=True)
+                    window=window, partials=True, k_scales=ks, v_scales=vs)
                     for s in range(seq_stripes)]
                 o = _merge_stripe_partials(parts, B, hkv, dh, q.dtype)
             else:
                 o = kernel_ops.flash_decode_packed_paged(
                     q, kc, vc, items_l, tbl, pos_arr, block_kv=block,
-                    window=window)
+                    window=window, k_scales=ks, v_scales=vs)
         elif items_l is not None:
             ids_b = (jnp.broadcast_to(items_l[None], (B,) + items_l.shape)
                      if items_l.ndim == 2 else items_l)
             if seq_stripes > 1:
                 parts = [kernel_ops.flash_decode_paged(
                     q, kc, vc, ids_b, stripe_table(s), pos_arr,
-                    block_kv=block, window=window, partials=True)
+                    block_kv=block, window=window, partials=True,
+                    k_scales=ks, v_scales=vs)
                     for s in range(seq_stripes)]
                 o = _merge_stripe_partials(parts, B, hkv, dh, q.dtype)
             else:
                 o = kernel_ops.flash_decode_paged(
                     q, kc, vc, ids_b, tbl, pos_arr, block_kv=block,
-                    window=window)
+                    window=window, k_scales=ks, v_scales=vs)
         elif seq_stripes > 1:
             # dense under striping: every resident logical block selected,
             # each stripe streams only its own via the masked table
@@ -896,46 +1071,72 @@ def decode_step_paged(params, pool, token, pos, table,
                                        (B, hkv, T))
             parts = [kernel_ops.flash_decode_paged(
                 q, kc, vc, ids_all, stripe_table(s), pos_arr,
-                block_kv=block, window=window, partials=True)
+                block_kv=block, window=window, partials=True,
+                k_scales=ks, v_scales=vs)
                 for s in range(seq_stripes)]
             o = _merge_stripe_partials(parts, B, hkv, dh, q.dtype)
         else:
-            view = lambda c: jnp.moveaxis(
-                jnp.take(c, jnp.maximum(tbl, 0), axis=0), 1, 2
-            ).reshape(B, hkv, T * block, dh)
+            if qz:
+                # dequantized per-row view: gather codes AND scales
+                # through the table, one broadcast multiply — the dense
+                # fallback already pays the O(B x resident) gather
+                view = lambda c, s: (
+                    jnp.moveaxis(jnp.take(c, jnp.maximum(tbl, 0), axis=0),
+                                 1, 2).astype(jnp.float32)
+                    * jnp.moveaxis(jnp.take(s, jnp.maximum(tbl, 0), axis=0),
+                                   1, 2)[..., None, None]
+                ).reshape(B, hkv, T * block, dh)
+                kview, vview = view(kc, ks), view(vc, vs)
+            else:
+                view = lambda c: jnp.moveaxis(
+                    jnp.take(c, jnp.maximum(tbl, 0), axis=0), 1, 2
+                ).reshape(B, hkv, T * block, dh)
+                kview, vview = view(kc), view(vc)
             kpos = jnp.arange(T * block)
             valid = kpos[None] < clen[:, None]            # [B, T*block]
             if window is not None:
                 valid = valid & (kpos[None] > (pos_arr[:, None] - window))
-            o = _decode_attend(q, view(kc), view(vc), valid[:, None], cfg)
+            o = _decode_attend(q, kview, vview, valid[:, None], cfg)
         o = common.merge_heads(o)
         x = x + jnp.einsum("bsf,fd->bsd", o, lp["attn"]["wo"])
         h2 = common.rmsnorm(x, lp["ln2"])
         x = x + _ffn(h2, lp, cfg)
+        if qz:
+            return x, jnp.stack([kc, vc]), jnp.stack([ks, vs])
         return x, jnp.stack([kc, vc])
 
     if cfg.loop_mode == "scan":
-        if sel is None:
-            def body(x, scan_in):
-                lp, layer_pool = scan_in
-                x, new_c = layer(x, lp, layer_pool, 0, None)
-                return x, new_c
-            x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
-        else:
-            def body(x, scan_in):
-                lp, layer_pool, items_l = scan_in
-                x, new_c = layer(x, lp, layer_pool, 0, items_l)
-                return x, new_c
-            x, new_pool = jax.lax.scan(
-                body, x, (params["layers"], pool, jnp.asarray(sel)))
+        xs = [params["layers"], pool]
+        if qz:
+            xs.append(scales)
+        if sel is not None:
+            xs.append(jnp.asarray(sel))
+
+        def body(x, scan_in):
+            it = iter(scan_in)
+            lp, layer_pool = next(it), next(it)
+            layer_scales = next(it) if qz else None
+            items_l = next(it) if sel is not None else None
+            out = layer(x, lp, layer_pool, layer_scales, 0, items_l)
+            return out[0], out[1:]
+        x, ys = jax.lax.scan(body, x, tuple(xs))
+        new_pool = ys[0]
+        new_scales = ys[1] if qz else None
     else:
-        new_layers = []
+        new_layers, new_scale_layers = [], []
         for l in range(cfg.num_layers):
             items_l = None if sel is None else jnp.asarray(sel[l])
-            x, nc = layer(x, params["layers"][l], pool[l], l, items_l)
-            new_layers.append(nc)
+            out = layer(x, params["layers"][l], pool[l],
+                        scales[l] if qz else None, l, items_l)
+            x = out[0]
+            new_layers.append(out[1])
+            if qz:
+                new_scale_layers.append(out[2])
         new_pool = jnp.stack(new_layers)
+        new_scales = jnp.stack(new_scale_layers) if qz else None
     logits = _logits(x, params, cfg)[:, 0]
+    if qz:
+        return logits, new_pool, new_scales
     return logits, new_pool
 
 
@@ -960,8 +1161,20 @@ def permute_cache_kv_heads(cache, kv_perm):
     return jnp.take_along_axis(cache, idx, axis=3)
 
 
+def permute_cache_scales(scales, kv_perm):
+    """Scales twin of :func:`permute_cache_kv_heads` (DESIGN.md §2.12):
+    the same per-layer kv-head gather applied to the dequant-scales
+    tensor — paged ``[L, 2, N, Hkv]`` or contiguous ``[L, 2, B, Hkv,
+    Smax/block]``, kv heads on axis 3 in both — so an epoch swap moves
+    every block's scale with its codes in the same jit."""
+    idx = jnp.asarray(kv_perm, jnp.int32).reshape(
+        (scales.shape[0], 1, 1, scales.shape[3])
+        + (1,) * (scales.ndim - 4))
+    return jnp.take_along_axis(scales, idx, axis=3)
+
+
 def decode_telemetry(params, cache, token, pos, cfg: TransformerConfig, *,
-                     block_ids, cache_len, table=None):
+                     block_ids, cache_len, table=None, scales=None):
     """Quest-bound estimate of the recovery each head's selection realizes.
 
     The in-graph half of the online sparsity telemetry (DESIGN.md §2.9):
@@ -988,6 +1201,12 @@ def decode_telemetry(params, cache, token, pos, cfg: TransformerConfig, *,
     position-aware decode tables.  Returns ``(rec, frac)`` both
     ``[L, B, H]`` float32 (rows with ``cache_len == 0`` return garbage the
     caller must mask — the engine filters to active slots).
+
+    Quantized cache (DESIGN.md §2.12): pass ``scales`` (paged ``[L, 2, N,
+    Hkv]`` / contiguous ``[L, 2, B, Hkv, Smax/block]``) — the probe's
+    Quest summaries and its dense estimator forward both run on
+    DEQUANTIZED values, so realized-recovery estimates (and hence drift /
+    replans) reflect what decode attention actually computes.
     """
     B = token.shape[0]
     hkv, dh = cfg.num_kv_heads, cfg.head_dim_
@@ -1011,7 +1230,7 @@ def decode_telemetry(params, cache, token, pos, cfg: TransformerConfig, *,
     layers = params["layers"]
     stacked = not isinstance(layers, (list, tuple))
 
-    def layer_fn(x, lp, layer_cache, l, ids_l):
+    def layer_fn(x, lp, layer_cache, layer_scales, l, ids_l):
         h = common.rmsnorm(x, lp["ln1"])
         ap = lp["attn"]
         q = common.split_heads(jnp.einsum("bsd,df->bsf", h, ap["wq"]),
@@ -1019,14 +1238,33 @@ def decode_telemetry(params, cache, token, pos, cfg: TransformerConfig, *,
         rope = lambda t, p: apply_rope(t, p[None], cfg.rope_theta)
         q = jax.vmap(rope)(q, pos_arr)                    # [B, H, 1, Dh]
         if paged:
-            view = lambda c: jnp.moveaxis(
-                jnp.take(c, jnp.maximum(tbl, 0), axis=0), 1, 2
-            ).reshape(B, hkv, skv, dh)
-            kc, vc = view(layer_cache[0]), view(layer_cache[1])
+            if layer_scales is None:
+                view = lambda c: jnp.moveaxis(
+                    jnp.take(c, jnp.maximum(tbl, 0), axis=0), 1, 2
+                ).reshape(B, hkv, skv, dh)
+                kc, vc = view(layer_cache[0]), view(layer_cache[1])
+            else:
+                # dequantized view: scales gather through the same table
+                # (the probe is un-donated and O(B x resident) already)
+                view = lambda c, s: (
+                    jnp.moveaxis(jnp.take(c, jnp.maximum(tbl, 0), axis=0),
+                                 1, 2).astype(jnp.float32)
+                    * jnp.moveaxis(jnp.take(s, jnp.maximum(tbl, 0), axis=0),
+                                   1, 2)[..., None, None]
+                ).reshape(B, hkv, skv, dh)
+                kc = view(layer_cache[0], layer_scales[0])
+                vc = view(layer_cache[1], layer_scales[1])
         else:
             # a contiguous cache's Smax need not be a block multiple: pad
             # to the block grid (pads sit past every clen, so the valid
             # mask — already sized nkvb*blk — excludes them everywhere)
+            if layer_scales is not None:
+                deq = lambda c, s: (
+                    c.reshape(B, hkv, -1, blk, dh).astype(jnp.float32)
+                    * s[..., None, None]).reshape(B, hkv, skv, dh)
+                layer_cache = jnp.stack(
+                    [deq(layer_cache[0], layer_scales[0]),
+                     deq(layer_cache[1], layer_scales[1])])
             pad = nkvb * blk - skv
             padkv = lambda c: (jnp.pad(c, ((0, 0), (0, 0), (0, pad),
                                            (0, 0))) if pad else c)
@@ -1072,7 +1310,9 @@ def decode_telemetry(params, cache, token, pos, cfg: TransformerConfig, *,
     for l in range(cfg.num_layers):
         lp = (jax.tree.map(lambda t: t[l], layers) if stacked
               else layers[l])
-        x, rec_l, frac_l = layer_fn(x, lp, cache[l], l, ids[l])
+        x, rec_l, frac_l = layer_fn(
+            x, lp, cache[l], None if scales is None else scales[l],
+            l, ids[l])
         recs.append(rec_l)
         fracs.append(frac_l)
     return jnp.stack(recs), jnp.stack(fracs)

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.attention.policies import policy_by_name
+from repro.core import quant
 from repro.core.planner import (
     HPLBPlan,
     make_plan,
@@ -104,6 +105,13 @@ class EngineConfig:
     # (byte-parity with the contiguous layout).  Smaller pools trade
     # worst-case capacity for HBM; admission guards via reservations.
     num_kv_blocks: int | None = None
+    # KV storage dtype (DESIGN.md §2.12): "bf16" keeps the full-precision
+    # cache bitwise-unchanged; "int8" / "fp8" store quantized codes plus a
+    # per-(block, kv-head) f32 dequant scale and dequantize INSIDE the
+    # decode kernels (post-dot rescale — no f32 cache copy ever
+    # materializes).  Quantization halves (vs bf16) the resident bytes per
+    # token AND the swap/preempt host-tier bandwidth.
+    kv_dtype: str = "bf16"
     # decode work layout (DESIGN.md §2.8): "packed" flattens each tick's
     # per-slot selections into a cost-packed ragged worklist (grid length
     # = total selected blocks rounded to a pow2 bucket — scales with
@@ -185,6 +193,17 @@ class Engine:
         # an epoch swap re-derives on demand and old-epoch entries either
         # age out of the LRU memos or are purged (plain dicts)
         self._worklists_cache: dict[tuple, list] = {}
+        # quantized KV (DESIGN.md §2.12): validate the dtype name up front
+        # (is_quantized raises on unknown); "bf16" leaves every path below
+        # exactly as before — scales never exist, steps return 2-tuples
+        self.quantized = quant.is_quantized(engine_cfg.kv_dtype)
+        # byte-true packing weight (§2.12): real HBM bytes one selected kv
+        # block streams at decode (K+V codes + amortized per-block scales)
+        self._kv_block_bytes = (
+            2.0 * engine_cfg.block * cfg.head_dim_
+            * quant.kv_dtype_bytes(engine_cfg.kv_dtype,
+                                   block=engine_cfg.block,
+                                   head_dim=cfg.head_dim_))
         if engine_cfg.seq_shards > 1:
             assert engine_cfg.cache_layout == "paged", \
                 "seq_shards > 1 needs cache_layout='paged' (stripes own " \
@@ -201,21 +220,46 @@ class Engine:
             ss = engine_cfg.seq_shards
             nblocks = -(-nblocks // ss) * ss
             self.kv = PagedKVCache(
-                lambda n: tfm.init_paged_cache(cfg, n, engine_cfg.block),
+                lambda n: tfm.init_paged_cache(
+                    cfg, n, engine_cfg.block,
+                    dtype=quant.kv_cache_dtype(engine_cfg.kv_dtype)),
                 num_blocks=nblocks, block=engine_cfg.block,
                 table_width=engine_cfg.max_seq_len // engine_cfg.block,
                 host_blocks=engine_cfg.host_swap_blocks,
-                stripes=engine_cfg.seq_shards)
+                stripes=engine_cfg.seq_shards,
+                make_scales_fn=((lambda n: tfm.init_paged_scales(cfg, n))
+                                if self.quantized else None))
             # self.cache is the LIVE pool threaded through the jitted
             # steps (donated); self.kv keeps the allocator/tables and is
-            # re-pointed at the new buffer after every step
-            self.cache = self.kv.pool
+            # re-pointed at the new buffer after every step.  Quantized:
+            # the donated unit is the (codes, scales) PAIR — every step
+            # that moves a block moves its scale in the same program.
+            self.cache = ((self.kv.pool, self.kv.scales) if self.quantized
+                          else self.kv.pool)
         else:
             assert engine_cfg.cache_layout == "contiguous", \
                 f"unknown cache_layout {engine_cfg.cache_layout!r}"
             self.kv = None
-            self.cache = tfm.init_cache(cfg, engine_cfg.num_slots,
-                                        engine_cfg.max_seq_len)
+            if self.quantized:
+                # contiguous quantized: scale tiles are cfg.block_kv wide
+                # inside decode_step but ecfg.block wide at prefill
+                # quantize — the two grids must be THE SAME grid
+                assert engine_cfg.block == cfg.block_kv, \
+                    "quantized contiguous layout needs engine block == " \
+                    "model block_kv (one scale grid)"
+                assert engine_cfg.max_seq_len % engine_cfg.block == 0, \
+                    "quantized contiguous layout needs max_seq_len % " \
+                    "block == 0"
+                self.cache = (
+                    tfm.init_cache(
+                        cfg, engine_cfg.num_slots, engine_cfg.max_seq_len,
+                        dtype=quant.kv_cache_dtype(engine_cfg.kv_dtype)),
+                    tfm.init_cache_scales(cfg, engine_cfg.num_slots,
+                                          engine_cfg.max_seq_len,
+                                          engine_cfg.block))
+            else:
+                self.cache = tfm.init_cache(cfg, engine_cfg.num_slots,
+                                            engine_cfg.max_seq_len)
         self._batcher = None   # bound by make_batcher (paged table lookups)
         # prefill compiled-step memos: LRU-bounded OrderedDicts (PR-4's
         # packed-plan discipline) — monolithic prefill BAKES the epoch's
@@ -478,7 +522,8 @@ class Engine:
         per_slot = [self._decode_ids_for_nblocks(nb) for nb in nb_sig]
         bids = np.stack(per_slot, axis=1)       # [L, B, Hkv, nb_cap]
         wls = [pack_decode_items(bids[l], num_shards=ecfg.num_model_shards,
-                                 block=ecfg.block)
+                                 block=ecfg.block,
+                                 bytes_per_block=self._kv_block_bytes)
                for l in range(cfg.num_layers)]
         bucket = pow2_bucket(max(wl.padded_length for wl in wls),
                              lo=8, hi=self._packed_item_cap())
@@ -524,7 +569,8 @@ class Engine:
         per_slot = [self._decode_ids_for_nblocks(nb) for nb in nb_sig]
         bids = np.stack(per_slot, axis=1)       # [L, B, Hkv, nb_cap]
         wls = [pack_decode_items_2d(bids[l], stripe_of, num_stripes=S,
-                                    num_shards=Dm, block=ecfg.block)
+                                    num_shards=Dm, block=ecfg.block,
+                                    bytes_per_block=self._kv_block_bytes)
                for l in range(cfg.num_layers)]
         bucket = pow2_bucket(max(wl.padded_length for wl in wls),
                              lo=8, hi=self._packed_item_cap())
@@ -698,16 +744,20 @@ class Engine:
         width (epoch-dependent shape; the tables themselves are data)."""
         fn = self._telemetry_jit.get(nb_width)
         if fn is None:
+            qz = self.quantized
             if self.paged:
-                def run(params, pool, token, pos, table, bids, clen):
+                def run(params, cache, token, pos, table, bids, clen):
+                    pool, scales = cache if qz else (cache, None)
                     return tfm.decode_telemetry(
                         params, pool, token, pos, self.cfg,
-                        block_ids=bids, cache_len=clen, table=table)
+                        block_ids=bids, cache_len=clen, table=table,
+                        scales=scales)
             else:
                 def run(params, cache, token, pos, bids, clen):
+                    c, scales = cache if qz else (cache, None)
                     return tfm.decode_telemetry(
-                        params, cache, token, pos, self.cfg,
-                        block_ids=bids, cache_len=clen)
+                        params, c, token, pos, self.cfg,
+                        block_ids=bids, cache_len=clen, scales=scales)
             fn = jax.jit(run)  # reads the live cache: never donated
             self._telemetry_jit[nb_width] = fn
         return fn
@@ -835,9 +885,21 @@ class Engine:
                     kv_tbl, np.tile(np.arange(kv_tbl.shape[1], dtype=kv_tbl.dtype),
                                     (kv_tbl.shape[0], 1))):
                 if self._kv_permute_jit is None:
-                    self._kv_permute_jit = jax.jit(
-                        tfm.permute_cache_kv_heads,
-                        donate_argnums=(0,) if self._donate else ())
+                    if self.quantized:
+                        # codes AND scales gather in ONE donated jit — a
+                        # block's scale can never go out of sync with its
+                        # codes across an epoch swap
+                        def perm(cache, tbl):
+                            pool, scales = cache
+                            return (tfm.permute_cache_kv_heads(pool, tbl),
+                                    tfm.permute_cache_scales(scales, tbl))
+                        self._kv_permute_jit = jax.jit(
+                            perm,
+                            donate_argnums=(0,) if self._donate else ())
+                    else:
+                        self._kv_permute_jit = jax.jit(
+                            tfm.permute_cache_kv_heads,
+                            donate_argnums=(0,) if self._donate else ())
                 self._set_cache(self._kv_permute_jit(
                     self.cache, jnp.asarray(kv_tbl)))
                 # fold the gather into the cumulative arrangement: slot h
@@ -870,10 +932,14 @@ class Engine:
 
     def _set_cache(self, cache) -> None:
         """Adopt the buffer a jitted step returned; keep the PagedKVCache
-        handle pointing at the live pool."""
+        handle pointing at the live pool (and, quantized, the live
+        scales — pool_bytes() charges both)."""
         self.cache = cache
         if self.kv is not None:
-            self.kv.pool = cache
+            if self.quantized:
+                self.kv.pool, self.kv.scales = cache
+            else:
+                self.kv.pool = cache
 
     def _table_for_slot(self, slot: int) -> np.ndarray:
         """[T] int32 pool block ids (-1 pad) of the sequence in ``slot``."""
@@ -899,16 +965,32 @@ class Engine:
         fn = self._swap_gather_jit.get(key)
         if fn is None:
             kind, width = key
+            qz = self.quantized
             if kind == "paged":
-                def run(pool, ids):
-                    return pool, jnp.take(pool, ids, axis=2)
+                # quantized: the scales gather rides the SAME ids — the
+                # host copy is (codes, scales), ~cache_dtype_bytes/2 the
+                # bf16 swap volume per block
+                def run(cache, ids):
+                    pool, scales = cache if qz else (cache, None)
+                    blocks = jnp.take(pool, ids, axis=2)
+                    if qz:
+                        return (pool, scales), (
+                            blocks, jnp.take(scales, ids, axis=2))
+                    return pool, blocks
             else:
-                L, _, _, Hkv, _, Dh = self.cache.shape
+                pool0 = self.cache[0] if qz else self.cache
+                L, _, _, Hkv, _, Dh = pool0.shape
+                nb = width // self.ecfg.block
                 def run(cache, slot):
+                    c, scales = cache if qz else (cache, None)
                     seq = jax.lax.dynamic_slice(
-                        cache, (0, 0, slot, 0, 0, 0),
+                        c, (0, 0, slot, 0, 0, 0),
                         (L, 2, 1, Hkv, width, Dh))
-                    return cache, seq
+                    if qz:
+                        ssc = jax.lax.dynamic_slice(
+                            scales, (0, 0, slot, 0, 0), (L, 2, 1, Hkv, nb))
+                        return (c, scales), (seq, ssc)
+                    return c, seq
             fn = jax.jit(run, donate_argnums=(0,) if self._donate else ())
             self._swap_gather_jit[key] = fn
         return fn
@@ -917,12 +999,27 @@ class Engine:
         fn = self._swap_scatter_jit.get(key)
         if fn is None:
             kind = key[0]
+            qz = self.quantized
             if kind == "paged":
-                def run(pool, blocks, ids):
-                    return pool.at[:, :, ids].set(
-                        blocks.astype(pool.dtype))
+                def run(cache, blocks, ids):
+                    if qz:
+                        pool, scales = cache
+                        blk, sc = blocks
+                        return (pool.at[:, :, ids].set(
+                                    blk.astype(pool.dtype)),
+                                scales.at[:, :, ids].set(sc))
+                    return cache.at[:, :, ids].set(
+                        blocks.astype(cache.dtype))
             else:
                 def run(cache, seq, slot):
+                    if qz:
+                        c, scales = cache
+                        sq, sc = seq
+                        return (jax.lax.dynamic_update_slice(
+                                    c, sq.astype(c.dtype),
+                                    (0, 0, slot, 0, 0, 0)),
+                                jax.lax.dynamic_update_slice(
+                                    scales, sc, (0, 0, slot, 0, 0)))
                     return jax.lax.dynamic_update_slice(
                         cache, seq.astype(cache.dtype),
                         (0, 0, slot, 0, 0, 0))
@@ -938,6 +1035,7 @@ class Engine:
         nblk = self.kv.alloc.blocks_needed(resident) if self.paged \
             else -(-resident // self.ecfg.block)
         bucket = self._swap_bucket(nblk)
+        sdata = None
         if self.paged:
             ids = self.kv.alloc.table(rid)
             assert len(ids) == nblk
@@ -946,19 +1044,27 @@ class Engine:
             pool, blocks = self._swap_gather_fn(("paged", bucket))(
                 self.cache, jnp.asarray(row))
             self._set_cache(pool)
+            if self.quantized:
+                blocks, sc = blocks
+                sdata = np.array(jax.device_get(sc)[:, :, :nblk])
             data = np.array(jax.device_get(blocks)[:, :, :nblk])
         else:
             width = bucket * self.ecfg.block
             cache, seq = self._swap_gather_fn(("slot", width))(
                 self.cache, slot)
             self._set_cache(cache)
+            if self.quantized:
+                seq, ssc = seq
+                sdata = np.asarray(jax.device_get(ssc))
             data = np.asarray(jax.device_get(seq))
-        self._host_swaps[rid] = {"data": data, "tokens": resident,
+        self._host_swaps[rid] = {"data": data, "scales": sdata,
+                                 "tokens": resident,
                                  "arrange": self._kv_arrange.copy()}
         st = self.swap_stats
         st["swapped_out"] += 1
         st["blocks_out"] += nblk
-        st["bytes_out"] += data.nbytes
+        st["bytes_out"] += data.nbytes + (sdata.nbytes if sdata is not None
+                                          else 0)
 
     def _swap_in_seq(self, rid: int, slot: int, resident: int) -> None:
         """Batcher swap-in hook: restore the host copy into the freshly
@@ -971,6 +1077,7 @@ class Engine:
         assert rec["tokens"] == resident, \
             f"swap-in length mismatch: {rec['tokens']} != {resident}"
         data = rec["data"]
+        sdata = rec["scales"]
         if not np.array_equal(rec["arrange"], self._kv_arrange):
             # rel[l, h] = where (in the host copy) the kv head now wanted
             # at slot h was stored when the copy was taken
@@ -978,6 +1085,13 @@ class Engine:
             rel = np.take_along_axis(inv, self._kv_arrange, axis=1)
             data = np.take_along_axis(
                 data, rel[:, None, None, :, None, None], axis=3)
+            if sdata is not None:
+                # scales have kv heads on axis 3 too: paged [L, 2, nblk,
+                # Hkv] (4D), contiguous [L, 2, 1, Hkv, nb] (5D)
+                data_rel = rel.reshape(
+                    (rel.shape[0], 1, 1, rel.shape[1])
+                    + (1,) * (sdata.ndim - 4))
+                sdata = np.take_along_axis(sdata, data_rel, axis=3)
             self.swap_stats["epoch_remaps"] += 1
         if self.paged:
             ids = self.kv.alloc.table(rid)   # fresh ids from alloc.swap_in
@@ -988,18 +1102,27 @@ class Engine:
             L, two, _, Hkv, blk, Dh = data.shape
             buf = np.zeros((L, two, bucket, Hkv, blk, Dh), data.dtype)
             buf[:, :, :nblk] = data
+            payload = jnp.asarray(buf)
+            if self.quantized:
+                sbuf = np.ones((L, two, bucket, Hkv), np.float32)
+                sbuf[:, :, :nblk] = sdata
+                payload = (payload, jnp.asarray(sbuf))
             pool = self._swap_scatter_fn(("paged", bucket))(
-                self.cache, jnp.asarray(buf), jnp.asarray(row))
+                self.cache, payload, jnp.asarray(row))
             self._set_cache(pool)
         else:
             nblk = -(-resident // self.ecfg.block)
+            payload = jnp.asarray(data)
+            if self.quantized:
+                payload = (payload, jnp.asarray(sdata))
             cache = self._swap_scatter_fn(("slot",))(
-                self.cache, jnp.asarray(data), slot)
+                self.cache, payload, slot)
             self._set_cache(cache)
         st = self.swap_stats
         st["swapped_in"] += 1
         st["blocks_in"] += nblk
-        st["bytes_in"] += data.nbytes
+        st["bytes_in"] += data.nbytes + (sdata.nbytes if sdata is not None
+                                         else 0)
 
     # -- jitted steps --------------------------------------------------------
     @staticmethod
@@ -1050,11 +1173,25 @@ class Engine:
             else:
                 items = None
 
+            qz = self.quantized
+
             def run(params, cache, tokens, slot, last_idx):
                 logits, seq_cache = tfm.prefill(
                     params, tokens, self.cfg,
                     cache_len=self.ecfg.max_seq_len,
                     sparse_items=items, last_index=last_idx)
+                if qz:
+                    # quantize the full-precision sequence cache ONCE at
+                    # slot insert: codes land next to their scales in the
+                    # same donated program (§2.12)
+                    c, scales = cache
+                    codes, sc = quant.quantize_seq_cache(
+                        seq_cache, self.ecfg.block, self.ecfg.kv_dtype)
+                    c = jax.lax.dynamic_update_slice(
+                        c, codes.astype(c.dtype), (0, 0, slot, 0, 0, 0))
+                    scales = jax.lax.dynamic_update_slice(
+                        scales, sc, (0, 0, slot, 0, 0))
+                    return logits, (c, scales)
                 cache = jax.lax.dynamic_update_slice(
                     cache, seq_cache.astype(cache.dtype),
                     (0, 0, slot, 0, 0, 0))
@@ -1084,10 +1221,18 @@ class Engine:
             else:
                 items = None
 
+            qz = self.quantized
+
             def run(params, pool, tokens, table, last_idx):
                 logits, seq_cache = tfm.prefill(
                     params, tokens, self.cfg, cache_len=bucket_pad,
                     sparse_items=items, last_index=last_idx)
+                if qz:
+                    p, scales = pool
+                    p, scales = tfm.scatter_seq_cache_paged(
+                        p, seq_cache, table, scales=scales,
+                        kv_dtype=self.ecfg.kv_dtype)
+                    return logits, (p, scales)
                 pool = tfm.scatter_seq_cache_paged(pool, seq_cache, table)
                 return logits, pool
 
@@ -1167,20 +1312,34 @@ class Engine:
             sparse = self.ecfg.attention == "sparse"
             if self.paged:
                 # paged: no staging cache, no slot — the chunk scatters
-                # straight into the sequence's pool blocks via the table
-                def run(params, pool, tokens, table, off, kv_len, last_idx,
-                        items):
-                    return tfm.prefill_chunk_paged(
+                # straight into the sequence's pool blocks via the table.
+                # Quantized: each chunk's K/V quantize AT THE SCATTER
+                # (chunks are block-aligned so every block is quantized
+                # exactly once), and later chunks attend the earlier
+                # blocks through the dequant-fused worklist path.
+                qz = self.quantized
+                kvd = self.ecfg.kv_dtype
+
+                def step(params, cache, tokens, table, off, kv_len,
+                         last_idx, items):
+                    pool, scales = cache if qz else (cache, None)
+                    out = tfm.prefill_chunk_paged(
                         params, pool, tokens, table, off, self.cfg,
                         kv_len=kv_len, sparse_items=items,
-                        last_index=last_idx)
+                        last_index=last_idx, scales=scales, kv_dtype=kvd)
+                    if qz:
+                        return out[0], (out[1], out[2])
+                    return out
+
+                def run(params, pool, tokens, table, off, kv_len, last_idx,
+                        items):
+                    return step(params, pool, tokens, table, off, kv_len,
+                                last_idx, items)
 
                 def run_dense(params, pool, tokens, table, off, kv_len,
                               last_idx):
-                    return tfm.prefill_chunk_paged(
-                        params, pool, tokens, table, off, self.cfg,
-                        kv_len=kv_len, sparse_items=None,
-                        last_index=last_idx)
+                    return step(params, pool, tokens, table, off, kv_len,
+                                last_idx, None)
             else:
                 def run(params, cache, tokens, slot, off, kv_len, last_idx,
                         items):
@@ -1209,31 +1368,44 @@ class Engine:
         boundaries never recompiles; the cache is donated."""
         if self._decode_jit is None:
             sparse = self.ecfg.attention == "sparse"
+            qz = self.quantized
+            kvd = self.ecfg.kv_dtype
             if self.paged:
                 S = self.ecfg.seq_shards
                 ss = self.kv.stripe_size if S > 1 else None
 
-                def run(params, pool, token, pos, table, bids, act):
-                    return tfm.decode_step_paged(
+                def step(params, cache, token, pos, table, bids, act):
+                    pool, scales = cache if qz else (cache, None)
+                    out = tfm.decode_step_paged(
                         params, pool, token, pos, table, self.cfg,
                         block_ids=bids, cache_len=pos + 1, active=act,
-                        seq_stripes=S, stripe_size=ss)
+                        seq_stripes=S, stripe_size=ss, scales=scales,
+                        kv_dtype=kvd)
+                    if qz:
+                        return out[0], (out[1], out[2])
+                    return out
+
+                def run(params, pool, token, pos, table, bids, act):
+                    return step(params, pool, token, pos, table, bids, act)
 
                 def run_dense(params, pool, token, pos, table, act):
-                    return tfm.decode_step_paged(
-                        params, pool, token, pos, table, self.cfg,
-                        block_ids=None, cache_len=pos + 1, active=act,
-                        seq_stripes=S, stripe_size=ss)
+                    return step(params, pool, token, pos, table, None, act)
             else:
+                def step(params, cache, token, pos, bids, act):
+                    c, scales = cache if qz else (cache, None)
+                    out = tfm.decode_step(
+                        params, c, token, pos, self.cfg, block_ids=bids,
+                        cache_len=pos + 1, active=act, scales=scales,
+                        kv_dtype=kvd)
+                    if qz:
+                        return out[0], (out[1], out[2])
+                    return out
+
                 def run(params, cache, token, pos, bids, act):
-                    return tfm.decode_step(
-                        params, cache, token, pos, self.cfg, block_ids=bids,
-                        cache_len=pos + 1, active=act)
+                    return step(params, cache, token, pos, bids, act)
 
                 def run_dense(params, cache, token, pos, act):
-                    return tfm.decode_step(
-                        params, cache, token, pos, self.cfg, block_ids=None,
-                        cache_len=pos + 1, active=act)
+                    return step(params, cache, token, pos, None, act)
 
             donate = (1,) if self._donate else ()
             self._decode_jit = (jax.jit(run, donate_argnums=donate) if sparse
@@ -1251,20 +1423,32 @@ class Engine:
         donated."""
         fn = self._decode_packed_jit.get(flat_len)
         if fn is None:
+            qz = self.quantized
+            kvd = self.ecfg.kv_dtype
             if self.paged:
                 S = self.ecfg.seq_shards
                 ss = self.kv.stripe_size if S > 1 else None
 
-                def run(params, pool, token, pos, table, items, act):
-                    return tfm.decode_step_paged(
+                def run(params, cache, token, pos, table, items, act):
+                    pool, scales = cache if qz else (cache, None)
+                    out = tfm.decode_step_paged(
                         params, pool, token, pos, table, self.cfg,
                         packed_items=items, cache_len=pos + 1, active=act,
-                        seq_stripes=S, stripe_size=ss)
+                        seq_stripes=S, stripe_size=ss, scales=scales,
+                        kv_dtype=kvd)
+                    if qz:
+                        return out[0], (out[1], out[2])
+                    return out
             else:
                 def run(params, cache, token, pos, items, act):
-                    return tfm.decode_step(
-                        params, cache, token, pos, self.cfg,
-                        packed_items=items, cache_len=pos + 1, active=act)
+                    c, scales = cache if qz else (cache, None)
+                    out = tfm.decode_step(
+                        params, c, token, pos, self.cfg,
+                        packed_items=items, cache_len=pos + 1, active=act,
+                        scales=scales, kv_dtype=kvd)
+                    if qz:
+                        return out[0], (out[1], out[2])
+                    return out
             fn = jax.jit(run, donate_argnums=(1,) if self._donate else ())
             self._decode_packed_jit[flat_len] = fn
         return fn
@@ -1345,10 +1529,27 @@ class Engine:
         Stale staging rows past the new sequence ride along exactly like
         monolithic bucket padding: masked by position everywhere."""
         if self._merge_jit is None:
-            def merge(cache, staging, slot):
-                return jax.lax.dynamic_update_slice(
-                    cache, staging.astype(cache.dtype),
-                    (0, 0, slot, 0, 0, 0))
+            if self.quantized:
+                # contiguous chunked + quantized: the STAGING cache stays
+                # full-precision (chunks attend exact values while the
+                # sequence builds) and quantization happens exactly once,
+                # here at the merge — block tiles match what monolithic
+                # prefill's insert would have produced
+                blk, kvd = self.ecfg.block, self.ecfg.kv_dtype
+
+                def merge(cache, staging, slot):
+                    c, scales = cache
+                    codes, sc = quant.quantize_seq_cache(staging, blk, kvd)
+                    c = jax.lax.dynamic_update_slice(
+                        c, codes.astype(c.dtype), (0, 0, slot, 0, 0, 0))
+                    scales = jax.lax.dynamic_update_slice(
+                        scales, sc, (0, 0, slot, 0, 0))
+                    return c, scales
+            else:
+                def merge(cache, staging, slot):
+                    return jax.lax.dynamic_update_slice(
+                        cache, staging.astype(cache.dtype),
+                        (0, 0, slot, 0, 0, 0))
             self._merge_jit = jax.jit(
                 merge, donate_argnums=(0,) if self._donate else ())
         return self._merge_jit(self.cache, self._staging, slot)

@@ -332,12 +332,21 @@ class PagedKVCache:
     ``table_width`` fixes the per-sequence block-table width (=
     ``max_seq_len // block``): table rows enter the jitted steps as DATA
     padded with ``-1``, so table growth never recompiles.
+
+    Quantized pools (DESIGN.md §2.12) carry a second device tensor next
+    to the codes: ``make_scales_fn(total_blocks) -> [L, 2, total_blocks,
+    Hkv]`` f32 dequant scales, indexed by the SAME physical block id — the
+    allocator needs no new state because a scale is a property of the
+    block it describes, and every gather the engine performs (swap, epoch
+    re-permute) moves codes and scales through identical indices.
     """
 
     def __init__(self, make_pool_fn, *, num_blocks: int, block: int,
                  table_width: int, host_blocks: int | None = None,
-                 stripes: int = 1):
+                 stripes: int = 1, make_scales_fn=None):
         self.pool = make_pool_fn(num_blocks + 1)
+        self.scales = (None if make_scales_fn is None
+                       else make_scales_fn(num_blocks + 1))
         self.alloc = BlockAllocator(num_blocks, block,
                                     host_blocks=host_blocks,
                                     stripes=stripes)
@@ -359,7 +368,13 @@ class PagedKVCache:
         return row
 
     def pool_bytes(self) -> int:
-        return self.pool.size * self.pool.dtype.itemsize
+        """Resident HBM of the device cache — codes AND dequant scales
+        (the scales are what a bf16-equivalent pool does not pay, so
+        capacity-at-equal-bytes comparisons must charge them)."""
+        total = self.pool.size * self.pool.dtype.itemsize
+        if self.scales is not None:
+            total += self.scales.size * self.scales.dtype.itemsize
+        return total
 
 
 class SlotCache:

@@ -129,9 +129,32 @@ def hplb_decode_attention_packed(mesh, *, block_kv=128):
     ba = _batch_axes(mesh)
     bspec = ba[0] if len(ba) == 1 else (ba if ba else None)
 
-    def attend(q, kc, vc, items, pos):
+    def attend(q, kc, vc, items, pos, k_scales=None, v_scales=None):
         B = q.shape[0]
         pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+        qz = k_scales is not None
+
+        if qz:
+            # quantized cache (§2.12): dequant scales [B, Hkv, S/blk]
+            # shard on kv heads WITH their cache shard — dequantization
+            # stays entirely island-local, no extra collective
+            def island(q_l, kc_l, vc_l, items_l, pos_l, ks_l, vs_l):
+                return ops.flash_decode_packed(
+                    q_l, kc_l, vc_l, items_l[0], pos_l, block_kv=block_kv,
+                    k_scales=ks_l, v_scales=vs_l)
+
+            return shard_map(
+                island, mesh=mesh,
+                in_specs=(P(bspec, "model", None, None),
+                          P(bspec, "model", None, None),
+                          P(bspec, "model", None, None),
+                          P("model", None, None),
+                          P(bspec),
+                          P(bspec, "model", None),
+                          P(bspec, "model", None)),
+                out_specs=P(bspec, "model", None, None),
+                check_vma=False,
+            )(q, kc, vc, items, pos_b, k_scales, v_scales)
 
         def island(q_l, kc_l, vc_l, items_l, pos_l):
             # q_l [B_l, H_loc, 1, D]; kc_l [B_l, Hkv_loc, S, D];
@@ -170,24 +193,35 @@ def hplb_repermute_kv_cache(mesh, *, axis="model"):
     ``models.transformer.permute_cache_kv_heads`` directly (no
     collective).
     """
-    def repermute(cache, kv_perm):
+    def repermute(cache, kv_perm, scales=None):
         def island(c_l, perm_l):
-            # c_l [L, 2, *, Hkv_loc, *, Dh]; perm_l [L, Hkv] replicated
+            # c_l [L, 2, *, Hkv_loc, *, Dh] (or a scales tensor with kv
+            # heads on axis 3); perm_l [L, Hkv] replicated
             full = jax.lax.all_gather(c_l, axis, axis=3, tiled=True)
             d = jax.lax.axis_index(axis)
             hl = c_l.shape[3]
             mine = jax.lax.dynamic_slice_in_dim(
                 jnp.asarray(perm_l, jnp.int32), d * hl, hl, axis=1)
-            idx = mine[:, None, None, :, None, None]
+            idx = mine.reshape((mine.shape[0], 1, 1, hl)
+                               + (1,) * (c_l.ndim - 4))
             return jnp.take_along_axis(full, idx, axis=3)
 
-        return shard_map(
-            island, mesh=mesh,
-            in_specs=(P(None, None, None, axis, None, None),
-                      P(None, None)),
-            out_specs=P(None, None, None, axis, None, None),
-            check_vma=False,
-        )(cache, jnp.asarray(kv_perm, jnp.int32))
+        def run(x):
+            nd = np.asarray(x.ndim)
+            spec = P(*((None, None, None, axis) + (None,) * (int(nd) - 4)))
+            return shard_map(
+                island, mesh=mesh,
+                in_specs=(spec, P(None, None)),
+                out_specs=spec,
+                check_vma=False,
+            )(x, jnp.asarray(kv_perm, jnp.int32))
+
+        if scales is None:
+            return run(cache)
+        # quantized (§2.12): the scales tensor — paged [L, 2, N, Hkv] or
+        # contiguous [L, 2, B, Hkv, S/blk], kv heads on axis 3 like the
+        # cache — re-permutes through the identical island
+        return run(cache), run(scales)
 
     return repermute
 
@@ -207,18 +241,27 @@ def hplb_swap_gather_kv_blocks(mesh, *, axis="model"):
     §2.9 gather never touches host copies).  The pool passes through
     donated/aliased so the jitted caller keeps the buffer chain.
     """
-    def gather(pool, ids):
+    def gather(pool, ids, scales=None):
         def island(p_l, ids_l):
-            # p_l [L, 2, N, Hkv_loc, block, Dh]: local take, no collective
+            # p_l [L, 2, N, Hkv_loc, block, Dh] (or scales [L, 2, N,
+            # Hkv_loc]): local take on the block axis, no collective
             return p_l, jnp.take(p_l, ids_l, axis=2)
 
-        return shard_map(
-            island, mesh=mesh,
-            in_specs=(P(None, None, None, axis, None, None), P(None)),
-            out_specs=(P(None, None, None, axis, None, None),
-                       P(None, None, None, axis, None, None)),
-            check_vma=False,
-        )(pool, jnp.asarray(ids, jnp.int32))
+        def run(x):
+            spec = P(*((None, None, None, axis) + (None,) * (x.ndim - 4)))
+            return shard_map(
+                island, mesh=mesh,
+                in_specs=(spec, P(None)),
+                out_specs=(spec, spec),
+                check_vma=False,
+            )(x, jnp.asarray(ids, jnp.int32))
+
+        if scales is None:
+            return run(pool)
+        # quantized (§2.12): scales [L, 2, N, Hkv] gather through the same
+        # ids — the host swap copy is (codes, scales), byte-true
+        (pool, blocks), (scales, sc) = run(pool), run(scales)
+        return (pool, scales), (blocks, sc)
 
     return gather
 
@@ -229,18 +272,22 @@ def hplb_swap_scatter_kv_blocks(mesh, *, axis="model"):
     slice; trash-padded ids absorb the bucket padding).  The host copy
     must already be in the CURRENT epoch's kv-head arrangement — the
     engine re-arranges stale copies host-side before dispatch."""
-    def scatter(pool, blocks, ids):
+    def scatter(pool, blocks, ids, scales=None, block_scales=None):
         def island(p_l, b_l, ids_l):
             return p_l.at[:, :, ids_l].set(b_l.astype(p_l.dtype))
 
-        return shard_map(
-            island, mesh=mesh,
-            in_specs=(P(None, None, None, axis, None, None),
-                      P(None, None, None, axis, None, None),
-                      P(None)),
-            out_specs=P(None, None, None, axis, None, None),
-            check_vma=False,
-        )(pool, blocks, jnp.asarray(ids, jnp.int32))
+        def run(x, b):
+            spec = P(*((None, None, None, axis) + (None,) * (x.ndim - 4)))
+            return shard_map(
+                island, mesh=mesh,
+                in_specs=(spec, spec, P(None)),
+                out_specs=spec,
+                check_vma=False,
+            )(x, b, jnp.asarray(ids, jnp.int32))
+
+        if scales is None:
+            return run(pool, blocks)
+        return run(pool, blocks), run(scales, block_scales)
 
     return scatter
 
@@ -264,7 +311,8 @@ def flash_decode_attention_paged(mesh, *, block_kv=128, seq_axes=("model",),
     bspec = ba[0] if len(ba) == 1 else (ba if ba else None)
     sspec = seq_axes[0] if len(seq_axes) == 1 else tuple(seq_axes)
 
-    def attend(q, k_pool, v_pool, ids, table, pos):
+    def attend(q, k_pool, v_pool, ids, table, pos, k_scales=None,
+               v_scales=None):
         B, H, _, dh = q.shape
         hkv = k_pool.shape[1]
         G = H // hkv
@@ -273,8 +321,10 @@ def flash_decode_attention_paged(mesh, *, block_kv=128, seq_axes=("model",),
         n_loc = n_pool // n_shards
         # per-slot positions shard with the batch like q/ids/table do
         pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+        qz = k_scales is not None
 
-        def island(q_l, kp_l, vp_l, ids_l, tbl_l, pos_l):
+        def island(q_l, kp_l, vp_l, ids_l, tbl_l, pos_l, ks_l=None,
+                   vs_l=None):
             # q_l [B_l, H, 1, D]; kp_l [N_loc, Hkv, blk, D];
             # ids_l [B_l, Hkv, nb] LOGICAL; tbl_l [B_l, T] GLOBAL pool ids
             if len(seq_axes) == 1:
@@ -288,7 +338,8 @@ def flash_decode_attention_paged(mesh, *, block_kv=128, seq_axes=("model",),
             Bl = q_l.shape[0]
             out, m, l = ops.flash_decode_paged(
                 q_l, kp_l, vp_l, ids_l, tbl_local, pos_l,
-                block_kv=block_kv, partials=True)
+                block_kv=block_kv, partials=True,
+                k_scales=ks_l, v_scales=vs_l)
             ax = seq_axes if len(seq_axes) > 1 else seq_axes[0]
             gm = jax.lax.pmax(m, ax)                          # [B,hkv,G]
             w = jnp.exp(m - gm) * l
@@ -299,17 +350,24 @@ def flash_decode_attention_paged(mesh, *, block_kv=128, seq_axes=("model",),
             o = num / jnp.maximum(den, 1e-30)[..., None]
             return o.reshape(Bl, H, 1, dh).astype(q_l.dtype)
 
+        in_specs = (P(bspec, None, None, None),
+                    P(sspec, None, None, None),
+                    P(sspec, None, None, None),
+                    P(bspec, None, None),
+                    P(bspec, None),
+                    P(bspec))
+        args = (q, k_pool, v_pool, ids, table, pos_b)
+        if qz:
+            # quantized (§2.12): scales [N, Hkv] (PHYSICAL ids) shard on
+            # the block axis WITH their pool stripe — the translated local
+            # table indexes the local scales shard directly
+            in_specs += (P(sspec, None), P(sspec, None))
+            args += (k_scales, v_scales)
         return shard_map(
-            island, mesh=mesh,
-            in_specs=(P(bspec, None, None, None),
-                      P(sspec, None, None, None),
-                      P(sspec, None, None, None),
-                      P(bspec, None, None),
-                      P(bspec, None),
-                      P(bspec)),
+            island, mesh=mesh, in_specs=in_specs,
             out_specs=P(bspec, None, None, None),
             check_vma=False,
-        )(q, k_pool, v_pool, ids, table, pos_b)
+        )(*args)
 
     return attend
 
@@ -338,14 +396,17 @@ def flash_decode_attention_2d(mesh, *, block_kv=128, model_axis="model",
     ba = tuple(batch_axes)
     bspec = ba[0] if len(ba) == 1 else (ba if ba else None)
 
-    def attend(q, k_pool, v_pool, ids, table, pos):
+    def attend(q, k_pool, v_pool, ids, table, pos, k_scales=None,
+               v_scales=None):
         B, H, _, dh = q.shape
         n_pool = k_pool.shape[0]
         n_seq = mesh.shape[seq_axis]
         n_loc = n_pool // n_seq
         pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+        qz = k_scales is not None
 
-        def island(q_l, kp_l, vp_l, ids_l, tbl_l, pos_l):
+        def island(q_l, kp_l, vp_l, ids_l, tbl_l, pos_l, ks_l=None,
+                   vs_l=None):
             # q_l [B_l, H_loc, 1, D]; kp_l [N_loc, Hkv_loc, blk, D];
             # ids_l [B_l, Hkv_loc, nb] LOGICAL; tbl_l [B_l, T] GLOBAL
             sidx = jax.lax.axis_index(seq_axis)
@@ -358,7 +419,8 @@ def flash_decode_attention_2d(mesh, *, block_kv=128, model_axis="model",
             G = Hl // hkv_l
             out, m, l = ops.flash_decode_paged(
                 q_l, kp_l, vp_l, ids_l, tbl_local, pos_l,
-                block_kv=block_kv, partials=True)
+                block_kv=block_kv, partials=True,
+                k_scales=ks_l, v_scales=vs_l)
             gm = jax.lax.pmax(m, seq_axis)                # [B,hkv_l,G]
             w = jnp.exp(m - gm) * l
             den = jax.lax.psum(w, seq_axis)
@@ -368,17 +430,23 @@ def flash_decode_attention_2d(mesh, *, block_kv=128, model_axis="model",
             o = num / jnp.maximum(den, 1e-30)[..., None]
             return o.reshape(Bl, Hl, 1, dh).astype(q_l.dtype)
 
+        in_specs = (P(bspec, model_axis, None, None),
+                    P(seq_axis, model_axis, None, None),
+                    P(seq_axis, model_axis, None, None),
+                    P(bspec, model_axis, None),
+                    P(bspec, None),
+                    P(bspec))
+        args = (q, k_pool, v_pool, ids, table, pos_b)
+        if qz:
+            # quantized (§2.12): scales [N, Hkv] shard BOTH ways with the
+            # pool — blocks over seq, kv heads over model
+            in_specs += (P(seq_axis, model_axis), P(seq_axis, model_axis))
+            args += (k_scales, v_scales)
         return shard_map(
-            island, mesh=mesh,
-            in_specs=(P(bspec, model_axis, None, None),
-                      P(seq_axis, model_axis, None, None),
-                      P(seq_axis, model_axis, None, None),
-                      P(bspec, model_axis, None),
-                      P(bspec, None),
-                      P(bspec)),
+            island, mesh=mesh, in_specs=in_specs,
             out_specs=P(bspec, model_axis, None, None),
             check_vma=False,
-        )(q, k_pool, v_pool, ids, table, pos_b)
+        )(*args)
 
     return attend
 
@@ -401,7 +469,7 @@ def flash_decode_attention(mesh, *, block_kv=128, seq_axes=("model",),
     bspec = ba[0] if len(ba) == 1 else (ba if ba else None)
     sspec = seq_axes[0] if len(seq_axes) == 1 else tuple(seq_axes)
 
-    def attend(q, kc, vc, ids, pos):
+    def attend(q, kc, vc, ids, pos, k_scales=None, v_scales=None):
         B, H, _, dh = q.shape
         hkv = kc.shape[1]
         G = H // hkv
@@ -409,8 +477,9 @@ def flash_decode_attention(mesh, *, block_kv=128, seq_axes=("model",),
         n_shards = int(np.prod([mesh.shape[a] for a in seq_axes]))
         s_loc = smax // n_shards
         nblk_loc = s_loc // block_kv
+        qz = k_scales is not None
 
-        def island(q_l, kc_l, vc_l, ids_l):
+        def island(q_l, kc_l, vc_l, ids_l, ks_l=None, vs_l=None):
             # q_l [B_l, H, 1, D]; kc_l [B_l, Hkv, S_loc, D];
             # ids_l [1, Hkv, nb_loc] (global block ids)
             if len(seq_axes) == 1:
@@ -432,7 +501,8 @@ def flash_decode_attention(mesh, *, block_kv=128, seq_axes=("model",),
                 q_l, kc_l, vc_l,
                 jnp.broadcast_to(local_ids[None],
                                  (Bl, hkv, local_ids.shape[-1])),
-                pos_local, block_kv=block_kv, partials=True)
+                pos_local, block_kv=block_kv, partials=True,
+                k_scales=ks_l, v_scales=vs_l)
             # flash-decoding merge across seq shards
             ax = seq_axes if len(seq_axes) > 1 else seq_axes[0]
             gm = jax.lax.pmax(m, ax)                          # [B,hkv,G]
@@ -444,14 +514,21 @@ def flash_decode_attention(mesh, *, block_kv=128, seq_axes=("model",),
             o = num / jnp.maximum(den, 1e-30)[..., None]
             return o.reshape(Bl, H, 1, dh).astype(q_l.dtype)
 
+        in_specs = (P(bspec, None, None, None),
+                    P(bspec, None, sspec, None),
+                    P(bspec, None, sspec, None),
+                    P(sspec, None, None))
+        args = (q, kc, vc, ids)
+        if qz:
+            # quantized (§2.12): scales [B, Hkv, S/blk] shard on the BLOCK
+            # axis with their cache rows — the shard-local block ids index
+            # the local scales slice directly
+            in_specs += (P(bspec, None, sspec), P(bspec, None, sspec))
+            args += (k_scales, v_scales)
         return shard_map(
-            island, mesh=mesh,
-            in_specs=(P(bspec, None, None, None),
-                      P(bspec, None, sspec, None),
-                      P(bspec, None, sspec, None),
-                      P(sspec, None, None)),
+            island, mesh=mesh, in_specs=in_specs,
             out_specs=P(bspec, None, None, None),
             check_vma=False,
-        )(q, kc, vc, ids)
+        )(*args)
 
     return attend

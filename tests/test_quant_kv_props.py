@@ -1,0 +1,83 @@
+"""Hypothesis properties for the quantized KV tile math (DESIGN.md
+§2.12).  The np.random twins in tests/test_quant_kv.py always run; this
+module adds hypothesis's adversarial shrinking over tile contents,
+magnitudes, and insertion offsets (skipped where hypothesis is absent).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+_FINITE = st.floats(min_value=-1e4, max_value=1e4, width=32,
+                    allow_nan=False, allow_infinity=False)
+
+
+def _tiles(draw, max_lead=3, blk_opts=(4, 8, 16), dh_opts=(4, 8)):
+    lead = draw(st.integers(1, max_lead))
+    blk = draw(st.sampled_from(blk_opts))
+    dh = draw(st.sampled_from(dh_opts))
+    flat = draw(st.lists(_FINITE, min_size=lead * blk * dh,
+                         max_size=lead * blk * dh))
+    return np.asarray(flat, np.float32).reshape(lead, blk, dh)
+
+
+@st.composite
+def tiles(draw):
+    return _tiles(draw)
+
+
+class TestRoundTripProps:
+    @settings(max_examples=60, deadline=None)
+    @given(x=tiles(), kvd=st.sampled_from(["int8", "fp8"]))
+    def test_error_bounded_by_tile_absmax(self, x, kvd):
+        """For EVERY tile: |dequant(quant(x)) - x| <= bound * absmax(x),
+        elementwise — the bound roundtrip_error_bound documents is real."""
+        codes, scales = quant.quantize_tiles(jnp.asarray(x), kvd)
+        back = np.asarray(quant.dequantize_tiles(codes, scales))
+        amax = np.abs(x).max(axis=(-2, -1), keepdims=True)
+        bound = quant.roundtrip_error_bound(kvd)
+        assert np.all(np.abs(back - x) <= bound * amax + 1e-12)
+
+    @settings(max_examples=60, deadline=None)
+    @given(x=tiles(), kvd=st.sampled_from(["int8", "fp8"]))
+    def test_quantize_is_idempotent_on_its_own_output(self, x, kvd):
+        """Re-quantizing a dequantized tile is exact: the values already
+        sit on the code grid, so the second trip loses nothing."""
+        codes, scales = quant.quantize_tiles(jnp.asarray(x), kvd)
+        back = quant.dequantize_tiles(codes, scales)
+        codes2, scales2 = quant.quantize_tiles(back, kvd)
+        back2 = np.asarray(quant.dequantize_tiles(codes2, scales2))
+        np.testing.assert_allclose(back2, np.asarray(back),
+                                   rtol=1e-6, atol=1e-30)
+
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data(), kvd=st.sampled_from(["int8", "fp8"]))
+    def test_insert_token_scale_monotone_unless_reset(self, data, kvd):
+        """insert_token_requant: at offs > 0 the scale never shrinks
+        within a block (new >= old, elementwise); offs == 0 resets it to
+        exactly the token's own absmax / qmax."""
+        B, hkv, blk, dh = 2, 2, 8, 4
+        x = data.draw(st.lists(_FINITE, min_size=B * hkv * blk * dh,
+                               max_size=B * hkv * blk * dh))
+        t = data.draw(st.lists(_FINITE, min_size=B * hkv * dh,
+                               max_size=B * hkv * dh))
+        offs = np.asarray(data.draw(
+            st.lists(st.integers(0, blk - 1), min_size=B, max_size=B)),
+            np.int32)
+        tile = np.asarray(x, np.float32).reshape(B, hkv, blk, dh)
+        tok = np.asarray(t, np.float32).reshape(B, hkv, dh)
+        codes, scale = quant.quantize_tiles(jnp.asarray(tile), kvd)
+        _, s2 = quant.insert_token_requant(
+            codes, scale, jnp.asarray(tok), jnp.asarray(offs), kvd)
+        s2, s1 = np.asarray(s2), np.asarray(scale)
+        tmax = np.abs(tok).max(-1)
+        tok_scale = np.where(tmax > 0, tmax / quant.QMAX[kvd], 1.0)
+        for b in range(B):
+            if offs[b] == 0:
+                np.testing.assert_allclose(s2[b], tok_scale[b], rtol=1e-6)
+            else:
+                assert np.all(s2[b] >= s1[b] * (1 - 1e-7))
