@@ -33,6 +33,8 @@ SUITES = [
                "latency + per-axis imbalance vs 1D (§2.11)"),
     ("quant_kv", "quantized KV pool: capacity at equal bytes, dequant-"
                  "fused packed decode latency, recovery delta (§2.12)"),
+    ("chaos", "fault injection: goodput + recovery latency vs fault "
+              "rate, self-healing engine (§2.13)"),
 ]
 
 # fast subset exercising the serving hot paths (CI perf smoke); the decode
@@ -44,9 +46,11 @@ SUITES = [
 # and seqpar refreshes BENCH_seqpar.json so the striped 2D decode path's
 # merge overhead and per-axis imbalance regress visibly (§2.11), and
 # quant_kv refreshes BENCH_quant.json so the quantized pool's capacity /
-# dequant-fused decode latency / recovery delta regress visibly (§2.12)
+# dequant-fused decode latency / recovery delta regress visibly (§2.12),
+# and chaos refreshes BENCH_chaos.json so goodput under injected faults
+# and fault-recovery latency regress visibly (§2.13)
 SMOKE = ("load_balance", "latency_attention", "decode_pack", "serving",
-         "adapt_replan", "overload", "seqpar", "quant_kv")
+         "adapt_replan", "overload", "seqpar", "quant_kv", "chaos")
 
 
 def main() -> int:
@@ -62,25 +66,39 @@ def main() -> int:
 
     os.makedirs(OUT, exist_ok=True)
     print("benchmark,metric,value")
-    failures = 0
+    errors: list[dict] = []
     for name, paper_ref in SUITES:
         if args.only and name != args.only:
             continue
         if args.smoke and not args.only and name not in SMOKE:
             continue
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
         try:
+            # import INSIDE the guard: a suite whose module fails to import
+            # (missing optional dep, syntax error) must not abort the whole
+            # driver — every remaining suite still runs and the failure
+            # lands as a structured entry instead of a dead process
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             rows = mod.run(OUT, quick=args.quick)
-        except Exception:  # noqa: BLE001
-            failures += 1
+        except Exception as e:  # noqa: BLE001
+            errors.append({
+                "suite": name, "paper_ref": paper_ref,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc(),
+                "elapsed_s": round(time.time() - t0, 1),
+            })
             traceback.print_exc(file=sys.stderr)
             print(f"{name},STATUS,error")
             continue
         for metric, value in rows:
             print(f"{name},{metric},{value:.6g}")
         print(f"{name},elapsed_s,{time.time() - t0:.1f}")
-    return 1 if failures else 0
+    if errors:
+        import json
+        with open(os.path.join(OUT, "BENCH_errors.json"), "w") as f:
+            json.dump(errors, f, indent=2)
+        print(f"driver,failed_suites,{len(errors)}")
+    return 1 if errors else 0
 
 
 if __name__ == "__main__":

@@ -67,11 +67,46 @@ def main():
                          "(2D head x sequence layout; 1 = head-parallel "
                          "only). Greedy outputs are identical at any "
                          "value.")
+    # fault injection + self-healing (DESIGN.md §2.13)
+    ap.add_argument("--fault-plan", default=None,
+                    help="fault-injection plan: a JSON file path, an "
+                         "inline JSON string, or 'random:SEED:RATE' for a "
+                         "seeded Bernoulli schedule over all seams")
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="run the allocator/pool invariant auditor every "
+                         "N decode ticks and at swap/replan boundaries "
+                         "(0 = audits off)")
+    ap.add_argument("--swap-retries", type=int, default=3,
+                    help="bounded retries for host swap transfers before "
+                         "falling back to discard-and-requeue")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for crash-consistent serving "
+                         "snapshots (written at replan-safe boundaries)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot every N decode ticks into "
+                         "--checkpoint-dir (0 = checkpoints off)")
     args = ap.parse_args()
     if args.drift_threshold is not None and args.telemetry_every <= 0:
         ap.error("--drift-threshold needs --telemetry-every > 0")
     if args.seq_shards < 1:
         ap.error("--seq-shards must be >= 1")
+    if args.checkpoint_every > 0 and not args.checkpoint_dir:
+        ap.error("--checkpoint-every needs --checkpoint-dir")
+
+    injector = None
+    if args.fault_plan:
+        import os
+        from repro.serving import FaultInjector, FaultPlan
+        if args.fault_plan.startswith("random:"):
+            _, seed, rate = args.fault_plan.split(":")
+            plan = FaultPlan.random(int(seed), float(rate))
+        elif os.path.exists(args.fault_plan):
+            plan = FaultPlan.load(args.fault_plan)
+        else:
+            plan = FaultPlan.from_json(args.fault_plan)
+        injector = FaultInjector(plan)
+        log.info("fault injection armed: %d specs (seed %s)",
+                 len(plan.specs), plan.seed)
 
     spec = ARCHS[args.arch]
     if spec.module not in ("transformer",):
@@ -95,7 +130,12 @@ def main():
         admission=args.admission, preemption=args.preemption,
         host_swap_blocks=args.host_blocks,
         seq_shards=args.seq_shards,
-        kv_dtype=args.kv_dtype), profile=profile)
+        kv_dtype=args.kv_dtype,
+        audit_every=args.audit_every,
+        swap_retries=args.swap_retries,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every), profile=profile,
+        injector=injector)
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, min(cfg.vocab_size, 256),
@@ -111,6 +151,19 @@ def main():
     log.info("served %d requests, %d tokens in %.1fs (%.1f tok/s)",
              len(done), n_tok, dt, n_tok / dt)
     bs = eng.decode_bubble_stats
+    n_failed = sum(1 for r in done if r.failed)
+    if injector is not None or args.audit_every or n_failed:
+        fs = bs["faults"]
+        log.info("fault layer: %d injected events, %d failed requests, "
+                 "%d sentinel trips, %d swap retries (%d recovered / %d "
+                 "gave up), %d clean audits, %d replan rollbacks, %d "
+                 "checkpoints", bs["injected_events"], n_failed,
+                 fs["sentinel_trips"], fs["swap_retries"],
+                 fs["swap_recoveries"], fs["swap_giveups"], fs["audits"],
+                 fs["replan_rollbacks"], fs["checkpoints"])
+        for r in done:
+            if r.failed:
+                log.info("  rid %d failed: %s", r.rid, r.fail_reason)
     if args.seq_shards > 1:
         log.info("2D decode: head imbalance %.3f, stripe imbalance %.3f, "
                  "%d seq-merge collectives", bs["mean_head_imbalance"],

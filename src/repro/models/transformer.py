@@ -1174,7 +1174,8 @@ def permute_cache_scales(scales, kv_perm):
 
 
 def decode_telemetry(params, cache, token, pos, cfg: TransformerConfig, *,
-                     block_ids, cache_len, table=None, scales=None):
+                     block_ids, cache_len, table=None, scales=None,
+                     with_health=False):
     """Quest-bound estimate of the recovery each head's selection realizes.
 
     The in-graph half of the online sparsity telemetry (DESIGN.md §2.9):
@@ -1207,6 +1208,12 @@ def decode_telemetry(params, cache, token, pos, cfg: TransformerConfig, *,
     Quest summaries and its dense estimator forward both run on
     DEQUANTIZED values, so realized-recovery estimates (and hence drift /
     replans) reflect what decode attention actually computes.
+
+    ``with_health`` additionally returns ``fin [B]`` bool — whether each
+    row's hidden state stayed finite through ALL layers (the deep sentinel
+    of DESIGN.md §2.13: a corrupted KV block poisons the estimator forward
+    exactly like the serving step, so the probe doubles as a per-sequence
+    health check with no extra pass).
     """
     B = token.shape[0]
     hkv, dh = cfg.num_kv_heads, cfg.head_dim_
@@ -1315,4 +1322,7 @@ def decode_telemetry(params, cache, token, pos, cfg: TransformerConfig, *,
             l, ids[l])
         recs.append(rec_l)
         fracs.append(frac_l)
+    if with_health:
+        fin = jnp.isfinite(x).all(axis=(1, 2))            # [B]
+        return jnp.stack(recs), jnp.stack(fracs), fin
     return jnp.stack(recs), jnp.stack(fracs)

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from collections import OrderedDict
 
 import numpy as np
@@ -65,6 +66,12 @@ from repro.core.worklist import (
 )
 from repro.models import transformer as tfm
 from repro.models.transformer import TransformerConfig
+from repro.serving.faults import (
+    EpochSwapError,
+    FaultInjector,
+    IntegrityError,
+    TransferError,
+)
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.sampler import SamplingParams, sample
 from repro.serving.scheduler import ContinuousBatcher, Request
@@ -153,15 +160,55 @@ class EngineConfig:
     # the 2D (model x seq) mesh's per-device islands.  1 = the 1D head-
     # parallel path, bitwise-unchanged.  Requires cache_layout="paged".
     seq_shards: int = 1
+    # -- fault tolerance (DESIGN.md §2.13) --------------------------------
+    # per-tick numerical sentinels: after every prefill/decode step the
+    # engine checks the sampled slots' logits for NaN/Inf (a numpy
+    # reduction over the logits copy sampling already synced — no extra
+    # device sync) and quarantines ONLY the poisoned sequence.
+    sentinels: bool = True
+    # host swap transfers retry with exponential backoff before giving up
+    # (give-up surfaces TransferError -> scheduler discard-and-requeue)
+    swap_retries: int = 3
+    swap_backoff_s: float = 0.0       # base backoff (0 = no sleep, tests)
+    # allocator invariant audit cadence: every N decode ticks (plus swap
+    # and replan boundaries); 0 = boundaries only.  Violations raise a
+    # structured IntegrityError instead of silently serving corrupt state.
+    audit_every: int = 0
+    # crash-consistent checkpoints (serving/snapshot.py): every N decode
+    # ticks, at a replan-safe boundary, snapshot engine + allocator +
+    # scheduler + host-tier + plan state.  None / 0 = disabled.
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 0
 
 
 class Engine:
     """Single-model serving engine (transformer-family archs)."""
 
     def __init__(self, cfg: TransformerConfig, params, engine_cfg: EngineConfig,
-                 profile: HeadSparsityProfile | None = None):
+                 profile: HeadSparsityProfile | None = None,
+                 injector: FaultInjector | None = None):
         self.cfg = cfg
         self.ecfg = engine_cfg
+        # fault injection (DESIGN.md §2.13): every seam below guards on
+        # ``injector is None or not injector.enabled`` before touching
+        # anything, so a run without an injector is bitwise-identical to a
+        # build without the fault layer
+        self.injector = injector
+        # slots flagged by the numerical sentinels this step, drained by
+        # the scheduler (sentinel_fn) right after the step returns
+        self._quarantine: dict[int, str] = {}
+        self.fault_stats = {
+            "sentinel_trips": 0,       # slots quarantined by sentinels
+            "swap_faults": 0,          # transfer attempts that faulted
+            "swap_retries": 0,         # retry attempts issued
+            "swap_recoveries": 0,      # transfers healed by a retry
+            "swap_giveups": 0,         # retries exhausted -> TransferError
+            "audits": 0,               # invariant audits run (all passed)
+            "replan_rollbacks": 0,     # epoch swaps rolled back
+            "corruptions_injected": 0,  # kv_corrupt seam firings
+            "checkpoints": 0,          # snapshots written
+        }
+        self._last_audit_activity = -1  # forces an audit on the first tick
         self.plan: HPLBPlan | None = None
         self.profile = profile          # offline profile
         # the profile the LIVE plan was derived from — the drift
@@ -229,6 +276,8 @@ class Engine:
                 stripes=engine_cfg.seq_shards,
                 make_scales_fn=((lambda n: tfm.init_paged_scales(cfg, n))
                                 if self.quantized else None))
+            # the allocator fires the admission_alloc seam mid-_grow
+            self.kv.alloc.injector = injector
             # self.cache is the LIVE pool threaded through the jitted
             # steps (donated); self.kv keeps the allocator/tables and is
             # re-pointed at the new buffer after every step.  Quantized:
@@ -733,6 +782,12 @@ class Engine:
             # overload robustness (DESIGN.md §2.10): host-tier swap volume
             # and the scheduler's per-class admission/preemption counters
             "swap": dict(self.swap_stats),
+            # fault tolerance (DESIGN.md §2.13): sentinel trips, swap
+            # retry outcomes, audit passes, rollbacks — plus the injected
+            # fault count so chaos runs can assert detection == injection
+            "faults": dict(self.fault_stats),
+            "injected_events": (len(self.injector.events)
+                                if self.injector is not None else 0),
             "per_class": ({k: dict(v) for k, v in
                            self._batcher.stats.per_class.items()}
                           if self._batcher is not None else {}),
@@ -751,13 +806,14 @@ class Engine:
                     return tfm.decode_telemetry(
                         params, pool, token, pos, self.cfg,
                         block_ids=bids, cache_len=clen, table=table,
-                        scales=scales)
+                        scales=scales, with_health=True)
             else:
                 def run(params, cache, token, pos, bids, clen):
                     c, scales = cache if qz else (cache, None)
                     return tfm.decode_telemetry(
                         params, c, token, pos, self.cfg,
-                        block_ids=bids, cache_len=clen, scales=scales)
+                        block_ids=bids, cache_len=clen, scales=scales,
+                        with_health=True)
             fn = jax.jit(run)  # reads the live cache: never donated
             self._telemetry_jit[nb_width] = fn
         return fn
@@ -774,13 +830,31 @@ class Engine:
                 jnp.asarray(pos_all))
         if self.paged:
             args += (jnp.asarray(table),)
-        rec, frac = fn(*args, jnp.asarray(bids), jnp.asarray(pos_all))
-        return rec, frac, list(slots)
+        rec, frac, fin = fn(*args, jnp.asarray(bids), jnp.asarray(pos_all))
+        return rec, frac, fin, list(slots)
 
     def _fold_telemetry(self, pending) -> None:
-        rec, frac, rows = pending
+        rec, frac, fin, rows = pending
+        fin = np.asarray(fin)
+        if self.ecfg.sentinels:
+            # deep sentinel (DESIGN.md §2.13): the probe's estimator
+            # forward went non-finite for this row — quarantine it even if
+            # its serving logits look clean this tick
+            for r in rows:
+                if not fin[r] and int(r) not in self._quarantine:
+                    self._quarantine[int(r)] = "probe_nonfinite"
+                    self.fault_stats["sentinel_trips"] += 1
+        # a poisoned row's recovery estimates are NaN — fold only healthy
+        # rows so one victim cannot corrupt the online estimator (and with
+        # it every future replan)
+        rows = [r for r in rows if fin[r]]
+        if not rows:
+            return
         rec = np.asarray(rec, np.float64)[:, rows, :]    # [L, B_act, H]
         frac = np.asarray(frac, np.float64)[:, rows, :]
+        if not (np.isfinite(rec).all() and np.isfinite(frac).all()):
+            rec = np.nan_to_num(rec, nan=0.0, posinf=1.0, neginf=0.0)
+            frac = np.nan_to_num(frac, nan=0.0, posinf=1.0, neginf=0.0)
         # the probe runs on HPLB-permuted params, so head h above is SLOT
         # h (physical head perm[h]); the estimator, the drift reference
         # profiles, and the replanner all live in ORIGINAL head order —
@@ -863,7 +937,17 @@ class Engine:
             log.info("replan@tick %d: plan unchanged (epoch stays %d)",
                      self._decode_ticks, self.epoch)
             return False
-        self._apply_epoch(new_plan)
+        try:
+            self._apply_epoch(new_plan)
+        except EpochSwapError as e:
+            # rollback (DESIGN.md §2.13): the seam fires before any state
+            # mutates, so the old epoch's params/cache/plan are intact —
+            # keep serving on them and let the next policy trigger retry
+            self.fault_stats["replan_rollbacks"] += 1
+            log.warning("epoch swap failed (%s) — keeping epoch %d "
+                        "serving", e, self.epoch)
+            return False
+        self.maybe_audit(boundary=True)
         if profile is not None:
             self._plan_profile = profile
         return True
@@ -874,10 +958,24 @@ class Engine:
         on-device, bump the epoch, and purge dead-epoch planning
         artifacts.  Compiled steps are NOT dropped eagerly — the LRU memos
         retire them lazily; jits whose plan inputs are data (chunk
-        prefill, decode) are epoch-invariant and keep serving."""
+        prefill, decode) are epoch-invariant and keep serving.
+
+        Commit discipline (DESIGN.md §2.13): the ``epoch_swap`` fault seam
+        fires FIRST — before any mutation — and the re-permuted params are
+        committed together with the plan/epoch at the end, so a failed
+        swap raises :class:`EpochSwapError` with the old epoch fully
+        intact and :meth:`replan_now` keeps serving on it."""
+        inj = self.injector
+        if inj is not None and inj.enabled:
+            if inj.fire("epoch_swap") is not None:
+                raise EpochSwapError(
+                    "epoch_swap",
+                    f"injected swap failure at epoch {self.epoch} -> "
+                    f"{new_plan.epoch}")
         delta = plan_delta(self.plan, new_plan)
+        new_params = self.params
         if not delta.identity:
-            self.params = self._permute_params(
+            new_params = self._permute_params(
                 self.params, layer_plans=delta.layers,
                 kv_replicated=(delta.mode == "kv_replication"))
             kv_tbl = delta.kv_perm_table()
@@ -909,6 +1007,7 @@ class Engine:
                 self._kv_arrange = np.take_along_axis(
                     self._kv_arrange, np.asarray(kv_tbl), axis=1)
         old = self.epoch
+        self.params = new_params
         self.plan = new_plan
         self.epoch = new_plan.epoch
         self.replans += 1
@@ -1027,11 +1126,45 @@ class Engine:
             self._swap_scatter_jit[key] = fn
         return fn
 
+    def _transfer_gate(self, seam: str, rid: int) -> None:
+        """Bounded retry-with-backoff around a host<->device transfer
+        (DESIGN.md §2.13).  The injector models the transfer attempt: each
+        retry RE-FIRES the seam, so a fault spec with ``times <=
+        swap_retries`` heals transparently and one with ``times >
+        swap_retries`` exhausts the budget and raises
+        :class:`TransferError` — which the scheduler turns into
+        discard-and-requeue.  Fires BEFORE any device work each attempt,
+        so the donated cache is never left half-transferred."""
+        inj = self.injector
+        if inj is None or not inj.enabled:
+            return
+        retries = self.ecfg.swap_retries
+        for attempt in range(retries + 1):
+            spec = inj.fire(seam, rid=rid)
+            if spec is None:
+                if attempt:
+                    self.fault_stats["swap_recoveries"] += 1
+                    log.info("%s rid=%d recovered on retry %d",
+                             seam, rid, attempt)
+                return
+            if spec.mode == "delay":
+                time.sleep(spec.value)
+                return
+            self.fault_stats["swap_faults"] += 1
+            if attempt < retries:
+                self.fault_stats["swap_retries"] += 1
+                if self.ecfg.swap_backoff_s > 0:
+                    time.sleep(self.ecfg.swap_backoff_s * (2 ** attempt))
+        self.fault_stats["swap_giveups"] += 1
+        raise TransferError(
+            seam, f"transfer failed after {retries + 1} attempts", rid=rid)
+
     def _swap_out_seq(self, rid: int, slot: int, resident: int) -> None:
         """Batcher swap-out hook: copy the sequence's resident KV state to
         host BEFORE the allocator recycles its blocks.  Paged: gather its
         mapped pool blocks; contiguous: slice its slot rows (the tokens
         past ``resident`` ride along as junk — decode masks by length)."""
+        self._transfer_gate("swap_out_transfer", rid)
         nblk = self.kv.alloc.blocks_needed(resident) if self.paged \
             else -(-resident // self.ecfg.block)
         bucket = self._swap_bucket(nblk)
@@ -1073,6 +1206,9 @@ class Engine:
         the sequence was out, the host copy is re-arranged here — exactly
         once, against the cumulative arrangement, no matter how many
         epoch swaps passed (the §2.9 cache gather composed them)."""
+        # gate BEFORE popping the host record: a failed (given-up) swap-in
+        # leaves the copy intact for the scheduler's fallback to discard
+        self._transfer_gate("swap_in_transfer", rid)
         rec = self._host_swaps.pop(rid)
         assert rec["tokens"] == resident, \
             f"swap-in length mismatch: {rec['tokens']} != {resident}"
@@ -1123,6 +1259,198 @@ class Engine:
         st["blocks_in"] += nblk
         st["bytes_in"] += data.nbytes + (sdata.nbytes if sdata is not None
                                          else 0)
+
+    # -- self-healing: sentinels, quarantine, audits (DESIGN.md §2.13) -------
+    def take_quarantine(self) -> dict[int, str]:
+        """Drain the sentinel flags raised by the last step — the batcher's
+        ``sentinel_fn``.  Returns ``{slot: fail_reason}`` and clears."""
+        got, self._quarantine = self._quarantine, {}
+        return got
+
+    def _sentinel_check(self, logits, row_slots) -> None:
+        """Flag any slot whose last-step logits went non-finite.
+        ``row_slots``: (logits row, slot) pairs — decode rows ARE slots,
+        a prefill's single row maps to the sequence's slot.  Runs on the
+        host copy of the logits sampling already forced, so the check
+        adds a numpy reduction — never an extra device sync."""
+        if not self.ecfg.sentinels:
+            return
+        finite = np.isfinite(np.asarray(logits)).all(axis=-1)
+        for row, s in row_slots:
+            if not finite[row] and int(s) not in self._quarantine:
+                self._quarantine[int(s)] = "nonfinite_logits"
+                self.fault_stats["sentinel_trips"] += 1
+
+    def _poison_gate(self, logits, slot: int):
+        """``poison_request`` seam: an injected fault turns THIS prefill's
+        logits into NaN — modelling a request whose inputs drive the
+        network into garbage.  The sentinel below must catch it."""
+        inj = self.injector
+        if inj is None or not inj.enabled:
+            return logits
+        rid = None
+        if self._batcher is not None:
+            try:
+                rid = self._batcher.rid_of_slot(slot)
+            except KeyError:
+                rid = None
+        spec = inj.fire("poison_request", rid=rid)
+        if spec is None:
+            return logits
+        # rid-scoped specs only poison their designated victim
+        if spec.rid is not None and rid is not None and spec.rid != rid:
+            return logits
+        return jnp.full_like(logits, jnp.nan)
+
+    def _maybe_corrupt(self, slots) -> None:
+        """``kv_corrupt`` seam: before this tick's decode step, flip one
+        victim's OLDEST resident KV block to NaN/Inf — VALUE-plane values
+        for bf16 caches, VALUE-plane scales for quantized ones (one bad
+        dequant scale poisons the whole block, the int8/fp8 failure
+        mode this models).  The first block always holds attended prompt
+        tokens, so the fault is observable THIS tick (the newest block
+        can be freshly mapped and still masked).  The value plane
+        specifically: a poisoned KEY turns the softmax normalizer ``l``
+        non-finite and the masked-row finalize guard (``where(l > 0,
+        acc/l, 0)`` — load-bearing for all-masked stripes) silently
+        zeroes the row, whereas a poisoned VALUE keeps scores finite and
+        rides the accumulator straight into the victim's logits, which
+        is exactly the observability the sentinel contract needs.
+        Blocks are per-sequence, so only the victim goes non-finite."""
+        inj = self.injector
+        if inj is None or not inj.enabled:
+            return
+        spec = inj.fire("kv_corrupt")
+        if spec is None:
+            return
+        slots = list(slots)
+        if not slots:
+            return
+        victim = slots[0]
+        if spec.rid is not None and self._batcher is not None:
+            for s in slots:
+                if self._batcher.rid_of_slot(s) == spec.rid:
+                    victim = s
+                    break
+        bad = jnp.inf if spec.mode == "inf" else jnp.nan
+        if self.paged:
+            rid = (self._batcher.rid_of_slot(victim)
+                   if self._batcher is not None else None)
+            ids = self.kv.alloc.table(rid) if rid is not None else []
+            if not ids:
+                return
+            bid = int(ids[0])
+            if self.quantized:
+                pool, scales = self.cache
+                self._set_cache((pool, scales.at[:, 1, bid].set(bad)))
+            else:
+                self._set_cache(self.cache.at[:, 1, bid].set(bad))
+        else:
+            if self.quantized:
+                c, scales = self.cache
+                self._set_cache((c, scales.at[:, 1, victim].set(bad)))
+            else:
+                self._set_cache(self.cache.at[:, 1, victim].set(bad))
+        self.fault_stats["corruptions_injected"] += 1
+        log.warning("injected kv_corrupt (%s) into slot %d", spec.mode,
+                    victim)
+
+    def _release_seq(self, rid: int, slot: int | None) -> None:
+        """Batcher ``on_fail_fn``: called for a quarantined (or discarded)
+        sequence while its block table is still valid.  Drops any host
+        copy and SCRUBS the sequence's device blocks (codes to zero,
+        scales to one) — freed ids recycle into later admissions, and a
+        kernel that multiplies instead of masking would propagate a stale
+        NaN out of reused storage (NaN * 0 == NaN)."""
+        self._host_swaps.pop(rid, None)
+        if self.paged:
+            ids = self.kv.alloc.table(rid)
+            if not ids:
+                return
+            idx = jnp.asarray(np.asarray(ids, np.int32))
+            if self.quantized:
+                pool, scales = self.cache
+                self._set_cache((
+                    pool.at[:, :, idx].set(jnp.zeros((), pool.dtype)),
+                    scales.at[:, :, idx].set(1.0)))
+            else:
+                self._set_cache(
+                    self.cache.at[:, :, idx].set(
+                        jnp.zeros((), self.cache.dtype)))
+        elif slot is not None:
+            if self.quantized:
+                c, scales = self.cache
+                self._set_cache((
+                    c.at[:, :, slot].set(jnp.zeros((), c.dtype)),
+                    scales.at[:, :, slot].set(1.0)))
+            else:
+                self._set_cache(
+                    self.cache.at[:, :, slot].set(
+                        jnp.zeros((), self.cache.dtype)))
+
+    def audit(self, strict: bool = True) -> list[str]:
+        """Engine-level invariant audit (DESIGN.md §2.13): the allocator's
+        two-tier conservation / double-map / stripe-ownership checks, the
+        device pool's shape agreement, and host-tier record agreement
+        (every allocator-swapped sequence has exactly one host copy whose
+        token count matches).  Returns the violations (empty = healthy);
+        ``strict`` raises :class:`IntegrityError` on any."""
+        if self.paged:
+            fails = self.kv.audit(strict=False)
+            alloc = self.kv.alloc
+        else:
+            alloc = (self._batcher.alloc if self._batcher is not None
+                     else None)
+            fails = alloc.audit(strict=False) if alloc is not None else []
+            if self.quantized:
+                c, scales = self.cache
+                if tuple(scales.shape[:4]) != tuple(c.shape[:4]):
+                    fails.append(
+                        f"contiguous scales shape {tuple(scales.shape)} "
+                        f"disagrees with cache {tuple(c.shape)}")
+        if alloc is not None:
+            swapped = set(alloc.swapped_seqs)
+            held = set(self._host_swaps)
+            for rid in sorted(swapped - held):
+                fails.append(f"seq {rid} swapped-out in allocator but has "
+                             "no host copy")
+            for rid in sorted(held - swapped):
+                fails.append(f"seq {rid} has a host copy but is not "
+                             "swapped-out in the allocator")
+            for rid in sorted(swapped & held):
+                if alloc.host_tokens(rid) != self._host_swaps[rid]["tokens"]:
+                    fails.append(
+                        f"seq {rid} host tokens disagree: allocator "
+                        f"{alloc.host_tokens(rid)} vs copy "
+                        f"{self._host_swaps[rid]['tokens']}")
+        if fails and strict:
+            raise IntegrityError(fails)
+        if not fails:
+            self.fault_stats["audits"] += 1
+        return fails
+
+    def maybe_audit(self, boundary: bool = False) -> None:
+        """Periodic audit hook: every ``audit_every`` decode ticks, plus
+        forced at swap/replan ``boundary`` calls when auditing is on."""
+        ae = self.ecfg.audit_every
+        if ae <= 0:
+            return
+        if boundary or (self._decode_ticks and self._decode_ticks % ae == 0):
+            self.audit(strict=True)
+
+    def _maybe_checkpoint(self, batcher) -> None:
+        """Checkpoint policy hook: every ``checkpoint_every`` decode ticks,
+        at a replan-safe boundary (no prefill mid-flight — the same safe
+        point epoch swaps use, so the snapshot is crash-consistent)."""
+        ecfg = self.ecfg
+        if (not ecfg.checkpoint_dir or ecfg.checkpoint_every <= 0
+                or self._decode_ticks == 0
+                or self._decode_ticks % ecfg.checkpoint_every != 0
+                or not batcher.replan_safe):
+            return
+        from repro.serving import snapshot  # local: snapshot imports engine
+        snapshot.save_serving(ecfg.checkpoint_dir, self, batcher)
+        self.fault_stats["checkpoints"] += 1
 
     # -- jitted steps --------------------------------------------------------
     @staticmethod
@@ -1474,8 +1802,12 @@ class Engine:
             logits, cache = run(self.params, self.cache,
                                 jnp.asarray(tokens), slot, S - 1)
         self._set_cache(cache)
+        logits = self._poison_gate(logits, slot)
         self._rng, sub = jax.random.split(self._rng)
-        return int(sample(logits, sub, sampling)[0])
+        tok = int(sample(logits, sub, sampling)[0])
+        self._sentinel_check(np.atleast_2d(np.asarray(logits)),
+                             [(0, slot)])
+        return tok
 
     def prefill_chunk_into_slot(self, tokens: np.ndarray, slot: int,
                                 q_offset: int, prompt_len: int,
@@ -1520,8 +1852,12 @@ class Engine:
             return None
         if not self.paged:
             self._set_cache(self._merge_staging(slot))
+        logits = self._poison_gate(logits, slot)
         self._rng, sub = jax.random.split(self._rng)
-        return int(sample(logits, sub, sampling)[0])
+        tok = int(sample(logits, sub, sampling)[0])
+        self._sentinel_check(np.atleast_2d(np.asarray(logits)),
+                             [(0, slot)])
+        return tok
 
     def _merge_staging(self, slot: int):
         """One donated dynamic_update_slice lands the staged sequence in
@@ -1574,6 +1910,10 @@ class Engine:
                             np.int32)
             for s in slots:
                 table[s] = self._table_for_slot(s)
+        # kv_corrupt seam fires BEFORE the probe dispatch and the step, so
+        # both observe the corrupted block — detection is the test
+        self._maybe_corrupt(slots)
+        if self.paged:
             extra = [jnp.asarray(table)]
         packed = (self.ecfg.attention == "sparse"
                   and self.ecfg.decode_worklist == "packed")
@@ -1644,7 +1984,9 @@ class Engine:
             self._fold_telemetry(pending_probe)
         self._rng, sub = jax.random.split(self._rng)
         toks = sample(logits, sub, sampling)
-        return np.asarray(toks)[list(slots)]
+        out = np.asarray(toks)[list(slots)]
+        self._sentinel_check(logits, [(s, s) for s in slots])
+        return out
 
     def _padded_tick_stats(self, bids: np.ndarray) -> dict:
         """Bubble telemetry of a PADDED-path tick: real vs padded grid
@@ -1692,7 +2034,13 @@ class Engine:
             preemption=self.ecfg.preemption,
             host_blocks=self.ecfg.host_swap_blocks,
             swap_out_fn=self._swap_out_seq if self.ecfg.preemption else None,
-            swap_in_fn=self._swap_in_seq if self.ecfg.preemption else None)
+            swap_in_fn=self._swap_in_seq if self.ecfg.preemption else None,
+            sentinel_fn=self.take_quarantine,
+            on_fail_fn=self._release_seq)
+        if not self.paged:
+            # the contiguous layout's allocator is batcher-private
+            # accounting — wire the admission_alloc seam there too
+            b.alloc.injector = self.injector
         self._batcher = b
         return b
 
@@ -1733,6 +2081,19 @@ class Engine:
                 rid=i, prompt=np.asarray(pr, np.int32), sampling=sampling,
                 priority=priorities[i] if priorities else "standard"))
         done = batcher.run(*self.step_fns(sampling),
-                           on_tick=lambda: self._maybe_replan(batcher))
+                           on_tick=lambda: self.on_tick(batcher))
         log.info("served %d requests: %s", len(done), batcher.stats)
         return sorted(done, key=lambda r: r.rid)
+
+    def on_tick(self, batcher) -> None:
+        """Per-tick policy hook (:meth:`serve` wires it; external loops
+        can too): replan policy, invariant audits (periodic + forced at
+        swap boundaries), and checkpointing at safe points."""
+        self._maybe_replan(batcher)
+        if self.ecfg.audit_every > 0:
+            activity = (self.swap_stats["swapped_out"]
+                        + self.swap_stats["swapped_in"] + self.replans)
+            boundary = activity != self._last_audit_activity
+            self._last_audit_activity = activity
+            self.maybe_audit(boundary=boundary)
+        self._maybe_checkpoint(batcher)

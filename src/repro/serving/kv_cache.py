@@ -42,6 +42,8 @@ import dataclasses
 import numpy as np
 import jax.numpy as jnp
 
+from repro.serving.faults import InjectedAllocError, IntegrityError
+
 
 @dataclasses.dataclass
 class BlockAllocator:
@@ -75,6 +77,10 @@ class BlockAllocator:
         self._reserved: dict[int, int] = {}   # worst-case blocks per seq
         self._host_lens: dict[int, int] = {}  # swapped-out resident tokens
         self._host_nblk: dict[int, int] = {}  # host blocks held per seq
+        # fault-injection hook (DESIGN.md §2.13): the engine wires its
+        # FaultInjector here so the "admission_alloc" seam can exhaust the
+        # pool MID-MAPPING.  None (the default) costs one attribute read.
+        self.injector = None
 
     # -- stripe views -------------------------------------------------------
     def stripe_of(self, block_id: int) -> int:
@@ -212,38 +218,145 @@ class BlockAllocator:
         self._reserved[seq_id] = total
         self._tables[seq_id] = []
         self._lens[seq_id] = 0
-        self._grow(seq_id, self.blocks_needed(resident))
+        try:
+            self._grow(seq_id, self.blocks_needed(resident),
+                       admission=True)
+        except MemoryError:
+            # partial-failure rollback: any blocks mapped before the
+            # failure return to their stripes and the device-tier entries
+            # vanish — the host-tier accounting was never touched, so the
+            # sequence is still cleanly swapped out
+            self._rollback_partial(seq_id)
+            raise
         self._lens[seq_id] = resident
         del self._host_lens[seq_id]
         del self._host_nblk[seq_id]
         return list(self._tables[seq_id])
 
+    def _rollback_partial(self, seq_id: int) -> None:
+        """Undo a partially-failed admit/swap-in: return whatever blocks
+        were mapped and drop the device-tier entries.  (Before this
+        existed, a mid-mapping ``MemoryError`` leaked a phantom
+        reservation that permanently shrank ``available_blocks``.)"""
+        self._return_blocks(self._tables.pop(seq_id, []))
+        self._lens.pop(seq_id, None)
+        self._reserved.pop(seq_id, None)
+
     def conserves(self) -> bool:
-        """The invariant the scheduler must uphold at every tick, extended
-        over both tiers: device blocks match live lengths, host blocks
-        match swapped lengths, no sequence is accounted twice — and, under
-        striping, PER STRIPE: each stripe's mapped count equals the live
-        tables' blocks falling in its id range, with every id owned by
-        exactly one stripe (no cross-stripe leakage through free/swap)."""
-        device_ok = self.allocated_blocks == sum(
-            self.blocks_needed(n) for n in self._lens.values())
-        # per-stripe conservation: free + mapped == stripe_size, and every
-        # free-listed id actually belongs to the stripe holding it
-        mapped = [0] * self.stripes
-        for t in self._tables.values():
-            for b in t:
-                mapped[self.stripe_of(b)] += 1
-        stripes_ok = all(
-            len(self._free[s]) + mapped[s] == self.stripe_size
-            and all(self.stripe_of(b) == s for b in self._free[s])
-            for s in range(self.stripes))
-        device_ok = device_ok and stripes_ok
-        host_ok = all(self._host_nblk[s] == self.blocks_needed(n)
-                      for s, n in self._host_lens.items())
-        no_dual = not (set(self._lens) & set(self._host_lens))
-        capped = (self.host_blocks is None
-                  or self.host_allocated_blocks <= self.host_blocks)
-        return device_ok and host_ok and no_dual and capped
+        """The invariant the scheduler must uphold at every tick — True
+        iff :meth:`audit` finds nothing (kept as the boolean view the
+        property tests poll)."""
+        return not self.audit(strict=False)
+
+    def audit(self, strict: bool = True) -> list[str]:
+        """Full invariant audit of both tiers (DESIGN.md §2.13): returns
+        the structured list of violated invariants, raising
+        :class:`~repro.serving.faults.IntegrityError` when ``strict`` and
+        anything failed — the engine runs this every ``audit_every`` ticks
+        and at swap/replan boundaries so corrupt accounting surfaces as a
+        named failure instead of silently serving garbage.
+
+        Checks: two-tier conservation (device blocks match live lengths,
+        host blocks match swapped lengths), no double-map (every mapped id
+        in exactly one table, free and mapped disjoint, free + mapped ==
+        pool), stripe ownership (every id in the free list of the stripe
+        owning its range), per-sequence table/length/reservation
+        agreement, no sequence on both tiers, and the host-tier cap."""
+        fails: list[str] = []
+        # -- device tier conservation ------------------------------------
+        need = sum(self.blocks_needed(n) for n in self._lens.values())
+        if self.allocated_blocks != need:
+            fails.append(
+                f"device conservation: allocated {self.allocated_blocks} "
+                f"!= sum ceil(len/block) {need}")
+        # -- no double-map: mapped ids unique, disjoint from free --------
+        mapped: list[int] = [b for t in self._tables.values() for b in t]
+        if len(mapped) != len(set(mapped)):
+            fails.append("double-map: a block id appears in two tables "
+                         "(or twice in one)")
+        free_ids = [b for f in self._free for b in f]
+        if len(free_ids) != len(set(free_ids)):
+            fails.append("double-free: a block id appears twice in the "
+                         "free lists")
+        overlap = set(mapped) & set(free_ids)
+        if overlap:
+            fails.append(f"free/mapped overlap: {sorted(overlap)[:8]}")
+        universe = set(mapped) | set(free_ids)
+        if len(universe) != self.num_blocks or (
+                universe and (min(universe) < 0
+                              or max(universe) >= self.num_blocks)):
+            fails.append(
+                f"pool partition: free+mapped covers {len(universe)} ids, "
+                f"pool has {self.num_blocks}")
+        # -- stripe ownership --------------------------------------------
+        for s in range(self.stripes):
+            strays = [b for b in self._free[s] if self.stripe_of(b) != s]
+            if strays:
+                fails.append(f"stripe ownership: stripe {s} free list "
+                             f"holds foreign ids {strays[:8]}")
+        # -- per-sequence agreement --------------------------------------
+        for sid, n in self._lens.items():
+            t = self._tables.get(sid)
+            if t is None:
+                fails.append(f"seq {sid}: has a length but no table")
+                continue
+            if len(t) != self.blocks_needed(n) and n > 0:
+                fails.append(f"seq {sid}: {len(t)} mapped blocks != "
+                             f"ceil({n}/{self.block})")
+            if len(t) > self._reserved.get(sid, 0):
+                fails.append(f"seq {sid}: mapped {len(t)} past its "
+                             f"reservation {self._reserved.get(sid, 0)}")
+        for sid in self._tables:
+            if sid not in self._lens:
+                fails.append(f"seq {sid}: has a table but no length")
+        # -- host tier ---------------------------------------------------
+        for sid, n in self._host_lens.items():
+            if self._host_nblk.get(sid) != self.blocks_needed(n):
+                fails.append(
+                    f"host conservation: seq {sid} holds "
+                    f"{self._host_nblk.get(sid)} host blocks != "
+                    f"ceil({n}/{self.block})")
+        dual = set(self._lens) & set(self._host_lens)
+        if dual:
+            fails.append(f"dual accounting: seqs {sorted(dual)} on both "
+                         "tiers")
+        if (self.host_blocks is not None
+                and self.host_allocated_blocks > self.host_blocks):
+            fails.append(
+                f"host cap: {self.host_allocated_blocks} blocks held > "
+                f"capacity {self.host_blocks}")
+        if strict and fails:
+            raise IntegrityError(fails)
+        return fails
+
+    # -- checkpoint (DESIGN.md §2.13) ---------------------------------------
+    def snapshot_state(self) -> dict:
+        """JSON-serializable snapshot of the full accounting state —
+        free-list ORDER included, so a restored allocator hands out the
+        same ids in the same order as the uninterrupted one."""
+        return {
+            "free": [list(f) for f in self._free],
+            "tables": {str(k): list(v) for k, v in self._tables.items()},
+            "lens": {str(k): v for k, v in self._lens.items()},
+            "reserved": {str(k): v for k, v in self._reserved.items()},
+            "host_lens": {str(k): v for k, v in self._host_lens.items()},
+            "host_nblk": {str(k): v for k, v in self._host_nblk.items()},
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Adopt a :meth:`snapshot_state` snapshot (geometry must match),
+        then audit it — a corrupt checkpoint fails loudly at restore."""
+        self._free = [list(map(int, f)) for f in state["free"]]
+        self._tables = {int(k): list(map(int, v))
+                        for k, v in state["tables"].items()}
+        self._lens = {int(k): int(v) for k, v in state["lens"].items()}
+        self._reserved = {int(k): int(v)
+                          for k, v in state["reserved"].items()}
+        self._host_lens = {int(k): int(v)
+                           for k, v in state["host_lens"].items()}
+        self._host_nblk = {int(k): int(v)
+                           for k, v in state["host_nblk"].items()}
+        self.audit()
 
     # -- lifecycle ----------------------------------------------------------
     def can_admit(self, num_tokens: int) -> bool:
@@ -268,11 +381,19 @@ class BlockAllocator:
         self._reserved[seq_id] = total
         self._tables[seq_id] = []
         self._lens[seq_id] = 0
-        self._grow(seq_id, self.blocks_needed(prompt_tokens))
+        try:
+            self._grow(seq_id, self.blocks_needed(prompt_tokens),
+                       admission=True)
+        except MemoryError:
+            # partial-failure rollback (see _rollback_partial): admission
+            # either fully lands or leaves no trace
+            self._rollback_partial(seq_id)
+            raise
         self._lens[seq_id] = prompt_tokens
         return list(self._tables[seq_id])
 
-    def _grow(self, seq_id: int, n_new: int) -> None:
+    def _grow(self, seq_id: int, n_new: int, *,
+              admission: bool = False) -> None:
         if n_new > self.free_blocks:
             raise MemoryError(
                 f"KV pool exhausted: need {n_new}, free {self.free_blocks}")
@@ -281,7 +402,24 @@ class BlockAllocator:
             raise MemoryError(
                 f"seq {seq_id} grows past its reservation "
                 f"({len(table)}+{n_new} > {self._reserved[seq_id]})")
-        for _ in range(n_new):
+        # fault seam "admission_alloc" (DESIGN.md §2.13): a fired spec
+        # exhausts the pool after HALF the requested blocks mapped — the
+        # partial-failure path the admit/swap-in rollback must clean up.
+        # Only ADMISSION-time growth (admit / swap-in) consults the seam:
+        # those callers roll back and retry next tick.  append_token's
+        # mid-decode single-block growth has no retry seam above it — an
+        # injected fault there would crash the tick loop instead of
+        # exercising a recovery path.
+        inj = self.injector
+        fault_at = None
+        if admission and inj is not None and inj.enabled:
+            if inj.fire("admission_alloc", rid=seq_id) is not None:
+                fault_at = n_new // 2
+        for i in range(n_new):
+            if fault_at is not None and i >= fault_at:
+                raise InjectedAllocError(
+                    f"injected pool exhaustion after {i}/{n_new} blocks",
+                    rid=seq_id)
             # route each new block to the stripe with the most headroom
             # (deterministic: ties break to the lowest stripe index), so a
             # long sequence's blocks spread across the seq shards and the
@@ -366,6 +504,29 @@ class PagedKVCache:
         t = self.alloc.table(seq_id)
         row[:len(t)] = t
         return row
+
+    def audit(self, strict: bool = True) -> list[str]:
+        """Device-side half of the invariant audit (DESIGN.md §2.13):
+        allocator accounting plus scale/code shape agreement — a quantized
+        pool whose scales tensor drifted from its codes (wrong block axis,
+        lost trash block) dequantizes garbage silently otherwise."""
+        fails = self.alloc.audit(strict=False)
+        want_blocks = self.num_blocks + 1    # + trash block
+        if self.pool.shape[2] != want_blocks:
+            fails.append(
+                f"pool shape: block axis {self.pool.shape[2]} != "
+                f"num_blocks+trash {want_blocks}")
+        if self.scales is not None:
+            if tuple(self.scales.shape) != tuple(self.pool.shape[:4]):
+                fails.append(
+                    f"scale/code shape disagreement: scales "
+                    f"{tuple(self.scales.shape)} != codes "
+                    f"{tuple(self.pool.shape[:4])}")
+        if self.table_width * self.block < self.block:
+            fails.append("table_width must hold at least one block")
+        if strict and fails:
+            raise IntegrityError(fails)
+        return fails
 
     def pool_bytes(self) -> int:
         """Resident HBM of the device cache — codes AND dequant scales

@@ -77,6 +77,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.serving.faults import TransferError
 from repro.serving.kv_cache import BlockAllocator
 from repro.serving.sampler import SamplingParams
 from repro.utils.logging import get_logger
@@ -128,6 +129,12 @@ class Request:
     done: bool = False
     rejected: bool = False              # refused (over-length / SLO shed)
     reject_reason: str | None = None    # over_length|over_capacity|slo_timeout
+    # structured failure (DESIGN.md §2.13): the request was ADMITTED but a
+    # fault killed it mid-flight (sentinel quarantine) — distinct from
+    # ``rejected`` (refused before any work) so the conservation invariant
+    # reads ``completed + rejected + failed == submitted``
+    failed: bool = False
+    fail_reason: str | None = None      # e.g. nonfinite_logits|probe_nonfinite
     prefill_pos: int = 0                # prompt tokens prefilled so far
     preemptions: int = 0                # times swapped out or discarded
     # wall-clock telemetry (scheduler clock): submit time + one stamp per
@@ -164,8 +171,8 @@ class Request:
 
 def _class_counters() -> dict[str, int]:
     return {"submitted": 0, "admitted": 0, "completed": 0, "rejected": 0,
-            "preempted": 0, "resumed": 0, "swapped_out_blocks": 0,
-            "swapped_in_blocks": 0}
+            "failed": 0, "preempted": 0, "resumed": 0, "swap_discards": 0,
+            "swapped_out_blocks": 0, "swapped_in_blocks": 0}
 
 
 @dataclasses.dataclass
@@ -173,6 +180,8 @@ class SchedulerStats:
     admitted: int = 0
     completed: int = 0
     rejected: int = 0
+    failed: int = 0                     # quarantined mid-flight (§2.13)
+    swap_discards: int = 0              # transfer gave up -> discard+requeue
     decode_steps: int = 0
     prefill_tokens: int = 0
     prefill_chunks: int = 0
@@ -216,6 +225,8 @@ class ContinuousBatcher:
                  host_blocks: int | None = None,
                  swap_out_fn: Callable | None = None,
                  swap_in_fn: Callable | None = None,
+                 sentinel_fn: Callable | None = None,
+                 on_fail_fn: Callable | None = None,
                  clock: Callable[[], float] = time.monotonic):
         # ``allocator``: share the engine's PagedKVCache allocator so the
         # scheduler's admission math and the device pool's block ids are the
@@ -234,6 +245,15 @@ class ContinuousBatcher:
         self.reject_slack = reject_slack
         self.swap_out_fn = swap_out_fn
         self.swap_in_fn = swap_in_fn
+        # self-healing hooks (DESIGN.md §2.13): ``sentinel_fn() -> {slot:
+        # fail_reason}`` drains the engine's per-tick numerical quarantine
+        # (consulted after every prefill/decode step — a flagged slot's
+        # request fails structurally instead of recording a garbage
+        # token); ``on_fail_fn(rid, slot)`` lets the engine scrub the
+        # victim's device blocks and drop its host copy BEFORE the
+        # allocator recycles the ids.
+        self.sentinel_fn = sentinel_fn
+        self.on_fail_fn = on_fail_fn
         self._queues: dict[str, deque[Request]] = {
             c.name: deque() for c in classes}
         self._preempted: dict[str, deque[Request]] = {
@@ -473,7 +493,14 @@ class ContinuousBatcher:
             return
         resident = self.alloc.seq_tokens(req.rid)
         if self.swap_out_fn is not None:
-            self.swap_out_fn(req.rid, slot, resident)
+            try:
+                self.swap_out_fn(req.rid, slot, resident)
+            except TransferError as e:
+                # swap-out transfer exhausted the engine's retries: the
+                # host tier never got a (complete) copy, so the sequence
+                # cannot be parked — fall back to discard-and-requeue
+                self._discard_requeue(req, slot, str(e))
+                return
         nblk = self.alloc.swap_out(req.rid)
         self.stats.swapped_out_blocks += nblk
         self._cstat(name)["swapped_out_blocks"] += nblk
@@ -504,7 +531,19 @@ class ContinuousBatcher:
                 self._slot_of[req.rid] = slot
                 self._rid_of[slot] = req.rid
                 if self.swap_in_fn is not None:
-                    self.swap_in_fn(req.rid, slot, resident)
+                    try:
+                        self.swap_in_fn(req.rid, slot, resident)
+                    except TransferError as e:
+                        # swap-in transfer exhausted its retries: the
+                        # device blocks never got valid contents.  Unbind
+                        # the slot, free the (freshly re-mapped) device
+                        # blocks and restart from the prompt.
+                        self._slot_of.pop(req.rid, None)
+                        self._rid_of.pop(slot, None)
+                        self._slots_free.append(slot)
+                        req.preemptions += 1
+                        self._discard_requeue(req, None, str(e))
+                        continue
                 # resident counts tokens IN cache; lengths counts the
                 # pending not-yet-written token too (generated[-1] decodes
                 # next at position == resident)
@@ -516,6 +555,64 @@ class ContinuousBatcher:
                 self._cstat(pc.name)["swapped_in_blocks"] += len(ids)
                 log.info("resume (swap-in) rid=%d class=%s blocks=%d",
                          req.rid, pc.name, len(ids))
+
+    def _sentinel(self) -> dict[int, str]:
+        """Drain the engine's quarantine flags: ``{slot: fail_reason}`` of
+        slots whose last step produced non-finite output."""
+        return self.sentinel_fn() if self.sentinel_fn is not None else {}
+
+    def _fail(self, req: Request, reason: str, finished: list[Request]):
+        """Quarantine an ADMITTED request that hit a fault: free its slot,
+        scrub + free its blocks and host copy, and surface it as a
+        structured ``failed`` result.  Every other request's state is
+        untouched — their block tables never referenced the victim's
+        blocks, so their tokens stay bitwise-identical."""
+        name = req.priority
+        req.done = True
+        req.failed = True
+        req.fail_reason = reason
+        req.t_done = self._clock()
+        slot = self._slot_of.pop(req.rid, None)
+        if slot is not None:
+            self._rid_of.pop(slot, None)
+            self._slots_free.append(slot)
+        if self.on_fail_fn is not None:
+            # engine hook runs while the block table is still valid: it
+            # scrubs the (possibly poisoned) blocks so their reuse can
+            # never leak non-finite values into a later tenant
+            self.on_fail_fn(req.rid, slot)
+        self.alloc.free(req.rid)
+        self.active.pop(req.rid, None)
+        self.lengths.pop(req.rid, None)
+        if req is self.prefilling:
+            self.prefilling = None
+        self.stats.failed += 1
+        self._cstat(name)["failed"] += 1
+        finished.append(req)
+        log.warning("request %d FAILED (%s) class=%s after %d tokens",
+                    req.rid, reason, name, len(req.generated))
+
+    def _discard_requeue(self, req: Request, slot: int | None,
+                         why: str) -> None:
+        """Fallback when a swap transfer exhausted its retries: the KV
+        payload is unrecoverable, so discard all progress and requeue at
+        the head of the class queue (PR 6's mid-prefill discard path) —
+        re-prefill regenerates the same greedy tokens, so the caller still
+        sees an unchanged result, just later."""
+        name = req.priority
+        if self.on_fail_fn is not None:
+            self.on_fail_fn(req.rid, slot)
+        self.alloc.free(req.rid)
+        self.active.pop(req.rid, None)
+        self.lengths.pop(req.rid, None)
+        req.prefill_pos = 0
+        req.generated.clear()
+        req.token_times.clear()
+        self.stats.swap_discards += 1
+        self._cstat(name)["swap_discards"] += 1
+        self._queues[name].appendleft(req)
+        log.warning("swap transfer gave up (%s) rid=%d class=%s — "
+                    "discarded and requeued", why, req.rid, name)
 
     def _reject(self, req: Request, reason: str, finished: list[Request]):
         req.done = True
@@ -589,8 +686,19 @@ class ContinuousBatcher:
             self._rid_of[slot] = req.rid
             # reserve the worst case, map the prompt's blocks now (decode
             # blocks map lazily via append_token at block boundaries)
-            self.alloc.admit(req.rid, len(req.prompt),
-                             req.sampling.max_tokens)
+            try:
+                self.alloc.admit(req.rid, len(req.prompt),
+                                 req.sampling.max_tokens)
+            except MemoryError as e:
+                # allocator failed mid-mapping (it rolled back its own
+                # partial state); release the slot we claimed and leave
+                # the request at the queue head for the next tick
+                self._slot_of.pop(req.rid, None)
+                self._rid_of.pop(slot, None)
+                self._slots_free.append(slot)
+                log.warning("admission alloc failed rid=%d (%s) — will "
+                            "retry next tick", req.rid, e)
+                break
             q.popleft()
             self.stats.admitted += 1
             self._cstat(pc.name)["admitted"] += 1
@@ -639,6 +747,11 @@ class ContinuousBatcher:
     def _finish_prefill(self, req: Request, first, finished: list[Request]):
         """Prefill done: record the first sampled token and either retire
         (stop token / max_tokens=1 — the check decode uses) or activate."""
+        q = self._sentinel()
+        slot = self._slot_of.get(req.rid)
+        if slot in q:
+            self._fail(req, q.pop(slot), finished)
+            return
         self.lengths[req.rid] = len(req.prompt) + 1
         if self._record_token(req, int(first)):
             self._retire(req)
@@ -674,7 +787,8 @@ class ContinuousBatcher:
     def tick(self, prefill_chunk_fn: Callable,
              decode_fn: Callable) -> list[Request]:
         """One scheduler iteration; returns requests finished this tick
-        (completed AND rejected — ``completed + rejected == submitted``)."""
+        (completed, rejected AND failed —
+        ``completed + rejected + failed == submitted``)."""
         finished: list[Request] = []
         self._admit(prefill_chunk_fn, finished)
         if self.token_budget is not None:
@@ -695,9 +809,19 @@ class ContinuousBatcher:
             nxt = decode_fn(slots, tokens, positions)
             self._observe_decode(self._clock() - t0)
             self.stats.decode_steps += 1
+            bad = self._sentinel()
             done_now = []
             for r, t in zip(rids, np.asarray(nxt)):
                 req = self.active[r]
+                slot = self._slot_of[r]
+                if slot in bad:
+                    # sentinel tripped on this slot: its sampled token is
+                    # garbage — quarantine instead of recording it.  The
+                    # other slots' tokens came off the same device step
+                    # untouched (blocks are per-sequence), so they record
+                    # normally.
+                    self._fail(req, bad.pop(slot), finished)
+                    continue
                 self.lengths[r] += 1
                 if self._record_token(req, int(t)):
                     done_now.append(req)

@@ -1,0 +1,198 @@
+"""Property-based chaos testing of the self-healing scheduler
+(DESIGN.md §2.13).
+
+Hypothesis draws a seed; from it we derive BOTH a random request stream
+(class-tagged, staggered arrivals, over-length outliers) and a random
+seeded fault schedule (admission exhaustion via the allocator's injector
+seam, swap-transfer failures raised from the engine-side hooks, sentinel
+quarantines of random active slots).  The faults interleave with
+admit / append / preempt / swap / resume exactly as they would in the
+real engine, and EVERY tick must uphold:
+
+- request conservation: ``completed + rejected + failed`` equals the
+  number of requests handed back so far, and equals ``submitted`` after
+  drain — a fault may kill a request, never lose one;
+- two-tier block conservation: the allocator's device + host accounting
+  balances (``conserves()``) at every tick boundary, not just at drain.
+
+Pure host-side (FakeEngine, no jax) so Hypothesis can afford many
+examples; the real-engine counterparts (device scrubbing, replan
+interleaving, bitwise victim isolation) live in tests/test_faults.py.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container without hypothesis: seeded sweep
+    HAVE_HYPOTHESIS = False
+
+from repro.serving.faults import (  # noqa: E402
+    FaultInjector,
+    FaultPlan,
+    TransferError,
+)
+from repro.serving.sampler import SamplingParams  # noqa: E402
+from repro.serving.scheduler import (  # noqa: E402
+    DEFAULT_CLASSES,
+    ContinuousBatcher,
+    Request,
+)
+
+
+class ChaoticFake:
+    """Slot-accurate fake engine with fault hooks: swap transfers consult
+    the injector (raising TransferError like the engine's exhausted retry
+    gate), and a seeded sentinel randomly quarantines active slots."""
+
+    def __init__(self, b: ContinuousBatcher, rng, injector,
+                 sentinel_p: float):
+        self.b = b
+        self.rng = rng
+        self.injector = injector
+        self.sentinel_p = sentinel_p
+        self.on_fail_calls: list[tuple] = []
+
+    def prefill(self, toks, slot, q_offset, is_final, prompt_len):
+        return int(self.rng.integers(0, 50)) if is_final else None
+
+    def decode(self, slots, toks, pos):
+        return self.rng.integers(0, 50, size=len(slots)).astype(np.int32)
+
+    def swap_out(self, rid, slot, resident):
+        spec = self.injector.fire("swap_out_transfer", rid=rid)
+        if spec is not None:
+            raise TransferError("swap_out_transfer", "injected", rid=rid)
+
+    def swap_in(self, rid, slot, resident):
+        spec = self.injector.fire("swap_in_transfer", rid=rid)
+        if spec is not None:
+            raise TransferError("swap_in_transfer", "injected", rid=rid)
+
+    def sentinel(self):
+        """Quarantine each active decode slot with probability
+        ``sentinel_p`` (seeded — reruns reproduce)."""
+        out = {}
+        for slot in list(self.b._rid_of):
+            if self.rng.random() < self.sentinel_p:
+                out[slot] = "injected_sentinel"
+        return out
+
+    def on_fail(self, rid, slot):
+        self.on_fail_calls.append((rid, slot))
+
+
+def _chaos_stream(seed: int):
+    rng = np.random.default_rng(seed)
+    num_slots = int(rng.integers(1, 4))
+    max_seq_len, block = 512, 128
+    num_blocks = int(rng.integers(num_slots + 1, num_slots * 4 + 1))
+    n = int(rng.integers(4, 16))
+    plan = FaultPlan.random(
+        seed, rate=float(rng.uniform(0.0, 0.15)), horizon=40,
+        seams=("admission_alloc", "swap_out_transfer",
+               "swap_in_transfer"), max_rid=n)
+    injector = FaultInjector(plan)
+    b = ContinuousBatcher(
+        num_slots=num_slots, num_blocks=num_blocks,
+        max_seq_len=max_seq_len, block=block,
+        token_budget=[None, 128, 256][int(rng.integers(0, 3))],
+        admission=["fifo", "slo"][int(rng.integers(0, 2))],
+        preemption=True,
+        host_blocks=[None, 0, 4][int(rng.integers(0, 3))])
+    eng = ChaoticFake(b, rng, injector,
+                      sentinel_p=float(rng.uniform(0.0, 0.06)))
+    b.swap_out_fn = eng.swap_out
+    b.swap_in_fn = eng.swap_in
+    b.sentinel_fn = eng.sentinel
+    b.on_fail_fn = eng.on_fail
+    b.alloc.injector = injector      # admission_alloc seam inside _grow
+    names = [c.name for c in DEFAULT_CLASSES]
+    reqs = []
+    for i in range(n):
+        length = (int(rng.integers(max_seq_len, max_seq_len * 2))
+                  if rng.random() < 1 / 8
+                  else int(rng.integers(1, 400)))
+        reqs.append(Request(
+            rid=i, prompt=np.arange(length) % 256,
+            sampling=SamplingParams(max_tokens=int(rng.integers(1, 8))),
+            priority=names[int(rng.integers(0, len(names)))]))
+    return b, eng, reqs
+
+
+def _chaos_conservation_every_tick(seed):
+    b, eng, reqs = _chaos_stream(seed)
+    rng = np.random.default_rng(seed + 1)
+    cut = int(rng.integers(0, len(reqs) + 1))
+    for r in reqs[:cut]:
+        b.submit(r)
+    done: list[Request] = []
+    ticks = 0
+    submitted_rest = False
+    while (b.busy or not submitted_rest) and ticks < 5_000:
+        done.extend(b.tick(eng.prefill, eng.decode))
+        ticks += 1
+        if not submitted_rest and ticks >= int(rng.integers(1, 6)):
+            for r in reqs[cut:]:
+                b.submit(r)
+            submitted_rest = True
+        # per-tick invariants — not just at drain
+        st_ = b.stats
+        assert st_.completed + st_.rejected + st_.failed == len(done), \
+            "a request left the system without being handed back"
+        assert b.alloc.conserves(), \
+            "two-tier block conservation broke mid-stream"
+    assert not b.busy, "chaos stream failed to drain"
+
+    # drain invariants
+    st_ = b.stats
+    assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
+    assert st_.completed + st_.rejected + st_.failed == len(reqs)
+    assert b.alloc.conserves()
+    assert b.alloc.free_blocks == b.alloc.num_blocks
+    assert b.alloc.host_allocated_blocks == 0
+    assert b.alloc.swapped_seqs == () and b._slot_of == {}
+    # every quarantined victim carries a structured reason and got its
+    # engine-side scrub callback exactly once
+    failed = [r for r in done if r.failed]
+    assert len(failed) == st_.failed
+    for r in failed:
+        assert r.done and r.fail_reason
+        assert r.generated is not None     # partial output is kept
+    assert len([c for c in eng.on_fail_calls]) >= len(failed)
+    # per-class ledgers still partition the totals under chaos
+    per = b.stats.per_class
+    assert sum(c["submitted"] for c in per.values()) == len(reqs)
+    for name, c in per.items():
+        assert c["completed"] + c["rejected"] + c["failed"] == \
+            c["submitted"], name
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.timeout(900, method="thread")
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=100_000))
+    def test_chaos_conservation_every_tick(seed):
+        _chaos_conservation_every_tick(seed)
+else:
+    @pytest.mark.timeout(900, method="thread")
+    @pytest.mark.parametrize("seed", range(40))
+    def test_chaos_conservation_every_tick(seed):
+        _chaos_conservation_every_tick(seed)
+
+
+@pytest.mark.timeout(300)
+def test_fault_plan_roundtrip_and_determinism():
+    plan = FaultPlan.random(7, 0.1, horizon=30, max_rid=12)
+    again = FaultPlan.random(7, 0.1, horizon=30, max_rid=12)
+    assert plan.to_json() == again.to_json(), "seeded plans must replay"
+    back = FaultPlan.from_json(plan.to_json())
+    assert back.to_json() == plan.to_json()
+    # two injectors over the same plan fire identically
+    a, c = FaultInjector(plan), FaultInjector(back)
+    fires_a = [a.fire("kv_corrupt", rid=i % 5) is not None
+               for i in range(50)]
+    fires_c = [c.fire("kv_corrupt", rid=i % 5) is not None
+               for i in range(50)]
+    assert fires_a == fires_c

@@ -410,3 +410,54 @@ def test_paged_cache_striped_pool():
     kv.alloc.admit(0, 9)                     # 3 blocks -> spread [2, 1]
     assert sorted(kv.alloc.stripe_counts(0)) == [1, 2]
     assert kv.alloc.conserves()
+
+
+# ---------------------------------------------------------------------------
+# admission partial-failure rollback (§2.13 satellite)
+# ---------------------------------------------------------------------------
+def test_admit_partial_failure_rolls_back_cleanly():
+    """Regression: an admit that fails after mapping SOME prompt blocks
+    must unwind them — before the rollback, the reservation and the
+    already-popped free-list blocks leaked, so the pool shrank a little on
+    every failed admission until nothing could admit."""
+    from repro.serving.faults import FaultInjector, FaultPlan, FaultSpec
+    from repro.serving.faults import InjectedAllocError
+
+    a = BlockAllocator(8, 64)
+    a.injector = FaultInjector(FaultPlan(specs=(
+        FaultSpec(seam="admission_alloc", rid=1),)))
+    a.admit(0, 100)                          # untouched bystander
+    before = (a.free_blocks, a.allocated_blocks, sorted(a.free_ids()))
+    with pytest.raises(MemoryError) as ei:   # InjectedAllocError IS one
+        a.admit(1, 200, max_new_tokens=128)
+    assert isinstance(ei.value, InjectedAllocError)
+    # full unwind: no table, no length, no reservation, same free list
+    assert 1 not in a.live_seqs
+    assert a.table(1) == [] and a.seq_tokens(1) == 0
+    assert a.reserved_blocks(1) == 0
+    assert (a.free_blocks, a.allocated_blocks,
+            sorted(a.free_ids())) == before
+    assert a.conserves() and not a.audit(strict=False)
+    # the spec is spent: the SAME admit now lands fully
+    ids = a.admit(1, 200, max_new_tokens=128)
+    assert len(ids) == a.blocks_needed(200)
+    a.free(0)
+    a.free(1)
+    assert a.free_blocks == a.num_blocks
+
+
+def test_admit_genuine_exhaustion_mid_map_rolls_back():
+    """The same unwind without an injector: a reservation that fits but a
+    free list that runs dry mid-map (possible transiently with stripes)
+    must leave no trace either."""
+    a = BlockAllocator(4, 64)
+    a.admit(0, 64)                           # 1 block mapped, 3 free
+    # reservation check passes (3 needed <= 3 available) but we drain the
+    # free list underneath the mapping loop to force the mid-map failure
+    stolen, a._free[0] = a._free[0][1:], a._free[0][:1]
+    with pytest.raises(MemoryError):
+        a.admit(1, 192)
+    assert 1 not in a.live_seqs and a.reserved_blocks(1) == 0
+    a._free[0] += stolen                     # put the stolen blocks back
+    assert a.conserves()
+    assert a.admit(1, 192) and a.conserves()
