@@ -1,0 +1,169 @@
+"""Radix-tree prefix cache benchmark (DESIGN.md §2.14) — ``BENCH_prefix.json``.
+
+A shared-prefix serving workload (the agent / few-shot pattern: one long
+system prompt, many short continuations) swept over the shared fraction:
+at each hit rate a fresh engine serves the same request count one at a
+time, so each request's TTFT is pure prefill work, not queueing.
+
+Measurements, one per §2.14 acceptance claim:
+
+1. ``hit_ttft_ratio`` — mean TTFT of cache-HIT requests at 90% shared vs
+   the all-cold baseline.  A hit maps the shared blocks by identity and
+   prefills only the divergent tail, so the ratio tracks
+   ``tail / (prefix + tail)`` plus scheduler overhead.
+   Acceptance: <= 0.15 at a 1024-token prefix with 64-token tails.
+
+2. ``tokens_per_s`` at each hit rate — admitted throughput (prefill +
+   decoded tokens over the serve makespan).  Skipped prefill work turns
+   directly into throughput, so the 90% point must beat the cold point.
+
+3. ``parity`` — greedy tokens of a cache-ON serve equal the cache-OFF
+   serve of the same prompts (the load-bearing bitwise claim; the full
+   matrix lives in ``tests/test_prefix_cache.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+
+from repro.core.sparsity import synthetic_head_curves
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving import Engine, EngineConfig, SamplingParams
+
+CFG = TransformerConfig(num_layers=2, d_model=128, num_heads=8,
+                        num_kv_heads=4, d_ff=256, vocab_size=512,
+                        layer_loop="unroll")
+BLOCK = 64
+PREFIX_TOKENS = 1024
+TAIL_TOKENS = 64
+MAX_SEQ = 2048
+HIT_RATES = (0.0, 0.5, 0.9)
+
+
+def _engine(params, profile, on: bool) -> Engine:
+    return Engine(CFG, params, EngineConfig(
+        attention="sparse", budget_per_head=MAX_SEQ, block=BLOCK,
+        floor=BLOCK, max_seq_len=MAX_SEQ, num_slots=4,
+        prefill_mode="chunked", prefill_chunk_tokens=256,
+        prefix_cache=on), profile=profile)
+
+
+def _workload(rng, n_requests: int, hit_rate: float, shared: np.ndarray):
+    """[(prompt, is_hit)] — ``hit_rate`` of the requests continue the
+    shared prefix; the rest are fully unique prompts of equal length."""
+    n_hit = int(round(n_requests * hit_rate))
+    reqs = []
+    for i in range(n_requests):
+        tail = rng.integers(0, CFG.vocab_size, size=(TAIL_TOKENS,))
+        if i < n_hit:
+            reqs.append((np.concatenate([shared, tail]), True))
+        else:
+            uniq = rng.integers(0, CFG.vocab_size,
+                                size=(PREFIX_TOKENS + TAIL_TOKENS,))
+            reqs.append((uniq, False))
+    rng.shuffle(reqs)
+    return reqs
+
+
+def _serve_one_by_one(eng, reqs, sp):
+    """Sequential serves: TTFT is prefill latency, not queue delay."""
+    ttfts, toks, t0 = [], 0, time.monotonic()
+    for prompt, is_hit in reqs:
+        r = eng.serve([prompt], sp)[0]
+        assert r.ttft is not None
+        ttfts.append((r.ttft, is_hit))
+        toks += len(prompt) + len(r.generated)
+    return ttfts, toks, time.monotonic() - t0
+
+
+def run(out_dir: str, quick: bool = False):
+    n_requests = 10 if quick else 20
+    sp = SamplingParams(max_tokens=4)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, CFG.vocab_size, size=(PREFIX_TOKENS,))
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    profile = synthetic_head_curves(CFG.num_layers, CFG.num_heads)
+
+    results = {}
+    for rate in HIT_RATES:
+        eng = _engine(params, profile, on=True)
+        # warm: compiles every chunk program AND seeds the radix tree with
+        # the shared prefix (the donor serve is not measured)
+        eng.serve([np.concatenate(
+            [shared, rng.integers(0, CFG.vocab_size,
+                                  size=(TAIL_TOKENS,))])], sp)
+        reqs = _workload(np.random.default_rng(1), n_requests, rate, shared)
+        ttfts, toks, wall = _serve_one_by_one(eng, reqs, sp)
+        st = eng.prefix.stats
+        results[f"{rate:.2f}"] = {
+            "ttft_mean_ms": float(np.mean([t for t, _ in ttfts])) * 1e3,
+            "ttft_hit_mean_ms": (float(np.mean(
+                [t for t, h in ttfts if h])) * 1e3
+                if any(h for _, h in ttfts) else None),
+            "ttft_cold_mean_ms": float(np.mean(
+                [t for t, h in ttfts if not h])) * 1e3
+                if any(not h for _, h in ttfts) else None,
+            "tokens_per_s": toks / wall,
+            "requests_per_s": n_requests / wall,
+            "prefix_hits": st["hits"],
+            "prefix_hit_tokens": st["hit_tokens"],
+        }
+
+    cold = results["0.00"]["ttft_mean_ms"]
+    hot = results["0.90"]["ttft_hit_mean_ms"]
+    hit_ratio = hot / cold
+    speedup = results["0.90"]["tokens_per_s"] / results["0.00"]["tokens_per_s"]
+
+    # bitwise parity spot-check: same prompts, cache on vs off
+    par_prompts = [np.concatenate(
+        [shared, rng.integers(0, CFG.vocab_size, size=(TAIL_TOKENS,))])
+        for _ in range(3)]
+    on = _engine(params, profile, on=True)
+    off = _engine(params, profile, on=False)
+    got_on = {r.rid: list(r.generated) for r in on.serve(par_prompts, sp)}
+    got_off = {r.rid: list(r.generated) for r in off.serve(par_prompts, sp)}
+    parity = got_on == got_off
+    assert parity, "prefix-cache serve diverged from the cache-off serve"
+    assert hit_ratio <= 0.15, \
+        f"hit TTFT ratio {hit_ratio:.3f} exceeds the 0.15 acceptance bound"
+
+    payload = {
+        "config": {
+            "prefix_tokens": PREFIX_TOKENS, "tail_tokens": TAIL_TOKENS,
+            "block": BLOCK, "n_requests": n_requests,
+            "hit_rates": list(HIT_RATES), "quick": quick,
+        },
+        "by_hit_rate": results,
+        "hit_ttft_ratio": hit_ratio,
+        "throughput_speedup_90": speedup,
+        "parity": parity,
+    }
+    with open(os.path.join(out_dir, "BENCH_prefix.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+    return [
+        ("ttft_cold_ms", results["0.00"]["ttft_mean_ms"]),
+        ("ttft_hit_ms_at_90", hot),
+        ("hit_ttft_ratio", hit_ratio),
+        ("tokens_per_s_at_0", results["0.00"]["tokens_per_s"]),
+        ("tokens_per_s_at_50", results["0.50"]["tokens_per_s"]),
+        ("tokens_per_s_at_90", results["0.90"]["tokens_per_s"]),
+        ("throughput_speedup_90", speedup),
+        ("parity", float(parity)),
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick sizes (CI prefix-cache smoke)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "artifacts", "bench"))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for metric, value in run(args.out, quick=args.smoke):
+        print(f"prefix_cache,{metric},{value:.6g}")

@@ -35,6 +35,8 @@ SUITES = [
                  "fused packed decode latency, recovery delta (§2.12)"),
     ("chaos", "fault injection: goodput + recovery latency vs fault "
               "rate, self-healing engine (§2.13)"),
+    ("prefix_cache", "radix-tree prefix cache: TTFT + admitted throughput "
+                     "vs shared-prefix hit rate (§2.14)"),
 ]
 
 # fast subset exercising the serving hot paths (CI perf smoke); the decode
@@ -50,7 +52,8 @@ SUITES = [
 # and chaos refreshes BENCH_chaos.json so goodput under injected faults
 # and fault-recovery latency regress visibly (§2.13)
 SMOKE = ("load_balance", "latency_attention", "decode_pack", "serving",
-         "adapt_replan", "overload", "seqpar", "quant_kv", "chaos")
+         "adapt_replan", "overload", "seqpar", "quant_kv", "chaos",
+         "prefix_cache")
 
 
 def main() -> int:
@@ -98,7 +101,23 @@ def main() -> int:
         with open(os.path.join(OUT, "BENCH_errors.json"), "w") as f:
             json.dump(errors, f, indent=2)
         print(f"driver,failed_suites,{len(errors)}")
+    _mirror_headline_json()
     return 1 if errors else 0
+
+
+def _mirror_headline_json() -> None:
+    """Copy every BENCH_*.json produced this run to the repo root so the
+    headline numbers ride along with the tree (CI uploads both the
+    artifacts dir and the root copies)."""
+    import glob
+    import shutil
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    for src in sorted(glob.glob(os.path.join(OUT, "BENCH_*.json"))):
+        try:
+            shutil.copy2(src, os.path.join(root, os.path.basename(src)))
+        except OSError as e:  # read-only checkout: report, don't abort
+            print(f"driver,mirror_error,{os.path.basename(src)}: {e}",
+                  file=sys.stderr)
 
 
 if __name__ == "__main__":

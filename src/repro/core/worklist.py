@@ -437,6 +437,7 @@ def pack_decode_items(
     shard_of_kvhead: np.ndarray | None = None,
     kvhead_local: bool = False,
     bytes_per_block: float | None = None,
+    phys_of_block: np.ndarray | None = None,
 ) -> PackedDecodeWorkList:
     """Flatten per-slot decode selections into cost-packed ragged lists.
 
@@ -463,6 +464,15 @@ def pack_decode_items(
     per-block scales, see ``repro.core.quant.kv_dtype_bytes``).  Weights
     become bytes instead of block counts, so the partition balances what
     the memory system actually pays.
+
+    ``phys_of_block`` (§2.14 charge-once packing): ``[B, T]`` physical
+    pool ids per LOGICAL block position of each row (-1 unmapped — the
+    allocator tables, exactly what the paged executor indexes with).
+    When given, a prefix-SHARED physical block is charged to a kv head's
+    cost once no matter how many batch rows reference it: each run's
+    weight becomes its count of first-seen physical ids within its head
+    (floor 1 — every run still pays its launch/output cost).  Items are
+    untouched; kv blocks stay logical.
     """
     from repro.core.partition import best_partition
 
@@ -473,6 +483,20 @@ def pack_decode_items(
     runs = [(b, h, int(counts[b, h]))
             for b in range(B) for h in range(hkv) if counts[b, h] > 0]
     weights = np.array([r[2] for r in runs], dtype=np.int64)
+    if phys_of_block is not None:
+        pob = np.asarray(phys_of_block)
+        seen: dict[int, set[int]] = {}
+        fresh_w = []
+        for b, h, _ in runs:       # b-major order — deterministic dedup
+            sel = ids[b, h][ids[b, h] >= 0].astype(np.int64)
+            held = seen.setdefault(h, set())
+            fresh = 0
+            for p in pob[b, sel].tolist():
+                if p >= 0 and p not in held:
+                    held.add(p)
+                    fresh += 1
+            fresh_w.append(max(1, fresh))
+        weights = np.array(fresh_w, dtype=np.int64)
     if bytes_per_block is not None:
         # byte-true weights (§2.12): scale selected-block counts by the
         # pool's real per-block HBM footprint (K+V codes + amortized
@@ -616,6 +640,7 @@ def pack_decode_items_2d(
     shard_of_kvhead: np.ndarray | None = None,
     kvhead_local: bool = False,
     bytes_per_block: float | None = None,
+    phys_of_block: np.ndarray | None = None,
 ) -> PackedDecodeWorkList2D:
     """2D (model x seq) twin of :func:`pack_decode_items`.
 
@@ -656,6 +681,23 @@ def pack_decode_items_2d(
     W = np.array([[len(p) for p in per_stripe]
                   for _, _, per_stripe in runs],
                  dtype=np.int64).reshape(len(runs), num_stripes)
+    if phys_of_block is not None:
+        # charge-once (§2.14), per (kv head, stripe) cell: a shared
+        # physical block streams once per head per stripe regardless of
+        # how many rows reference it — see pack_decode_items
+        pob = np.asarray(phys_of_block)
+        seen2: dict[tuple[int, int], set[int]] = {}
+        for ridx, (b, h, per_stripe) in enumerate(runs):
+            for s, sel in enumerate(per_stripe):
+                if not len(sel):
+                    continue
+                held = seen2.setdefault((h, s), set())
+                fresh = 0
+                for p in pob[b, np.asarray(sel, np.int64)].tolist():
+                    if p >= 0 and p not in held:
+                        held.add(p)
+                        fresh += 1
+                W[ridx, s] = max(1, fresh)
     if bytes_per_block is not None:
         # byte-true cell weights (§2.12) — see pack_decode_items
         W = np.maximum((W > 0).astype(np.int64),

@@ -85,6 +85,13 @@ def main():
     ap.add_argument("--checkpoint-every", type=int, default=0,
                     help="snapshot every N decode ticks into "
                          "--checkpoint-dir (0 = checkpoints off)")
+    # radix-tree prefix cache (DESIGN.md §2.14)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share identical prompt-prefix KV blocks by "
+                         "refcount through a radix tree (paged layout; "
+                         "greedy outputs are identical either way). The "
+                         "synthetic workload switches to an 80%%-shared "
+                         "agent pattern so hits actually occur.")
     args = ap.parse_args()
     if args.drift_threshold is not None and args.telemetry_every <= 0:
         ap.error("--drift-threshold needs --telemetry-every > 0")
@@ -134,13 +141,26 @@ def main():
         audit_every=args.audit_every,
         swap_retries=args.swap_retries,
         checkpoint_dir=args.checkpoint_dir,
-        checkpoint_every=args.checkpoint_every), profile=profile,
+        checkpoint_every=args.checkpoint_every,
+        prefix_cache=args.prefix_cache), profile=profile,
         injector=injector)
 
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, min(cfg.vocab_size, 256),
-                            size=(int(rng.integers(32, 128)),))
-               for _ in range(args.requests)]
+    if args.prefix_cache:
+        # agent workload: 80% of requests continue one shared system
+        # prompt, the rest are unique — the shape prefix sharing serves
+        shared = rng.integers(0, min(cfg.vocab_size, 256), size=(256,))
+        prompts = []
+        for i in range(args.requests):
+            tail = rng.integers(0, min(cfg.vocab_size, 256),
+                                size=(int(rng.integers(16, 48)),))
+            prompts.append(np.concatenate([shared, tail]) if i % 5 else
+                           rng.integers(0, min(cfg.vocab_size, 256),
+                                        size=(int(rng.integers(32, 128)),)))
+    else:
+        prompts = [rng.integers(0, min(cfg.vocab_size, 256),
+                                size=(int(rng.integers(32, 128)),))
+                   for _ in range(args.requests)]
     classes = ("interactive", "standard", "batch")
     priorities = [classes[i % len(classes)] for i in range(len(prompts))]
     t0 = time.time()
@@ -151,6 +171,12 @@ def main():
     log.info("served %d requests, %d tokens in %.1fs (%.1f tok/s)",
              len(done), n_tok, dt, n_tok / dt)
     bs = eng.decode_bubble_stats
+    if args.prefix_cache and bs.get("prefix"):
+        ps = bs["prefix"]
+        log.info("prefix cache: %d/%d lookups hit (%d tokens mapped for "
+                 "free), %d blocks in tree, %d evicted",
+                 ps["hits"], ps["lookups"], ps["hit_tokens"],
+                 ps["nodes"], ps["evicted_blocks"])
     n_failed = sum(1 for r in done if r.failed)
     if injector is not None or args.audit_every or n_failed:
         fs = bs["faults"]

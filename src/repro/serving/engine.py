@@ -73,6 +73,7 @@ from repro.serving.faults import (
     TransferError,
 )
 from repro.serving.kv_cache import PagedKVCache
+from repro.serving.prefix_tree import RadixPrefixCache
 from repro.serving.sampler import SamplingParams, sample
 from repro.serving.scheduler import ContinuousBatcher, Request
 from repro.utils.logging import get_logger
@@ -179,6 +180,14 @@ class EngineConfig:
     # scheduler + host-tier + plan state.  None / 0 = disabled.
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0
+    # -- radix-tree prefix cache (DESIGN.md §2.14) ------------------------
+    # content-hash radix tree over full prompt blocks: admission maps the
+    # longest cached prefix for free (refcounted block sharing in the
+    # paged pool; prefill starts at the divergence block) and unreferenced
+    # subtrees LRU-evict under pool pressure BEFORE preemption kicks in.
+    # Requires cache_layout="paged".  Greedy decoding stays bitwise
+    # identical to prefix_cache=False.
+    prefix_cache: bool = False
 
 
 class Engine:
@@ -187,6 +196,16 @@ class Engine:
     def __init__(self, cfg: TransformerConfig, params, engine_cfg: EngineConfig,
                  profile: HeadSparsityProfile | None = None,
                  injector: FaultInjector | None = None):
+        # attention tile sizes MUST match the work-list granularity: items
+        # address (head, q_blk, kv_blk) tiles in units of ``engine_cfg.block``,
+        # and a kernel running wider tiles slices/writes past the buffer —
+        # dynamic_update_slice CLAMPS the out-of-range start and silently
+        # clobbers tile 0 (exposed by any run whose chunk boundaries differ
+        # from its comparison baseline, e.g. a prefix-cache hit)
+        if (cfg.block_q != engine_cfg.block
+                or cfg.block_kv != engine_cfg.block):
+            cfg = dataclasses.replace(cfg, block_q=engine_cfg.block,
+                                      block_kv=engine_cfg.block)
         self.cfg = cfg
         self.ecfg = engine_cfg
         # fault injection (DESIGN.md §2.13): every seam below guards on
@@ -255,6 +274,13 @@ class Engine:
             assert engine_cfg.cache_layout == "paged", \
                 "seq_shards > 1 needs cache_layout='paged' (stripes own " \
                 "contiguous ranges of the block pool)"
+        if engine_cfg.prefix_cache:
+            assert engine_cfg.cache_layout == "paged", \
+                "prefix_cache needs cache_layout='paged' (sharing is " \
+                "block-table aliasing in the pool)"
+        # radix prefix cache (DESIGN.md §2.14): built by make_batcher so
+        # it shares the batcher's allocator wiring; None = sharing off
+        self.prefix = None
         if engine_cfg.cache_layout == "paged":
             assert engine_cfg.max_seq_len % engine_cfg.block == 0, \
                 "paged layout needs max_seq_len % block == 0"
@@ -561,18 +587,23 @@ class Engine:
                * self._nb_cap_for_epoch())
         return -(-cap // 8) * 8
 
-    def _build_packed_plan(self, nb_sig: tuple[int, ...]):
+    def _build_packed_plan(self, nb_sig: tuple[int, ...],
+                           phys_of_block: np.ndarray | None = None):
         """Pack one tick's decode work: per layer, flatten every slot's
         position-aware selection into (row, kv_head, kv_block) items,
         best-partition the (row, head) runs across model shards, and pad
-        all layers onto one pow2 item bucket.  Returns
+        all layers onto one pow2 item bucket.  ``phys_of_block`` ([B, T]
+        logical->physical tables, prefix sharing §2.14) makes the packer
+        charge a pool block's bytes ONCE per head worklist however many
+        slots alias it.  Returns
         ``(items [L, D*bucket, DEC_FIELDS] int32, stats)``."""
         cfg, ecfg = self.cfg, self.ecfg
         per_slot = [self._decode_ids_for_nblocks(nb) for nb in nb_sig]
         bids = np.stack(per_slot, axis=1)       # [L, B, Hkv, nb_cap]
         wls = [pack_decode_items(bids[l], num_shards=ecfg.num_model_shards,
                                  block=ecfg.block,
-                                 bytes_per_block=self._kv_block_bytes)
+                                 bytes_per_block=self._kv_block_bytes,
+                                 phys_of_block=phys_of_block)
                for l in range(cfg.num_layers)]
         bucket = pow2_bucket(max(wl.padded_length for wl in wls),
                              lo=8, hi=self._packed_item_cap())
@@ -605,21 +636,25 @@ class Engine:
         return np.where(t >= 0, t // ss, -1).astype(np.int32)
 
     def _build_packed_plan_2d(self, nb_sig: tuple[int, ...],
-                              stripe_of: np.ndarray):
+                              stripe_of: np.ndarray,
+                              phys_of_block: np.ndarray | None = None):
         """2D twin of :meth:`_build_packed_plan` (DESIGN.md §2.11): each
         (slot, head) run splits into per-stripe sub-runs (stripe fixed by
         block placement), ``best_partition_2d`` picks model shards to
         minimize the max (shard, stripe) CELL, and every cell pads onto
-        one pow2 bucket.  Returns ``(items [L, S, Dm*bucket, DEC_FIELDS]
-        int32, stats)`` — axis 1 is the stripe axis ``decode_step_paged``
-        loops over (one partial pass per stripe, merged)."""
+        one pow2 bucket.  ``phys_of_block`` dedups shared-block bytes per
+        (head, stripe) cell (§2.14).  Returns ``(items [L, S, Dm*bucket,
+        DEC_FIELDS] int32, stats)`` — axis 1 is the stripe axis
+        ``decode_step_paged`` loops over (one partial pass per stripe,
+        merged)."""
         cfg, ecfg = self.cfg, self.ecfg
         S, Dm = ecfg.seq_shards, ecfg.num_model_shards
         per_slot = [self._decode_ids_for_nblocks(nb) for nb in nb_sig]
         bids = np.stack(per_slot, axis=1)       # [L, B, Hkv, nb_cap]
         wls = [pack_decode_items_2d(bids[l], stripe_of, num_stripes=S,
                                     num_shards=Dm, block=ecfg.block,
-                                    bytes_per_block=self._kv_block_bytes)
+                                    bytes_per_block=self._kv_block_bytes,
+                                    phys_of_block=phys_of_block)
                for l in range(cfg.num_layers)]
         bucket = pow2_bucket(max(wl.padded_length for wl in wls),
                              lo=8, hi=self._packed_item_cap())
@@ -656,26 +691,53 @@ class Engine:
         }
         return items, stats
 
+    def _share_sig(self, table: np.ndarray | None):
+        """Sharing signature of a tick's block tables (§2.14): per slot
+        row, the (logical index, physical id) pairs of blocks referenced
+        by MORE than one table.  Exactly these entries change the packer's
+        charge-once weights (a refcount-1 block cannot appear twice), so
+        keying plans on them — not the full tables — keeps the plan cache
+        hitting across unrelated id churn.  None when sharing is off."""
+        if table is None or self.prefix is None:
+            return None
+        rc = self.kv.alloc.refcount
+        return tuple(
+            tuple((i, b) for i, b in enumerate(row)
+                  if b >= 0 and rc(b) >= 2)
+            for row in np.asarray(table).tolist())
+
     def _plan_key(self, nb_sig: tuple[int, ...],
-                  stripe_of: np.ndarray | None) -> tuple:
-        """Plan-cache key: (epoch, block counts[, stripe placement]) — the
-        stripe signature makes a plan valid only for the exact physical
-        placement it was packed against (swap/preempt cycles remap ids)."""
-        if stripe_of is None:
-            return (self.epoch, nb_sig)
-        return (self.epoch, nb_sig, tuple(map(tuple, stripe_of.tolist())))
+                  stripe_of: np.ndarray | None,
+                  share_sig=None) -> tuple:
+        """Plan-cache key: (epoch, block counts[, stripe placement]
+        [, sharing signature]) — the stripe signature makes a plan valid
+        only for the exact physical placement it was packed against
+        (swap/preempt cycles remap ids); the sharing signature does the
+        same for the charge-once dedup weights."""
+        key = ((self.epoch, nb_sig) if stripe_of is None
+               else (self.epoch, nb_sig,
+                     tuple(map(tuple, stripe_of.tolist()))))
+        if share_sig is not None:
+            key += (share_sig,)
+        return key
 
     def _plan_for(self, nb_sig: tuple[int, ...],
                   stripe_of: np.ndarray | None = None,
-                  prefetch: bool = False):
+                  prefetch: bool = False,
+                  table: np.ndarray | None = None):
         """LRU-memoized packed plan for an ``(epoch, tick signature)`` —
         the epoch key means a replan can never serve a stale epoch's
-        selections, while old-epoch plans age out of the LRU lazily."""
-        key = self._plan_key(nb_sig, stripe_of)
+        selections, while old-epoch plans age out of the LRU lazily.
+        ``table`` (prefix sharing on) feeds the charge-once packing."""
+        share_sig = self._share_sig(table)
+        pob = table if share_sig is not None else None
+        key = self._plan_key(nb_sig, stripe_of, share_sig)
         got = self._packed_plan_cache.get(key)
         if got is None:
-            got = (self._build_packed_plan(nb_sig) if stripe_of is None
-                   else self._build_packed_plan_2d(nb_sig, stripe_of))
+            got = (self._build_packed_plan(nb_sig, phys_of_block=pob)
+                   if stripe_of is None
+                   else self._build_packed_plan_2d(nb_sig, stripe_of,
+                                                   phys_of_block=pob))
             self._packed_plan_cache[key] = got
             if len(self._packed_plan_cache) > self._packed_plan_cap:
                 self._packed_plan_cache.popitem(last=False)
@@ -702,18 +764,22 @@ class Engine:
         pos_all = np.zeros((self.ecfg.num_slots,), np.int32)
         pos_all[list(slots)] = positions
         sig = self._nb_sig(pos_all)
-        stripe_of = None
-        if self.paged and self.ecfg.seq_shards > 1:
+        stripe_of = table = None
+        if self.paged and (self.ecfg.seq_shards > 1
+                           or self.prefix is not None):
             # best-effort: if a slot maps a NEW block before the next tick
-            # the stripe signature shifts and this plan simply goes unused
-            # (the key carries the placement — never a wrong plan)
+            # the stripe/sharing signature shifts and this plan simply
+            # goes unused (the key carries the placement — never a wrong
+            # plan)
             table = np.full((self.ecfg.num_slots, self.kv.table_width), -1,
                             np.int32)
             for s in slots:
                 table[s] = self._table_for_slot(s)
-            stripe_of = self._stripe_of_table(table)
-        if self._plan_key(sig, stripe_of) not in self._packed_plan_cache:
-            self._plan_for(sig, stripe_of, prefetch=True)
+            if self.ecfg.seq_shards > 1:
+                stripe_of = self._stripe_of_table(table)
+        key = self._plan_key(sig, stripe_of, self._share_sig(table))
+        if key not in self._packed_plan_cache:
+            self._plan_for(sig, stripe_of, prefetch=True, table=table)
 
     def _record_tick(self, stats: dict) -> None:
         s = self.decode_stats
@@ -791,6 +857,13 @@ class Engine:
             "per_class": ({k: dict(v) for k, v in
                            self._batcher.stats.per_class.items()}
                           if self._batcher is not None else {}),
+            # radix prefix cache (§2.14): hit/insert/evict counters plus
+            # the live tree size and the evictable (cached, unreferenced)
+            # block count — the cache's resident footprint under pressure
+            "prefix": (dict(self.prefix.stats,
+                            nodes=self.prefix.num_blocks,
+                            evictable=self.kv.alloc.evictable_blocks)
+                       if self.prefix is not None else None),
         }
 
     # -- plan epochs: telemetry, drift, replanning (DESIGN.md §2.9) ---------
@@ -1019,6 +1092,12 @@ class Engine:
             for k in [k for k in d if k[0] != self.epoch]:
                 del d[k]
         self._nb_cap.pop(old, None)
+        if self.prefix is not None:
+            # cached prefix KV was computed under the OLD epoch's budgets
+            # (and head placement) — a new-plan prefill would not reproduce
+            # it bitwise, so the tree drops everything; unreferenced blocks
+            # free, shared ones free as their holders finish (§2.14)
+            self.prefix.flush()
         log.info("plan epoch %d -> %d at tick %d (moved=%s, "
                  "mean imbalance %.3f)", old, self.epoch,
                  self._decode_ticks, not delta.identity,
@@ -1165,23 +1244,39 @@ class Engine:
         mapped pool blocks; contiguous: slice its slot rows (the tokens
         past ``resident`` ride along as junk — decode masks by length)."""
         self._transfer_gate("swap_out_transfer", rid)
-        nblk = self.kv.alloc.blocks_needed(resident) if self.paged \
-            else -(-resident // self.ecfg.block)
-        bucket = self._swap_bucket(nblk)
         sdata = None
+        shared_n = 0
         if self.paged:
-            ids = self.kv.alloc.table(rid)
-            assert len(ids) == nblk
-            row = np.full((bucket,), self.kv.trash_block, np.int32)
-            row[:nblk] = ids
-            pool, blocks = self._swap_gather_fn(("paged", bucket))(
-                self.cache, jnp.asarray(row))
-            self._set_cache(pool)
-            if self.quantized:
-                blocks, sc = blocks
-                sdata = np.array(jax.device_get(sc)[:, :, :nblk])
-            data = np.array(jax.device_get(blocks)[:, :, :nblk])
+            # prefix sharing (§2.14): tree-cached / multiply-referenced
+            # prefix blocks STAY RESIDENT (their payload serves every
+            # other holder already) — only the private tail transfers
+            retained, private = self.kv.alloc.swap_split(rid)
+            assert len(retained) + len(private) == \
+                self.kv.alloc.blocks_needed(resident)
+            shared_n = len(retained)
+            nblk = len(private)
+            if nblk:
+                bucket = self._swap_bucket(nblk)
+                row = np.full((bucket,), self.kv.trash_block, np.int32)
+                row[:nblk] = private
+                pool, blocks = self._swap_gather_fn(("paged", bucket))(
+                    self.cache, jnp.asarray(row))
+                self._set_cache(pool)
+                if self.quantized:
+                    blocks, sc = blocks
+                    sdata = np.array(jax.device_get(sc)[:, :, :nblk])
+                data = np.array(jax.device_get(blocks)[:, :, :nblk])
+            else:
+                # fully shared: zero transfer; keep an empty host payload
+                # so swap-in's shape bookkeeping stays uniform
+                pool0 = self.cache[0] if self.quantized else self.cache
+                L, two, _, Hkv, blk, Dh = pool0.shape
+                data = np.zeros((L, two, 0, Hkv, blk, Dh), pool0.dtype)
+                if self.quantized:
+                    sdata = np.zeros((L, two, 0, Hkv), np.float32)
         else:
+            nblk = -(-resident // self.ecfg.block)
+            bucket = self._swap_bucket(nblk)
             width = bucket * self.ecfg.block
             cache, seq = self._swap_gather_fn(("slot", width))(
                 self.cache, slot)
@@ -1192,6 +1287,7 @@ class Engine:
             data = np.asarray(jax.device_get(seq))
         self._host_swaps[rid] = {"data": data, "scales": sdata,
                                  "tokens": resident,
+                                 "shared_blocks": shared_n,
                                  "arrange": self._kv_arrange.copy()}
         st = self.swap_stats
         st["swapped_out"] += 1
@@ -1230,22 +1326,30 @@ class Engine:
                 sdata = np.take_along_axis(sdata, data_rel, axis=3)
             self.swap_stats["epoch_remaps"] += 1
         if self.paged:
-            ids = self.kv.alloc.table(rid)   # fresh ids from alloc.swap_in
+            # alloc.swap_in re-mapped only the PRIVATE tail: the leading
+            # shared_n table entries are the retained resident prefix
+            # (§2.14) and never left the device, so the host copy scatters
+            # past them — into the fresh ids only
+            shared_n = rec.get("shared_blocks", 0)
+            ids = self.kv.alloc.table(rid)[shared_n:]
             nblk = len(ids)
-            bucket = self._swap_bucket(nblk)
-            row = np.full((bucket,), self.kv.trash_block, np.int32)
-            row[:nblk] = ids
-            L, two, _, Hkv, blk, Dh = data.shape
-            buf = np.zeros((L, two, bucket, Hkv, blk, Dh), data.dtype)
-            buf[:, :, :nblk] = data
-            payload = jnp.asarray(buf)
-            if self.quantized:
-                sbuf = np.ones((L, two, bucket, Hkv), np.float32)
-                sbuf[:, :, :nblk] = sdata
-                payload = (payload, jnp.asarray(sbuf))
-            pool = self._swap_scatter_fn(("paged", bucket))(
-                self.cache, payload, jnp.asarray(row))
-            self._set_cache(pool)
+            assert nblk == data.shape[2], \
+                f"swap-in block mismatch: {nblk} != {data.shape[2]}"
+            if nblk:
+                bucket = self._swap_bucket(nblk)
+                row = np.full((bucket,), self.kv.trash_block, np.int32)
+                row[:nblk] = ids
+                L, two, _, Hkv, blk, Dh = data.shape
+                buf = np.zeros((L, two, bucket, Hkv, blk, Dh), data.dtype)
+                buf[:, :, :nblk] = data
+                payload = jnp.asarray(buf)
+                if self.quantized:
+                    sbuf = np.ones((L, two, bucket, Hkv), np.float32)
+                    sbuf[:, :, :nblk] = sdata
+                    payload = (payload, jnp.asarray(sbuf))
+                pool = self._swap_scatter_fn(("paged", bucket))(
+                    self.cache, payload, jnp.asarray(row))
+                self._set_cache(pool)
         else:
             nblk = -(-resident // self.ecfg.block)
             payload = jnp.asarray(data)
@@ -1316,7 +1420,12 @@ class Engine:
         zeroes the row, whereas a poisoned VALUE keeps scores finite and
         rides the accumulator straight into the victim's logits, which
         is exactly the observability the sentinel contract needs.
-        Blocks are per-sequence, so only the victim goes non-finite."""
+        Without prefix sharing blocks are per-sequence, so only the
+        victim goes non-finite; with the radix cache (§2.14) the victim's
+        oldest block may be a SHARED prefix block — then every holder
+        trips its sentinel, all of them quarantine, and the scheduler's
+        fail path invalidates the tree node so the poisoned content can
+        never seed another admission (the designed blast radius)."""
         inj = self.injector
         if inj is None or not inj.enabled:
             return
@@ -1361,10 +1470,19 @@ class Engine:
         copy and SCRUBS the sequence's device blocks (codes to zero,
         scales to one) — freed ids recycle into later admissions, and a
         kernel that multiplies instead of masking would propagate a stale
-        NaN out of reused storage (NaN * 0 == NaN)."""
+        NaN out of reused storage (NaN * 0 == NaN).
+
+        Prefix sharing (§2.14): only blocks about to actually FREE are
+        scrubbed — a block another sequence still references, or one the
+        radix tree keeps as evictable content, must keep its payload.
+        (The fault path invalidates the tree BEFORE this hook runs, so a
+        quarantined sequence's corrupted blocks are uncached by now and
+        scrub as soon as their last reference drops.)"""
         self._host_swaps.pop(rid, None)
         if self.paged:
-            ids = self.kv.alloc.table(rid)
+            alloc = self.kv.alloc
+            ids = [b for b in alloc.table(rid)
+                   if alloc.refcount(b) == 1 and not alloc.is_cached(b)]
             if not ids:
                 return
             idx = jnp.asarray(np.asarray(ids, np.int32))
@@ -1418,11 +1536,36 @@ class Engine:
                 fails.append(f"seq {rid} has a host copy but is not "
                              "swapped-out in the allocator")
             for rid in sorted(swapped & held):
-                if alloc.host_tokens(rid) != self._host_swaps[rid]["tokens"]:
+                rec = self._host_swaps[rid]
+                if alloc.host_tokens(rid) != rec["tokens"]:
                     fails.append(
                         f"seq {rid} host tokens disagree: allocator "
                         f"{alloc.host_tokens(rid)} vs copy "
-                        f"{self._host_swaps[rid]['tokens']}")
+                        f"{rec['tokens']}")
+                if self.paged:
+                    # prefix sharing (§2.14): the host payload must hold
+                    # exactly the PRIVATE tail — total blocks minus the
+                    # retained resident prefix both sides agree on
+                    shn = rec.get("shared_blocks", 0)
+                    if shn != alloc.host_shared_blocks(rid):
+                        fails.append(
+                            f"seq {rid} retained-prefix disagree: "
+                            f"allocator {alloc.host_shared_blocks(rid)} "
+                            f"vs copy {shn}")
+                    want = alloc.blocks_needed(rec["tokens"]) - shn
+                    if rec["data"].shape[2] != want:
+                        fails.append(
+                            f"seq {rid} host payload holds "
+                            f"{rec['data'].shape[2]} blocks, expected "
+                            f"{want}")
+        if self.prefix is not None:
+            tree_ids = self.prefix.block_ids()
+            pinned = self.kv.alloc.cached_ids()
+            if tree_ids != pinned:
+                fails.append(
+                    f"prefix tree / allocator pin drift: tree-only "
+                    f"{sorted(tree_ids - pinned)}, alloc-only "
+                    f"{sorted(pinned - tree_ids)}")
         if fails and strict:
             raise IntegrityError(fails)
         if not fails:
@@ -1937,7 +2080,8 @@ class Engine:
             # cost-packed ragged worklist: grid length is this tick's true
             # selected-block count (bucketed), not B x Hkv x max-budget
             stripe_of = self._stripe_of_table(table) if striped else None
-            items, stats = self._plan_for(self._nb_sig(pos_all), stripe_of)
+            items, stats = self._plan_for(self._nb_sig(pos_all), stripe_of,
+                                          table=table)
             run = self._decode_packed_fn(
                 items.shape[1:3] if striped else items.shape[1])
             logits, cache = run(self.params, self.cache,
@@ -2022,6 +2166,13 @@ class Engine:
         nblocks = (self.kv.num_blocks if self.paged
                    else self.ecfg.num_slots
                    * (self.ecfg.max_seq_len // self.ecfg.block))
+        if self.ecfg.prefix_cache and self.prefix is None:
+            # the tree OUTLIVES individual batchers (serve() builds one
+            # per call; restores rebuild one) so cached prefixes stay
+            # warm; _grow drains it under pool pressure via evict_fn —
+            # eviction absorbs pressure BEFORE preemption (§2.14)
+            self.prefix = RadixPrefixCache(self.kv.alloc, self.ecfg.block)
+            self.kv.alloc.evict_fn = self.prefix.evict
         b = ContinuousBatcher(
             num_slots=self.ecfg.num_slots,
             num_blocks=nblocks,
@@ -2036,7 +2187,8 @@ class Engine:
             swap_out_fn=self._swap_out_seq if self.ecfg.preemption else None,
             swap_in_fn=self._swap_in_seq if self.ecfg.preemption else None,
             sentinel_fn=self.take_quarantine,
-            on_fail_fn=self._release_seq)
+            on_fail_fn=self._release_seq,
+            prefix_cache=self.prefix)
         if not self.paged:
             # the contiguous layout's allocator is batcher-private
             # accounting — wire the admission_alloc seam there too
@@ -2047,9 +2199,18 @@ class Engine:
     def step_fns(self, sampling: SamplingParams = SamplingParams()):
         """(prefill_chunk_fn, decode_fn) closures for a ContinuousBatcher."""
         def prefill_chunk(toks, slot, q_offset, is_final, prompt_len):
-            if self.ecfg.prefill_mode == "monolithic":
+            if self.ecfg.prefill_mode == "monolithic" and not q_offset:
                 # whole prompt in one chunk: the prompt-bucketed hot path
                 return self.prefill_into_slot(toks[0], slot, sampling)
+            if self.ecfg.prefill_mode == "monolithic":
+                # prefix hit (§2.14): q_offset tokens are already resident
+                # in shared blocks — monolithic prefill would rewrite them
+                # (and redo their flops), so the tail runs as ONE final
+                # chunk; its work-lists are sliced from the monolithic
+                # plan, keeping greedy tokens bitwise identical
+                return self.prefill_chunk_into_slot(
+                    toks[0], slot, q_offset, prompt_len, sampling,
+                    is_final=True)
             return self.prefill_chunk_into_slot(
                 toks[0], slot, q_offset, prompt_len, sampling,
                 is_final=is_final)

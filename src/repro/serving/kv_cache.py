@@ -10,8 +10,22 @@ Three layers:
   at a time via :meth:`append_token` as generation crosses block
   boundaries.  Freed blocks return to the pool and are reused by later
   sequences.  Conservation invariant (checked by the property tests):
-  ``allocated_blocks == sum(ceil(len/block))`` over live sequences at
-  every scheduler tick.
+  every pool block is exactly one of *free*, *referenced* (held by one or
+  more block tables / retained shared prefixes, with a refcount equal to
+  the number of holders), or *evictable* (cached by the prefix tree with
+  no referencing sequence), and every live sequence maps exactly
+  ``ceil(len/block)`` blocks.  Without prefix sharing all refcounts are 1
+  and this reduces to the original exclusive-ownership invariant
+  ``allocated_blocks == sum(ceil(len/block))``.
+
+  Prefix sharing (DESIGN.md §2.14) makes block ownership counted, not
+  exclusive: admission may seed a sequence's table with already-resident
+  blocks (``admit(..., shared=ids)`` increfs them), :meth:`free` only
+  returns a block to the pool when its refcount drops to zero, and the
+  radix prefix tree can pin retired blocks as *cached* so their contents
+  survive for future hits (refcount 0 + cached = evictable, reclaimed
+  lazily by ``evict_fn`` when :meth:`_grow` runs out of free blocks —
+  i.e. cache eviction always precedes preemption).
 
   Overload preemption (DESIGN.md §2.10) adds a pinned-host swap tier:
   :meth:`swap_out` releases a sequence's device blocks AND its unmapped
@@ -20,8 +34,9 @@ Three layers:
   freshly mapped device blocks (ids generally differ — the device copy is
   restored by the engine's scatter, not by identity).  A sequence is never
   accounted in both tiers at once, and the conservation invariant extends
-  to the host tier (``host_allocated_blocks == sum(ceil(len/block))`` over
-  swapped sequences).
+  to the host tier (``host_allocated_blocks == sum(ceil(len/block) -
+  retained_shared)`` over swapped sequences — shared prefix blocks stay
+  resident and never transfer).
 
 - :class:`PagedKVCache` — the paged device cache: a block pool
   ``[L, 2, num_blocks+1, Hkv, block, Dh]`` (the last block is the TRASH
@@ -77,6 +92,21 @@ class BlockAllocator:
         self._reserved: dict[int, int] = {}   # worst-case blocks per seq
         self._host_lens: dict[int, int] = {}  # swapped-out resident tokens
         self._host_nblk: dict[int, int] = {}  # host blocks held per seq
+        # prefix sharing (DESIGN.md §2.14): per-block reference counts
+        # (table occurrences + retained shared prefixes of swapped seqs),
+        # the set of blocks pinned by the prefix tree, and the evictable
+        # subset (cached AND unreferenced — resident but reclaimable).
+        self._refcnt: dict[int, int] = {}
+        self._cached: set[int] = set()
+        self._evictable: set[int] = set()
+        # swapped-out seqs keep their shared prefix blocks RESIDENT (only
+        # private tails move to the host tier); the retained ids live here
+        # and keep their refcounts until swap-in or free
+        self._host_shared: dict[int, list[int]] = {}
+        # cache-eviction hook: the prefix tree wires ``evict_fn(n) -> int``
+        # here so pool pressure drains LRU cache subtrees before any
+        # MemoryError (and therefore before the scheduler ever preempts)
+        self.evict_fn = None
         # fault-injection hook (DESIGN.md §2.13): the engine wires its
         # FaultInjector here so the "admission_alloc" seam can exhaust the
         # pool MID-MAPPING.  None (the default) costs one attribute read.
@@ -108,6 +138,51 @@ class BlockAllocator:
         for b in ids:
             self._free[self.stripe_of(b)].append(b)
 
+    # -- refcounts + prefix-cache pinning (DESIGN.md §2.14) -----------------
+    def _incref(self, block_id: int) -> None:
+        c = self._refcnt.get(block_id, 0)
+        if c == 0:
+            # a newly-referenced cached block is no longer reclaimable
+            self._evictable.discard(block_id)
+        self._refcnt[block_id] = c + 1
+
+    def _decref(self, block_id: int) -> None:
+        c = self._refcnt[block_id] - 1
+        if c > 0:
+            self._refcnt[block_id] = c
+            return
+        del self._refcnt[block_id]
+        if block_id in self._cached:
+            # tree-pinned content stays resident for future prefix hits
+            self._evictable.add(block_id)
+        else:
+            self._return_blocks([block_id])
+
+    def refcount(self, block_id: int) -> int:
+        return self._refcnt.get(block_id, 0)
+
+    def is_cached(self, block_id: int) -> bool:
+        return block_id in self._cached
+
+    def cached_ids(self) -> set[int]:
+        return set(self._cached)
+
+    def cache_block(self, block_id: int) -> None:
+        """Pin a mapped block as prefix-tree content: when its refcount
+        later drops to zero it becomes evictable instead of free.
+        Idempotent (snapshot restore re-pins already-cached blocks)."""
+        self._cached.add(block_id)
+        if self._refcnt.get(block_id, 0) == 0:
+            self._evictable.add(block_id)
+
+    def uncache_block(self, block_id: int) -> None:
+        """Drop the prefix-tree pin (eviction or invalidation); an
+        unreferenced block returns to its stripe's free list now."""
+        self._cached.discard(block_id)
+        if block_id in self._evictable:
+            self._evictable.discard(block_id)
+            self._return_blocks([block_id])
+
     # -- accounting views ---------------------------------------------------
     @property
     def free_blocks(self) -> int:
@@ -125,11 +200,20 @@ class BlockAllocator:
                    for s, r in self._reserved.items())
 
     @property
+    def evictable_blocks(self) -> int:
+        """Cache-pinned blocks with no referencing sequence — resident
+        content that :meth:`_grow` can reclaim on demand via ``evict_fn``."""
+        return len(self._evictable)
+
+    @property
     def available_blocks(self) -> int:
-        """Admission headroom: free minus outstanding reservations.  Using
-        this (not ``free_blocks``) for admission guarantees decode growth
-        can never exhaust the pool mid-generation."""
-        return self.free_blocks - self.reserved_unmapped
+        """Admission headroom: free + evictable minus outstanding
+        reservations.  Using this (not ``free_blocks``) for admission
+        guarantees decode growth can never exhaust the pool
+        mid-generation; counting evictables means cache eviction absorbs
+        pool pressure before admission control ever preempts."""
+        return self.free_blocks + self.evictable_blocks \
+            - self.reserved_unmapped
 
     def blocks_needed(self, num_tokens: int) -> int:
         return -(-num_tokens // self.block)
@@ -139,9 +223,27 @@ class BlockAllocator:
         return self._lens.get(seq_id, 0)
 
     def reserved_blocks(self, seq_id: int) -> int:
-        """Total worst-case blocks (mapped + unmapped) held by ``seq_id`` —
-        what :meth:`swap_out` or :meth:`free` would give back."""
+        """Total worst-case blocks (mapped + unmapped) held by ``seq_id``.
+        With prefix sharing this is an upper bound on what freeing or
+        swapping the sequence returns — see :meth:`release_estimate` /
+        :meth:`swap_release_estimate` for the exact headroom deltas."""
         return self._reserved.get(seq_id, 0)
+
+    def release_estimate(self, seq_id: int) -> int:
+        """Exact ``available_blocks`` gain if ``seq_id`` were freed: its
+        unmapped reservation plus every mapped block whose refcount drops
+        to zero (cached blocks turn evictable, which still counts)."""
+        t = self._tables.get(seq_id, [])
+        r = self._reserved.get(seq_id, 0)
+        solo = sum(1 for b in t if self._refcnt.get(b, 0) == 1)
+        return r - len(t) + solo
+
+    def swap_release_estimate(self, seq_id: int) -> int:
+        """Exact ``available_blocks`` gain if ``seq_id`` were swapped out:
+        the full reservation minus the shared prefix blocks that stay
+        resident (and keep their refcounts) on its behalf."""
+        retained, _ = self.swap_split(seq_id)
+        return self._reserved.get(seq_id, 0) - len(retained)
 
     @property
     def live_seqs(self) -> tuple[int, ...]:
@@ -167,78 +269,122 @@ class BlockAllocator:
         """Resident tokens held on the host tier for ``seq_id``."""
         return self._host_lens.get(seq_id, 0)
 
+    def host_shared_blocks(self, seq_id: int) -> int:
+        """Shared prefix blocks a swapped-out ``seq_id`` keeps resident."""
+        return len(self._host_shared.get(seq_id, ()))
+
+    def swap_split(self, seq_id: int) -> tuple[list[int], list[int]]:
+        """Partition ``seq_id``'s table into ``(retained, private)``: the
+        leading run of blocks that are tree-cached or shared with another
+        holder stays resident on swap-out (their payloads exist on device
+        for every other holder already — copying them to host would be
+        pure waste), and only the private tail actually transfers.  The
+        split is a prefix run because sharing itself is prefix-shaped: a
+        block past the first private one can only be private too."""
+        table = self._tables.get(seq_id, [])
+        k = 0
+        for b in table:
+            if b in self._cached or self._refcnt.get(b, 0) >= 2:
+                k += 1
+            else:
+                break
+        return list(table[:k]), list(table[k:])
+
     def can_swap_out(self, seq_id: int) -> bool:
         if seq_id not in self._lens:
             return False
         if self.host_blocks is None:
             return True
-        need = self.blocks_needed(self._lens[seq_id])
-        return self.host_allocated_blocks + need <= self.host_blocks
+        _, private = self.swap_split(seq_id)
+        return self.host_allocated_blocks + len(private) <= self.host_blocks
 
     def swap_out(self, seq_id: int) -> int:
         """Move ``seq_id`` from the device tier to the host tier: its
-        mapped blocks return to the free pool, its unmapped reservation is
-        dropped, and the token accounting migrates.  Returns the number of
-        device blocks released (= host blocks now held).  The caller must
-        copy the block payloads to host BEFORE calling this — the ids are
-        reusable the moment this returns."""
+        PRIVATE mapped blocks return to the free pool, its unmapped
+        reservation is dropped, and the token accounting migrates.  Shared
+        prefix blocks stay resident (still refcounted, recorded in
+        ``_host_shared``) so resume re-links them by identity.  Returns
+        the number of private device blocks released (= host blocks now
+        held).  The caller must copy the private payloads to host BEFORE
+        calling this — those ids are reusable the moment this returns."""
         if seq_id in self._host_lens:
             raise ValueError(f"seq {seq_id} already swapped out")
         if not self.can_swap_out(seq_id):
             raise MemoryError(
                 f"host swap tier exhausted: seq {seq_id} needs "
-                f"{self.blocks_needed(self._lens.get(seq_id, 0))}, "
+                f"{len(self.swap_split(seq_id)[1])}, "
                 f"free {self.host_free_blocks}")
-        table = self._tables.pop(seq_id)
-        self._return_blocks(table)
+        retained, private = self.swap_split(seq_id)
+        self._tables.pop(seq_id)
+        for b in private:
+            self._decref(b)
+        if retained:
+            self._host_shared[seq_id] = retained
         self._host_lens[seq_id] = self._lens.pop(seq_id)
-        self._host_nblk[seq_id] = len(table)
+        self._host_nblk[seq_id] = len(private)
         self._reserved.pop(seq_id)
-        return len(table)
+        return len(private)
 
     def can_swap_in(self, seq_id: int, max_new_tokens: int = 0) -> bool:
         if seq_id not in self._host_lens:
             return False
         total = self.blocks_needed(self._host_lens[seq_id] + max_new_tokens)
-        return total <= self.available_blocks
+        shared = len(self._host_shared.get(seq_id, ()))
+        return total - shared <= self.available_blocks
 
     def swap_in(self, seq_id: int, max_new_tokens: int = 0) -> list[int]:
         """Re-admit ``seq_id`` from the host tier: take a fresh worst-case
-        reservation (resident + remaining new tokens) and map device blocks
-        for the resident tokens.  Returns the NEW block ids — the engine
-        scatters the host copy into them."""
+        reservation (resident + remaining new tokens), re-link its retained
+        shared prefix blocks by identity, and map fresh device blocks for
+        the private resident tail.  Returns the FRESH block ids only — the
+        engine scatters the host copy into them (the shared prefix never
+        left the device)."""
         if seq_id not in self._host_lens:
             raise ValueError(f"seq {seq_id} not swapped out")
         resident = self._host_lens[seq_id]
+        shared = self._host_shared.pop(seq_id, [])
         total = self.blocks_needed(resident + max_new_tokens)
-        if total > self.available_blocks:
+        if total - len(shared) > self.available_blocks:
+            if shared:
+                self._host_shared[seq_id] = shared
             raise MemoryError(
-                f"KV pool exhausted: swap-in needs {total}, "
-                f"available {self.available_blocks}")
+                f"KV pool exhausted: swap-in needs "
+                f"{total - len(shared)}, available {self.available_blocks}")
         self._reserved[seq_id] = total
-        self._tables[seq_id] = []
+        # the retained ids re-enter the table carrying the refcounts the
+        # host hold kept for them — no incref/decref on this transfer
+        self._tables[seq_id] = list(shared)
         self._lens[seq_id] = 0
         try:
-            self._grow(seq_id, self.blocks_needed(resident),
+            self._grow(seq_id, self.blocks_needed(resident) - len(shared),
                        admission=True)
         except MemoryError:
-            # partial-failure rollback: any blocks mapped before the
-            # failure return to their stripes and the device-tier entries
-            # vanish — the host-tier accounting was never touched, so the
+            # partial-failure rollback: freshly-mapped blocks return to
+            # their stripes, the retained prefix goes back to the host
+            # hold, and the host-tier accounting was never touched — the
             # sequence is still cleanly swapped out
-            self._rollback_partial(seq_id)
+            t = self._tables.pop(seq_id)
+            for b in t[len(shared):]:
+                self._decref(b)
+            if shared:
+                self._host_shared[seq_id] = shared
+            self._lens.pop(seq_id, None)
+            self._reserved.pop(seq_id, None)
             raise
         self._lens[seq_id] = resident
         del self._host_lens[seq_id]
         del self._host_nblk[seq_id]
-        return list(self._tables[seq_id])
+        return list(self._tables[seq_id][len(shared):])
 
     def _rollback_partial(self, seq_id: int) -> None:
-        """Undo a partially-failed admit/swap-in: return whatever blocks
-        were mapped and drop the device-tier entries.  (Before this
-        existed, a mid-mapping ``MemoryError`` leaked a phantom
-        reservation that permanently shrank ``available_blocks``.)"""
-        self._return_blocks(self._tables.pop(seq_id, []))
+        """Undo a partially-failed admit: decref whatever blocks were
+        mapped (shared prefix blocks return to their prior holders /
+        evictable state, fresh ones to their stripes) and drop the
+        device-tier entries.  (Before this existed, a mid-mapping
+        ``MemoryError`` leaked a phantom reservation that permanently
+        shrank ``available_blocks``.)"""
+        for b in self._tables.pop(seq_id, []):
+            self._decref(b)
         self._lens.pop(seq_id, None)
         self._reserved.pop(seq_id, None)
 
@@ -257,37 +403,65 @@ class BlockAllocator:
         named failure instead of silently serving garbage.
 
         Checks: two-tier conservation (device blocks match live lengths,
-        host blocks match swapped lengths), no double-map (every mapped id
-        in exactly one table, free and mapped disjoint, free + mapped ==
-        pool), stripe ownership (every id in the free list of the stripe
-        owning its range), per-sequence table/length/reservation
+        host blocks match swapped lengths minus retained shared prefixes),
+        the refcount cross-check (per-block refcount == number of tables /
+        host holds referencing it; free lists disjoint from any referenced
+        or cached block; free + referenced + evictable == pool), COW
+        discipline (no block twice in one table), evictable == cached ∧
+        unreferenced, stripe ownership (every id in the free list of the
+        stripe owning its range), per-sequence table/length/reservation
         agreement, no sequence on both tiers, and the host-tier cap."""
         fails: list[str] = []
-        # -- device tier conservation ------------------------------------
-        need = sum(self.blocks_needed(n) for n in self._lens.values())
-        if self.allocated_blocks != need:
+        # -- refcount cross-check (DESIGN.md §2.14) ----------------------
+        # ground truth: occurrences across live tables + the shared
+        # prefixes retained on behalf of swapped-out sequences
+        want: dict[int, int] = {}
+        for t in self._tables.values():
+            for b in t:
+                want[b] = want.get(b, 0) + 1
+        for hs in self._host_shared.values():
+            for b in hs:
+                want[b] = want.get(b, 0) + 1
+        if self._refcnt != want:
+            bad = sorted(b for b in set(self._refcnt) | set(want)
+                         if self._refcnt.get(b) != want.get(b))
             fails.append(
-                f"device conservation: allocated {self.allocated_blocks} "
-                f"!= sum ceil(len/block) {need}")
-        # -- no double-map: mapped ids unique, disjoint from free --------
-        mapped: list[int] = [b for t in self._tables.values() for b in t]
-        if len(mapped) != len(set(mapped)):
-            fails.append("double-map: a block id appears in two tables "
-                         "(or twice in one)")
+                f"refcount drift (un-refcounted double-map, or a leaked "
+                f"hold): stored != referencing holds for blocks {bad[:8]}")
+        # COW discipline: a block may be shared ACROSS tables, never
+        # duplicated WITHIN one (each table position is distinct content)
+        for sid, t in self._tables.items():
+            if len(t) != len(set(t)):
+                fails.append(f"double-map: seq {sid} maps a block twice "
+                             "in its own table")
+        referenced = set(want)
+        want_evict = {b for b in self._cached if b not in referenced}
+        if self._evictable != want_evict:
+            fails.append(
+                f"evictable drift: {sorted(self._evictable)[:8]} != "
+                f"cached∧unreferenced {sorted(want_evict)[:8]}")
         free_ids = [b for f in self._free for b in f]
         if len(free_ids) != len(set(free_ids)):
             fails.append("double-free: a block id appears twice in the "
                          "free lists")
-        overlap = set(mapped) & set(free_ids)
+        overlap = (referenced | self._cached) & set(free_ids)
         if overlap:
-            fails.append(f"free/mapped overlap: {sorted(overlap)[:8]}")
-        universe = set(mapped) | set(free_ids)
+            fails.append(f"free/referenced overlap: {sorted(overlap)[:8]}")
+        universe = referenced | self._evictable | set(free_ids)
         if len(universe) != self.num_blocks or (
                 universe and (min(universe) < 0
                               or max(universe) >= self.num_blocks)):
             fails.append(
-                f"pool partition: free+mapped covers {len(universe)} ids, "
-                f"pool has {self.num_blocks}")
+                f"pool partition: free+referenced+evictable covers "
+                f"{len(universe)} ids, pool has {self.num_blocks}")
+        # -- device tier conservation ------------------------------------
+        # distinct-block form (the multiplicity form only holds without
+        # sharing; per-seq exact table sizes are checked below)
+        if self.allocated_blocks != len(referenced | self._evictable):
+            fails.append(
+                f"device conservation: allocated {self.allocated_blocks} "
+                f"!= referenced+evictable "
+                f"{len(referenced | self._evictable)}")
         # -- stripe ownership --------------------------------------------
         for s in range(self.stripes):
             strays = [b for b in self._free[s] if self.stripe_of(b) != s]
@@ -311,11 +485,15 @@ class BlockAllocator:
                 fails.append(f"seq {sid}: has a table but no length")
         # -- host tier ---------------------------------------------------
         for sid, n in self._host_lens.items():
-            if self._host_nblk.get(sid) != self.blocks_needed(n):
+            shared = len(self._host_shared.get(sid, ()))
+            if self._host_nblk.get(sid) != self.blocks_needed(n) - shared:
                 fails.append(
                     f"host conservation: seq {sid} holds "
                     f"{self._host_nblk.get(sid)} host blocks != "
-                    f"ceil({n}/{self.block})")
+                    f"ceil({n}/{self.block}) - {shared} retained")
+        strays = set(self._host_shared) - set(self._host_lens)
+        if strays:
+            fails.append(f"host hold without host seq: {sorted(strays)}")
         dual = set(self._lens) & set(self._host_lens)
         if dual:
             fails.append(f"dual accounting: seqs {sorted(dual)} on both "
@@ -341,6 +519,12 @@ class BlockAllocator:
             "reserved": {str(k): v for k, v in self._reserved.items()},
             "host_lens": {str(k): v for k, v in self._host_lens.items()},
             "host_nblk": {str(k): v for k, v in self._host_nblk.items()},
+            # prefix sharing (§2.14): refcounts + evictable are derivable
+            # (recomputed at load) — only the cache pins and retained
+            # shared prefixes are primary state
+            "cached": sorted(self._cached),
+            "host_shared": {str(k): list(v)
+                            for k, v in self._host_shared.items()},
         }
 
     def load_state(self, state: dict) -> None:
@@ -356,33 +540,56 @@ class BlockAllocator:
                            for k, v in state["host_lens"].items()}
         self._host_nblk = {int(k): int(v)
                            for k, v in state["host_nblk"].items()}
+        self._cached = set(map(int, state.get("cached", ())))
+        self._host_shared = {int(k): list(map(int, v))
+                             for k, v in state.get("host_shared",
+                                                   {}).items()}
+        refs: dict[int, int] = {}
+        for t in self._tables.values():
+            for b in t:
+                refs[b] = refs.get(b, 0) + 1
+        for hs in self._host_shared.values():
+            for b in hs:
+                refs[b] = refs.get(b, 0) + 1
+        self._refcnt = refs
+        self._evictable = {b for b in self._cached if b not in refs}
         self.audit()
 
     # -- lifecycle ----------------------------------------------------------
-    def can_admit(self, num_tokens: int) -> bool:
-        return self.blocks_needed(num_tokens) <= self.available_blocks
+    def can_admit(self, num_tokens: int, shared_blocks: int = 0) -> bool:
+        return (self.blocks_needed(num_tokens) - shared_blocks
+                <= self.available_blocks)
 
     def admit(self, seq_id: int, prompt_tokens: int,
-              max_new_tokens: int = 0) -> list[int]:
+              max_new_tokens: int = 0, shared=()) -> list[int]:
         """Reserve the worst case, map the prompt's blocks now.
 
         The reservation (``prompt + max_new`` blocks) is an accounting
         upper bound — no specific block ids are held — so unfilled headroom
         stays usable by :meth:`can_admit` checks of later arrivals only
-        once this sequence frees.  Returns the mapped prompt block ids.
+        once this sequence frees.  ``shared`` is an already-resident prefix
+        from the radix tree (DESIGN.md §2.14): those ids seed the table by
+        identity (increfed, so eviction can no longer take them) and only
+        the remaining prompt blocks are freshly mapped.  Returns the full
+        mapped prompt block table (shared prefix first).
         """
         if seq_id in self._reserved:
             raise ValueError(f"seq {seq_id} already admitted")
+        shared = list(shared)
         total = self.blocks_needed(prompt_tokens + max_new_tokens)
-        if total > self.available_blocks:
+        if total - len(shared) > self.available_blocks:
             raise MemoryError(
-                f"KV pool exhausted: need {total}, "
+                f"KV pool exhausted: need {total - len(shared)}, "
                 f"available {self.available_blocks}")
         self._reserved[seq_id] = total
-        self._tables[seq_id] = []
+        table = self._tables[seq_id] = []
         self._lens[seq_id] = 0
+        for b in shared:
+            self._incref(b)
+            table.append(b)
         try:
-            self._grow(seq_id, self.blocks_needed(prompt_tokens),
+            self._grow(seq_id,
+                       self.blocks_needed(prompt_tokens) - len(shared),
                        admission=True)
         except MemoryError:
             # partial-failure rollback (see _rollback_partial): admission
@@ -394,6 +601,12 @@ class BlockAllocator:
 
     def _grow(self, seq_id: int, n_new: int, *,
               admission: bool = False) -> None:
+        if n_new > self.free_blocks and self.evict_fn is not None \
+                and self._evictable:
+            # pool pressure drains the prefix cache (LRU subtrees) before
+            # any MemoryError reaches admission control or decode growth —
+            # the "eviction feeds _make_room before preemption" ordering
+            self.evict_fn(n_new - self.free_blocks)
         if n_new > self.free_blocks:
             raise MemoryError(
                 f"KV pool exhausted: need {n_new}, free {self.free_blocks}")
@@ -430,7 +643,9 @@ class BlockAllocator:
                                                         -i))
             if not self._free[s]:
                 raise MemoryError("KV pool exhausted: all stripes empty")
-            table.append(self._free[s].pop())
+            b = self._free[s].pop()
+            self._refcnt[b] = 1
+            table.append(b)
 
     def append_token(self, seq_id: int) -> None:
         """Account one more cache-resident token; map a fresh block exactly
@@ -450,8 +665,15 @@ class BlockAllocator:
         return self._tables.get(seq_id, [])
 
     def free(self, seq_id: int) -> None:
-        """Release everything ``seq_id`` holds, on whichever tier."""
-        self._return_blocks(self._tables.pop(seq_id, []))
+        """Release everything ``seq_id`` holds, on whichever tier.  Each
+        block is decrefed: shared blocks stay with their other holders,
+        tree-cached blocks turn evictable (cache retention — the whole
+        point of retiring without scrubbing), and exclusive uncached
+        blocks return to their stripe's free list."""
+        for b in self._tables.pop(seq_id, []):
+            self._decref(b)
+        for b in self._host_shared.pop(seq_id, []):
+            self._decref(b)
         self._lens.pop(seq_id, None)
         self._reserved.pop(seq_id, None)
         self._host_lens.pop(seq_id, None)

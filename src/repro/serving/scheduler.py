@@ -190,6 +190,8 @@ class SchedulerStats:
     deferred: int = 0                   # SLO-gate admission deferrals
     swapped_out_blocks: int = 0
     swapped_in_blocks: int = 0
+    prefix_hits: int = 0                # admissions that reused cached blocks
+    prefix_hit_tokens: int = 0          # prompt tokens whose prefill was skipped
     per_class: dict[str, dict[str, int]] = dataclasses.field(
         default_factory=dict)
 
@@ -227,6 +229,7 @@ class ContinuousBatcher:
                  swap_in_fn: Callable | None = None,
                  sentinel_fn: Callable | None = None,
                  on_fail_fn: Callable | None = None,
+                 prefix_cache=None,
                  clock: Callable[[], float] = time.monotonic):
         # ``allocator``: share the engine's PagedKVCache allocator so the
         # scheduler's admission math and the device pool's block ids are the
@@ -254,6 +257,12 @@ class ContinuousBatcher:
         # allocator recycles the ids.
         self.sentinel_fn = sentinel_fn
         self.on_fail_fn = on_fail_fn
+        # radix prefix cache (DESIGN.md §2.14): admission walks the tree
+        # for the longest cached prefix, seeds the block table with it
+        # (``admit(..., shared=)``) and starts prefill at the divergence
+        # block; finished prefills register their whole blocks.  None =
+        # every admission prefills from token 0 (the pre-§2.14 behavior).
+        self.prefix = prefix_cache
         self._queues: dict[str, deque[Request]] = {
             c.name: deque() for c in classes}
         self._preempted: dict[str, deque[Request]] = {
@@ -425,13 +434,17 @@ class ContinuousBatcher:
             -self.classes[r.priority].level,
             -(r.t_submit or 0.0)))
 
-    def _make_room(self, pc: PriorityClass, req: Request) -> bool:
+    def _make_room(self, pc: PriorityClass, req: Request,
+                   shared_blocks: int = 0) -> bool:
         """Secure a slot + blocks (+ the prefill slot, in chunked mode)
         for ``req`` — preempting strictly-lower-class work when allowed.
+        ``shared_blocks`` prompt blocks come free from the prefix cache.
+        ``available_blocks`` already counts evictable cached blocks, so
+        cache eviction absorbs pressure before any victim is chosen.
         Victims are simulated first and only preempted when the plan
         actually fits, so a hopeless arrival never thrashes the pool."""
         need = self.alloc.blocks_needed(
-            len(req.prompt) + req.sampling.max_tokens)
+            len(req.prompt) + req.sampling.max_tokens) - shared_blocks
         free_slots = len(self._slots_free)
         avail = self.alloc.available_blocks
         prefill_busy = self.prefilling is not None
@@ -451,14 +464,17 @@ class ContinuousBatcher:
                 break
             if v is self.prefilling:
                 prefill_busy = False
+                # discard releases everything it holds alone
+                avail += self.alloc.release_estimate(v.rid)
             else:
-                vblk = self.alloc.blocks_needed(
-                    self.alloc.seq_tokens(v.rid))
+                # only the private tail transfers to the host tier; the
+                # victim's shared prefix stays resident (and refcounted)
+                vblk = len(self.alloc.swap_split(v.rid)[1])
                 if host_free is not None:
                     if vblk > host_free:
                         continue   # host tier can't hold this victim
                     host_free -= vblk
-            avail += self.alloc.reserved_blocks(v.rid)
+                avail += self.alloc.swap_release_estimate(v.rid)
             free_slots += 1
             chosen.append(v)
         if not fits():
@@ -563,10 +579,13 @@ class ContinuousBatcher:
 
     def _fail(self, req: Request, reason: str, finished: list[Request]):
         """Quarantine an ADMITTED request that hit a fault: free its slot,
-        scrub + free its blocks and host copy, and surface it as a
-        structured ``failed`` result.  Every other request's state is
-        untouched — their block tables never referenced the victim's
-        blocks, so their tokens stay bitwise-identical."""
+        invalidate any of its blocks in the prefix tree, scrub + free its
+        exclusively-held blocks and host copy, and surface it as a
+        structured ``failed`` result.  Requests that share none of its
+        blocks are untouched; requests referencing a corrupted SHARED
+        block read non-finite values on their next step, trip their own
+        sentinel, and quarantine through this same path — the last
+        referencing victim's scrub finally cleans the block (§2.14)."""
         name = req.priority
         req.done = True
         req.failed = True
@@ -576,6 +595,12 @@ class ContinuousBatcher:
         if slot is not None:
             self._rid_of.pop(slot, None)
             self._slots_free.append(slot)
+        if self.prefix is not None:
+            # fault quarantine (§2.13 x §2.14): any of the victim's blocks
+            # that live in the radix tree are invalidated — subtree and
+            # all — BEFORE the engine scrub hook runs, so a just-uncached
+            # corrupted block is seen as will-free and gets scrubbed
+            self.prefix.invalidate_blocks(self.alloc.table(req.rid))
         if self.on_fail_fn is not None:
             # engine hook runs while the block table is still valid: it
             # scrubs the (possibly poisoned) blocks so their reuse can
@@ -679,7 +704,16 @@ class ContinuousBatcher:
             if self._slo_deferred(pc, req):
                 self.stats.deferred += 1
                 break
-            if not self._make_room(pc, req):
+            # prefix-cache walk (§2.14): the longest cached prefix of the
+            # prompt maps for free — its blocks seed the table by identity
+            # and its prefill chunks are skipped entirely.  Matched blocks
+            # are only increfed inside ``admit`` below, but eviction can't
+            # race them away in between: nothing here grows the pool.
+            hit_ids: list[int] = []
+            hit_tokens = 0
+            if self.prefix is not None:
+                hit_ids, hit_tokens = self.prefix.match(req.prompt)
+            if not self._make_room(pc, req, shared_blocks=len(hit_ids)):
                 break  # wait for frees (shed may reject on deadline below)
             slot = self._slots_free.pop()
             self._slot_of[req.rid] = slot
@@ -688,7 +722,7 @@ class ContinuousBatcher:
             # blocks map lazily via append_token at block boundaries)
             try:
                 self.alloc.admit(req.rid, len(req.prompt),
-                                 req.sampling.max_tokens)
+                                 req.sampling.max_tokens, shared=hit_ids)
             except MemoryError as e:
                 # allocator failed mid-mapping (it rolled back its own
                 # partial state); release the slot we claimed and leave
@@ -703,13 +737,21 @@ class ContinuousBatcher:
             self.stats.admitted += 1
             self._cstat(pc.name)["admitted"] += 1
             self._stride[pc.name] += 1.0 / pc.weight
+            # chunked prefill starts at the divergence block: the matched
+            # prefix's tokens are already cache-resident by identity
+            req.prefill_pos = hit_tokens
+            if hit_tokens:
+                self.stats.prefix_hits += 1
+                self.stats.prefix_hit_tokens += hit_tokens
             if self.token_budget is None:
                 t0 = self._clock()
-                first = prefill_chunk_fn(req.prompt[None, :], slot, 0,
-                                         True, len(req.prompt))
-                self._observe_prefill(self._clock() - t0, len(req.prompt))
+                first = prefill_chunk_fn(req.prompt[None, hit_tokens:],
+                                         slot, hit_tokens, True,
+                                         len(req.prompt))
+                self._observe_prefill(self._clock() - t0,
+                                      len(req.prompt) - hit_tokens)
                 req.prefill_pos = len(req.prompt)
-                self.stats.prefill_tokens += len(req.prompt)
+                self.stats.prefill_tokens += len(req.prompt) - hit_tokens
                 self.stats.prefill_chunks += 1
                 self._finish_prefill(req, first, finished)
             else:
@@ -752,6 +794,10 @@ class ContinuousBatcher:
         if slot in q:
             self._fail(req, q.pop(slot), finished)
             return
+        if self.prefix is not None:
+            # register the prompt's whole blocks (matched prefix nodes
+            # just get an LRU touch; the fresh tail becomes new nodes)
+            self.prefix.insert(req.prompt, self.alloc.table(req.rid))
         self.lengths[req.rid] = len(req.prompt) + 1
         if self._record_token(req, int(first)):
             self._retire(req)

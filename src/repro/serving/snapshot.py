@@ -40,7 +40,8 @@ from repro.utils.logging import get_logger
 
 log = get_logger("snapshot")
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2           # v2: prefix-tree state + retained-prefix counts
+_COMPAT_VERSIONS = (1, 2)    # v1 snapshots load (no sharing to restore)
 _BF16_SUFFIX = "#bf16"
 _META_KEY = "meta#json"
 
@@ -108,7 +109,12 @@ def save_serving(directory: str, engine, batcher,
         if rec["scales"] is not None:
             _enc(arrays, f"hswap/{rid}/scales", rec["scales"])
         _enc(arrays, f"hswap/{rid}/arrange", rec["arrange"])
-        hswap_meta[str(rid)] = int(rec["tokens"])
+        hswap_meta[str(rid)] = {
+            "tokens": int(rec["tokens"]),
+            # §2.14: blocks the swapped sequence keeps RESIDENT (shared
+            # prefix) — swap-in scatters the host payload past them
+            "shared_blocks": int(rec.get("shared_blocks", 0)),
+        }
 
     # -- scheduler: every not-yet-finished request ------------------------
     reqs: dict[int, Request] = {}
@@ -140,6 +146,11 @@ def save_serving(directory: str, engine, batcher,
                      else None),
         },
         "alloc": alloc_state,
+        # radix prefix cache (§2.14): full tree (content keys, block ids,
+        # LRU clocks) so a restored server keeps its hits warm and evicts
+        # in the same order the uninterrupted one would have
+        "prefix_tree": (engine.prefix.snapshot_state()
+                        if engine.prefix is not None else None),
         "hswap_tokens": hswap_meta,
         "requests": req_meta,
         "scheduler": {
@@ -193,9 +204,10 @@ def restore_serving(path: str, cfg, params, engine_cfg, profile=None,
 
     with np.load(path, allow_pickle=False) as z:
         meta = json.loads(bytes(z[_META_KEY].tobytes()).decode("utf-8"))
-        if meta["version"] != FORMAT_VERSION:
+        if meta["version"] not in _COMPAT_VERSIONS:
             raise ValueError(
-                f"snapshot version {meta['version']} != {FORMAT_VERSION}")
+                f"snapshot version {meta['version']} not in "
+                f"{_COMPAT_VERSIONS}")
         em = meta["engine"]
         eng = Engine(cfg, params, engine_cfg, profile=profile,
                      injector=injector)
@@ -237,13 +249,16 @@ def restore_serving(path: str, cfg, params, engine_cfg, profile=None,
 
         # -- host swap tier ----------------------------------------------
         eng._host_swaps = {}
-        for rid_s, tokens in meta["hswap_tokens"].items():
+        for rid_s, hm in meta["hswap_tokens"].items():
             rid = int(rid_s)
+            if not isinstance(hm, dict):   # v1: bare token count
+                hm = {"tokens": hm, "shared_blocks": 0}
             eng._host_swaps[rid] = {
                 "data": np.array(_dec(z, f"hswap/{rid}/data")),
                 "scales": (np.array(_dec(z, f"hswap/{rid}/scales"))
                            if _has(z, f"hswap/{rid}/scales") else None),
-                "tokens": int(tokens),
+                "tokens": int(hm["tokens"]),
+                "shared_blocks": int(hm.get("shared_blocks", 0)),
                 "arrange": np.array(_dec(z, f"hswap/{rid}/arrange")),
             }
 
@@ -251,6 +266,11 @@ def restore_serving(path: str, cfg, params, engine_cfg, profile=None,
         b = eng.make_batcher(classes) if classes is not None \
             else eng.make_batcher()
         b.alloc.load_state(meta["alloc"])  # audits itself on load
+        if eng.prefix is not None and meta.get("prefix_tree"):
+            # after alloc.load_state: the cache pins are already restored
+            # (cache_block is idempotent), so the tree adopts a consistent
+            # allocator and the final audit checks their agreement
+            eng.prefix.load_state(meta["prefix_tree"])
         reqs: dict[int, Request] = {}
         for rid_s, rm in meta["requests"].items():
             rid = int(rid_s)

@@ -1,0 +1,412 @@
+"""Radix-tree prefix cache with copy-on-write block sharing (DESIGN.md
+§2.14).
+
+The load-bearing contract: with ``prefix_cache=True`` the engine maps the
+longest cached prefix of an admitted prompt for free (refcounted aliasing
+in the paged pool, prefill starts at the divergence block) and greedy
+tokens stay BITWISE IDENTICAL to a cache-disabled run — across prefill
+modes, KV dtypes, sequence striping, preempt/swap/resume of a cache-hit
+sequence, epoch-straddling replans, fault quarantine of a shared block,
+and kill/restore."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core.sparsity import synthetic_head_curves
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.faults import (
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    IntegrityError,
+)
+from repro.serving.kv_cache import BlockAllocator
+from repro.serving.prefix_tree import RadixPrefixCache
+from repro.serving.scheduler import Request
+
+CFG = TransformerConfig(num_layers=2, d_model=64, num_heads=4,
+                        num_kv_heads=2, d_ff=128, vocab_size=256,
+                        layer_loop="unroll")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return synthetic_head_curves(CFG.num_layers, CFG.num_heads)
+
+
+def _shared_prompts(shared_tokens=128, tails=(20, 35, 50), seed=0):
+    """Prompts sharing a ``shared_tokens`` prefix plus one unrelated."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, CFG.vocab_size, size=(shared_tokens,))
+    out = [np.concatenate([shared,
+                           rng.integers(0, CFG.vocab_size, size=(n,))])
+           for n in tails]
+    out.append(rng.integers(0, CFG.vocab_size, size=(60,)))
+    return out
+
+
+def _mk(params, profile, *, prefix=True, kv_dtype="bf16",
+        prefill_mode="chunked", seq_shards=1, num_kv_blocks=None,
+        preemption=False, injector=None, audit_every=1):
+    return Engine(CFG, params, EngineConfig(
+        attention="sparse", budget_per_head=256, block=64, floor=64,
+        max_seq_len=512, num_slots=4, prefill_mode=prefill_mode,
+        prefill_chunk_tokens=128, kv_dtype=kv_dtype,
+        seq_shards=seq_shards, num_kv_blocks=num_kv_blocks,
+        preemption=preemption, prefix_cache=prefix,
+        audit_every=audit_every), profile=profile, injector=injector)
+
+
+def _tokens(done):
+    return {r.rid: list(r.generated) for r in done}
+
+
+# ---------------------------------------------------------------------------
+# Radix tree + allocator unit behavior
+# ---------------------------------------------------------------------------
+class TestRadixTree:
+    def _seed(self, alloc, tree, prompt, sid):
+        """Admit + register one prompt the way the scheduler does."""
+        hit_ids, hit = tree.match(prompt)
+        alloc.admit(sid, len(prompt), max_new_tokens=0, shared=hit_ids)
+        tree.insert(prompt, alloc.table(sid))
+        return hit
+
+    def test_match_insert_walk(self):
+        alloc = BlockAllocator(16, 4)
+        tree = RadixPrefixCache(alloc, 4)
+        p = np.arange(10, dtype=np.int32)        # 2 full blocks + tail
+        assert self._seed(alloc, tree, p, 0) == 0
+        assert tree.num_blocks == 2
+        # identical prompt: both full blocks hit, refcounts bump
+        ids, hit = tree.match(p)
+        assert hit == 8 and len(ids) == 2
+        alloc.admit(1, len(p), shared=ids)
+        assert alloc.refcount(ids[0]) == 2
+        # divergence inside block 1 -> only block 0 matches (COW boundary)
+        q = np.concatenate([p[:6], [99, 98, 97, 96]]).astype(np.int32)
+        ids_q, hit_q = tree.match(q)
+        assert hit_q == 4 and ids_q == [tree.match(p)[0][0]]
+        alloc.audit(strict=True)
+
+    def test_match_leaves_one_token_to_prefill(self):
+        """An exact-multiple prompt never matches its LAST block: the
+        final chunk must run to produce the first-token logits."""
+        alloc = BlockAllocator(16, 4)
+        tree = RadixPrefixCache(alloc, 4)
+        p = np.arange(8, dtype=np.int32)         # exactly 2 blocks
+        self._seed(alloc, tree, p, 0)
+        ids, hit = tree.match(p)
+        assert hit == 4 and len(ids) == 1        # capped at (8-1)//4
+
+    def test_lru_eviction_unwinds_cold_leaves(self):
+        alloc = BlockAllocator(16, 4)
+        tree = RadixPrefixCache(alloc, 4)
+        a = np.arange(9, dtype=np.int32)
+        b = (np.arange(9, dtype=np.int32) + 100) % 256
+        self._seed(alloc, tree, a, 0)
+        self._seed(alloc, tree, b, 1)
+        alloc.free(0)
+        alloc.free(1)
+        assert alloc.evictable_blocks == 4 and alloc.free_blocks == 12
+        tree.match(a)                            # touch a: b becomes LRU
+        freed = tree.evict(1)
+        assert freed == 1
+        assert tree.match(b)[1] == 4             # b lost its leaf only
+        assert tree.match(a)[1] == 8
+        # full-pool admission drains the rest via the evict_fn hook
+        alloc.evict_fn = tree.evict
+        alloc.admit(2, 16 * 4)
+        assert tree.num_blocks == 0
+        alloc.audit(strict=True)
+
+    def test_eviction_never_takes_referenced_blocks(self):
+        alloc = BlockAllocator(8, 4)
+        tree = RadixPrefixCache(alloc, 4)
+        p = np.arange(9, dtype=np.int32)
+        self._seed(alloc, tree, p, 0)            # holder still live
+        assert tree.evict(4) == 0
+        assert tree.num_blocks == 2
+
+    def test_invalidate_drops_whole_subtree(self):
+        alloc = BlockAllocator(16, 4)
+        tree = RadixPrefixCache(alloc, 4)
+        p = np.arange(13, dtype=np.int32)        # 3 full blocks
+        self._seed(alloc, tree, p, 0)
+        root_bid = tree.match(p)[0][0]
+        alloc.free(0)
+        dropped = tree.invalidate_blocks([root_bid])
+        assert dropped == 3 and tree.num_blocks == 0
+        assert alloc.free_blocks == 16           # nothing stays pinned
+        alloc.audit(strict=True)
+
+    def test_refcount_audit_catches_drift(self):
+        alloc = BlockAllocator(8, 4)
+        alloc.admit(0, 8)
+        alloc._refcnt[alloc.table(0)[0]] += 1    # corrupt a count
+        with pytest.raises(IntegrityError) as ei:
+            alloc.audit(strict=True)
+        assert any("refcount drift" in f for f in ei.value.failures)
+
+    def test_audit_catches_free_referenced_overlap(self):
+        alloc = BlockAllocator(8, 4)
+        alloc.admit(0, 8)
+        alloc._free[0].append(alloc.table(0)[0])  # free a mapped block
+        with pytest.raises(IntegrityError):
+            alloc.audit(strict=True)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity: cache on == cache off, across the serving matrix
+# ---------------------------------------------------------------------------
+class TestGreedyParity:
+    @pytest.mark.parametrize("kv_dtype,prefill_mode,seq_shards", [
+        ("bf16", "chunked", 1),
+        ("bf16", "monolithic", 1),
+        ("bf16", "chunked", 2),
+        ("int8", "chunked", 1),
+        ("fp8", "monolithic", 1),
+    ])
+    def test_cache_on_off_identical(self, params, profile, kv_dtype,
+                                    prefill_mode, seq_shards):
+        """Shared-prefix traffic: greedy tokens are bitwise identical
+        with the cache on and off, hits actually happen, and prefill
+        work drops by the hit tokens.  Quantized dtypes exercise shared
+        SCALES: a hit sequence dequantizes the donor's codes with the
+        donor's per-block scales."""
+        prompts = _shared_prompts()
+        sp = SamplingParams(max_tokens=8)
+        off = _mk(params, profile, prefix=False, kv_dtype=kv_dtype,
+                  prefill_mode=prefill_mode, seq_shards=seq_shards)
+        on = _mk(params, profile, prefix=True, kv_dtype=kv_dtype,
+                 prefill_mode=prefill_mode, seq_shards=seq_shards)
+        ref = _tokens(off.serve(prompts, sp))
+        got = _tokens(on.serve(prompts, sp))
+        assert got == ref, "prefix cache changed greedy tokens"
+        st_on, st_off = on._batcher.stats, off._batcher.stats
+        assert st_on.prefix_hits >= 2
+        assert st_on.prefix_hit_tokens >= 2 * 64
+        assert (st_on.prefill_tokens
+                == st_off.prefill_tokens - st_on.prefix_hit_tokens)
+        on.audit()
+        # tree telemetry is wired through the engine stats
+        pf = on.decode_bubble_stats["prefix"]
+        assert pf is not None and pf["nodes"] >= 1
+
+    def test_second_serve_hits_warm_tree(self, params, profile):
+        """The tree outlives a serve(): an identical prompt later hits
+        blocks the first round left evictable."""
+        prompts = _shared_prompts()
+        sp = SamplingParams(max_tokens=8)
+        eng = _mk(params, profile, prefix=True)
+        ref = _tokens(eng.serve(prompts, sp))
+        hits0 = eng.prefix.stats["hits"]
+        again = _tokens(eng.serve(prompts, sp))
+        assert again == ref
+        assert eng.prefix.stats["hits"] > hits0
+        # the repeat run prefills ONLY divergence tails + final blocks
+        eng.audit()
+
+
+# ---------------------------------------------------------------------------
+# Preemption: shared blocks stay resident, only private tails swap
+# ---------------------------------------------------------------------------
+class TestPreemptionWithSharing:
+    def _drive(self, eng, prompts, sp, interrupt_tick=6):
+        b = eng.make_batcher()
+        pf, df = eng.step_fns(sp)
+        for i, p in enumerate(prompts[:2]):
+            b.submit(Request(rid=i, prompt=np.asarray(p, np.int32),
+                             sampling=sp, priority="batch"))
+        done, ticks = [], 0
+        while ticks < interrupt_tick and b.busy:
+            done.extend(b.tick(pf, df))
+            ticks += 1
+        b.submit(Request(rid=2, prompt=np.asarray(prompts[2], np.int32),
+                         sampling=sp, priority="interactive"))
+        while b.busy and ticks < 10_000:
+            done.extend(b.tick(pf, df))
+            ticks += 1
+        return _tokens(done), b
+
+    def test_swap_moves_only_private_tail(self, params, profile):
+        """Preempting a cache-hit decode ships FEWER host blocks than the
+        cache-off run of the same scenario (the shared prefix stays
+        resident), resumes bitwise-identically, and restores the pool."""
+        rng = np.random.default_rng(3)
+        shared = rng.integers(0, CFG.vocab_size, size=(128,))
+        prompts = [np.concatenate([shared,
+                                   rng.integers(0, CFG.vocab_size,
+                                                size=(n,))])
+                   for n in (40, 30)]
+        # the interactive arrival needs 3 blocks; in a 6-block pool even
+        # the cache-ON run (rid0 3 blocks + rid1 2 shared + 1 private)
+        # has only 2 free, so BOTH runs must preempt to admit it
+        prompts.append(rng.integers(0, CFG.vocab_size, size=(150,)))
+        sp = SamplingParams(max_tokens=12)
+        ample = _mk(params, profile, prefix=True)
+        frozen = _tokens(ample.serve(prompts, sp,
+                                     priorities=["batch", "batch",
+                                                 "interactive"]))
+        outs, blocks_out = {}, {}
+        for on in (False, True):
+            eng = _mk(params, profile, prefix=on, preemption=True,
+                      num_kv_blocks=6)
+            outs[on], b = self._drive(eng, prompts, sp)
+            assert b.stats.preempted >= 1, "tight pool never preempted"
+            assert b.stats.resumed >= 1
+            st = eng.swap_stats
+            assert st["blocks_in"] == st["blocks_out"] > 0
+            blocks_out[on] = st["blocks_out"]
+            assert b.alloc.conserves()
+            assert b.alloc.host_allocated_blocks == 0
+            eng.audit()
+        assert outs[True] == outs[False] == frozen
+        assert blocks_out[True] < blocks_out[False], \
+            "sharing must shrink the host swap volume"
+
+    def test_epoch_straddle_remaps_once_and_flushes(self, params, profile):
+        """A function-preserving head-move replan lands while a cache-hit
+        victim sits on the host tier: the epoch swap flushes the tree
+        (old-epoch KV must never seed a new-epoch hit), the host copy
+        re-arranges exactly once, and resume stays bitwise identical."""
+        import dataclasses as dc
+        from repro.core.planner import LayerPlan
+        rng = np.random.default_rng(5)
+        shared = rng.integers(0, CFG.vocab_size, size=(128,))
+        prompts = [np.concatenate([shared,
+                                   rng.integers(0, CFG.vocab_size,
+                                                size=(n,))])
+                   for n in (40, 30)]
+        # 3-block interactive arrival in a 6-block pool: the cache-ON
+        # resident set (3 + 2 shared + 1 private) leaves 2 free, so the
+        # batch victim must swap out (same geometry as the swap test)
+        prompts.append(rng.integers(0, CFG.vocab_size, size=(150,)))
+        sp = SamplingParams(max_tokens=12)
+
+        def swapped_plan(plan):
+            layers = []
+            H = plan.num_heads
+            for lp in plan.layers:
+                perm = np.array([2, 3, 0, 1], np.int64)
+                inv = np.empty_like(perm)
+                inv[perm] = np.arange(H)
+                borig = np.zeros_like(lp.budgets)
+                borig[lp.perm] = lp.budgets
+                layers.append(LayerPlan(
+                    perm=perm, inv_perm=inv, budgets=borig[perm],
+                    kv_perm=np.array([1, 0], np.int64),
+                    device_loads=lp.device_loads.copy(),
+                    assignment=lp.assignment))
+            return dc.replace(plan, layers=layers)
+
+        # the frozen baseline runs on the SAME shard count (head layout
+        # shifts the plan, hence the floats) with ample capacity
+        ample = Engine(CFG, params, EngineConfig(
+            attention="sparse", budget_per_head=256, block=64, floor=64,
+            max_seq_len=512, num_slots=4, prefill_mode="chunked",
+            prefill_chunk_tokens=128, prefix_cache=True, audit_every=1,
+            num_model_shards=2), profile=profile)
+        frozen = _tokens(ample.serve(prompts, sp,
+                                     priorities=["batch", "batch",
+                                                 "interactive"]))
+        eng = Engine(CFG, params, EngineConfig(
+            attention="sparse", budget_per_head=256, block=64, floor=64,
+            max_seq_len=512, num_slots=4, prefill_mode="chunked",
+            prefill_chunk_tokens=128, num_kv_blocks=6, preemption=True,
+            prefix_cache=True, audit_every=1, num_model_shards=2),
+            profile=profile)
+        b = eng.make_batcher()
+        pf, df = eng.step_fns(sp)
+        for i, p in enumerate(prompts[:2]):
+            b.submit(Request(rid=i, prompt=np.asarray(p, np.int32),
+                             sampling=sp, priority="batch"))
+        done, ticks, replanned = [], 0, False
+        while ticks < 6 and b.busy:
+            done.extend(b.tick(pf, df))
+            ticks += 1
+        b.submit(Request(rid=2, prompt=np.asarray(prompts[2], np.int32),
+                         sampling=sp, priority="interactive"))
+        while b.busy and ticks < 10_000:
+            done.extend(b.tick(pf, df))
+            ticks += 1
+            if (not replanned and eng.swap_stats["swapped_out"]
+                    and not eng.swap_stats["swapped_in"]
+                    and b.replan_safe):
+                assert eng.replan_now(plan=swapped_plan(eng.plan))
+                replanned = True
+        assert replanned, "plan swap never straddled the host residency"
+        assert eng.swap_stats["epoch_remaps"] == 1
+        assert eng.prefix.stats["flushes"] >= 1
+        assert _tokens(done) == frozen
+        eng.audit()
+
+
+# ---------------------------------------------------------------------------
+# Fault quarantine of a SHARED block
+# ---------------------------------------------------------------------------
+class TestSharedBlockQuarantine:
+    def test_corrupt_shared_block_fails_all_holders(self, params, profile):
+        """kv_corrupt on a cache-hit sequence poisons its OLDEST block —
+        a shared prefix block — so every holder trips its sentinel and
+        fails; the tree node (and subtree) invalidates so the poisoned
+        content can never seed another admission; the unrelated request
+        is untouched; the pool audits clean after scrub."""
+        prompts = _shared_prompts(shared_tokens=128, tails=(30, 40))
+        sp = SamplingParams(max_tokens=10)
+        ref = _tokens(_mk(params, profile, prefix=True).serve(prompts, sp))
+        inj = FaultInjector(FaultPlan(specs=(
+            FaultSpec(seam="kv_corrupt", mode="nan", after=2),)))
+        eng = _mk(params, profile, prefix=True, injector=inj)
+        done = eng.serve(prompts, sp)
+        failed = {r.rid for r in done if r.failed}
+        assert failed == {0, 1}, \
+            f"both prefix holders must quarantine, got {failed}"
+        ok = _tokens(r for r in done if not r.failed)
+        assert all(ok[rid] == ref[rid] for rid in ok)
+        assert eng.prefix.stats["invalidated_blocks"] >= 1
+        eng.audit()
+        # recycled blocks were scrubbed and the poisoned node is gone:
+        # an identical serve rebuilds the prefix and matches bitwise
+        # (the one-shot spec is exhausted, so the injector is inert)
+        assert not inj.enabled
+        again = _tokens(eng.serve(prompts, sp))
+        assert again == ref
+
+
+# ---------------------------------------------------------------------------
+# Kill/restore keeps the cache warm
+# ---------------------------------------------------------------------------
+class TestSnapshotWarmCache:
+    def test_restore_keeps_hits_warm(self, params, profile, tmp_path):
+        from repro.serving.snapshot import restore_serving, save_serving
+        prompts = _shared_prompts()
+        sp = SamplingParams(max_tokens=8)
+        eng = _mk(params, profile, prefix=True)
+        ref = _tokens(eng.serve(prompts, sp))
+        assert eng.prefix.num_blocks >= 1
+        path = save_serving(str(tmp_path), eng, eng._batcher, tag="warm")
+        ecfg = EngineConfig(
+            attention="sparse", budget_per_head=256, block=64, floor=64,
+            max_seq_len=512, num_slots=4, prefill_mode="chunked",
+            prefill_chunk_tokens=128, prefix_cache=True, audit_every=1)
+        eng2, b2 = restore_serving(path, CFG, params, ecfg,
+                                   profile=profile)
+        assert eng2.prefix.num_blocks == eng.prefix.num_blocks
+        hits0 = eng2.prefix.stats["hits"]
+        pf, df = eng2.step_fns(sp)
+        b2.submit(Request(rid=100,
+                          prompt=np.asarray(prompts[0], np.int32),
+                          sampling=sp))
+        done = b2.run(pf, df)
+        assert eng2.prefix.stats["hits"] > hits0, \
+            "restored tree never produced a hit"
+        assert _tokens(done)[100] == ref[0], \
+            "restored-cache generation diverged"
+        eng2.audit()

@@ -1,0 +1,113 @@
+"""Property stream for refcounted prefix sharing (DESIGN.md §2.14).
+
+Hypothesis drives a random interleaving of the allocator + radix-tree
+lifecycle — admit-with-match, insert, decode growth, free, swap out/in,
+LRU eviction, fault invalidation — and the FULL invariant audit runs
+after every single op: per-block refcounts equal the referencing holds,
+the free lists never overlap referenced/evictable blocks, the pool
+partitions exactly, and the host tier conserves.  At the end everything
+frees and the pool must be whole again."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import BlockAllocator
+from repro.serving.prefix_tree import RadixPrefixCache
+
+
+@pytest.mark.timeout(180)
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_refcount_conservation_stream(data):
+    num_blocks = data.draw(st.integers(6, 24), label="num_blocks")
+    block = 4
+    alloc = BlockAllocator(num_blocks, block,
+                           host_blocks=data.draw(
+                               st.one_of(st.none(), st.integers(0, 16)),
+                               label="host_blocks"))
+    tree = RadixPrefixCache(alloc, block)
+    alloc.evict_fn = tree.evict
+    live: dict[int, np.ndarray] = {}     # sid -> prompt
+    budget: dict[int, int] = {}          # sid -> remaining decode growth
+    swapped: dict[int, int] = {}         # sid -> max_new at swap-in
+    next_sid = 0
+
+    def check():
+        fails = alloc.audit(strict=False)
+        assert not fails, fails
+        # tree pins agree with the allocator's cached set
+        assert tree.block_ids() == alloc.cached_ids()
+
+    for _ in range(data.draw(st.integers(1, 50), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["admit", "append", "free", "swap_out", "swap_in",
+             "evict", "invalidate"]), label="op")
+        if op == "admit":
+            # tiny vocab + short lengths => frequent shared prefixes
+            n = data.draw(st.integers(1, 3 * block), label="plen")
+            prompt = np.asarray(
+                data.draw(st.lists(st.integers(0, 1), min_size=n,
+                                   max_size=n), label="prompt"),
+                np.int32)
+            max_new = data.draw(st.integers(0, 2 * block), label="max_new")
+            hit_ids, hit = tree.match(prompt)
+            need = alloc.blocks_needed(len(prompt) + max_new) - len(hit_ids)
+            if need > alloc.available_blocks:
+                with pytest.raises(MemoryError):
+                    alloc.admit(next_sid, len(prompt),
+                                max_new_tokens=max_new, shared=hit_ids)
+            else:
+                alloc.admit(next_sid, len(prompt), max_new_tokens=max_new,
+                            shared=hit_ids)
+                tree.insert(prompt, alloc.table(next_sid))
+                live[next_sid] = prompt
+                budget[next_sid] = max_new
+                next_sid += 1
+        elif op == "append" and live:
+            sid = data.draw(st.sampled_from(sorted(live)), label="sid")
+            if budget[sid] > 0:
+                alloc.append_token(sid)
+                budget[sid] -= 1
+        elif op == "free" and live:
+            sid = data.draw(st.sampled_from(sorted(live)), label="sid")
+            alloc.free(sid)
+            del live[sid], budget[sid]
+        elif op == "swap_out" and live:
+            sid = data.draw(st.sampled_from(sorted(live)), label="sid")
+            retained, private = alloc.swap_split(sid)
+            cap = alloc.host_free_blocks
+            if cap is None or len(private) <= cap:
+                out = alloc.swap_out(sid)
+                assert out == len(private)
+                swapped[sid] = budget.pop(sid)
+                del live[sid]
+        elif op == "swap_in" and swapped:
+            sid = data.draw(st.sampled_from(sorted(swapped)), label="sid")
+            toks = alloc.host_tokens(sid)
+            shared_n = alloc.host_shared_blocks(sid)
+            max_new = swapped[sid]
+            need = alloc.blocks_needed(toks + max_new) - shared_n
+            if need <= alloc.available_blocks:
+                fresh = alloc.swap_in(sid, max_new_tokens=max_new)
+                assert len(alloc.table(sid)) == shared_n + len(fresh)
+                budget[sid] = swapped.pop(sid)
+                live[sid] = None
+        elif op == "evict":
+            tree.evict(data.draw(st.integers(1, 4), label="need"))
+        elif op == "invalidate" and tree.num_blocks:
+            bid = data.draw(st.sampled_from(sorted(tree.block_ids())),
+                            label="bid")
+            tree.invalidate_blocks([bid])
+        check()
+
+    # teardown: free every holder, drop every pin -> pool fully whole
+    for sid in list(live):
+        alloc.free(sid)
+    for sid in list(swapped):
+        alloc.free(sid)
+    tree.flush()
+    check()
+    assert alloc.free_blocks == alloc.num_blocks
+    assert alloc.host_allocated_blocks == 0
