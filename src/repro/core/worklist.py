@@ -473,6 +473,17 @@ def pack_decode_items(
     weight becomes its count of first-seen physical ids within its head
     (floor 1 — every run still pays its launch/output cost).  Items are
     untouched; kv blocks stay logical.
+
+    The dedup is a deliberate cost-model approximation when packing
+    freely across shards (``shard_of_kvhead=None``): it keys seen blocks
+    per kv head BEFORE the partition, but ``best_partition`` may then
+    place two runs of that head on different model shards — each shard
+    streams the shared block once while the weights charged it once
+    globally, slightly understating those shards' true bytes.  An exact
+    per-(head, shard) dedup would need the assignment the weights
+    themselves produce (circular).  With ``shard_of_kvhead`` pinned
+    (head-parallel islands) every run of a head lands on one shard and
+    the charge is exact.
     """
     from repro.core.partition import best_partition
 
@@ -485,6 +496,9 @@ def pack_decode_items(
     weights = np.array([r[2] for r in runs], dtype=np.int64)
     if phys_of_block is not None:
         pob = np.asarray(phys_of_block)
+        # keyed per kv head, pre-partition: exact when the head's runs
+        # all land on one shard (shard_of_kvhead pinned, or 1 shard);
+        # otherwise a documented understatement — see the docstring
         seen: dict[int, set[int]] = {}
         fresh_w = []
         for b, h, _ in runs:       # b-major order — deterministic dedup
@@ -684,7 +698,10 @@ def pack_decode_items_2d(
     if phys_of_block is not None:
         # charge-once (§2.14), per (kv head, stripe) cell: a shared
         # physical block streams once per head per stripe regardless of
-        # how many rows reference it — see pack_decode_items
+        # how many rows reference it.  The stripe key is exact (stripe
+        # is a property of the physical id); the head key carries the
+        # same free-packing approximation as pack_decode_items — exact
+        # only when shard_of_kvhead pins each head's runs to one shard
         pob = np.asarray(phys_of_block)
         seen2: dict[tuple[int, int], set[int]] = {}
         for ridx, (b, h, per_stripe) in enumerate(runs):

@@ -700,11 +700,18 @@ class Engine:
         hitting across unrelated id churn.  None when sharing is off."""
         if table is None or self.prefix is None:
             return None
+        tab = np.asarray(table)
+        if self.kv.alloc.shared_block_count == 0:
+            # nothing in the pool is multiply-referenced: every row's
+            # signature is empty (identical to what the scan below would
+            # build), so skip the per-slot x per-block refcount loop that
+            # otherwise runs on every decode tick and prefetch
+            return ((),) * tab.shape[0]
         rc = self.kv.alloc.refcount
         return tuple(
             tuple((i, b) for i, b in enumerate(row)
                   if b >= 0 and rc(b) >= 2)
-            for row in np.asarray(table).tolist())
+            for row in tab.tolist())
 
     def _plan_key(self, nb_sig: tuple[int, ...],
                   stripe_of: np.ndarray | None,

@@ -99,6 +99,10 @@ class BlockAllocator:
         self._refcnt: dict[int, int] = {}
         self._cached: set[int] = set()
         self._evictable: set[int] = set()
+        # count of blocks with refcount >= 2 — lets per-tick hot paths
+        # (the engine's sharing signature) skip their per-block refcount
+        # scans entirely while nothing is actually shared
+        self._shared_cnt = 0
         # swapped-out seqs keep their shared prefix blocks RESIDENT (only
         # private tails move to the host tier); the retained ids live here
         # and keep their refcounts until swap-in or free
@@ -144,11 +148,15 @@ class BlockAllocator:
         if c == 0:
             # a newly-referenced cached block is no longer reclaimable
             self._evictable.discard(block_id)
+        elif c == 1:
+            self._shared_cnt += 1
         self._refcnt[block_id] = c + 1
 
     def _decref(self, block_id: int) -> None:
         c = self._refcnt[block_id] - 1
         if c > 0:
+            if c == 1:
+                self._shared_cnt -= 1
             self._refcnt[block_id] = c
             return
         del self._refcnt[block_id]
@@ -161,11 +169,34 @@ class BlockAllocator:
     def refcount(self, block_id: int) -> int:
         return self._refcnt.get(block_id, 0)
 
+    @property
+    def shared_block_count(self) -> int:
+        """Blocks currently referenced by more than one holder."""
+        return self._shared_cnt
+
+    def shared_discount(self, shared) -> int:
+        """Admission headroom discount for a matched prefix: only the
+        currently REFERENCED hit blocks (refcount > 0) cost nothing to
+        map — they are in neither the free lists nor the evictable set,
+        so ``available_blocks`` never counted them.  An evictable hit
+        (refcount 0, tree-cached only — a retired prefix) IS counted in
+        ``available_blocks``, and mapping it consumes that headroom
+        exactly like a fresh block; discounting it too would
+        double-count, drive ``available_blocks`` negative, and break the
+        guarantee that decode growth can never exhaust the pool."""
+        return sum(1 for b in shared if self._refcnt.get(int(b), 0) > 0)
+
     def is_cached(self, block_id: int) -> bool:
         return block_id in self._cached
 
     def cached_ids(self) -> set[int]:
         return set(self._cached)
+
+    def evictable_ids(self) -> set[int]:
+        """Blocks that are cached AND unreferenced (maintained
+        incrementally) — the prefix tree seeds its eviction heap from
+        this instead of rescanning every node."""
+        return set(self._evictable)
 
     def cache_block(self, block_id: int) -> None:
         """Pin a mapped block as prefix-tree content: when its refcount
@@ -428,6 +459,11 @@ class BlockAllocator:
             fails.append(
                 f"refcount drift (un-refcounted double-map, or a leaked "
                 f"hold): stored != referencing holds for blocks {bad[:8]}")
+        want_shared = sum(1 for c in want.values() if c >= 2)
+        if self._shared_cnt != want_shared:
+            fails.append(
+                f"shared-count drift: {self._shared_cnt} tracked != "
+                f"{want_shared} blocks with >= 2 holds")
         # COW discipline: a block may be shared ACROSS tables, never
         # duplicated WITHIN one (each table position is distinct content)
         for sid, t in self._tables.items():
@@ -552,12 +588,15 @@ class BlockAllocator:
             for b in hs:
                 refs[b] = refs.get(b, 0) + 1
         self._refcnt = refs
+        self._shared_cnt = sum(1 for c in refs.values() if c >= 2)
         self._evictable = {b for b in self._cached if b not in refs}
         self.audit()
 
     # -- lifecycle ----------------------------------------------------------
-    def can_admit(self, num_tokens: int, shared_blocks: int = 0) -> bool:
-        return (self.blocks_needed(num_tokens) - shared_blocks
+    def can_admit(self, num_tokens: int, shared=()) -> bool:
+        """``shared`` is the matched prefix's block ids (not a count):
+        only the referenced ones discount — see :meth:`shared_discount`."""
+        return (self.blocks_needed(num_tokens) - self.shared_discount(shared)
                 <= self.available_blocks)
 
     def admit(self, seq_id: int, prompt_tokens: int,
@@ -577,9 +616,13 @@ class BlockAllocator:
             raise ValueError(f"seq {seq_id} already admitted")
         shared = list(shared)
         total = self.blocks_needed(prompt_tokens + max_new_tokens)
-        if total - len(shared) > self.available_blocks:
+        # only REFERENCED hit blocks discount: an evictable hit already
+        # counts in available_blocks and pays like a fresh block
+        # (shared_discount) — discounting it too would double-count
+        discount = self.shared_discount(shared)
+        if total - discount > self.available_blocks:
             raise MemoryError(
-                f"KV pool exhausted: need {total - len(shared)}, "
+                f"KV pool exhausted: need {total - discount}, "
                 f"available {self.available_blocks}")
         self._reserved[seq_id] = total
         table = self._tables[seq_id] = []

@@ -36,6 +36,8 @@ prefix — so a poisoned block can never be handed to a future admission.
 """
 from __future__ import annotations
 
+import heapq
+
 import numpy as np
 
 
@@ -143,17 +145,37 @@ class RadixPrefixCache:
     def evict(self, need: int) -> int:
         """LRU-evict unreferenced leaves until ``need`` blocks returned to
         the free lists (or nothing evictable remains).  Wired as
-        ``alloc.evict_fn``.  O(nodes) per freed block — fine at pool
-        scale; the tree never exceeds ``num_blocks`` nodes."""
+        ``alloc.evict_fn``.  One pass over the allocator's evictable set
+        (cached AND unreferenced, maintained incrementally) seeds a
+        min-heap keyed by LRU stamp; each drop pops in O(log E) and
+        pushes the parent it may expose — an eviction burst is
+        O(E + need log E), not the old O(nodes) rescan per freed block
+        (O(nodes^2) on the admission/decode hot path).  LRU stamps can't
+        move mid-call (evict runs synchronously inside ``_grow``), so
+        heap entries only go stale through this call's own drops, which
+        the pop-time revalidation skips."""
         freed = 0
-        while freed < need:
-            cands = [n for n in self._nodes.values()
-                     if not n.children
-                     and self.alloc.refcount(n.block_id) == 0]
-            if not cands:
-                break
-            self._drop(min(cands, key=lambda n: n.last_used))
+        heap = []
+        for bid in self.alloc.evictable_ids():
+            node = self._nodes.get(bid)
+            if node is not None and not node.children:
+                heap.append((node.last_used, bid))
+        heapq.heapify(heap)
+        while freed < need and heap:
+            _, bid = heapq.heappop(heap)
+            node = self._nodes.get(bid)
+            if (node is None or node.children
+                    or self.alloc.refcount(bid) != 0):
+                continue
+            parent = node.parent
+            self._drop(node)
             freed += 1
+            # dropping the last child exposes the parent as the next
+            # candidate (deep cold chains unwind back-to-front); a parent
+            # had children at seed time, so this is its only push
+            if (parent is not self.root and not parent.children
+                    and self.alloc.refcount(parent.block_id) == 0):
+                heapq.heappush(heap, (parent.last_used, parent.block_id))
         self.stats["evicted_blocks"] += freed
         return freed
 

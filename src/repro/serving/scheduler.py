@@ -438,11 +438,15 @@ class ContinuousBatcher:
                    shared_blocks: int = 0) -> bool:
         """Secure a slot + blocks (+ the prefill slot, in chunked mode)
         for ``req`` — preempting strictly-lower-class work when allowed.
-        ``shared_blocks`` prompt blocks come free from the prefix cache.
-        ``available_blocks`` already counts evictable cached blocks, so
-        cache eviction absorbs pressure before any victim is chosen.
-        Victims are simulated first and only preempted when the plan
-        actually fits, so a hopeless arrival never thrashes the pool."""
+        ``shared_blocks`` is the prefix-cache discount: the number of
+        matched hit blocks that are currently REFERENCED (refcount > 0)
+        and therefore cost nothing to map.  Evictable hits must NOT be
+        discounted — ``available_blocks`` already counts them, and
+        mapping one consumes that headroom like a fresh block
+        (``BlockAllocator.shared_discount``); cache eviction still
+        absorbs pool pressure before any victim is chosen.  Victims are
+        simulated first and only preempted when the plan actually fits,
+        so a hopeless arrival never thrashes the pool."""
         need = self.alloc.blocks_needed(
             len(req.prompt) + req.sampling.max_tokens) - shared_blocks
         free_slots = len(self._slots_free)
@@ -713,7 +717,14 @@ class ContinuousBatcher:
             hit_tokens = 0
             if self.prefix is not None:
                 hit_ids, hit_tokens = self.prefix.match(req.prompt)
-            if not self._make_room(pc, req, shared_blocks=len(hit_ids)):
+            # discount only the REFERENCED hit blocks: a hit on a retired
+            # (evictable) prefix is already inside available_blocks, so
+            # subtracting it from need as well would double-count and
+            # overcommit the worst-case reservation (append_token could
+            # then exhaust the pool mid-decode)
+            if not self._make_room(
+                    pc, req,
+                    shared_blocks=self.alloc.shared_discount(hit_ids)):
                 break  # wait for frees (shed may reject on deadline below)
             slot = self._slots_free.pop()
             self._slot_of[req.rid] = slot

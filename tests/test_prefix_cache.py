@@ -23,7 +23,7 @@ from repro.serving.faults import (
 )
 from repro.serving.kv_cache import BlockAllocator
 from repro.serving.prefix_tree import RadixPrefixCache
-from repro.serving.scheduler import Request
+from repro.serving.scheduler import ContinuousBatcher, Request
 
 CFG = TransformerConfig(num_layers=2, d_model=64, num_heads=4,
                         num_kv_heads=2, d_ff=128, vocab_size=256,
@@ -146,6 +146,59 @@ class TestRadixTree:
         assert alloc.free_blocks == 16           # nothing stays pinned
         alloc.audit(strict=True)
 
+    def test_evictable_hit_is_not_double_counted(self):
+        """A hit on a RETIRED (evictable) prefix must not discount from
+        the admission need: ``available_blocks`` already counts those
+        blocks, so the old ``len(hit_ids)`` discount double-counted
+        them, overcommitted the worst-case reservation, and let decode
+        growth exhaust the pool mid-tick."""
+        alloc = BlockAllocator(4, 4)
+        tree = RadixPrefixCache(alloc, 4)
+        alloc.evict_fn = tree.evict
+        p = np.arange(9, dtype=np.int32)        # 3 blocks, 2 cacheable
+        self._seed(alloc, tree, p, 0)
+        alloc.free(0)                           # retire: 2 evictable
+        assert alloc.available_blocks == 4
+        hit_ids, _ = tree.match(p)
+        assert len(hit_ids) == 2
+        assert alloc.shared_discount(hit_ids) == 0   # refcount 0
+        # worst case 21 tokens = 6 blocks > the 4-block pool: the old
+        # discount saw need 6-2=4 <= 4 and admitted; decode growth then
+        # needed 3 more blocks with only 1 free
+        assert not alloc.can_admit(len(p) + 12, shared=hit_ids)
+        with pytest.raises(MemoryError):
+            alloc.admit(1, len(p), max_new_tokens=12, shared=hit_ids)
+        alloc.audit(strict=True)
+        assert alloc.available_blocks == 4      # rollback left no trace
+        # a REFERENCED hit genuinely discounts: with the donor resident
+        # the same prefix costs nothing to map
+        hit_ids, _ = tree.match(p)
+        alloc.admit(2, len(p), shared=hit_ids)
+        hit_ids, _ = tree.match(p)
+        assert alloc.shared_discount(hit_ids) == 2
+        assert alloc.can_admit(len(p), shared=hit_ids)
+        alloc.admit(3, len(p), shared=hit_ids)
+        alloc.audit(strict=True)
+        assert alloc.available_blocks == 0
+
+    def test_shared_block_count_tracks_multiholder_blocks(self):
+        """The incremental >=2-holder counter (the engine's sharing
+        signature short-circuit) follows incref/decref and is
+        cross-checked by audit."""
+        alloc = BlockAllocator(8, 4)
+        tree = RadixPrefixCache(alloc, 4)
+        p = np.arange(9, dtype=np.int32)
+        self._seed(alloc, tree, p, 0)
+        assert alloc.shared_block_count == 0
+        ids, _ = tree.match(p)
+        alloc.admit(1, len(p), shared=ids)
+        assert alloc.shared_block_count == 2
+        alloc.free(0)
+        assert alloc.shared_block_count == 0
+        alloc.free(1)
+        assert alloc.shared_block_count == 0
+        alloc.audit(strict=True)
+
     def test_refcount_audit_catches_drift(self):
         alloc = BlockAllocator(8, 4)
         alloc.admit(0, 8)
@@ -160,6 +213,60 @@ class TestRadixTree:
         alloc._free[0].append(alloc.table(0)[0])  # free a mapped block
         with pytest.raises(IntegrityError):
             alloc.audit(strict=True)
+
+
+# ---------------------------------------------------------------------------
+# Admission accounting under warm (retired-prefix) hits — host-only
+# ---------------------------------------------------------------------------
+class TestWarmHitAdmission:
+    def test_tight_pool_serializes_instead_of_exhausting(self):
+        """Two arrivals hitting two RETIRED (evictable) prefixes, in a
+        pool that holds only one worst case at a time.  The old
+        double-counted discount admitted both at once, drove
+        ``available_blocks`` negative, and the second sequence's decode
+        growth crashed ``tick`` with MemoryError; correct accounting
+        defers the second arrival until the first frees."""
+        block = 4
+        alloc = BlockAllocator(8, block)
+        tree = RadixPrefixCache(alloc, block)
+        alloc.evict_fn = tree.evict
+        p1 = np.arange(9, dtype=np.int32)
+        p2 = (np.arange(9, dtype=np.int32) + 100)
+        for sid, p in enumerate((p1, p2)):      # warm, then retire
+            ids, _ = tree.match(p)
+            alloc.admit(sid, len(p), shared=ids)
+            tree.insert(p, alloc.table(sid))
+            alloc.free(sid)
+        assert alloc.evictable_blocks == 4
+        assert alloc.available_blocks == 8
+
+        b = ContinuousBatcher(num_slots=4, num_blocks=8, max_seq_len=64,
+                              block=block, allocator=alloc,
+                              prefix_cache=tree)
+        sp = SamplingParams(max_tokens=11)      # 9 + 11 = 20 tok = 5 blk
+        b.submit(Request(rid=0, prompt=p1, sampling=sp))
+        b.submit(Request(rid=1, prompt=p2, sampling=sp))
+
+        def pf(toks, slot, q_offset, is_final, prompt_len):
+            return 0 if is_final else None
+
+        def df(slots, toks, pos):
+            return np.zeros(len(slots), np.int32)
+
+        headroom = []
+
+        def on_tick():
+            headroom.append(alloc.available_blocks)
+            alloc.audit(strict=True)
+
+        done = b.run(pf, df, on_tick=on_tick)
+        assert sorted(r.rid for r in done) == [0, 1]
+        assert all(not r.rejected and not r.failed for r in done)
+        assert min(headroom) >= 0, \
+            "admission overcommitted the worst-case reservation"
+        assert b.stats.prefix_hits == 2         # both warm hits landed
+        alloc.audit(strict=True)
+        assert alloc.free_blocks + alloc.evictable_blocks == 8
 
 
 # ---------------------------------------------------------------------------

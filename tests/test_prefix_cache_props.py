@@ -39,6 +39,11 @@ def test_refcount_conservation_stream(data):
         assert not fails, fails
         # tree pins agree with the allocator's cached set
         assert tree.block_ids() == alloc.cached_ids()
+        # admission headroom never overcommitted: decode growth within
+        # reservations must always be satisfiable (the invariant the
+        # evictable-hit double-count discount used to break)
+        assert alloc.available_blocks >= 0, \
+            f"available_blocks went negative: {alloc.available_blocks}"
 
     for _ in range(data.draw(st.integers(1, 50), label="n_ops")):
         op = data.draw(st.sampled_from(
@@ -53,7 +58,10 @@ def test_refcount_conservation_stream(data):
                 np.int32)
             max_new = data.draw(st.integers(0, 2 * block), label="max_new")
             hit_ids, hit = tree.match(prompt)
-            need = alloc.blocks_needed(len(prompt) + max_new) - len(hit_ids)
+            # only REFERENCED hits discount (evictable hits are already
+            # inside available_blocks) — mirrors admit's own check
+            need = (alloc.blocks_needed(len(prompt) + max_new)
+                    - alloc.shared_discount(hit_ids))
             if need > alloc.available_blocks:
                 with pytest.raises(MemoryError):
                     alloc.admit(next_sid, len(prompt),
